@@ -1,0 +1,33 @@
+//! Regenerates **Figure 1**: the relative-runtime vs relative-quality
+//! scatter over the 18-graph suite × α ∈ {0.02, 0.05, 0.10} (CSV).
+//!
+//! `cargo bench --bench fig1_scatter`
+
+use pdgrass::coordinator::{experiments, PipelineConfig};
+
+fn main() {
+    let scale: f64 = std::env::var("PDGRASS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let cfg = PipelineConfig { scale, trials: 1, ..Default::default() };
+    println!("# Fig. 1 bench — scatter CSV (scale={scale})");
+    let pts = experiments::fig1(&experiments::suite_names(), &[0.02, 0.05, 0.10], &cfg);
+    // Paper shape: as α grows the cloud drifts up-right — mean relative
+    // iteration ratio increases with α.
+    let mean_ratio = |a: f64| -> f64 {
+        let v: Vec<f64> = pts
+            .iter()
+            .filter(|(_, alpha, _, ri)| *alpha == a && ri.is_finite())
+            .map(|(_, _, _, ri)| *ri)
+            .collect();
+        v.iter().sum::<f64>() / v.len().max(1) as f64
+    };
+    let (r02, r10) = (mean_ratio(0.02), mean_ratio(0.10));
+    println!("# mean iter ratio: alpha=0.02 → {r02:.2}, alpha=0.10 → {r10:.2}");
+    assert!(
+        r10 > r02,
+        "quality advantage must grow with alpha ({r02:.2} → {r10:.2})"
+    );
+    println!("# fig1_scatter done");
+}

@@ -1,0 +1,40 @@
+//! Regenerates **Figures 6–8**: strong-scaling curves on the uniform (M6)
+//! and skewed (com-Youtube) representatives — entire-outer, inner-part and
+//! outer-part speedups for p ∈ {1, 2, 4, 8, 16, 32} (CSV series).
+//!
+//! `cargo bench --bench fig6_8_strong_scaling`
+
+use pdgrass::coordinator::{experiments, PipelineConfig};
+
+fn main() {
+    let scale: f64 = std::env::var("PDGRASS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let cfg = PipelineConfig { scale, ..Default::default() };
+    println!("# Figs. 6–8 bench — strong scaling (scale={scale})");
+    let curves = experiments::fig6_7_8(&cfg);
+    let at = |label_prefix: &str, p: usize| -> f64 {
+        curves
+            .iter()
+            .find(|(l, _)| l.starts_with(label_prefix))
+            .and_then(|(_, pts)| pts.iter().find(|(t, _)| *t == p))
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    };
+    // Paper shapes: Fig. 6 near-ideal outer scaling on the uniform mesh;
+    // Fig. 7 inner part keeps climbing; Fig. 8 outer part plateaus early.
+    let f6 = at("fig6", 32);
+    let f7_32 = at("fig7", 32);
+    let f7_4 = at("fig7", 4);
+    let f8_2 = at("fig8", 2);
+    let f8_32 = at("fig8", 32);
+    println!("# fig6@32={f6:.1} fig7@32={f7_32:.1} fig8@2={f8_2:.1} fig8@32={f8_32:.1}");
+    assert!(f6 > 8.0, "uniform M6 outer scaling too weak: {f6:.1}");
+    assert!(f7_32 > f7_4, "inner part must keep scaling");
+    assert!(
+        f8_32 < f6,
+        "skewed outer part ({f8_32:.1}) must scale worse than uniform ({f6:.1})"
+    );
+    println!("# fig6_8_strong_scaling done");
+}

@@ -1,0 +1,130 @@
+//! Micro-benchmarks of the hot paths (the §Perf profiling surface).
+//!
+//! `cargo bench --bench micro`
+//!
+//! Measures, with min-of-N timing: LCA queries, resistance annotation,
+//! β-hop neighborhood BFS, tag-store probes, CSR vs XLA SpMV, LDLᵀ
+//! factor+solve, and the recovery phases. These numbers drive the
+//! before/after entries in EXPERIMENTS.md §Perf.
+
+use pdgrass::graph::grounded_laplacian;
+use pdgrass::recovery::strict::{neighborhoods, TagStore};
+use pdgrass::recovery::{self, Params, Strategy};
+use pdgrass::solver::{spmv, LdlFactor, SparsifierPrecond};
+use pdgrass::tree::{build_spanning, off_tree_edges};
+use pdgrass::util::{min_of, Rng};
+
+fn report(name: &str, iters: usize, ms: f64, unit_count: u64, unit: &str) {
+    let per = ms * 1e6 / unit_count.max(1) as f64;
+    println!("{name:<38} {ms:>9.2} ms / {iters} it   ({per:>8.1} ns/{unit})");
+}
+
+fn main() {
+    let g = pdgrass::gen::suite::build("15-M6", 0.5, 42);
+    println!("# micro bench on 15-M6@0.5: |V|={} |E|={}", g.num_vertices(), g.num_edges());
+    let sp = build_spanning(&g);
+
+    // LCA queries
+    let off_ids: Vec<(u32, u32)> = g.edges().iter().map(|e| (e.u, e.v)).collect();
+    let (_, ms) = min_of(5, || {
+        let mut acc = 0u64;
+        for &(u, v) in &off_ids {
+            acc = acc.wrapping_add(sp.skip.lca(u, v) as u64);
+        }
+        acc
+    });
+    report("lca_query", 5, ms, off_ids.len() as u64, "query");
+
+    // Resistance annotation (step 1)
+    let (off, ms) = min_of(5, || off_tree_edges(&g, &sp));
+    report("off_tree_annotation", 5, ms, off.len() as u64, "edge");
+
+    // Neighborhood BFS at the recovery's β*
+    let sample: Vec<_> = off.iter().take(20_000).collect();
+    let (units, ms) = min_of(5, || {
+        let mut acc = 0u64;
+        for e in &sample {
+            let (_, _, c) = neighborhoods(&sp, e, 8);
+            acc += c as u64;
+        }
+        acc
+    });
+    report("neighborhood_bfs(beta*<=8)", 5, ms, units, "visit");
+
+    // Tag-store probe throughput
+    let mut ts = TagStore::new();
+    let mut rng = Rng::new(1);
+    for k in 0..2000u32 {
+        let su: Vec<u32> = (0..8).map(|_| rng.next_u32() % 100_000).collect();
+        let sv: Vec<u32> = (0..8).map(|_| rng.next_u32() % 100_000).collect();
+        ts.add(k, &su, &sv);
+    }
+    let probes: Vec<(u32, u32)> =
+        (0..200_000).map(|_| (rng.next_u32() % 100_000, rng.next_u32() % 100_000)).collect();
+    let (_, ms) = min_of(5, || {
+        let mut cost = 0u32;
+        let mut hits = 0u64;
+        for &(u, v) in &probes {
+            if ts.is_similar(u, v, &mut cost) {
+                hits += 1;
+            }
+        }
+        hits
+    });
+    report("tagstore_probe", 5, ms, probes.len() as u64, "probe");
+
+    // Recovery end to end (serial vs mixed)
+    for (label, strat) in [("recovery_serial", Strategy::Serial), ("recovery_mixed", Strategy::Mixed)] {
+        let params = Params { strategy: strat, cutoff_edges: 10_000, ..Params::new(0.05, 4) };
+        let (_, ms) = min_of(3, || recovery::pdgrass(&g, &sp, &params));
+        report(label, 3, ms, off.len() as u64, "edge");
+    }
+
+    // SpMV: CSR f64 (serial + 4-thread "parallel" on this 1-core box)
+    let a = grounded_laplacian(&g, 0);
+    let mut rng = Rng::new(2);
+    let x: Vec<f64> = (0..a.n).map(|_| rng.normal()).collect();
+    let mut y = vec![0.0; a.n];
+    let (_, ms) = min_of(10, || spmv(&a, &x, &mut y));
+    report("spmv_csr_f64", 10, ms, a.nnz() as u64, "nnz");
+
+    // LDL factor + solve on a sparsifier
+    let r = recovery::pdgrass(&g, &sp, &Params::new(0.05, 1));
+    let p = recovery::sparsifier(&g, &sp, &r.edges);
+    let lp = grounded_laplacian(&p, 0);
+    let (m, ms) = min_of(3, || SparsifierPrecond::from_matrix(&lp).unwrap());
+    report("ldl_factor(rcm)", 3, ms, lp.nnz() as u64, "nnz");
+    println!("{:<38} fill nnz(L) = {}", "", m.nnz_l());
+    let ap = pdgrass::solver::rcm(&lp);
+    let lp_p = pdgrass::solver::permute_sym(&lp, &ap);
+    let f = LdlFactor::factor(&lp_p).unwrap();
+    let mut z = x[..lp.n].to_vec();
+    let (_, ms) = min_of(10, || {
+        z.copy_from_slice(&x[..lp.n]);
+        f.solve(&mut z);
+    });
+    report("ldl_solve", 10, ms, f.nnz_l() as u64, "nnz");
+
+    // XLA SpMV dispatch (if artifacts are present)
+    match pdgrass::runtime::Runtime::open_default() {
+        Ok(rt) => match pdgrass::runtime::prepare_spmv(&rt, &a) {
+            Ok(xs) => {
+                let mut yx = vec![0.0; a.n];
+                let (_, ms) = min_of(10, || xs.apply(&x, &mut yx).unwrap());
+                report("spmv_xla_dispatch", 10, ms, a.nnz() as u64, "nnz");
+                println!(
+                    "{:<38} bucket n={} k={} pad={:.0}% tail={}",
+                    "",
+                    xs.ell.n_bucket,
+                    xs.ell.k,
+                    100.0 * xs.ell.padding_ratio(),
+                    xs.ell.tail.len()
+                );
+            }
+            Err(e) => println!("spmv_xla_dispatch: skipped ({e})"),
+        },
+        Err(e) => println!("spmv_xla_dispatch: skipped ({e})"),
+    }
+
+    println!("# micro done");
+}

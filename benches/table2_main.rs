@@ -1,0 +1,37 @@
+//! Regenerates **Table II**: recovery runtime + sparsifier quality for all
+//! 18 suite graphs at α ∈ {0.02, 0.05, 0.10}.
+//!
+//! `cargo bench --bench table2_main`
+//!
+//! Environment knobs: `PDGRASS_BENCH_SCALE` (default 1.0),
+//! `PDGRASS_BENCH_ALPHAS` (comma list), `PDGRASS_BENCH_GRAPHS`
+//! (comma list of suite rows).
+
+use pdgrass::coordinator::{experiments, PipelineConfig};
+
+fn main() {
+    let scale: f64 = std::env::var("PDGRASS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let alphas: Vec<f64> = std::env::var("PDGRASS_BENCH_ALPHAS")
+        .map(|s| s.split(',').filter_map(|a| a.trim().parse().ok()).collect())
+        .unwrap_or_else(|_| vec![0.02, 0.05, 0.10]);
+    let names_own: Vec<String> = std::env::var("PDGRASS_BENCH_GRAPHS")
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
+        .unwrap_or_default();
+    let names: Vec<&str> = if names_own.is_empty() {
+        experiments::suite_names()
+    } else {
+        names_own.iter().map(|s| s.as_str()).collect()
+    };
+    let cfg = PipelineConfig { scale, trials: 3, ..Default::default() };
+    println!("# Table II bench — scale={scale}, 18-row suite (paper: Table II)");
+    let all = experiments::table2(&names, &alphas, &cfg);
+    // Shape assertions mirroring the paper's headline claims.
+    for (alpha, reports) in &all {
+        let single_pass = reports.iter().all(|r| r.pd_passes == 1);
+        assert!(single_pass, "alpha={alpha}: pdGRASS must be single-pass on the suite");
+    }
+    println!("\n# table2_main done");
+}

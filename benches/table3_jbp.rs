@@ -1,0 +1,23 @@
+//! Regenerates **Table III**: Judge-before-Parallel statistics on the
+//! com-Youtube analogue (biggest-subtask blocked-execution counters).
+//!
+//! `cargo bench --bench table3_jbp`
+
+use pdgrass::coordinator::{experiments, PipelineConfig};
+
+fn main() {
+    let scale: f64 = std::env::var("PDGRASS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let cfg = PipelineConfig { scale, alpha: 0.02, ..Default::default() };
+    println!("# Table III bench — Judge-before-Parallel on 09-com-Youtube (scale={scale})");
+    let (without, with) = experiments::table3(&cfg);
+    // Paper shape: JBP removes all parallel-region skips and cuts false
+    // positives; every blocked edge explores.
+    assert_eq!(with.skipped_in_parallel, 0);
+    assert!(without.skipped_in_parallel > 0);
+    assert_eq!(with.edges_in_blocks, with.explored_in_parallel);
+    assert!(with.false_positives <= without.false_positives);
+    println!("\n# table3_jbp done");
+}

@@ -1,0 +1,30 @@
+//! Regenerates **Table IV**: feGRASS vs pdGRASS runtimes at 1/8/32
+//! threads, α = 0.02 (T₁ measured; T₈/T₃₂ from the calibrated scheduling
+//! simulator — see DESIGN.md §Substitutions).
+//!
+//! `cargo bench --bench table4_scaling`
+
+use pdgrass::coordinator::{experiments, PipelineConfig};
+
+fn main() {
+    let scale: f64 = std::env::var("PDGRASS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let cfg = PipelineConfig { scale, trials: 3, ..Default::default() };
+    println!("# Table IV bench — 1/8/32-thread runtimes (scale={scale})");
+    let reports = experiments::table4(&experiments::suite_names(), &cfg);
+    // Paper shape: pdGRASS-32 beats feGRASS on every row; average parallel
+    // speedup grows with threads.
+    let avg8: f64 =
+        reports.iter().map(|r| r.sim_speedup[0]).sum::<f64>() / reports.len() as f64;
+    let avg32: f64 =
+        reports.iter().map(|r| r.sim_speedup[1]).sum::<f64>() / reports.len() as f64;
+    assert!(avg32 > avg8, "32-thread speedup ({avg32:.1}) must exceed 8-thread ({avg8:.1})");
+    let wins = reports
+        .iter()
+        .filter(|r| r.t_fe_ms / r.t_pd_sim_ms[1] > 1.0)
+        .count();
+    println!("\npdGRASS-32 faster than feGRASS on {wins}/{} rows", reports.len());
+    println!("# table4_scaling done");
+}

@@ -1,0 +1,72 @@
+//! The skewed-input worst case — §I's com-Youtube pathology, end to end.
+//!
+//! ```bash
+//! cargo run --release --example social_network
+//! ```
+//!
+//! On hub-dominated social graphs, feGRASS's loose vertex-cover condition
+//! collapses: covering one hub marks almost every off-tree edge similar,
+//! so each pass recovers a handful of edges and the pass count explodes
+//! (>6000 in the paper, >100000 at α=0.10). pdGRASS's strict condition
+//! recovers everything in ONE pass, and its giant single subtask is
+//! handled by the inner-parallel strategy with Judge-before-Parallel.
+//! This example measures both, prints the Table III-style JBP statistics,
+//! and sanity-checks the sparsifier quality.
+
+use pdgrass::recovery::{self, Params, Strategy};
+use pdgrass::tree::build_spanning;
+use pdgrass::util::{Rng, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let g = pdgrass::gen::rmat(14, 8.0, pdgrass::gen::RmatParams::youtube_like(), &mut Rng::new(9));
+    let (g, _) = pdgrass::graph::largest_component(&g);
+    println!(
+        "social graph: |V|={} |E|={} max-degree={} (avg {:.1})",
+        g.num_vertices(),
+        g.num_edges(),
+        g.max_degree(),
+        g.avg_degree()
+    );
+    let sp = build_spanning(&g);
+
+    for alpha in [0.02, 0.05, 0.10] {
+        let params = Params::new(alpha, 8);
+        let t = Timer::start();
+        let fe = recovery::fegrass(&g, &sp, &params);
+        let t_fe = t.ms();
+        let t = Timer::start();
+        let pd = recovery::pdgrass(&g, &sp, &params);
+        let t_pd = t.ms();
+        println!(
+            "α={alpha:4}: feGRASS {:6} passes / {:8.1} ms   pdGRASS {} pass / {:8.1} ms  ({} edges each)",
+            fe.passes, t_fe, pd.passes, t_pd, pd.edges.len()
+        );
+        anyhow::ensure!(pd.passes == 1, "pdGRASS must finish in one pass");
+        anyhow::ensure!(fe.passes > pd.passes, "skewed input must hurt feGRASS");
+    }
+
+    // Judge-before-Parallel statistics on the biggest subtask (Table III).
+    let mut params = Params::new(0.02, 32);
+    params.strategy = Strategy::Inner;
+    params.block = 32;
+    params.jbp = false;
+    let without = recovery::pdgrass(&g, &sp, &params).stats;
+    params.jbp = true;
+    let with = recovery::pdgrass(&g, &sp, &params).stats;
+    println!("\nJudge-before-Parallel on the biggest subtask ({} edges):", with.biggest_subtask);
+    println!(
+        "  without: {} blocked edges, {} skipped in parallel ({:.0}%), {} false positives",
+        without.edges_in_blocks,
+        without.skipped_in_parallel,
+        100.0 * without.skipped_in_parallel as f64 / without.edges_in_blocks.max(1) as f64,
+        without.false_positives
+    );
+    println!(
+        "  with:    {} blocked edges, {} skipped in parallel, {} false positives",
+        with.edges_in_blocks, with.skipped_in_parallel, with.false_positives
+    );
+    anyhow::ensure!(with.skipped_in_parallel == 0, "JBP must eliminate bubbles");
+
+    println!("\nsocial_network OK");
+    Ok(())
+}

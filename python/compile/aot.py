@@ -1,0 +1,109 @@
+"""AOT export: lower the Layer-2 computations to HLO text artifacts.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Emits, per (n, k) shape bucket:
+  artifacts/spmv_n{n}_k{k}.hlo.txt        one ELL SpMV dispatch
+  artifacts/pcg_step_n{n}_k{k}.hlo.txt    fused PCG half-iteration
+and for the self-contained demo buckets:
+  artifacts/jacobi_pcg_n{n}_k{k}_t{t}.hlo.txt
+
+plus ``artifacts/manifest.tsv`` describing every artifact (the Rust
+runtime reads this to pick buckets). Python runs ONCE at build time;
+nothing here is on the request path.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shape buckets. n must cover the grounded Laplacian sizes of the suite
+# (max ~49k) and k the ELL width; hub rows beyond k go to the Rust COO
+# tail. Keep the set small: artifacts are compiled once per bucket by the
+# PJRT client at coordinator startup.
+SPMV_BUCKETS = [
+    (1024, 8), (1024, 16),
+    (2048, 8), (2048, 16),
+    (4096, 8), (4096, 16),
+    (8192, 8), (8192, 16),
+    (16384, 8), (16384, 16), (16384, 32),
+    (32768, 8), (32768, 16),
+    (65536, 8), (65536, 16),
+]
+JACOBI_BUCKETS = [
+    (1024, 8, 200), (1024, 16, 200),
+    (4096, 8, 200), (4096, 16, 200),
+    (16384, 8, 200), (16384, 16, 200),
+]
+QUICK_SPMV = [(1024, 8)]
+QUICK_JACOBI = [(1024, 8, 200)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(fn, args, path: str) -> int:
+    """Lower ``fn`` at ``args`` and write HLO text to ``path``."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the smallest bucket (smoke builds)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    spmv_buckets = QUICK_SPMV if args.quick else SPMV_BUCKETS
+    jacobi_buckets = QUICK_JACOBI if args.quick else JACOBI_BUCKETS
+    manifest = []
+
+    for n, k in spmv_buckets:
+        path = os.path.join(args.out_dir, f"spmv_n{n}_k{k}.hlo.txt")
+        size = emit(model.spmv, model.example_args_spmv(n, k), path)
+        manifest.append(("spmv", n, k, 0, os.path.basename(path)))
+        print(f"wrote {path} ({size} chars)", file=sys.stderr)
+
+        path = os.path.join(args.out_dir, f"pcg_step_n{n}_k{k}.hlo.txt")
+        size = emit(model.pcg_step, model.example_args_pcg_step(n, k), path)
+        manifest.append(("pcg_step", n, k, 0, os.path.basename(path)))
+        print(f"wrote {path} ({size} chars)", file=sys.stderr)
+
+    for n, k, t in jacobi_buckets:
+        path = os.path.join(args.out_dir, f"jacobi_pcg_n{n}_k{k}_t{t}.hlo.txt")
+        size = emit(
+            lambda v, i, d, b, x0: model.jacobi_pcg(v, i, d, b, x0, iters=t),
+            model.example_args_jacobi(n, k),
+            path,
+        )
+        manifest.append(("jacobi_pcg", n, k, t, os.path.basename(path)))
+        print(f"wrote {path} ({size} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("kind\tn\tk\titers\tfile\n")
+        for kind, n, k, t, name in manifest:
+            f.write(f"{kind}\t{n}\t{k}\t{t}\t{name}\n")
+    print(f"manifest: {len(manifest)} artifacts", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

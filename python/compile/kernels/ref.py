@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: `python/tests/` asserts the Pallas
+kernels (interpret=True) match these to float tolerance across shape/dtype
+sweeps, and `aot.py` embeds the *kernels* (not these) into the exported
+HLO.
+"""
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(values, indices, x):
+    """ELL SpMV reference: y[i] = sum_j values[i, j] * x[indices[i, j]].
+
+    Padding convention: padded slots carry value 0.0 (index arbitrary but
+    in-range), so they contribute nothing.
+
+    Args:
+      values: [n, k] float array of per-row slot values.
+      indices: [n, k] int32 array of per-row column indices.
+      x: [n] float vector.
+
+    Returns:
+      [n] float vector y = A x.
+    """
+    return jnp.sum(values * x[indices], axis=1)
+
+
+def jacobi_pcg_ref(values, indices, inv_diag, b, x0, iters):
+    """Reference Jacobi-preconditioned CG on the ELL matrix.
+
+    Mirrors MATLAB ``pcg`` (Hestenes-Stiefel, recursive residual). Returns
+    (x, relres_history[iters]) where history[t] = ||r_{t+1}|| / ||b||.
+    """
+    bnorm = jnp.maximum(jnp.linalg.norm(b), jnp.finfo(b.dtype).tiny)
+    x = x0
+    r = b - spmv_ell_ref(values, indices, x)
+    z = inv_diag * r
+    p = z
+    rz = jnp.dot(r, z)
+    hist = []
+    for _ in range(iters):
+        ap = spmv_ell_ref(values, indices, p)
+        pap = jnp.dot(p, ap)
+        alpha = jnp.where(pap > 0, rz / jnp.where(pap > 0, pap, 1.0), 0.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        hist.append(jnp.linalg.norm(r) / bnorm)
+        z = inv_diag * r
+        rz_new = jnp.dot(r, z)
+        beta = jnp.where(rz > 0, rz_new / jnp.where(rz > 0, rz, 1.0), 0.0)
+        rz = rz_new
+        p = z + beta * p
+    return x, jnp.stack(hist)

@@ -1,0 +1,84 @@
+"""Layer-1 Pallas kernel: ELL-format SpMV.
+
+The paper's downstream evaluation (PCG with the sparsifier preconditioner,
+SS V) is dominated by the SpMV ``L_G . x`` with |E| >> |V|. This kernel is
+the TPU-idiom formulation of that hot spot:
+
+* **ELL layout**: every Laplacian row is padded to a fixed ``k`` slots
+  (``values[n, k]``, ``indices[n, k]``). That turns the irregular CSR
+  gather into a dense [n, k] elementwise multiply + row reduction -- fully
+  vectorizable on the VPU lanes, the TPU analogue of the paper's
+  row-parallel OpenMP loop. Hub rows with more than ``k`` entries go to a
+  COO tail handled by the Rust coordinator (HYB split), keeping ``k`` small
+  and the padding waste bounded.
+* **BlockSpec tiling**: rows are processed in blocks of ``bn`` (grid over
+  ``n // bn``), so each step stages a ``bn x k`` tile of values/indices
+  plus the full ``x`` vector in VMEM: footprint ``bn*k*8 + n*4`` bytes,
+  sized well under the ~16 MiB VMEM budget for every bucket we ship
+  (see DESIGN.md SS Perf-L1).
+* ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; lowering through the interpreter emits plain HLO that the
+  Rust runtime executes byte-identically to the reference.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(values_ref, indices_ref, x_ref, y_ref):
+    """One row-block: y = sum_j values * x[indices] over the k axis."""
+    vals = values_ref[...]          # (bn, k) f32
+    idx = indices_ref[...]          # (bn, k) i32
+    x = x_ref[...]                  # (n,)   f32
+    y_ref[...] = jnp.sum(vals * x[idx], axis=1)
+
+
+def pick_block_rows(n: int) -> int:
+    """Row-block size: biggest power-of-two tile <= 8192 dividing n (8192*k*8B <= 1 MiB per tile at k=16, well under the VMEM budget; fewer grid steps amortize the HBM->VMEM staging)."""
+    bn = 1
+    while bn * 2 <= min(n, 8192) and n % (bn * 2) == 0:
+        bn *= 2
+    return bn
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def spmv_ell(values, indices, x, bn=None):
+    """Pallas ELL SpMV: y = A x with A in padded ELL form.
+
+    Args:
+      values: [n, k] float32 slot values (0.0 in padded slots).
+      indices: [n, k] int32 slot column indices (in range [0, n)).
+      x: [n] float32 input vector.
+      bn: optional row-block size; must divide n. Default: pick_block_rows.
+
+    Returns:
+      [n] float32 y = A x.
+    """
+    n, k = values.shape
+    if bn is None:
+        bn = pick_block_rows(n)
+    assert n % bn == 0, f"block rows {bn} must divide n={n}"
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), values.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),   # values tile
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),   # indices tile
+            pl.BlockSpec((n,), lambda i: (0,)),        # full x each step
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        interpret=True,
+    )(values, indices, x)
+
+
+def vmem_bytes(n: int, k: int, bn: int) -> int:
+    """Estimated VMEM footprint of one grid step (SS Perf-L1)."""
+    tile = bn * k * (4 + 4)   # values f32 + indices i32
+    xvec = n * 4              # full x staged per step
+    out = bn * 4
+    return tile + xvec + out

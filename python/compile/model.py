@@ -1,0 +1,102 @@
+"""Layer-2 JAX compute graph: the PCG evaluation step built on the Pallas
+ELL-SpMV kernel (Layer 1).
+
+Two exported computations per (n, k) shape bucket:
+
+* ``spmv``      -- one SpMV dispatch: the Rust PCG loop (which owns the
+                   sparsifier LDL^T preconditioner) calls this per iteration.
+* ``pcg_step``  -- a fused half-iteration: given (p, x, r, rz) it computes
+                   Ap, alpha, and the x/r updates plus ||r|| in ONE module,
+                   so the hot path costs a single PJRT dispatch instead of
+                   four (SS Perf-L2: fusion across the vector algebra).
+* ``jacobi_pcg`` -- a fully self-contained T-iteration Jacobi-PCG via
+                   ``lax.scan``, returning the relative-residual history;
+                   used by the end-to-end XLA demo and the parity tests.
+
+Python here runs at build time only; ``aot.py`` lowers these with
+``jax.jit(...).lower(...)`` and writes HLO text for the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.spmv_ell import spmv_ell
+
+
+def spmv(values, indices, x):
+    """y = A x (Pallas ELL kernel)."""
+    return spmv_ell(values, indices, x)
+
+
+def pcg_step(values, indices, p, x, r, rz):
+    """Fused PCG half-iteration around the SpMV.
+
+    Returns (x', r', relnum, pap) where relnum = ||r'||_2. The caller
+    (Rust) applies its preconditioner to r', computes rz' and beta, and
+    forms the next search direction p' = z' + beta p.
+    """
+    ap = spmv_ell(values, indices, p)
+    pap = jnp.dot(p, ap)
+    alpha = rz / pap
+    x = x + alpha * p
+    r = r - alpha * ap
+    return x, r, jnp.linalg.norm(r), pap
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def jacobi_pcg(values, indices, inv_diag, b, x0, iters: int):
+    """T-iteration Jacobi-preconditioned CG, scan-fused.
+
+    Returns (x, hist[iters]) with hist[t] = ||r_{t+1}|| / ||b||. Runs a
+    fixed number of iterations (shapes are static for AOT); the caller
+    finds the first history entry under its tolerance.
+    """
+    bnorm = jnp.maximum(jnp.linalg.norm(b), jnp.finfo(b.dtype).tiny)
+    r0 = b - spmv_ell(values, indices, x0)
+    z0 = inv_diag * r0
+    rz0 = jnp.dot(r0, z0)
+
+    def body(carry, _):
+        x, r, p, rz = carry
+        ap = spmv_ell(values, indices, p)
+        pap = jnp.dot(p, ap)
+        # Safe divisions: once converged (rz, pap ~ 0) the iteration
+        # freezes instead of producing NaNs in the fixed-length scan.
+        alpha = jnp.where(pap > 0, rz / jnp.where(pap > 0, pap, 1.0), 0.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        z = inv_diag * r
+        rz_new = jnp.dot(r, z)
+        beta = jnp.where(rz > 0, rz_new / jnp.where(rz > 0, rz, 1.0), 0.0)
+        p = z + beta * p
+        return (x, r, p, rz_new), jnp.linalg.norm(r) / bnorm
+
+    (x, _, _, _), hist = jax.lax.scan(body, (x0, r0, z0, rz0), None, length=iters)
+    return x, hist
+
+
+def example_args_spmv(n: int, k: int):
+    """ShapeDtypeStructs for lowering ``spmv`` at bucket (n, k)."""
+    f = jax.ShapeDtypeStruct((n, k), jnp.float32)
+    i = jax.ShapeDtypeStruct((n, k), jnp.int32)
+    v = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return (f, i, v)
+
+
+def example_args_pcg_step(n: int, k: int):
+    """ShapeDtypeStructs for lowering ``pcg_step`` at bucket (n, k)."""
+    f = jax.ShapeDtypeStruct((n, k), jnp.float32)
+    i = jax.ShapeDtypeStruct((n, k), jnp.int32)
+    v = jax.ShapeDtypeStruct((n,), jnp.float32)
+    s = jax.ShapeDtypeStruct((), jnp.float32)
+    return (f, i, v, v, v, s)
+
+
+def example_args_jacobi(n: int, k: int):
+    """ShapeDtypeStructs for lowering ``jacobi_pcg`` at bucket (n, k)."""
+    f = jax.ShapeDtypeStruct((n, k), jnp.float32)
+    i = jax.ShapeDtypeStruct((n, k), jnp.int32)
+    v = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return (f, i, v, v, v)

@@ -1,0 +1,335 @@
+//! Configuration: a minimal TOML-subset parser + the typed run config.
+//!
+//! The offline vendor set has no `serde`/`toml`, so this module implements
+//! the subset the launcher needs: `[sections]`, `key = value` with
+//! strings, integers, floats, booleans, and flat arrays. Unknown keys are
+//! reported as errors (catching config typos), matching what a production
+//! launcher would do.
+
+use std::collections::HashMap;
+
+/// A parsed TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Flat array of values.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// As f64 (ints widen).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As usize.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    /// As str.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key → value` (top-level keys use `""`).
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    entries: HashMap<String, Value>,
+}
+
+impl Doc {
+    /// Parse a TOML-subset string.
+    pub fn parse(text: &str) -> anyhow::Result<Doc> {
+        let mut entries = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                anyhow::ensure!(line.ends_with(']'), "line {}: bad section header", lineno + 1);
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = parse_value(v.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            entries.insert(key, value);
+        }
+        Ok(Doc { entries })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Doc> {
+        Doc::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Fetch a value by dotted key.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    /// All keys (sorted, for validation).
+    pub fn keys(&self) -> Vec<&str> {
+        let mut ks: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        ks.sort_unstable();
+        ks
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive: no # inside strings in our configs
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn parse_value(s: &str) -> anyhow::Result<Value> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    anyhow::bail!("cannot parse value: {s:?}")
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 && !in_str => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+/// Typed experiment configuration (maps onto
+/// [`crate::coordinator::PipelineConfig`] plus run selection).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// α values to sweep.
+    pub alphas: Vec<f64>,
+    /// Suite rows to run (names); empty = all 18.
+    pub graphs: Vec<String>,
+    /// Suite scale factor.
+    pub scale: f64,
+    /// Seed.
+    pub seed: u64,
+    /// PCG tolerance.
+    pub tol: f64,
+    /// PCG iteration cap.
+    pub maxit: usize,
+    /// Timing trials.
+    pub trials: usize,
+    /// Evaluate PCG quality.
+    pub quality: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            alphas: vec![0.02, 0.05, 0.10],
+            graphs: Vec::new(),
+            scale: 1.0,
+            seed: crate::gen::DEFAULT_SEED,
+            tol: 1e-3,
+            maxit: 50_000,
+            trials: 3,
+            quality: true,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from a parsed document (`[run]` section), validating keys.
+    pub fn from_doc(doc: &Doc) -> anyhow::Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        let known = [
+            "run.alphas", "run.graphs", "run.scale", "run.seed", "run.tol", "run.maxit",
+            "run.trials", "run.quality",
+        ];
+        for key in doc.keys() {
+            anyhow::ensure!(known.contains(&key), "unknown config key: {key}");
+        }
+        if let Some(v) = doc.get("run.alphas") {
+            if let Value::Array(items) = v {
+                cfg.alphas = items
+                    .iter()
+                    .map(|i| i.as_f64().ok_or_else(|| anyhow::anyhow!("alphas: not a number")))
+                    .collect::<anyhow::Result<_>>()?;
+            }
+        }
+        if let Some(Value::Array(items)) = doc.get("run.graphs") {
+            cfg.graphs = items
+                .iter()
+                .map(|i| {
+                    i.as_str()
+                        .map(|s| s.to_string())
+                        .ok_or_else(|| anyhow::anyhow!("graphs: not a string"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+        if let Some(v) = doc.get("run.scale") {
+            cfg.scale = v.as_f64().ok_or_else(|| anyhow::anyhow!("scale: not a number"))?;
+        }
+        if let Some(v) = doc.get("run.seed") {
+            cfg.seed = v.as_usize().ok_or_else(|| anyhow::anyhow!("seed: not an int"))? as u64;
+        }
+        if let Some(v) = doc.get("run.tol") {
+            cfg.tol = v.as_f64().ok_or_else(|| anyhow::anyhow!("tol: not a number"))?;
+        }
+        if let Some(v) = doc.get("run.maxit") {
+            cfg.maxit = v.as_usize().ok_or_else(|| anyhow::anyhow!("maxit: not an int"))?;
+        }
+        if let Some(v) = doc.get("run.trials") {
+            cfg.trials = v.as_usize().ok_or_else(|| anyhow::anyhow!("trials: not an int"))?;
+        }
+        if let Some(v) = doc.get("run.quality") {
+            cfg.quality = v.as_bool().ok_or_else(|| anyhow::anyhow!("quality: not a bool"))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Convert into a pipeline config.
+    pub fn pipeline(&self) -> crate::coordinator::PipelineConfig {
+        crate::coordinator::PipelineConfig {
+            alpha: self.alphas.first().copied().unwrap_or(0.02),
+            tol: self.tol,
+            maxit: self.maxit,
+            scale: self.scale,
+            seed: self.seed,
+            trials: self.trials,
+            evaluate_quality: self.quality,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            "# comment\ntop = 1\n[run]\nscale = 0.5\nseed = 42\nquality = true\n\
+             graphs = [\"01-mi2010\", \"15-M6\"]\nalphas = [0.02, 0.05]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("top"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("run.scale"), Some(&Value::Float(0.5)));
+        assert_eq!(doc.get("run.quality"), Some(&Value::Bool(true)));
+        match doc.get("run.graphs") {
+            Some(Value::Array(items)) => assert_eq!(items.len(), 2),
+            other => panic!("bad graphs: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn run_config_roundtrip() {
+        let doc = Doc::parse(
+            "[run]\nalphas = [0.1]\nscale = 0.25\nseed = 7\ntol = 0.001\nmaxit = 100\n\
+             trials = 1\nquality = false\ngraphs = [\"15-M6\"]\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.alphas, vec![0.1]);
+        assert_eq!(cfg.scale, 0.25);
+        assert_eq!(cfg.seed, 7);
+        assert!(!cfg.quality);
+        assert_eq!(cfg.graphs, vec!["15-M6"]);
+        let p = cfg.pipeline();
+        assert_eq!(p.alpha, 0.1);
+        assert_eq!(p.trials, 1);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = Doc::parse("[run]\nspeeling_mistake = 1\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        assert!(Doc::parse("x = @nope\n").is_err());
+        assert!(Doc::parse("[broken\nx = 1\n").is_err());
+    }
+}

@@ -1,0 +1,217 @@
+//! End-to-end pipeline: graph → spanning tree → recovery (feGRASS &
+//! pdGRASS) → PCG quality evaluation → simulated multi-thread timing.
+//!
+//! This is the measurement engine behind every experiment driver
+//! (`coordinator::experiments`) and the CLI.
+
+use super::schedsim::{simulate, SimParams};
+use crate::gen;
+use crate::graph::Graph;
+use crate::recovery::{self, Params, Strategy};
+use crate::solver;
+use crate::tree::{build_spanning, Spanning};
+
+
+/// Pipeline configuration (defaults follow §V of the paper).
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    /// Edge-recovery ratio α.
+    pub alpha: f64,
+    /// BFS step-size constant c.
+    pub beta_cap: u32,
+    /// PCG tolerance (paper: 1e-3).
+    pub tol: f64,
+    /// PCG iteration cap.
+    pub maxit: usize,
+    /// Suite scale factor.
+    pub scale: f64,
+    /// Generator / RHS seed.
+    pub seed: u64,
+    /// Timing trials (paper reports min over 5).
+    pub trials: usize,
+    /// Run the PCG quality evaluation (slowest part; benches can skip).
+    pub evaluate_quality: bool,
+    /// Thread counts to simulate for T_p (e.g. [8, 32]).
+    pub sim_threads: [usize; 2],
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            alpha: 0.02,
+            beta_cap: 8,
+            tol: 1e-3,
+            maxit: 50_000,
+            scale: 1.0,
+            seed: gen::DEFAULT_SEED,
+            trials: 3,
+            evaluate_quality: true,
+            sim_threads: [8, 32],
+        }
+    }
+}
+
+/// Everything measured for one (graph, α) pair.
+#[derive(Clone, Debug)]
+pub struct GraphReport {
+    /// Suite row name.
+    pub name: String,
+    /// Vertices.
+    pub v: usize,
+    /// Edges.
+    pub e: usize,
+    /// feGRASS recovery time, ms (min over trials).
+    pub t_fe_ms: f64,
+    /// feGRASS passes.
+    pub fe_passes: usize,
+    /// PCG iterations with the feGRASS sparsifier.
+    pub iter_fe: usize,
+    /// pdGRASS single-thread recovery time, ms (min over trials).
+    pub t_pd1_ms: f64,
+    /// pdGRASS passes (expected 1).
+    pub pd_passes: usize,
+    /// PCG iterations with the pdGRASS sparsifier.
+    pub iter_pd: usize,
+    /// Simulated pdGRASS time at `sim_threads[i]` threads, ms.
+    pub t_pd_sim_ms: [f64; 2],
+    /// Simulated speedups vs T_1 at the same thread counts.
+    pub sim_speedup: [f64; 2],
+    /// Recovery stats from the pdGRASS run.
+    pub stats: recovery::Stats,
+    /// pdGRASS per-step times (serial run), ms.
+    pub step_ms: [f64; 4],
+}
+
+/// Build a suite graph per config.
+pub fn build_graph(name: &str, cfg: &PipelineConfig) -> Graph {
+    gen::suite::build(name, cfg.scale, cfg.seed)
+}
+
+/// Recovery params for pdGRASS at `threads` under this config.
+pub fn recovery_params(cfg: &PipelineConfig, threads: usize, strategy: Strategy) -> Params {
+    Params {
+        alpha: cfg.alpha,
+        beta_cap: cfg.beta_cap,
+        strategy,
+        threads,
+        block: threads.max(1),
+        cutoff_edges: 100_000,
+        cutoff_frac: 0.10,
+        jbp: true,
+    }
+}
+
+/// Run both algorithms + evaluation on one suite graph.
+pub fn run_graph(name: &str, cfg: &PipelineConfig) -> anyhow::Result<GraphReport> {
+    let g = build_graph(name, cfg);
+    let sp = build_spanning(&g);
+    run_prepared(name, &g, &sp, cfg)
+}
+
+/// As [`run_graph`] but with a prebuilt graph + spanning tree.
+pub fn run_prepared(
+    name: &str,
+    g: &Graph,
+    sp: &Spanning,
+    cfg: &PipelineConfig,
+) -> anyhow::Result<GraphReport> {
+    let params_serial = recovery_params(cfg, 1, Strategy::Serial);
+
+    // --- feGRASS baseline (serial, multi-pass) ---
+    let (fe, t_fe_ms) =
+        crate::util::min_of(cfg.trials, || recovery::fegrass(g, sp, &params_serial));
+
+    // --- pdGRASS serial run with trace (simulator input) ---
+    let (pd, t_pd1_ms) = crate::util::min_of(cfg.trials, || {
+        recovery::pdgrass::pdgrass_traced(g, sp, &params_serial, true)
+    });
+    let trace = pd.trace.as_ref().expect("trace requested");
+
+    // --- simulated multi-thread timing, calibrated on the serial run ---
+    let steps123: f64 = pd.step_ms[0] + pd.step_ms[1] + pd.step_ms[2];
+    let serial_units = simulate(trace, &SimParams::new(1)).time().max(1);
+    let ms_per_unit = pd.step_ms[3] / serial_units as f64;
+    let mut t_pd_sim_ms = [0f64; 2];
+    let mut sim_speedup = [0f64; 2];
+    for (i, &p) in cfg.sim_threads.iter().enumerate() {
+        let sim = simulate(trace, &SimParams::new(p));
+        let t4 = sim.time() as f64 * ms_per_unit;
+        // steps 1–3 are standard parallel primitives (O(lg²) span): model
+        // them as ideally scaled; they are a small fraction of the total.
+        t_pd_sim_ms[i] = steps123 / p as f64 + t4;
+        let t1 = steps123 + pd.step_ms[3];
+        sim_speedup[i] = t1 / t_pd_sim_ms[i].max(1e-9);
+    }
+
+    // --- PCG quality evaluation (same RHS seed for both sparsifiers) ---
+    let (mut iter_fe, mut iter_pd) = (0usize, 0usize);
+    if cfg.evaluate_quality {
+        let p_fe = recovery::sparsifier(g, sp, &fe.edges);
+        let p_pd = recovery::sparsifier(g, sp, &pd.edges);
+        let (ife, conv_fe) =
+            solver::pcg_iterations(g, &p_fe, cfg.seed ^ 0xb, cfg.tol, cfg.maxit)?;
+        let (ipd, conv_pd) =
+            solver::pcg_iterations(g, &p_pd, cfg.seed ^ 0xb, cfg.tol, cfg.maxit)?;
+        anyhow::ensure!(conv_fe && conv_pd, "PCG did not converge on {name}");
+        iter_fe = ife;
+        iter_pd = ipd;
+    }
+
+    Ok(GraphReport {
+        name: name.to_string(),
+        v: g.num_vertices(),
+        e: g.num_edges(),
+        t_fe_ms,
+        fe_passes: fe.passes,
+        iter_fe,
+        t_pd1_ms,
+        pd_passes: pd.passes,
+        iter_pd,
+        t_pd_sim_ms,
+        sim_speedup,
+        stats: pd.stats.clone(),
+        step_ms: pd.step_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> PipelineConfig {
+        PipelineConfig { scale: 0.02, trials: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn pipeline_runs_a_census_row() {
+        let cfg = quick_cfg();
+        let r = run_graph("01-mi2010", &cfg).unwrap();
+        assert!(r.v > 0 && r.e > 0);
+        assert!(r.t_fe_ms >= 0.0 && r.t_pd1_ms >= 0.0);
+        assert!(r.iter_fe > 0 && r.iter_pd > 0);
+        assert_eq!(r.pd_passes, 1);
+        // simulated 32-thread time must not exceed serial time
+        assert!(r.t_pd_sim_ms[1] <= r.t_pd1_ms * 1.5);
+    }
+
+    #[test]
+    fn quality_skip_flag() {
+        let mut cfg = quick_cfg();
+        cfg.evaluate_quality = false;
+        let r = run_graph("15-M6", &cfg).unwrap();
+        assert_eq!(r.iter_fe, 0);
+        assert_eq!(r.iter_pd, 0);
+    }
+
+    #[test]
+    fn sim_speedup_monotone_in_threads() {
+        let cfg = quick_cfg();
+        let r = run_graph("15-M6", &cfg).unwrap();
+        assert!(
+            r.sim_speedup[1] >= r.sim_speedup[0] * 0.9,
+            "32t {} vs 8t {}",
+            r.sim_speedup[1],
+            r.sim_speedup[0]
+        );
+    }
+}

@@ -1,0 +1,268 @@
+//! Deterministic work–span scheduling simulator.
+//!
+//! This container has one physical core, but the paper's scaling results
+//! (Table IV, Figs. 6–8) are *structural*: they follow from the subtask
+//! size distribution and the blocked inner-parallel dependency shape. The
+//! recovery is instrumented with exact per-edge work counters
+//! ([`crate::recovery::CostTrace`]); this module replays those traces
+//! under a p-thread schedule:
+//!
+//! * **outer part** — small subtasks are list-scheduled greedily (in the
+//!   size-sorted order the implementation uses) onto `p` threads; the
+//!   simulated time is the makespan.
+//! * **inner part** — a large subtask is replayed block by block: the
+//!   judge + commit chain is serial; each block's explorations run on `p`
+//!   threads (the block size is `p`, as in the paper), so a block costs
+//!   `max(explore_i)`. Without Judge-before-Parallel, blocks are formed
+//!   from *all* edges (skipped edges occupy slots and idle their thread),
+//!   which is exactly the bubble penalty of Appendix C.
+//!
+//! Calibration: simulated unit counts are converted to milliseconds with
+//! the measured single-thread unit rate, so `T_1(sim) == T_1(measured)`
+//! by construction and `T_p` inherits the shape.
+
+use crate::recovery::CostTrace;
+
+/// Simulation parameters (mirror of the recovery params that matter).
+#[derive(Clone, Copy, Debug)]
+pub struct SimParams {
+    /// Simulated thread count `p`.
+    pub threads: usize,
+    /// Block size for inner parallelism (paper: `p`).
+    pub block: usize,
+    /// Large-subtask cutoff in edges.
+    pub cutoff_edges: usize,
+    /// Large-subtask cutoff as a fraction of all off-tree edges.
+    pub cutoff_frac: f64,
+    /// Judge-before-Parallel enabled.
+    pub jbp: bool,
+}
+
+impl SimParams {
+    /// Paper defaults at `p` threads.
+    pub fn new(threads: usize) -> SimParams {
+        SimParams {
+            threads,
+            block: threads.max(1),
+            cutoff_edges: 100_000,
+            cutoff_frac: 0.10,
+            jbp: true,
+        }
+    }
+}
+
+/// Simulated timing decomposition, in work units.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimResult {
+    /// Units on the serial spine of inner-parallel subtasks (judge+commit).
+    pub inner_serial: u64,
+    /// Units on the parallel explore phases of inner subtasks (after
+    /// dividing across threads: Σ blocks max-explore).
+    pub inner_parallel: u64,
+    /// Makespan units of the outer-parallel small subtasks.
+    pub outer: u64,
+    /// Total serial work units (p = 1 reference).
+    pub serial_total: u64,
+}
+
+impl SimResult {
+    /// Simulated wall time in units: inner subtasks run one-by-one, then
+    /// the outer group.
+    pub fn time(&self) -> u64 {
+        self.inner_serial + self.inner_parallel + self.outer
+    }
+
+    /// Simulated speedup vs the serial total.
+    pub fn speedup(&self) -> f64 {
+        self.serial_total as f64 / self.time().max(1) as f64
+    }
+}
+
+/// Total serial units of a per-edge cost list.
+fn serial_units(costs: &[(u32, u32)]) -> u64 {
+    costs.iter().map(|&(c, e)| c as u64 + e as u64).sum()
+}
+
+/// Simulate one large subtask under blocked inner parallelism.
+/// Returns (serial_spine_units, parallel_units).
+pub fn simulate_inner(costs: &[(u32, u32)], p: &SimParams) -> (u64, u64) {
+    let block = p.block.max(1);
+    let mut serial = 0u64;
+    let mut parallel = 0u64;
+    if p.jbp {
+        // Judge walks every edge serially (cheap checks); blocks contain
+        // only exploring edges.
+        let mut explores: Vec<u64> = Vec::new();
+        for &(c, e) in costs {
+            serial += c as u64;
+            if e > 0 {
+                explores.push(e as u64);
+            }
+        }
+        for chunk in explores.chunks(block) {
+            // block of ≤ p explores across p threads → max
+            parallel += chunk.iter().copied().max().unwrap_or(0);
+        }
+    } else {
+        // Blocks are consecutive edges; skipped edges idle their slot.
+        for chunk in costs.chunks(block) {
+            serial += chunk.iter().map(|&(c, _)| c as u64).sum::<u64>();
+            parallel += chunk.iter().map(|&(_, e)| e as u64).max().unwrap_or(0);
+        }
+    }
+    (serial, parallel)
+}
+
+/// Greedy list scheduling of small subtasks onto `p` threads (the order is
+/// the size-sorted order the implementation processes them in). Returns
+/// the makespan in units.
+pub fn simulate_outer(subtask_units: &[u64], threads: usize) -> u64 {
+    let threads = threads.max(1);
+    let mut load = vec![0u64; threads];
+    for &w in subtask_units {
+        // assign to least-loaded thread (dynamic scheduling)
+        let t = (0..threads).min_by_key(|&t| load[t]).unwrap();
+        load[t] += w;
+    }
+    load.into_iter().max().unwrap_or(0)
+}
+
+/// Simulate the full mixed-strategy recovery from a cost trace.
+pub fn simulate(trace: &CostTrace, p: &SimParams) -> SimResult {
+    let total_edges: usize = trace.subtask_costs.iter().map(|c| c.len()).sum();
+    let frac_cut = (p.cutoff_frac * total_edges as f64).ceil() as usize;
+    let mut res = SimResult::default();
+    let mut small_units = Vec::new();
+    for costs in &trace.subtask_costs {
+        let su = serial_units(costs);
+        res.serial_total += su;
+        let is_large =
+            costs.len() >= p.cutoff_edges || (frac_cut > 0 && costs.len() >= frac_cut);
+        if is_large && p.threads > 1 {
+            let (s, par) = simulate_inner(costs, p);
+            res.inner_serial += s;
+            res.inner_parallel += par;
+        } else {
+            small_units.push(su);
+        }
+    }
+    res.outer = simulate_outer(&small_units, p.threads);
+    res
+}
+
+/// Simulate only the inner part (Fig. 7): the largest subtask's speedup.
+pub fn inner_part_speedup(trace: &CostTrace, threads: usize) -> f64 {
+    let costs = match trace.subtask_costs.iter().max_by_key(|c| c.len()) {
+        Some(c) if !c.is_empty() => c,
+        _ => return 1.0,
+    };
+    let serial = serial_units(costs);
+    let (s, par) = simulate_inner(costs, &SimParams::new(threads));
+    serial as f64 / (s + par).max(1) as f64
+}
+
+/// Simulate only the outer part (Figs. 6, 8): every subtask except those
+/// above the cutoff, list-scheduled.
+pub fn outer_part_speedup(trace: &CostTrace, threads: usize, p: &SimParams) -> f64 {
+    let total_edges: usize = trace.subtask_costs.iter().map(|c| c.len()).sum();
+    let frac_cut = (p.cutoff_frac * total_edges as f64).ceil() as usize;
+    let units: Vec<u64> = trace
+        .subtask_costs
+        .iter()
+        .filter(|c| c.len() < p.cutoff_edges && (frac_cut == 0 || c.len() < frac_cut))
+        .map(|c| serial_units(c))
+        .collect();
+    let serial: u64 = units.iter().sum();
+    if serial == 0 {
+        return 1.0;
+    }
+    serial as f64 / simulate_outer(&units, threads).max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(subtasks: Vec<Vec<(u32, u32)>>) -> CostTrace {
+        CostTrace { subtask_costs: subtasks }
+    }
+
+    #[test]
+    fn single_thread_matches_serial() {
+        let t = trace(vec![vec![(1, 10), (1, 0), (2, 5)], vec![(1, 3)]]);
+        let r = simulate(&t, &SimParams::new(1));
+        assert_eq!(r.time(), r.serial_total);
+        assert_eq!(r.serial_total, 23);
+        assert!((r.speedup() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outer_scales_with_uniform_subtasks() {
+        // 64 equal subtasks of 10 units → near-ideal scaling
+        let t = trace((0..64).map(|_| vec![(5, 5)]).collect());
+        let r1 = simulate(&t, &SimParams::new(1));
+        let r8 = simulate(&t, &SimParams::new(8));
+        assert_eq!(r1.time(), 640);
+        assert_eq!(r8.time(), 80);
+        assert!((r8.speedup() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inner_parallel_max_per_block() {
+        // one large subtask, all explores equal: block of p=4 costs max=e
+        let costs: Vec<(u32, u32)> = (0..16).map(|_| (1, 8)).collect();
+        let mut p = SimParams::new(4);
+        p.cutoff_edges = 10; // force inner
+        let t = trace(vec![costs]);
+        let r = simulate(&t, &p);
+        // serial spine = 16 checks, parallel = 4 blocks × 8
+        assert_eq!(r.inner_serial, 16);
+        assert_eq!(r.inner_parallel, 32);
+        assert_eq!(r.serial_total, 16 + 128);
+    }
+
+    #[test]
+    fn jbp_beats_no_jbp_on_skippy_traces() {
+        // Alternating skip/explore: without JBP half the block slots idle.
+        let costs: Vec<(u32, u32)> = (0..64)
+            .map(|i| if i % 2 == 0 { (1, 10) } else { (1, 0) })
+            .collect();
+        let mut with = SimParams::new(8);
+        with.cutoff_edges = 10;
+        let mut without = with;
+        without.jbp = false;
+        let t = trace(vec![costs]);
+        let rw = simulate(&t, &with);
+        let rwo = simulate(&t, &without);
+        assert!(rw.time() < rwo.time(), "jbp {} !< nojbp {}", rw.time(), rwo.time());
+    }
+
+    #[test]
+    fn skewed_outer_plateaus() {
+        // One giant subtask (inner-parallel, excluded from the outer part)
+        // plus skewed "small" ones: the biggest small subtask bounds the
+        // outer makespan, so the outer speedup plateaus (Fig. 8 shape).
+        let edge = |n: usize| vec![(5u32, 5u32); n];
+        let subtasks = vec![edge(60), edge(20), edge(10), edge(6)];
+        let t = trace(subtasks);
+        let mut p2 = SimParams::new(2);
+        p2.cutoff_frac = 0.5; // only the 60-edge subtask is "large"
+        let mut p32 = SimParams::new(32);
+        p32.cutoff_frac = 0.5;
+        let s2 = outer_part_speedup(&t, 2, &p2);
+        let s32 = outer_part_speedup(&t, 32, &p32);
+        assert!(s2 > 1.2, "got {s2}");
+        assert!(s32 < 2.1, "plateau expected, got {s32}");
+        // plateau: 32 threads barely better than 2
+        assert!(s32 - s2 < 0.5);
+    }
+
+    #[test]
+    fn inner_part_speedup_grows() {
+        let costs: Vec<(u32, u32)> = (0..256).map(|_| (1, 20)).collect();
+        let t = trace(vec![costs]);
+        let s4 = inner_part_speedup(&t, 4);
+        let s16 = inner_part_speedup(&t, 16);
+        assert!(s16 > s4, "{s16} !> {s4}");
+    }
+}

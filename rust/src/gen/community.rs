@@ -1,0 +1,165 @@
+//! Planted-community generators — the analogue of the paper's coauthor /
+//! citation / co-purchase graphs (`com-DBLP`, `com-Amazon`,
+//! `coAuthorsCiteseer`, `citationsCiteseer`, `coAuthorsDBLP`,
+//! `coPapersDBLP`).
+//!
+//! Collaboration networks are unions of small dense cliques (papers) glued
+//! by shared authors, with a heavy-tailed community-size distribution.
+//! That structure yields a *moderately skewed* subtask distribution: a few
+//! larger LCA groups plus a long tail — the regime where feGRASS needs a
+//! handful of extra recovery passes (Table II rows 07–13).
+
+use crate::graph::{Edge, Graph};
+use crate::util::Rng;
+
+/// Parameters for the planted-community generator.
+#[derive(Clone, Copy, Debug)]
+pub struct CommunityParams {
+    /// Number of vertices.
+    pub n: usize,
+    /// Expected community size (geometric-ish, heavy tail via pareto mix).
+    pub mean_size: f64,
+    /// Pareto exponent for the size tail (smaller → heavier tail).
+    pub tail: f64,
+    /// Probability an intra-community pair is connected.
+    pub intra_p: f64,
+    /// Number of random inter-community "bridge" edges per community.
+    pub bridges: usize,
+    /// Hard cap on community size (keeps the Pareto tail from producing
+    /// quadratic-blowup cliques).
+    pub max_size: usize,
+}
+
+/// Generate a planted-community graph with random weights in `[1, 10]`.
+/// A backbone path through community representatives guarantees
+/// connectivity.
+pub fn community(p: CommunityParams, rng: &mut Rng) -> Graph {
+    assert!(p.n >= 4);
+    // 1. Partition vertices into communities with Pareto-distributed sizes.
+    let mut comms: Vec<(usize, usize)> = Vec::new(); // (start, len)
+    let mut at = 0usize;
+    while at < p.n {
+        // Pareto(x_m = mean*(tail-1)/tail, alpha = tail), clamped.
+        let u = rng.next_f64().max(1e-12);
+        let xm = p.mean_size * (p.tail - 1.0) / p.tail;
+        let size = (xm / u.powf(1.0 / p.tail)).round() as usize;
+        let size = size.clamp(2, p.max_size.max(2)).min(p.n - at).max(1);
+        if size == 0 {
+            break;
+        }
+        comms.push((at, size));
+        at += size;
+    }
+    if let Some(last) = comms.last_mut() {
+        // absorb any 1-vertex remainder
+        if last.0 + last.1 < p.n {
+            last.1 = p.n - last.0;
+        }
+    }
+    let mut edges: Vec<Edge> = Vec::new();
+    let wt = |rng: &mut Rng| rng.range_f64(1.0, 10.0);
+    // 2. Intra-community edges: Erdos-Renyi within, but cap the quadratic
+    //    blowup for giant communities by sampling.
+    for &(start, len) in &comms {
+        let pairs = len * (len - 1) / 2;
+        let expect = (p.intra_p * pairs as f64).ceil() as usize;
+        if pairs <= 4 * expect {
+            for i in 0..len {
+                for j in (i + 1)..len {
+                    if rng.next_f64() < p.intra_p {
+                        edges.push(Edge {
+                            u: (start + i) as u32,
+                            v: (start + j) as u32,
+                            w: wt(rng),
+                        });
+                    }
+                }
+            }
+        } else {
+            for _ in 0..expect {
+                let i = rng.below(len);
+                let j = rng.below(len);
+                if i != j {
+                    let (a, b) = (start + i.min(j), start + i.max(j));
+                    edges.push(Edge { u: a as u32, v: b as u32, w: wt(rng) });
+                }
+            }
+        }
+        // ensure each community is internally connected (star fallback)
+        for i in 1..len {
+            if rng.next_f64() < 0.35 {
+                edges.push(Edge { u: start as u32, v: (start + i) as u32, w: wt(rng) });
+            }
+        }
+    }
+    // 3. Backbone: chain community representatives (guarantees one CC),
+    //    plus random bridges (shared authors).
+    for k in 1..comms.len() {
+        let (a, _) = comms[k - 1];
+        let (b, _) = comms[k];
+        edges.push(Edge { u: a.min(b) as u32, v: a.max(b) as u32, w: wt(rng) });
+    }
+    // Spanning star fallback inside each community
+    for &(start, len) in &comms {
+        for i in 1..len {
+            edges.push(Edge { u: start as u32, v: (start + i) as u32, w: wt(rng) });
+        }
+    }
+    for &(start, len) in &comms {
+        for _ in 0..p.bridges {
+            let s = start + rng.below(len);
+            let t = rng.below(p.n);
+            if s != t {
+                edges.push(Edge { u: s.min(t) as u32, v: s.max(t) as u32, w: wt(rng) });
+            }
+        }
+    }
+    let raw: Vec<(u32, u32, f64)> = edges.iter().map(|e| (e.u, e.v, e.w)).collect();
+    Graph::from_edges(p.n, &raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_connected;
+
+    fn small_params() -> CommunityParams {
+        CommunityParams { n: 3000, mean_size: 12.0, tail: 1.8, intra_p: 0.4, bridges: 2, max_size: 300 }
+    }
+
+    #[test]
+    fn max_size_caps_density() {
+        let mut p = small_params();
+        p.tail = 1.2; // very heavy tail
+        p.max_size = 40;
+        let g = community(p, &mut Rng::new(33));
+        assert!(g.avg_degree() < 40.0, "avg {}", g.avg_degree());
+    }
+
+    #[test]
+    fn connected_and_clustered() {
+        let g = community(small_params(), &mut Rng::new(21));
+        assert_eq!(g.num_vertices(), 3000);
+        assert!(is_connected(&g));
+        // denser than a tree, sparser than quadratic
+        assert!(g.avg_degree() > 2.5 && g.avg_degree() < 60.0, "avg {}", g.avg_degree());
+    }
+
+    #[test]
+    fn has_degree_skew() {
+        let g = community(small_params(), &mut Rng::new(22));
+        assert!(
+            (g.max_degree() as f64) > 3.0 * g.avg_degree(),
+            "max {} avg {}",
+            g.max_degree(),
+            g.avg_degree()
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = community(small_params(), &mut Rng::new(5));
+        let b = community(small_params(), &mut Rng::new(5));
+        assert_eq!(a.num_edges(), b.num_edges());
+    }
+}

@@ -1,0 +1,86 @@
+//! 2-D grid-family generators — the analogue of the paper's census /
+//! redistricting graphs (`mi2010` … `tx2010`, DIMACS10).
+//!
+//! Those graphs are contact graphs of census blocks: planar-ish, low
+//! maximum degree, |E|/|V| ≈ 2.4. A 4-neighbor grid plus a random sprinkle
+//! of diagonals matches that density and produces the same *uniform*
+//! subtask distribution regime (many small LCA groups) that drives the
+//! paper's behaviour on this family.
+
+use crate::graph::{Edge, Graph};
+use crate::util::Rng;
+
+/// Generate a `w × h` grid graph with 4-neighbor connectivity, plus each
+/// cell's diagonal with probability `diag_p`, with weights uniform in
+/// `[1, 10]` (the paper assigns uniform \[1,10\] weights to unweighted
+/// inputs).
+pub fn grid(w: usize, h: usize, diag_p: f64, rng: &mut Rng) -> Graph {
+    assert!(w >= 2 && h >= 2);
+    let id = |x: usize, y: usize| -> u32 { (y * w + x) as u32 };
+    let mut edges: Vec<Edge> = Vec::with_capacity(2 * w * h + (diag_p * (w * h) as f64) as usize);
+    let wt = |rng: &mut Rng| rng.range_f64(1.0, 10.0);
+    for y in 0..h {
+        for x in 0..w {
+            if x + 1 < w {
+                edges.push(Edge { u: id(x, y), v: id(x + 1, y), w: wt(rng) });
+            }
+            if y + 1 < h {
+                edges.push(Edge { u: id(x, y), v: id(x, y + 1), w: wt(rng) });
+            }
+            if x + 1 < w && y + 1 < h && rng.next_f64() < diag_p {
+                // one of the two diagonals, at random
+                if rng.next_f64() < 0.5 {
+                    edges.push(Edge { u: id(x, y), v: id(x + 1, y + 1), w: wt(rng) });
+                } else {
+                    edges.push(Edge { u: id(x + 1, y), v: id(x, y + 1), w: wt(rng) });
+                }
+            }
+        }
+    }
+    Graph::from_unique_edges(w * h, edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_connected;
+
+    #[test]
+    fn grid_shape() {
+        let mut rng = Rng::new(1);
+        let g = grid(10, 7, 0.0, &mut rng);
+        assert_eq!(g.num_vertices(), 70);
+        // 4-neighbor grid: (w-1)h + w(h-1) edges
+        assert_eq!(g.num_edges(), 9 * 7 + 10 * 6);
+        assert!(is_connected(&g));
+        assert!(g.max_degree() <= 4);
+    }
+
+    #[test]
+    fn diagonals_increase_density() {
+        let mut rng = Rng::new(2);
+        let g0 = grid(20, 20, 0.0, &mut rng);
+        let mut rng = Rng::new(2);
+        let g1 = grid(20, 20, 0.9, &mut rng);
+        assert!(g1.num_edges() > g0.num_edges());
+        assert!(is_connected(&g1));
+    }
+
+    #[test]
+    fn weights_in_range() {
+        let mut rng = Rng::new(3);
+        let g = grid(8, 8, 0.5, &mut rng);
+        assert!(g.edges().iter().all(|e| (1.0..10.0).contains(&e.w)));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = grid(12, 12, 0.3, &mut Rng::new(7));
+        let b = grid(12, 12, 0.3, &mut Rng::new(7));
+        assert_eq!(a.num_edges(), b.num_edges());
+        for (x, y) in a.edges().iter().zip(b.edges()) {
+            assert_eq!((x.u, x.v), (y.u, y.v));
+            assert_eq!(x.w, y.w);
+        }
+    }
+}

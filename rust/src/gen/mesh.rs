@@ -1,0 +1,101 @@
+//! Finite-element triangle-mesh generators — the analogue of the paper's
+//! DIMACS10 numerical meshes (`NACA0015`, `M6`, `333SP`, `AS365`, `NLR`).
+//!
+//! Those are 2-D airfoil / multigrid triangulations: near-constant degree
+//! (≈6), huge diameter, no hubs. On this family the off-tree edge LCAs
+//! spread over very many small subtasks — the *uniform* regime where outer
+//! parallelism alone achieves near-ideal scaling (Fig. 6).
+
+use crate::graph::{Edge, Graph};
+use crate::util::Rng;
+
+/// Structured triangle mesh on a `w × h` vertex grid: every grid cell gets
+/// one diagonal (alternating orientation, like a union-jack-ish pattern),
+/// so interior vertices have degree ≈ 6. Weights uniform in `[1, 10]`.
+pub fn tri_mesh(w: usize, h: usize, rng: &mut Rng) -> Graph {
+    assert!(w >= 2 && h >= 2);
+    let id = |x: usize, y: usize| -> u32 { (y * w + x) as u32 };
+    let mut edges: Vec<Edge> = Vec::with_capacity(3 * w * h);
+    let wt = |rng: &mut Rng| rng.range_f64(1.0, 10.0);
+    for y in 0..h {
+        for x in 0..w {
+            if x + 1 < w {
+                edges.push(Edge { u: id(x, y), v: id(x + 1, y), w: wt(rng) });
+            }
+            if y + 1 < h {
+                edges.push(Edge { u: id(x, y), v: id(x, y + 1), w: wt(rng) });
+            }
+            if x + 1 < w && y + 1 < h {
+                // alternate the diagonal to even out degrees
+                if (x + y) % 2 == 0 {
+                    edges.push(Edge { u: id(x, y), v: id(x + 1, y + 1), w: wt(rng) });
+                } else {
+                    edges.push(Edge { u: id(x + 1, y), v: id(x, y + 1), w: wt(rng) });
+                }
+            }
+        }
+    }
+    Graph::from_unique_edges(w * h, edges)
+}
+
+/// Annular mesh: a triangulated ring (like an airfoil boundary layer),
+/// `rings` concentric circles of `seg` vertices each. Produces the same
+/// degree profile as `tri_mesh` but with a cyclic structure so the BFS
+/// tree has two long "arms" — a stress test for deep LCA paths.
+pub fn ring_mesh(rings: usize, seg: usize, rng: &mut Rng) -> Graph {
+    assert!(rings >= 2 && seg >= 3);
+    let id = |r: usize, s: usize| -> u32 { (r * seg + (s % seg)) as u32 };
+    let mut edges: Vec<Edge> = Vec::with_capacity(3 * rings * seg);
+    let wt = |rng: &mut Rng| rng.range_f64(1.0, 10.0);
+    for r in 0..rings {
+        for s in 0..seg {
+            edges.push(Edge {
+                u: id(r, s).min(id(r, s + 1)),
+                v: id(r, s).max(id(r, s + 1)),
+                w: wt(rng),
+            });
+            if r + 1 < rings {
+                edges.push(Edge { u: id(r, s), v: id(r + 1, s), w: wt(rng) });
+                // diagonal
+                edges.push(Edge {
+                    u: id(r, s).min(id(r + 1, (s + 1) % seg)),
+                    v: id(r, s).max(id(r + 1, (s + 1) % seg)),
+                    w: wt(rng),
+                });
+            }
+        }
+    }
+    let raw: Vec<(u32, u32, f64)> = edges.iter().map(|e| (e.u, e.v, e.w)).collect();
+    Graph::from_edges(rings * seg, &raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_connected;
+
+    #[test]
+    fn tri_mesh_degree_profile() {
+        let g = tri_mesh(30, 30, &mut Rng::new(1));
+        assert_eq!(g.num_vertices(), 900);
+        assert!(is_connected(&g));
+        assert!(g.max_degree() <= 8);
+        // interior degree ~6 → avg degree close to 6 for a big mesh
+        assert!(g.avg_degree() > 5.0, "avg {}", g.avg_degree());
+    }
+
+    #[test]
+    fn tri_mesh_edge_count() {
+        // (w-1)h + w(h-1) + (w-1)(h-1)
+        let g = tri_mesh(5, 4, &mut Rng::new(2));
+        assert_eq!(g.num_edges(), 4 * 4 + 5 * 3 + 4 * 3);
+    }
+
+    #[test]
+    fn ring_mesh_connected_cyclic() {
+        let g = ring_mesh(10, 40, &mut Rng::new(3));
+        assert_eq!(g.num_vertices(), 400);
+        assert!(is_connected(&g));
+        assert!(g.num_edges() > g.num_vertices()); // has cycles
+    }
+}

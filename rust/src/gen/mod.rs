@@ -1,0 +1,14 @@
+//! Synthetic graph generators and the 18-row evaluation suite
+//! (substitutes for the paper's SuiteSparse datasets; see DESIGN.md).
+
+pub mod community;
+pub mod grid;
+pub mod mesh;
+pub mod rmat;
+pub mod suite;
+
+pub use community::{community, CommunityParams};
+pub use grid::grid;
+pub use mesh::{ring_mesh, tri_mesh};
+pub use rmat::{hub_graph, rmat, RmatParams};
+pub use suite::{build as build_suite_graph, build_default, Family, SuiteEntry, DEFAULT_SEED, SUITE};

@@ -1,0 +1,142 @@
+//! R-MAT recursive power-law generator — the analogue of the paper's SNAP
+//! social graphs, in particular the *com-Youtube* pathology graph.
+//!
+//! com-Youtube is "a highly skewed graph where a few high-degree vertices
+//! connect to many others" (§V): once such a vertex is covered, feGRASS's
+//! loose vertex-cover condition marks nearly all incident edges similar,
+//! forcing thousands of recovery passes. R-MAT with a strong `a` corner
+//! reproduces exactly that hub structure, and the resulting spanning tree
+//! concentrates off-tree edge LCAs in a handful of giant subtasks — the
+//! *skewed subtask distribution* regime of Figs. 7–8.
+
+use crate::graph::{Edge, Graph};
+use crate::util::Rng;
+
+/// R-MAT parameters (quadrant probabilities, a+b+c+d = 1).
+#[derive(Clone, Copy, Debug)]
+pub struct RmatParams {
+    /// Top-left quadrant probability (skew knob).
+    pub a: f64,
+    /// Top-right.
+    pub b: f64,
+    /// Bottom-left.
+    pub c: f64,
+}
+
+impl RmatParams {
+    /// Classic skewed social-network setting.
+    pub fn skewed() -> Self {
+        RmatParams { a: 0.57, b: 0.19, c: 0.19 }
+    }
+
+    /// Extra-skewed setting used for the com-Youtube analogue.
+    pub fn youtube_like() -> Self {
+        RmatParams { a: 0.7, b: 0.14, c: 0.14 }
+    }
+}
+
+/// Generate an R-MAT graph with `2^scale` vertices and ~`avg_deg·n/2`
+/// undirected edges, random weights in `[1, 10]`.
+///
+/// Duplicate edges are merged (summing weights, as conductances); the
+/// caller typically extracts the largest connected component.
+pub fn rmat(scale: u32, avg_deg: f64, p: RmatParams, rng: &mut Rng) -> Graph {
+    let n = 1usize << scale;
+    let m = (avg_deg * n as f64 / 2.0) as usize;
+    let d = 1.0 - p.a - p.b - p.c;
+    assert!(d >= 0.0, "rmat params must sum to <= 1");
+    let mut raw: Vec<(u32, u32, f64)> = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for level in (0..scale).rev() {
+            // Per-level noise keeps the degree sequence from being too
+            // regular (standard "smoothing" in R-MAT implementations).
+            let r = rng.next_f64();
+            let (du, dv) = if r < p.a {
+                (0, 0)
+            } else if r < p.a + p.b {
+                (0, 1)
+            } else if r < p.a + p.b + p.c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u |= du << level;
+            v |= dv << level;
+        }
+        if u != v {
+            raw.push((u as u32, v as u32, rng.range_f64(1.0, 10.0)));
+        }
+    }
+    Graph::from_edges(n, &raw)
+}
+
+/// A "hub" graph: `hubs` star centers each connected to a random subset of
+/// the `n` vertices, plus a random tree backbone keeping it connected.
+/// This is the most extreme feGRASS worst case: covering one hub marks
+/// almost every off-tree edge loosely similar.
+pub fn hub_graph(n: usize, hubs: usize, hub_deg: usize, rng: &mut Rng) -> Graph {
+    assert!(hubs >= 1 && n > hubs);
+    let mut edges: Vec<Edge> = Vec::new();
+    // Random backbone tree: vertex i attaches to a random earlier vertex.
+    for i in 1..n {
+        let j = rng.below(i);
+        edges.push(Edge {
+            u: (i.min(j)) as u32,
+            v: (i.max(j)) as u32,
+            w: rng.range_f64(1.0, 10.0),
+        });
+    }
+    // Hubs: the first `hubs` vertices get `hub_deg` random spokes each.
+    for h in 0..hubs as u32 {
+        for _ in 0..hub_deg {
+            let t = rng.below(n) as u32;
+            if t != h {
+                edges.push(Edge { u: h.min(t), v: h.max(t), w: rng.range_f64(1.0, 10.0) });
+            }
+        }
+    }
+    let raw: Vec<(u32, u32, f64)> = edges.iter().map(|e| (e.u, e.v, e.w)).collect();
+    Graph::from_edges(n, &raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{is_connected, largest_component};
+
+    #[test]
+    fn rmat_is_power_lawish() {
+        let mut rng = Rng::new(11);
+        let g = rmat(12, 8.0, RmatParams::youtube_like(), &mut rng);
+        let (cc, _) = largest_component(&g);
+        assert!(cc.num_vertices() > 1000);
+        // Skew: max degree far above average.
+        assert!(cc.max_degree() as f64 > 10.0 * cc.avg_degree(),
+            "max {} avg {}", cc.max_degree(), cc.avg_degree());
+    }
+
+    #[test]
+    fn rmat_deterministic() {
+        let a = rmat(10, 6.0, RmatParams::skewed(), &mut Rng::new(5));
+        let b = rmat(10, 6.0, RmatParams::skewed(), &mut Rng::new(5));
+        assert_eq!(a.num_edges(), b.num_edges());
+    }
+
+    #[test]
+    fn hub_graph_connected_and_skewed() {
+        let mut rng = Rng::new(13);
+        let g = hub_graph(5000, 3, 2000, &mut rng);
+        assert!(is_connected(&g));
+        assert!(g.degree(0) > 1000);
+        assert!(g.max_degree() > 100 * 2 * g.num_edges() / g.num_vertices() / 10);
+    }
+
+    #[test]
+    fn hub_graph_small() {
+        let mut rng = Rng::new(17);
+        let g = hub_graph(10, 1, 5, &mut rng);
+        assert!(is_connected(&g));
+        assert!(g.num_edges() >= 9);
+    }
+}

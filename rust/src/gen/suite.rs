@@ -1,0 +1,178 @@
+//! The 18-graph evaluation suite.
+//!
+//! Mirrors Table II of the paper row by row. The original rows are
+//! SuiteSparse matrices (census/redistricting, SNAP social, coauthor /
+//! citation, DIMACS10 FE meshes); this box is offline, so each row is a
+//! synthetic graph from the same structural family at a scale that fits a
+//! single-core container (≈20–80× smaller; see DESIGN.md §Substitutions).
+//! Family → regime correspondences that matter for the algorithms:
+//!
+//! * census grids → uniform small subtasks, feGRASS needs 1–6 passes;
+//! * social R-MAT (`youtube`) → hub-dominated; feGRASS pass blow-up,
+//!   pdGRASS giant single subtask (inner-parallel regime);
+//! * coauthor communities → moderate skew, a few extra passes;
+//! * FE meshes → near-uniform, outer-parallel near-ideal scaling.
+
+use super::community::{community, CommunityParams};
+use super::grid::grid;
+use super::mesh::{ring_mesh, tri_mesh};
+use super::rmat::{rmat, RmatParams};
+use crate::graph::{largest_component, Graph};
+use crate::util::Rng;
+
+/// Structural family of a suite graph (drives expectations in benches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Census / redistricting contact graph (grid-like).
+    Census,
+    /// SNAP social network (power-law hubs).
+    Social,
+    /// Coauthor / citation / co-purchase community graph.
+    Coauthor,
+    /// DIMACS10 finite-element mesh.
+    Mesh,
+}
+
+/// One row of the evaluation suite.
+#[derive(Clone, Copy, Debug)]
+pub struct SuiteEntry {
+    /// Row id matching the paper's numbering, e.g. `"09-com-Youtube"`.
+    pub name: &'static str,
+    /// Structural family.
+    pub family: Family,
+    /// Paper's |V| (for the substitution record).
+    pub paper_v: f64,
+    /// Paper's |E|.
+    pub paper_e: f64,
+}
+
+/// All 18 rows in paper order.
+pub const SUITE: [SuiteEntry; 18] = [
+    SuiteEntry { name: "01-mi2010", family: Family::Census, paper_v: 3.30e5, paper_e: 7.89e5 },
+    SuiteEntry { name: "02-mo2010", family: Family::Census, paper_v: 3.44e5, paper_e: 8.28e5 },
+    SuiteEntry { name: "03-oh2010", family: Family::Census, paper_v: 3.65e5, paper_e: 8.84e5 },
+    SuiteEntry { name: "04-pa2010", family: Family::Census, paper_v: 4.22e5, paper_e: 1.03e6 },
+    SuiteEntry { name: "05-il2010", family: Family::Census, paper_v: 4.52e5, paper_e: 1.08e6 },
+    SuiteEntry { name: "06-tx2010", family: Family::Census, paper_v: 9.14e5, paper_e: 2.23e6 },
+    SuiteEntry { name: "07-com-DBLP", family: Family::Coauthor, paper_v: 3.17e5, paper_e: 1.05e6 },
+    SuiteEntry { name: "08-com-Amazon", family: Family::Coauthor, paper_v: 3.35e5, paper_e: 9.26e5 },
+    SuiteEntry { name: "09-com-Youtube", family: Family::Social, paper_v: 1.13e6, paper_e: 2.99e6 },
+    SuiteEntry { name: "10-coAuthorsCiteseer", family: Family::Coauthor, paper_v: 2.27e5, paper_e: 8.14e5 },
+    SuiteEntry { name: "11-citationCiteseer", family: Family::Coauthor, paper_v: 2.68e5, paper_e: 1.16e6 },
+    SuiteEntry { name: "12-coAuthorsDBLP", family: Family::Coauthor, paper_v: 2.99e5, paper_e: 9.78e5 },
+    SuiteEntry { name: "13-coPapersDBLP", family: Family::Coauthor, paper_v: 5.40e5, paper_e: 1.52e7 },
+    SuiteEntry { name: "14-NACA0015", family: Family::Mesh, paper_v: 1.04e6, paper_e: 3.11e6 },
+    SuiteEntry { name: "15-M6", family: Family::Mesh, paper_v: 3.50e6, paper_e: 1.05e7 },
+    SuiteEntry { name: "16-333SP", family: Family::Mesh, paper_v: 3.71e6, paper_e: 1.11e7 },
+    SuiteEntry { name: "17-AS365", family: Family::Mesh, paper_v: 3.80e6, paper_e: 1.14e7 },
+    SuiteEntry { name: "18-NLR", family: Family::Mesh, paper_v: 4.16e6, paper_e: 1.25e7 },
+];
+
+/// Scale knob for the whole suite. `1.0` is the default container scale
+/// (|V| ≈ 10–45k); smaller values shrink every graph for smoke tests.
+pub fn build(name: &str, scale: f64, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed ^ hash_name(name));
+    let s = |x: usize| -> usize { ((x as f64 * scale.sqrt()).round() as usize).max(8) };
+    let n = |x: usize| -> usize { ((x as f64 * scale).round() as usize).max(64) };
+    let g = match name {
+        "01-mi2010" => grid(s(125), s(125), 0.40, &mut rng),
+        "02-mo2010" => grid(s(128), s(128), 0.41, &mut rng),
+        "03-oh2010" => grid(s(132), s(132), 0.42, &mut rng),
+        "04-pa2010" => grid(s(142), s(142), 0.44, &mut rng),
+        "05-il2010" => grid(s(147), s(147), 0.39, &mut rng),
+        "06-tx2010" => grid(s(209), s(209), 0.44, &mut rng),
+        "07-com-DBLP" => community(
+            CommunityParams { n: n(15_000), mean_size: 9.0, tail: 1.7, intra_p: 0.55, bridges: 2, max_size: 60 },
+            &mut rng,
+        ),
+        "08-com-Amazon" => community(
+            CommunityParams { n: n(16_000), mean_size: 5.0, tail: 2.0, intra_p: 0.45, bridges: 1, max_size: 40 },
+            &mut rng,
+        ),
+        "09-com-Youtube" => {
+            let sc = ((n(32_000) as f64).log2().ceil() as u32).max(8);
+            rmat(sc, 8.0, RmatParams::youtube_like(), &mut rng)
+        }
+        "10-coAuthorsCiteseer" => community(
+            CommunityParams { n: n(11_000), mean_size: 8.0, tail: 1.8, intra_p: 0.6, bridges: 1, max_size: 50 },
+            &mut rng,
+        ),
+        "11-citationCiteseer" => community(
+            CommunityParams { n: n(13_000), mean_size: 11.0, tail: 1.6, intra_p: 0.5, bridges: 3, max_size: 70 },
+            &mut rng,
+        ),
+        "12-coAuthorsDBLP" => community(
+            CommunityParams { n: n(14_500), mean_size: 8.5, tail: 1.8, intra_p: 0.55, bridges: 2, max_size: 55 },
+            &mut rng,
+        ),
+        "13-coPapersDBLP" => community(
+            CommunityParams { n: n(13_000), mean_size: 26.0, tail: 1.5, intra_p: 0.8, bridges: 2, max_size: 90 },
+            &mut rng,
+        ),
+        "14-NACA0015" => tri_mesh(s(160), s(160), &mut rng),
+        "15-M6" => tri_mesh(s(210), s(210), &mut rng),
+        "16-333SP" => tri_mesh(s(215), s(215), &mut rng),
+        "17-AS365" => ring_mesh(s(150), s(300), &mut rng),
+        "18-NLR" => tri_mesh(s(222), s(222), &mut rng),
+        other => panic!("unknown suite graph: {other}"),
+    };
+    // Paper selects single-connected-component matrices; R-MAT may emit
+    // stragglers, so normalize here.
+    let (cc, _) = largest_component(&g);
+    cc
+}
+
+/// Default seed used by the experiment drivers.
+pub const DEFAULT_SEED: u64 = 20250701;
+
+/// Build a suite row at default scale/seed.
+pub fn build_default(name: &str) -> Graph {
+    build(name, 1.0, DEFAULT_SEED)
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a, so each row gets a distinct deterministic stream.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_connected;
+
+    #[test]
+    fn all_rows_build_small_scale() {
+        for e in &SUITE {
+            let g = build(e.name, 0.02, 7);
+            assert!(g.num_vertices() >= 8, "{} too small", e.name);
+            assert!(is_connected(&g), "{} disconnected", e.name);
+        }
+    }
+
+    #[test]
+    fn youtube_row_is_skewed_and_mesh_is_not() {
+        let yt = build("09-com-Youtube", 0.1, DEFAULT_SEED);
+        let m6 = build("15-M6", 0.1, DEFAULT_SEED);
+        assert!(yt.max_degree() as f64 / yt.avg_degree() > 8.0);
+        assert!((m6.max_degree() as f64) < 2.0 * m6.avg_degree() + 4.0);
+    }
+
+    #[test]
+    fn deterministic_builds() {
+        let a = build("07-com-DBLP", 0.05, 9);
+        let b = build("07-com-DBLP", 0.05, 9);
+        assert_eq!(a.num_edges(), b.num_edges());
+        assert_eq!(a.num_vertices(), b.num_vertices());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown suite graph")]
+    fn unknown_name_panics() {
+        build("nope", 1.0, 1);
+    }
+}

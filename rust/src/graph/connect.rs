@@ -1,0 +1,113 @@
+//! Connectivity: components, largest-component extraction.
+//!
+//! The paper's suite uses graphs with a single connected component; the
+//! generators occasionally emit stragglers (RMAT), so the suite registry
+//! extracts the largest component before use — as the paper does when
+//! selecting SuiteSparse matrices.
+
+use super::csr::{Edge, Graph};
+
+/// Label connected components; returns `(labels, count)` with labels in
+/// `0..count` assigned in discovery order.
+pub fn components(g: &Graph) -> (Vec<u32>, usize) {
+    let n = g.num_vertices();
+    let mut label = vec![u32::MAX; n];
+    let mut count = 0u32;
+    let mut stack = Vec::new();
+    for s in 0..n as u32 {
+        if label[s as usize] != u32::MAX {
+            continue;
+        }
+        label[s as usize] = count;
+        stack.push(s);
+        while let Some(u) = stack.pop() {
+            for &v in g.neighbor_ids(u) {
+                if label[v as usize] == u32::MAX {
+                    label[v as usize] = count;
+                    stack.push(v);
+                }
+            }
+        }
+        count += 1;
+    }
+    (label, count as usize)
+}
+
+/// True iff the graph is connected (and non-empty).
+pub fn is_connected(g: &Graph) -> bool {
+    g.num_vertices() > 0 && components(g).1 == 1
+}
+
+/// Extract the largest connected component as a new graph with vertices
+/// relabeled compactly (order preserved). Returns the graph and the map
+/// `new_id -> old_id`.
+pub fn largest_component(g: &Graph) -> (Graph, Vec<u32>) {
+    let n = g.num_vertices();
+    let (label, count) = components(g);
+    if count <= 1 {
+        return (g.clone(), (0..n as u32).collect());
+    }
+    let mut size = vec![0usize; count];
+    for &l in &label {
+        size[l as usize] += 1;
+    }
+    let big = (0..count).max_by_key(|&c| size[c]).unwrap() as u32;
+    let mut old_of_new = Vec::with_capacity(size[big as usize]);
+    let mut new_of_old = vec![u32::MAX; n];
+    for v in 0..n as u32 {
+        if label[v as usize] == big {
+            new_of_old[v as usize] = old_of_new.len() as u32;
+            old_of_new.push(v);
+        }
+    }
+    let edges: Vec<Edge> = g
+        .edges()
+        .iter()
+        .filter(|e| label[e.u as usize] == big)
+        .map(|e| Edge { u: new_of_old[e.u as usize], v: new_of_old[e.v as usize], w: e.w })
+        .collect();
+    (Graph::from_unique_edges(old_of_new.len(), edges), old_of_new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_component() {
+        let g = Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 1.0)]);
+        assert!(is_connected(&g));
+        let (labels, c) = components(&g);
+        assert_eq!(c, 1);
+        assert!(labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn counts_components() {
+        // {0,1}, {2,3,4}, {5}
+        let g = Graph::from_edges(6, &[(0, 1, 1.0), (2, 3, 1.0), (3, 4, 1.0)]);
+        let (_, c) = components(&g);
+        assert_eq!(c, 3);
+        assert!(!is_connected(&g));
+    }
+
+    #[test]
+    fn extracts_largest() {
+        let g = Graph::from_edges(6, &[(0, 1, 1.0), (2, 3, 2.0), (3, 4, 3.0)]);
+        let (cc, old) = largest_component(&g);
+        assert_eq!(cc.num_vertices(), 3);
+        assert_eq!(cc.num_edges(), 2);
+        assert_eq!(old, vec![2, 3, 4]);
+        // weights preserved
+        assert!((cc.total_weight() - 5.0).abs() < 1e-12);
+        assert!(is_connected(&cc));
+    }
+
+    #[test]
+    fn connected_graph_identity() {
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)]);
+        let (cc, old) = largest_component(&g);
+        assert_eq!(cc.num_vertices(), 4);
+        assert_eq!(old, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,224 @@
+//! Weighted undirected graph in CSR form plus a canonical edge list.
+//!
+//! This is the substrate every stage of the pipeline consumes: spanning
+//! tree generation (BFS over CSR), off-tree edge recovery (edge list), and
+//! Laplacian assembly (CSR).
+
+/// An undirected weighted edge with canonical orientation `u < v`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    /// Smaller endpoint.
+    pub u: u32,
+    /// Larger endpoint.
+    pub v: u32,
+    /// Positive weight (conductance, in the electrical-network reading).
+    pub w: f64,
+}
+
+/// Weighted undirected graph: CSR adjacency + unique edge list.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// Vertex count.
+    n: usize,
+    /// CSR row offsets, length `n + 1`.
+    xadj: Vec<usize>,
+    /// CSR neighbor ids, length `2|E|`.
+    adj: Vec<u32>,
+    /// CSR edge weights, parallel to `adj`.
+    wgt: Vec<f64>,
+    /// For each CSR slot, index of the undirected edge in `edges`.
+    eid: Vec<u32>,
+    /// Unique undirected edges, canonical `u < v`.
+    edges: Vec<Edge>,
+}
+
+impl Graph {
+    /// Build a graph from an undirected edge list.
+    ///
+    /// Self loops are dropped; parallel edges are merged by *summing*
+    /// weights (conductances in parallel add). Weights must be positive
+    /// and finite.
+    pub fn from_edges(n: usize, raw: &[(u32, u32, f64)]) -> Graph {
+        assert!(n <= u32::MAX as usize, "vertex count exceeds u32 index space");
+        let mut canon: Vec<Edge> = Vec::with_capacity(raw.len());
+        for &(a, b, w) in raw {
+            assert!((a as usize) < n && (b as usize) < n, "edge endpoint out of range");
+            assert!(w.is_finite() && w > 0.0, "edge weight must be positive and finite");
+            if a == b {
+                continue; // self loop: no effect on the Laplacian off-diagonal
+            }
+            let (u, v) = if a < b { (a, b) } else { (b, a) };
+            canon.push(Edge { u, v, w });
+        }
+        // Merge duplicates: sort by (u, v), sum weights.
+        canon.sort_by(|x, y| (x.u, x.v).cmp(&(y.u, y.v)));
+        let mut edges: Vec<Edge> = Vec::with_capacity(canon.len());
+        for e in canon {
+            match edges.last_mut() {
+                Some(last) if last.u == e.u && last.v == e.v => last.w += e.w,
+                _ => edges.push(e),
+            }
+        }
+        Self::from_unique_edges(n, edges)
+    }
+
+    /// Build from edges already unique + canonical (`u < v`, no loops).
+    pub fn from_unique_edges(n: usize, edges: Vec<Edge>) -> Graph {
+        let m = edges.len();
+        let mut deg = vec![0usize; n];
+        for e in &edges {
+            deg[e.u as usize] += 1;
+            deg[e.v as usize] += 1;
+        }
+        let mut xadj = vec![0usize; n + 1];
+        for i in 0..n {
+            xadj[i + 1] = xadj[i] + deg[i];
+        }
+        let mut adj = vec![0u32; 2 * m];
+        let mut wgt = vec![0f64; 2 * m];
+        let mut eid = vec![0u32; 2 * m];
+        let mut cursor = xadj.clone();
+        for (k, e) in edges.iter().enumerate() {
+            let cu = cursor[e.u as usize];
+            adj[cu] = e.v;
+            wgt[cu] = e.w;
+            eid[cu] = k as u32;
+            cursor[e.u as usize] += 1;
+            let cv = cursor[e.v as usize];
+            adj[cv] = e.u;
+            wgt[cv] = e.w;
+            eid[cv] = k as u32;
+            cursor[e.v as usize] += 1;
+        }
+        Graph { n, xadj, adj, wgt, eid, edges }
+    }
+
+    /// Vertex count |V|.
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Undirected edge count |E|.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Degree of vertex `u` (number of incident unique edges).
+    pub fn degree(&self, u: u32) -> usize {
+        self.xadj[u as usize + 1] - self.xadj[u as usize]
+    }
+
+    /// Weighted degree (sum of incident weights) — the Laplacian diagonal.
+    pub fn weighted_degree(&self, u: u32) -> f64 {
+        let (s, e) = (self.xadj[u as usize], self.xadj[u as usize + 1]);
+        self.wgt[s..e].iter().sum()
+    }
+
+    /// Vertex of maximum degree (ties → smallest id). Used as BFS root for
+    /// the effective-weight computation (Definition 1).
+    pub fn max_degree_vertex(&self) -> u32 {
+        (0..self.n as u32)
+            .max_by_key(|&u| (self.degree(u), std::cmp::Reverse(u)))
+            .expect("empty graph")
+    }
+
+    /// Neighbors of `u` with weights: iterator of `(v, w, edge_id)`.
+    pub fn neighbors(&self, u: u32) -> impl Iterator<Item = (u32, f64, u32)> + '_ {
+        let (s, e) = (self.xadj[u as usize], self.xadj[u as usize + 1]);
+        (s..e).map(move |i| (self.adj[i], self.wgt[i], self.eid[i]))
+    }
+
+    /// Neighbor ids only (fast path for BFS).
+    pub fn neighbor_ids(&self, u: u32) -> &[u32] {
+        &self.adj[self.xadj[u as usize]..self.xadj[u as usize + 1]]
+    }
+
+    /// All unique undirected edges.
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// Edge by id.
+    pub fn edge(&self, id: u32) -> Edge {
+        self.edges[id as usize]
+    }
+
+    /// Total weight of all edges.
+    pub fn total_weight(&self) -> f64 {
+        self.edges.iter().map(|e| e.w).sum()
+    }
+
+    /// Average degree `2|E| / |V|`.
+    pub fn avg_degree(&self) -> f64 {
+        2.0 * self.num_edges() as f64 / self.n.max(1) as f64
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n as u32).map(|u| self.degree(u)).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0), (2, 0, 3.0)])
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let g = triangle();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.degree(0), 2);
+        let mut nbrs: Vec<u32> = g.neighbor_ids(1).to_vec();
+        nbrs.sort();
+        assert_eq!(nbrs, vec![0, 2]);
+    }
+
+    #[test]
+    fn merges_parallel_edges_and_drops_loops() {
+        let g = Graph::from_edges(3, &[(0, 1, 1.0), (1, 0, 2.5), (2, 2, 9.0), (1, 2, 1.0)]);
+        assert_eq!(g.num_edges(), 2);
+        let e = g.edges()[0];
+        assert_eq!((e.u, e.v), (0, 1));
+        assert!((e.w - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_degree_matches() {
+        let g = triangle();
+        assert!((g.weighted_degree(0) - 4.0).abs() < 1e-12);
+        assert!((g.weighted_degree(1) - 3.0).abs() < 1e-12);
+        assert!((g.weighted_degree(2) - 5.0).abs() < 1e-12);
+        assert!((g.total_weight() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_degree_vertex_breaks_ties_low() {
+        let g = triangle();
+        assert_eq!(g.max_degree_vertex(), 0); // all degree 2, lowest id wins
+        let star = Graph::from_edges(4, &[(3, 0, 1.0), (3, 1, 1.0), (3, 2, 1.0)]);
+        assert_eq!(star.max_degree_vertex(), 3);
+    }
+
+    #[test]
+    fn edge_ids_consistent_in_csr() {
+        let g = triangle();
+        for u in 0..3u32 {
+            for (v, w, id) in g.neighbors(u) {
+                let e = g.edge(id);
+                assert!(e.u == u.min(v) && e.v == u.max(v));
+                assert_eq!(e.w, w);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn rejects_nonpositive_weight() {
+        Graph::from_edges(2, &[(0, 1, 0.0)]);
+    }
+}

@@ -1,0 +1,157 @@
+//! MatrixMarket I/O for graphs.
+//!
+//! The paper's datasets come from the SuiteSparse Matrix Collection as
+//! `.mtx` files (symmetric coordinate matrices read as undirected graphs).
+//! This reader accepts `matrix coordinate (real|pattern|integer) symmetric
+//! |general` headers; pattern matrices get weight 1.0 (the suite registry
+//! then assigns random weights in [1, 10] as the paper does). The writer
+//! emits `coordinate real symmetric`, lower-triangular entries.
+
+use super::csr::Graph;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Parse a MatrixMarket file into a graph. Off-diagonal entries become
+/// undirected edges with `w = |value|`; diagonal entries are ignored.
+pub fn read_mtx(path: &Path) -> anyhow::Result<Graph> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    read_mtx_from(BufReader::new(f))
+}
+
+/// Parse MatrixMarket content from any reader.
+pub fn read_mtx_from<R: BufRead>(mut r: R) -> anyhow::Result<Graph> {
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    let header = line.trim().to_ascii_lowercase();
+    if !header.starts_with("%%matrixmarket matrix coordinate") {
+        anyhow::bail!("unsupported MatrixMarket header: {header}");
+    }
+    let pattern = header.contains("pattern");
+    if header.contains("complex") {
+        anyhow::bail!("complex matrices unsupported");
+    }
+    // Skip comments.
+    let dims = loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            anyhow::bail!("missing size line");
+        }
+        let t = line.trim();
+        if !t.is_empty() && !t.starts_with('%') {
+            break t.to_string();
+        }
+    };
+    let mut it = dims.split_whitespace();
+    let nrows: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad size line"))?.parse()?;
+    let ncols: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad size line"))?.parse()?;
+    let nnz: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad size line"))?.parse()?;
+    if nrows != ncols {
+        anyhow::bail!("matrix not square: {nrows}x{ncols}");
+    }
+    let mut raw: Vec<(u32, u32, f64)> = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            anyhow::bail!("truncated entries");
+        }
+        let t = line.trim();
+        if t.is_empty() {
+            anyhow::bail!("blank entry line");
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad entry"))?.parse()?;
+        let j: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad entry"))?.parse()?;
+        let w: f64 = if pattern {
+            1.0
+        } else {
+            it.next().ok_or_else(|| anyhow::anyhow!("missing value"))?.parse()?
+        };
+        if i == 0 || j == 0 || i > nrows || j > nrows {
+            anyhow::bail!("entry out of range: ({i}, {j})");
+        }
+        if i != j {
+            let w = w.abs(); // Laplacian off-diagonals are stored negative
+            if w > 0.0 {
+                raw.push((i as u32 - 1, j as u32 - 1, w));
+            }
+        }
+    }
+    Ok(Graph::from_edges(nrows, &raw))
+}
+
+/// Write a graph as `coordinate real symmetric` MatrixMarket.
+pub fn write_mtx(g: &Graph, path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real symmetric")?;
+    writeln!(w, "% written by pdgrass")?;
+    writeln!(w, "{} {} {}", g.num_vertices(), g.num_vertices(), g.num_edges())?;
+    for e in g.edges() {
+        // lower triangular: row > col, 1-based
+        writeln!(w, "{} {} {}", e.v + 1, e.u + 1, e.w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_symmetric_real() {
+        let src = "%%MatrixMarket matrix coordinate real symmetric\n\
+                   % a comment\n\
+                   3 3 4\n\
+                   2 1 1.5\n\
+                   3 1 -2.0\n\
+                   3 2 0.5\n\
+                   1 1 4.0\n";
+        let g = read_mtx_from(Cursor::new(src)).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3); // diagonal dropped
+        // -2.0 becomes weight 2.0
+        let e = g.edges().iter().find(|e| e.u == 0 && e.v == 2).unwrap();
+        assert_eq!(e.w, 2.0);
+    }
+
+    #[test]
+    fn parses_pattern() {
+        let src = "%%MatrixMarket matrix coordinate pattern symmetric\n\
+                   2 2 1\n\
+                   2 1\n";
+        let g = read_mtx_from(Cursor::new(src)).unwrap();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.edges()[0].w, 1.0);
+    }
+
+    #[test]
+    fn rejects_nonsquare() {
+        let src = "%%MatrixMarket matrix coordinate real general\n2 3 0\n";
+        assert!(read_mtx_from(Cursor::new(src)).is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_tempfile() {
+        let g = Graph::from_edges(4, &[(0, 1, 1.25), (1, 2, 2.0), (2, 3, 0.5), (0, 3, 3.0)]);
+        let dir = std::env::temp_dir().join("pdgrass_mmio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.mtx");
+        write_mtx(&g, &path).unwrap();
+        let h = read_mtx(&path).unwrap();
+        assert_eq!(h.num_vertices(), 4);
+        assert_eq!(h.num_edges(), 4);
+        for (a, b) in g.edges().iter().zip(h.edges()) {
+            assert_eq!((a.u, a.v), (b.u, b.v));
+            assert!((a.w - b.w).abs() < 1e-12);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_file_errors() {
+        let src = "%%MatrixMarket matrix coordinate real symmetric\n3 3 2\n2 1 1.0\n";
+        assert!(read_mtx_from(Cursor::new(src)).is_err());
+    }
+}

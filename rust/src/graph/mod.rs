@@ -1,0 +1,11 @@
+//! Graph substrate: CSR graphs, MatrixMarket I/O, connectivity, Laplacians.
+
+pub mod connect;
+pub mod csr;
+pub mod laplacian;
+pub mod mmio;
+
+pub use connect::{components, is_connected, largest_component};
+pub use csr::{Edge, Graph};
+pub use laplacian::{grounded_laplacian, laplacian, CsrMatrix};
+pub use mmio::{read_mtx, write_mtx};

@@ -1,0 +1,25 @@
+//! # pdGRASS — parallel density-aware graph spectral sparsification
+//!
+//! Reproduction of *pdGRASS: A Fast Parallel Density-Aware Algorithm for
+//! Graph Spectral Sparsification* (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas system. See `DESIGN.md` for the system inventory and
+//! the per-experiment index, and `EXPERIMENTS.md` for paper-vs-measured.
+//!
+//! Pipeline: build/load a graph → spanning tree on *effective weights*
+//! (Def. 1) → score off-tree edges by weighted *resistance distance*
+//! (Def. 2) → recover `α|V|` off-tree edges (feGRASS loose condition, or
+//! pdGRASS strict condition over LCA-grouped subtasks) → evaluate the
+//! sparsifier as a PCG preconditioner (pure-Rust path, or the XLA path
+//! executing the AOT-compiled Pallas SpMV kernel).
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod gen;
+pub mod graph;
+pub mod par;
+pub mod recovery;
+pub mod runtime;
+pub mod solver;
+pub mod tree;
+pub mod util;

@@ -1,0 +1,12 @@
+//! `pdgrass` binary — leader entrypoint + CLI.
+//!
+//! See `pdgrass help` for verbs. The binary is self-contained after
+//! `make artifacts`: Python never runs on the request path.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = pdgrass::cli::run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

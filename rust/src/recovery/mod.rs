@@ -1,0 +1,218 @@
+//! Off-tree edge recovery — the paper's core contribution.
+//!
+//! Both algorithms rank off-tree edges by spectral criticality
+//! (`w·R_T`, Def. 2) and recover the top `α|V|` that are not *similar* to
+//! an already-recovered edge:
+//!
+//! * [`fegrass()`] — the baseline: *loose* similarity (Def. 4, vertex
+//!   cover): an edge is skipped if **either** endpoint is covered by any
+//!   recovered edge's β-hop tree neighborhood (β = c, a constant). One
+//!   sequential pass may recover too few edges → multiple passes.
+//! * [`pdgrass()`] — the paper's algorithm: *strict* similarity (Def. 5):
+//!   skipped only if **both** endpoints fall in the respective β\*-hop
+//!   neighborhoods, with `β* = min(dist(u,lca), dist(v,lca), c)` (Eq. 8).
+//!   Strictly-similar edges provably share their LCA (Lemma 6), so edges
+//!   are grouped by LCA into **independent subtasks** (Lemma 7), processed
+//!   with serial / outer / inner / mixed parallel strategies (§IV).
+
+pub mod fegrass;
+pub mod inner;
+pub mod pdgrass;
+pub mod score;
+pub mod strict;
+pub mod subctx;
+pub mod subtask;
+
+pub use fegrass::fegrass;
+pub use pdgrass::pdgrass;
+
+use crate::graph::{Edge, Graph};
+use crate::tree::Spanning;
+
+/// Parallelization strategy for pdGRASS step 4 (§IV.A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// All subtasks sequentially, each processed serially.
+    Serial,
+    /// Parallel across subtasks only (embarrassingly parallel by Lemma 7).
+    Outer,
+    /// Subtasks one-by-one, each using blocked inner parallelism.
+    Inner,
+    /// Paper default: large subtasks inner-parallel one-by-one first, then
+    /// the small ones outer-parallel.
+    Mixed,
+}
+
+/// Recovery parameters (paper defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct Params {
+    /// Fraction of |V| edges to recover (paper: 0.02 / 0.05 / 0.10).
+    pub alpha: f64,
+    /// BFS step-size constant `c` (Def. 3 default 8).
+    pub beta_cap: u32,
+    /// Parallel strategy for pdGRASS.
+    pub strategy: Strategy,
+    /// Worker threads `p`.
+    pub threads: usize,
+    /// Inner-parallel block size (paper sets it to `p`).
+    pub block: usize,
+    /// A subtask is "large" if it has ≥ this many edges (paper: 1e5)...
+    pub cutoff_edges: usize,
+    /// ...or covers ≥ this fraction of all off-tree edges (paper: 0.10).
+    pub cutoff_frac: f64,
+    /// Judge-before-Parallel optimization (Appendix C) enabled?
+    pub jbp: bool,
+}
+
+impl Params {
+    /// Paper-default parameters for a given `alpha` and thread count.
+    pub fn new(alpha: f64, threads: usize) -> Params {
+        Params {
+            alpha,
+            beta_cap: 8,
+            strategy: Strategy::Mixed,
+            threads,
+            block: threads.max(1),
+            cutoff_edges: 100_000,
+            cutoff_frac: 0.10,
+            jbp: true,
+        }
+    }
+
+    /// Number of edges to recover for a graph with `n` vertices.
+    pub fn target(&self, n: usize) -> usize {
+        (self.alpha * n as f64).ceil() as usize
+    }
+}
+
+/// Instrumentation counters shared by both algorithms.
+///
+/// `work` fields count abstract work units (tag probes for cheap
+/// similarity checks, visited vertices for BFS expansions) and feed the
+/// scheduling simulator; the remaining fields feed Tables III and IV.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    /// Cheap similarity-check work units (tag/cover probes).
+    pub check_units: u64,
+    /// BFS-expansion work units (vertices visited building neighborhoods).
+    pub bfs_units: u64,
+    /// Edges that entered the continue branch inside a parallel block
+    /// ("# edges skipped in parallel", Table III).
+    pub skipped_in_parallel: u64,
+    /// Edges that performed neighborhood exploration inside a parallel
+    /// block ("# edges explored in parallel").
+    pub explored_in_parallel: u64,
+    /// Edges recovered speculatively in a block but rejected by the serial
+    /// commit ("# false positive edges").
+    pub false_positives: u64,
+    /// Total edges routed through parallel blocks.
+    pub edges_in_blocks: u64,
+    /// Number of parallel blocks executed.
+    pub blocks: u64,
+    /// Size of the biggest subtask (off-tree edges).
+    pub biggest_subtask: usize,
+    /// Number of subtasks.
+    pub subtasks: usize,
+    /// Subtasks processed with inner parallelism.
+    pub inner_subtasks: usize,
+}
+
+impl Stats {
+    /// Merge counters from another stats block.
+    pub fn merge(&mut self, o: &Stats) {
+        self.check_units += o.check_units;
+        self.bfs_units += o.bfs_units;
+        self.skipped_in_parallel += o.skipped_in_parallel;
+        self.explored_in_parallel += o.explored_in_parallel;
+        self.false_positives += o.false_positives;
+        self.edges_in_blocks += o.edges_in_blocks;
+        self.blocks += o.blocks;
+        self.biggest_subtask = self.biggest_subtask.max(o.biggest_subtask);
+        self.subtasks += o.subtasks;
+        self.inner_subtasks += o.inner_subtasks;
+    }
+}
+
+/// Per-edge cost trace used by the scheduling simulator: for each off-tree
+/// edge *considered*, the cheap-check cost and (if it explored) the BFS
+/// cost, in work units, in processing order per subtask.
+#[derive(Clone, Debug, Default)]
+pub struct CostTrace {
+    /// For each subtask (in processed order): per-edge `(check, explore)`
+    /// unit costs, `explore == 0` when the edge was skipped cheaply.
+    pub subtask_costs: Vec<Vec<(u32, u32)>>,
+}
+
+/// Result of a recovery run.
+#[derive(Clone, Debug)]
+pub struct Recovery {
+    /// Recovered off-tree edge ids (graph edge ids), best-score-first,
+    /// truncated to the `α|V|` target.
+    pub edges: Vec<u32>,
+    /// Passes over the off-tree edge list (pdGRASS: expected 1).
+    pub passes: usize,
+    /// Instrumentation.
+    pub stats: Stats,
+    /// Optional per-edge cost trace for the scheduling simulator.
+    pub trace: Option<CostTrace>,
+    /// Wall-clock per Algorithm-1 step, ms:
+    /// [resistance, sort, subtasks, recovery]. All zero for feGRASS
+    /// (which has no step structure).
+    pub step_ms: [f64; 4],
+}
+
+/// Assemble the sparsifier `P`: spanning tree + recovered off-tree edges.
+/// The result has `|V| − 1 + α|V|` edges as in §II.B.
+pub fn sparsifier(g: &Graph, sp: &Spanning, recovered: &[u32]) -> Graph {
+    let mut edges: Vec<Edge> = Vec::with_capacity(g.num_vertices() - 1 + recovered.len());
+    for (eid, &in_tree) in sp.is_tree_edge.iter().enumerate() {
+        if in_tree {
+            edges.push(g.edge(eid as u32));
+        }
+    }
+    for &eid in recovered {
+        debug_assert!(!sp.is_tree_edge[eid as usize], "recovered edge must be off-tree");
+        edges.push(g.edge(eid));
+    }
+    edges.sort_by(|a, b| (a.u, a.v).cmp(&(b.u, b.v)));
+    Graph::from_unique_edges(g.num_vertices(), edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::build_spanning;
+    use crate::util::Rng;
+
+    #[test]
+    fn params_target() {
+        let p = Params::new(0.02, 4);
+        assert_eq!(p.target(1000), 20);
+        assert_eq!(p.target(1001), 21); // ceil
+        assert_eq!(p.block, 4);
+    }
+
+    #[test]
+    fn sparsifier_contains_tree_plus_recovered() {
+        let g = crate::gen::grid(10, 10, 0.5, &mut Rng::new(1));
+        let sp = build_spanning(&g);
+        let off: Vec<u32> = (0..g.num_edges() as u32)
+            .filter(|&i| !sp.is_tree_edge[i as usize])
+            .take(5)
+            .collect();
+        let p = sparsifier(&g, &sp, &off);
+        assert_eq!(p.num_vertices(), g.num_vertices());
+        assert_eq!(p.num_edges(), g.num_vertices() - 1 + 5);
+        assert!(crate::graph::is_connected(&p));
+    }
+
+    #[test]
+    fn stats_merge_adds() {
+        let mut a = Stats { check_units: 1, biggest_subtask: 5, ..Default::default() };
+        let b = Stats { check_units: 2, biggest_subtask: 9, subtasks: 3, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.check_units, 3);
+        assert_eq!(a.biggest_subtask, 9);
+        assert_eq!(a.subtasks, 3);
+    }
+}

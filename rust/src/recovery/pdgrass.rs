@@ -1,0 +1,242 @@
+//! pdGRASS (Algorithm 1): strict-similarity recovery over LCA subtasks
+//! with serial / outer / inner / mixed parallel strategies.
+//!
+//! Steps: 1) resistance distances per off-tree edge (one LCA query each),
+//! 2) parallel stable sort by criticality, 3) subtask creation by shared
+//! LCA + size sort, 4) recovery under the strict condition with the chosen
+//! strategy. The strict condition recovers enough edges in a **single
+//! pass** on every suite graph; a fallback pass loop keeps the target
+//! guarantee airtight anyway.
+
+use super::inner::{process_inner, process_serial, SubtaskOutcome};
+use super::score::sort_by_score;
+use super::subtask::{make_subtasks, split_large, Subtask};
+use super::{CostTrace, Params, Recovery, Stats, Strategy};
+use crate::graph::Graph;
+use crate::par;
+use crate::tree::{off_tree_edges, OffTreeEdge, Spanning};
+
+/// Run pdGRASS off-tree edge recovery with `params`.
+pub fn pdgrass(g: &Graph, sp: &Spanning, params: &Params) -> Recovery {
+    pdgrass_traced(g, sp, params, false)
+}
+
+/// As [`pdgrass`], optionally capturing the per-edge cost trace consumed
+/// by the scheduling simulator (`coordinator::schedsim`).
+pub fn pdgrass_traced(g: &Graph, sp: &Spanning, params: &Params, trace: bool) -> Recovery {
+    let mut step_ms = [0f64; 4];
+    // Step 1: resistance distance for each off-tree edge (parallel).
+    let t = crate::util::Timer::start();
+    let mut off = off_tree_edges(g, sp);
+    step_ms[0] = t.ms();
+    // Step 2: parallel stable sort by criticality, descending.
+    let t = crate::util::Timer::start();
+    sort_by_score(&mut off, params.threads);
+    step_ms[1] = t.ms();
+    // Step 3: subtasks by LCA, sorted by size.
+    let t = crate::util::Timer::start();
+    let subtasks = make_subtasks(&off);
+    step_ms[2] = t.ms();
+
+    let target = params.target(g.num_vertices()).min(off.len());
+    let mut stats = Stats::default();
+    stats.subtasks = subtasks.len();
+    stats.biggest_subtask = subtasks.first().map(|s| s.len()).unwrap_or(0);
+
+    // Step 4: process subtasks under the chosen strategy.
+    let t = crate::util::Timer::start();
+    let mut passes = 0usize;
+    let mut recovered_global: Vec<u32> = Vec::new();
+    let mut active: Vec<Subtask> = subtasks;
+    let mut cost_trace = CostTrace::default();
+
+    while recovered_global.len() < target && active.iter().any(|s| !s.is_empty()) {
+        passes += 1;
+        let outcomes = run_pass(&off, sp, &active, params, &mut stats);
+        let mut leftovers: Vec<Subtask> = Vec::new();
+        for (st, oc) in active.iter().zip(&outcomes) {
+            recovered_global.extend_from_slice(&oc.recovered);
+            if !oc.leftover.is_empty() {
+                leftovers.push(Subtask { lca: st.lca, idxs: oc.leftover.clone() });
+            }
+            if trace && passes == 1 {
+                cost_trace.subtask_costs.push(oc.costs.clone());
+            }
+        }
+        active = leftovers;
+        if passes > 64 {
+            break; // safety net; never hit in practice (single pass suffices)
+        }
+    }
+
+    // Global selection: best-scored `target` among recovered.
+    // `recovered_global` holds indices into the score-sorted array, so
+    // ascending index order IS descending score order.
+    step_ms[3] = t.ms();
+    recovered_global.sort_unstable();
+    recovered_global.truncate(target);
+    let edges: Vec<u32> = recovered_global.iter().map(|&i| off[i as usize].eid).collect();
+
+    Recovery { edges, passes, stats, trace: trace.then_some(cost_trace), step_ms }
+}
+
+/// One full pass over the active subtasks under the configured strategy.
+fn run_pass(
+    off: &[OffTreeEdge],
+    sp: &Spanning,
+    active: &[Subtask],
+    params: &Params,
+    stats: &mut Stats,
+) -> Vec<SubtaskOutcome> {
+    let total_off: usize = active.iter().map(|s| s.len()).sum();
+    match params.strategy {
+        Strategy::Serial => active
+            .iter()
+            .map(|st| {
+                let oc = process_serial(off, sp, &st.idxs, params);
+                stats.merge(&oc.stats);
+                oc
+            })
+            .collect(),
+        Strategy::Outer => {
+            let outcomes =
+                par::par_map(active, params.threads, |st| process_serial(off, sp, &st.idxs, params));
+            for oc in &outcomes {
+                stats.merge(&oc.stats);
+            }
+            outcomes
+        }
+        Strategy::Inner => active
+            .iter()
+            .map(|st| {
+                let oc = process_inner(off, sp, &st.idxs, params);
+                stats.inner_subtasks += 1;
+                stats.merge(&oc.stats);
+                oc
+            })
+            .collect(),
+        Strategy::Mixed => {
+            // Large subtasks first, one by one, with inner parallelism;
+            // then the small ones across threads (paper §IV.A).
+            let (large, small) =
+                split_large(active, total_off, params.cutoff_edges, params.cutoff_frac);
+            let mut slots: Vec<Option<SubtaskOutcome>> = vec![None; active.len()];
+            for &li in &large {
+                let oc = process_inner(off, sp, &active[li].idxs, params);
+                stats.inner_subtasks += 1;
+                stats.merge(&oc.stats);
+                slots[li] = Some(oc);
+            }
+            let small_outcomes = par::par_map(&small, params.threads, |&si| {
+                process_serial(off, sp, &active[si].idxs, params)
+            });
+            for (&si, oc) in small.iter().zip(small_outcomes) {
+                stats.merge(&oc.stats);
+                slots[si] = Some(oc);
+            }
+            slots.into_iter().map(|s| s.expect("subtask slot unfilled")).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::tree::build_spanning;
+    use crate::util::Rng;
+
+    fn params(alpha: f64, strategy: Strategy) -> Params {
+        Params {
+            alpha,
+            beta_cap: 8,
+            strategy,
+            threads: 4,
+            block: 4,
+            cutoff_edges: 200, // small graphs in tests → exercise inner path
+            cutoff_frac: 0.10,
+            jbp: true,
+        }
+    }
+
+    fn test_graph(seed: u64) -> Graph {
+        gen::community(
+            gen::CommunityParams { n: 1200, mean_size: 10.0, tail: 1.7, intra_p: 0.5, bridges: 2, max_size: 80 },
+            &mut Rng::new(seed),
+        )
+    }
+
+    #[test]
+    fn recovers_target_in_single_pass() {
+        let g = test_graph(1);
+        let sp = build_spanning(&g);
+        let p = params(0.05, Strategy::Serial);
+        let r = pdgrass(&g, &sp, &p);
+        assert_eq!(r.edges.len(), p.target(g.num_vertices()));
+        assert_eq!(r.passes, 1, "strict condition should recover enough in one pass");
+    }
+
+    #[test]
+    fn all_strategies_agree() {
+        let g = test_graph(2);
+        let sp = build_spanning(&g);
+        let base = pdgrass(&g, &sp, &params(0.05, Strategy::Serial));
+        for strat in [Strategy::Outer, Strategy::Inner, Strategy::Mixed] {
+            let r = pdgrass(&g, &sp, &params(0.05, strat));
+            assert_eq!(r.edges, base.edges, "strategy {strat:?} diverged");
+        }
+    }
+
+    #[test]
+    fn recovered_edges_are_offtree_unique_sorted_by_score() {
+        let g = test_graph(3);
+        let sp = build_spanning(&g);
+        let r = pdgrass(&g, &sp, &params(0.10, Strategy::Mixed));
+        let mut seen = std::collections::HashSet::new();
+        for &eid in &r.edges {
+            assert!(!sp.is_tree_edge[eid as usize]);
+            assert!(seen.insert(eid));
+        }
+    }
+
+    #[test]
+    fn alpha_one_recovers_everything_nonsimilar_or_target() {
+        let g = gen::grid(12, 12, 0.7, &mut Rng::new(4));
+        let sp = build_spanning(&g);
+        let p = params(10.0, Strategy::Serial); // absurd target → capped at |off|
+        let r = pdgrass(&g, &sp, &p);
+        // With fallback passes, every off-tree edge is eventually recovered.
+        assert_eq!(r.edges.len(), sp.num_off_tree());
+    }
+
+    #[test]
+    fn trace_captures_first_pass_subtasks() {
+        let g = test_graph(5);
+        let sp = build_spanning(&g);
+        let r = pdgrass_traced(&g, &sp, &params(0.05, Strategy::Serial), true);
+        let t = r.trace.expect("trace requested");
+        assert_eq!(t.subtask_costs.len(), r.stats.subtasks);
+        let edges_traced: usize = t.subtask_costs.iter().map(|c| c.len()).sum();
+        assert_eq!(edges_traced, sp.num_off_tree());
+    }
+
+    #[test]
+    fn subtask_disjointness_lemma7() {
+        // Edges recovered in different subtasks must have different LCAs;
+        // within a subtask all edges share the LCA.
+        let g = test_graph(6);
+        let sp = build_spanning(&g);
+        let mut off = crate::tree::off_tree_edges(&g, &sp);
+        crate::recovery::score::sort_by_score(&mut off, 1);
+        let subtasks = crate::recovery::subtask::make_subtasks(&off);
+        let mut lcas = std::collections::HashSet::new();
+        for st in &subtasks {
+            assert!(lcas.insert(st.lca), "duplicate subtask LCA");
+            for &i in &st.idxs {
+                assert_eq!(off[i as usize].lca, st.lca);
+            }
+        }
+        let total: usize = subtasks.iter().map(|s| s.len()).sum();
+        assert_eq!(total, off.len());
+    }
+}

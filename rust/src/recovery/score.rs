@@ -1,0 +1,42 @@
+//! Step 2 of Algorithm 1: sort off-tree edges by spectral criticality.
+//!
+//! Parallel *stable* sort, descending by `score = w·R_T`; stability makes
+//! runs reproducible and matches the serial feGRASS tie-break (edge-id
+//! order).
+
+use crate::par;
+use crate::tree::OffTreeEdge;
+
+/// Sort off-tree edges descending by score (stable), in parallel.
+pub fn sort_by_score(off: &mut [OffTreeEdge], threads: usize) {
+    par::sort::par_sort_by(off, threads, &|a: &OffTreeEdge, b: &OffTreeEdge| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.eid.cmp(&b.eid))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mk(eid: u32, score: f64) -> OffTreeEdge {
+        OffTreeEdge { eid, u: 0, v: 1, w: 1.0, lca: 0, resistance: score, score }
+    }
+
+    #[test]
+    fn descending_and_stable() {
+        let mut rng = Rng::new(1);
+        let mut v: Vec<OffTreeEdge> =
+            (0..10_000).map(|i| mk(i, (rng.next_u32() % 50) as f64)).collect();
+        sort_by_score(&mut v, 4);
+        for w in v.windows(2) {
+            assert!(w[0].score >= w[1].score);
+            if w[0].score == w[1].score {
+                assert!(w[0].eid < w[1].eid);
+            }
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Strict similarity (Definition 5) machinery.
+//!
+//! When pdGRASS recovers an off-tree edge `e = (u, v)` it computes the two
+//! β\*-hop tree neighborhoods `S_u`, `S_v` with
+//! `β* = min(dist(u, lca), dist(v, lca), c)` (Eq. 8). A later candidate
+//! `e' = (u', v')` is *strictly similar* to `e` iff
+//! `(u'∈S_u ∧ v'∈S_v) ∨ (u'∈S_v ∧ v'∈S_u)`.
+//!
+//! This module holds the shared β\* computation plus the **lazy
+//! tag-probing** formulation of the condition: per-vertex tag lists
+//! remember which recovered edges' `S_u`/`S_v` contain each vertex, and a
+//! candidate check intersects two short sorted lists. The production
+//! recovery uses the *eager marking* formulation ([`super::subctx`],
+//! which parallelizes better — see Fig. 7); this one is kept as an
+//! independently-implemented equivalence oracle for the tests.
+
+use crate::tree::{OffTreeEdge, Spanning};
+use crate::util::FxHashMap;
+
+/// β\* for a recovered edge (Eq. 8).
+pub fn beta_star(sp: &Spanning, e: &OffTreeEdge, cap: u32) -> u32 {
+    let dl = sp.tree.depth[e.lca as usize];
+    let du = sp.tree.depth[e.u as usize] - dl;
+    let dv = sp.tree.depth[e.v as usize] - dl;
+    du.min(dv).min(cap)
+}
+
+/// Per-vertex tag lists for a single subtask.
+///
+/// Tags are recovered-edge indices local to the subtask, pushed in
+/// increasing order (so the lists stay sorted for linear intersection).
+#[derive(Debug, Default)]
+pub struct TagStore {
+    /// vertex → (tags on the S_u side, tags on the S_v side).
+    tags: FxHashMap<u32, (Vec<u32>, Vec<u32>)>,
+}
+
+impl TagStore {
+    /// Fresh empty store.
+    pub fn new() -> TagStore {
+        TagStore { tags: FxHashMap::default() }
+    }
+
+    /// Record recovered edge `k`'s neighborhoods.
+    pub fn add(&mut self, k: u32, s_u: &[u32], s_v: &[u32]) {
+        for &x in s_u {
+            self.tags.entry(x).or_default().0.push(k);
+        }
+        for &x in s_v {
+            self.tags.entry(x).or_default().1.push(k);
+        }
+    }
+
+    /// Is candidate `(u, v)` strictly similar to any recorded edge?
+    /// Returns the probe cost in work units via `cost`.
+    pub fn is_similar(&self, u: u32, v: u32, cost: &mut u32) -> bool {
+        let empty: (Vec<u32>, Vec<u32>) = (Vec::new(), Vec::new());
+        let tu = self.tags.get(&u).unwrap_or(&empty);
+        let tv = self.tags.get(&v).unwrap_or(&empty);
+        *cost += (tu.0.len() + tu.1.len() + tv.0.len() + tv.1.len()) as u32 + 1;
+        // (u ∈ S_u^k ∧ v ∈ S_v^k)  ⇔  k ∈ tagsA(u) ∩ tagsB(v)
+        sorted_intersects(&tu.0, &tv.1) || sorted_intersects(&tu.1, &tv.0)
+    }
+
+    /// Is candidate similar, considering only tags from edges with local
+    /// index `< upto`? Used by the serial commit after a speculative
+    /// parallel block (tags added within the block must count, tags from
+    /// *later* edges must not — list order gives us that for free since we
+    /// only ever append increasing indices; `upto` guards replay).
+    pub fn is_similar_upto(&self, u: u32, v: u32, upto: u32, cost: &mut u32) -> bool {
+        let empty: (Vec<u32>, Vec<u32>) = (Vec::new(), Vec::new());
+        let tu = self.tags.get(&u).unwrap_or(&empty);
+        let tv = self.tags.get(&v).unwrap_or(&empty);
+        *cost += (tu.0.len() + tu.1.len() + tv.0.len() + tv.1.len()) as u32 + 1;
+        sorted_intersects_below(&tu.0, &tv.1, upto) || sorted_intersects_below(&tu.1, &tv.0, upto)
+    }
+}
+
+/// Do two ascending u32 slices share an element?
+fn sorted_intersects(a: &[u32], b: &[u32]) -> bool {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Equal => return true,
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+        }
+    }
+    false
+}
+
+/// Shared element strictly below `upto`?
+fn sorted_intersects_below(a: &[u32], b: &[u32], upto: u32) -> bool {
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() && a[i] < upto && b[j] < upto {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Equal => return true,
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+        }
+    }
+    false
+}
+
+/// Compute the β\*-hop neighborhoods of a recovered edge's endpoints.
+/// Returns `(S_u, S_v, bfs_cost_units)`.
+pub fn neighborhoods(sp: &Spanning, e: &OffTreeEdge, cap: u32) -> (Vec<u32>, Vec<u32>, u32) {
+    let beta = beta_star(sp, e, cap);
+    let s_u = sp.tree.neighborhood(e.u, beta);
+    let s_v = sp.tree.neighborhood(e.v, beta);
+    let cost = (s_u.len() + s_v.len()) as u32;
+    (s_u, s_v, cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::tree::build_spanning;
+
+    /// Tree: path 0-1-2-3-4-5 (heavy), off-tree edges light.
+    fn path_setup() -> (Graph, Spanning) {
+        let g = Graph::from_edges(
+            6,
+            &[
+                (0, 1, 100.0),
+                (1, 2, 100.0),
+                (2, 3, 100.0),
+                (3, 4, 100.0),
+                (4, 5, 100.0),
+                (1, 4, 0.1),
+                (2, 4, 0.1),
+                (0, 5, 0.1),
+            ],
+        );
+        let sp = build_spanning(&g);
+        (g, sp)
+    }
+
+    fn off(g: &Graph, sp: &Spanning, u: u32, v: u32) -> OffTreeEdge {
+        crate::tree::off_tree_edges(g, sp)
+            .into_iter()
+            .find(|e| e.u == u && e.v == v)
+            .expect("edge not off-tree")
+    }
+
+    #[test]
+    fn beta_star_capped_by_lca_distance() {
+        let (g, sp) = path_setup();
+        // Root is a path endpoint or max-degree vertex; for edge (1,4) on a
+        // path tree, lca is the shallower endpoint → β* = min(d(u,l), d(v,l), 8)
+        let e = off(&g, &sp, 1, 4);
+        let dl = sp.tree.depth[e.lca as usize];
+        let du = sp.tree.depth[1] - dl;
+        let dv = sp.tree.depth[4] - dl;
+        assert_eq!(beta_star(&sp, &e, 8), du.min(dv).min(8));
+        assert_eq!(beta_star(&sp, &e, 0), 0);
+    }
+
+    #[test]
+    fn tag_store_detects_strict_similarity() {
+        let mut ts = TagStore::new();
+        // recovered edge 0: S_u = {1,2}, S_v = {4,5}
+        ts.add(0, &[1, 2], &[4, 5]);
+        let mut cost = 0;
+        // both endpoints inside respective sets → similar
+        assert!(ts.is_similar(2, 4, &mut cost));
+        // swapped orientation also similar
+        assert!(ts.is_similar(4, 2, &mut cost));
+        // only one endpoint inside → NOT similar (this is the strict AND)
+        assert!(!ts.is_similar(2, 9, &mut cost));
+        assert!(!ts.is_similar(9, 4, &mut cost));
+        assert!(cost > 0);
+    }
+
+    #[test]
+    fn loose_would_match_but_strict_does_not() {
+        // Candidate with one endpoint in S_u and the other nowhere:
+        // loose (OR) would mark it similar, strict (AND) must not.
+        let mut ts = TagStore::new();
+        ts.add(0, &[10, 11], &[20, 21]);
+        let mut c = 0;
+        assert!(!ts.is_similar(10, 99, &mut c));
+        assert!(!ts.is_similar(99, 21, &mut c));
+        assert!(ts.is_similar(11, 20, &mut c));
+    }
+
+    #[test]
+    fn upto_guards_commit_order() {
+        let mut ts = TagStore::new();
+        ts.add(0, &[1], &[2]);
+        ts.add(1, &[3], &[4]);
+        let mut c = 0;
+        assert!(ts.is_similar_upto(3, 4, 2, &mut c)); // edge 1 visible
+        assert!(!ts.is_similar_upto(3, 4, 1, &mut c)); // edge 1 hidden
+        assert!(ts.is_similar_upto(1, 2, 1, &mut c)); // edge 0 visible
+    }
+
+    #[test]
+    fn neighborhoods_and_cost() {
+        let (g, sp) = path_setup();
+        let e = off(&g, &sp, 0, 5);
+        let (su, sv, cost) = neighborhoods(&sp, &e, 1);
+        assert_eq!(cost as usize, su.len() + sv.len());
+        assert!(su.contains(&0));
+        assert!(sv.contains(&5));
+    }
+}

@@ -1,0 +1,158 @@
+//! Eager-marking subtask context — the paper's actual execution model.
+//!
+//! When pdGRASS recovers an off-tree edge `e = (u, v)` it *explores*:
+//! computes the β\*-hop tree neighborhoods `S_u`, `S_v` and **marks every
+//! later edge of the subtask that is strictly similar to `e`** (both
+//! endpoints in the respective neighborhoods, Def. 5). A later edge's
+//! similarity test is then an O(1) flag check — the "already marked"
+//! continue-branch of §IV.A. This puts the expensive work (BFS +
+//! mark-set enumeration) in the *parallel* phase of the blocked scheme,
+//! which is exactly why the inner-parallel strategy scales (Fig. 7);
+//! the lazy tag-probing formulation in [`super::strict`] is kept as an
+//! independently-implemented oracle for equivalence tests.
+
+use super::strict::beta_star;
+use crate::tree::{OffTreeEdge, Spanning};
+use crate::util::FxHashMap;
+
+/// Per-subtask context: local edge table + vertex-incidence lists.
+pub struct SubtaskCtx<'a> {
+    /// Off-tree edge array (score-sorted, global).
+    off: &'a [OffTreeEdge],
+    /// Subtask members: indices into `off`, in score order.
+    idxs: &'a [u32],
+    /// vertex → [(local position, other endpoint)] over subtask edges.
+    incident: FxHashMap<u32, Vec<(u32, u32)>>,
+}
+
+impl<'a> SubtaskCtx<'a> {
+    /// Build the incidence lists (O(|S|) time/space).
+    pub fn new(off: &'a [OffTreeEdge], idxs: &'a [u32]) -> SubtaskCtx<'a> {
+        let mut incident: FxHashMap<u32, Vec<(u32, u32)>> = FxHashMap::default();
+        for (pos, &i) in idxs.iter().enumerate() {
+            let e = &off[i as usize];
+            incident.entry(e.u).or_default().push((pos as u32, e.v));
+            incident.entry(e.v).or_default().push((pos as u32, e.u));
+        }
+        SubtaskCtx { off, idxs, incident }
+    }
+
+    /// Number of edges in the subtask.
+    pub fn len(&self) -> usize {
+        self.idxs.len()
+    }
+
+    /// True when the subtask is empty.
+    pub fn is_empty(&self) -> bool {
+        self.idxs.is_empty()
+    }
+
+    /// Global off-array index at local position `pos`.
+    pub fn off_index(&self, pos: usize) -> u32 {
+        self.idxs[pos]
+    }
+
+    /// Explore the edge at local position `pos`: compute its β\*-hop
+    /// neighborhoods and return the positions (> `pos`) of all strictly
+    /// similar edges, plus the work cost in units (BFS visits + incidence
+    /// scans). Read-only — safe to run for a whole block in parallel.
+    pub fn explore(&self, sp: &Spanning, pos: usize, cap: u32) -> (Vec<u32>, u32) {
+        let e = &self.off[self.idxs[pos] as usize];
+        let beta = beta_star(sp, e, cap);
+        let mut s_u = sp.tree.neighborhood(e.u, beta);
+        let mut s_v = sp.tree.neighborhood(e.v, beta);
+        let mut cost = (s_u.len() + s_v.len()) as u32;
+        s_u.sort_unstable();
+        s_v.sort_unstable();
+        let mut marks: Vec<u32> = Vec::new();
+        // Any strictly-similar edge has one endpoint in S_u and the other
+        // in S_v, so scanning the incidence lists of ONE set finds them
+        // all (each edge is listed under both endpoints). Scan the
+        // smaller set and membership-test against the bigger one.
+        let (small, big) = if s_u.len() <= s_v.len() { (&s_u, &s_v) } else { (&s_v, &s_u) };
+        for &x in small {
+            if let Some(list) = self.incident.get(&x) {
+                for &(p2, y) in list {
+                    cost += 1;
+                    if p2 as usize > pos && big.binary_search(&y).is_ok() {
+                        marks.push(p2);
+                    }
+                }
+            }
+        }
+        marks.sort_unstable();
+        marks.dedup();
+        (marks, cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::recovery::score::sort_by_score;
+    use crate::recovery::strict::neighborhoods;
+    use crate::recovery::subtask::make_subtasks;
+    use crate::tree::{build_spanning, off_tree_edges};
+    use crate::util::Rng;
+
+    #[test]
+    fn explore_matches_direct_definition() {
+        // For random graphs, explore(pos) must mark exactly the later
+        // edges that satisfy Definition 5 against the recovered edge.
+        crate::util::proptest::check_default("explore_def5", |rng: &mut Rng| {
+            let g = crate::gen::community(
+                crate::gen::CommunityParams {
+                    n: 150 + rng.below(200),
+                    mean_size: 9.0,
+                    tail: 1.7,
+                    intra_p: 0.5,
+                    bridges: 2,
+                    max_size: 50,
+                },
+                rng,
+            );
+            let sp = build_spanning(&g);
+            let mut off = off_tree_edges(&g, &sp);
+            sort_by_score(&mut off, 1);
+            let subtasks = make_subtasks(&off);
+            let Some(st) = subtasks.first() else { return Ok(()) };
+            let ctx = SubtaskCtx::new(&off, &st.idxs);
+            let pos = rng.below(st.idxs.len());
+            let (marks, _) = ctx.explore(&sp, pos, 8);
+            let e1 = &off[st.idxs[pos] as usize];
+            let (su, sv, _) = neighborhoods(&sp, e1, 8);
+            for (p2, &i2) in st.idxs.iter().enumerate() {
+                if p2 <= pos {
+                    continue;
+                }
+                let e2 = &off[i2 as usize];
+                let direct = (su.contains(&e2.u) && sv.contains(&e2.v))
+                    || (sv.contains(&e2.u) && su.contains(&e2.v));
+                let marked = marks.binary_search(&(p2 as u32)).is_ok();
+                if direct != marked {
+                    return Err(format!(
+                        "pos {pos} edge ({},{}) vs pos {p2} edge ({},{}): direct={direct} marked={marked}",
+                        e1.u, e1.v, e2.u, e2.v
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn explore_never_marks_earlier_positions() {
+        let g = crate::gen::grid(12, 12, 0.7, &mut Rng::new(4));
+        let sp = build_spanning(&g);
+        let mut off = off_tree_edges(&g, &sp);
+        sort_by_score(&mut off, 1);
+        let subtasks = make_subtasks(&off);
+        for st in subtasks.iter().take(4) {
+            let ctx = SubtaskCtx::new(&off, &st.idxs);
+            for pos in 0..st.idxs.len() {
+                let (marks, _) = ctx.explore(&sp, pos, 8);
+                assert!(marks.iter().all(|&p| p as usize > pos));
+            }
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Step 3 of Algorithm 1: create subtasks by shared LCA and sort them by
+//! size.
+//!
+//! Lemma 6 (strictly similar edges share their LCA) + Lemma 7
+//! (contraposition) make LCA groups **independent**: no strict-similarity
+//! relation can cross groups, so the groups can be processed in parallel
+//! with no data dependencies. Lemma 8 (non-commutativity) forces
+//! *in-order* processing inside each group.
+
+use crate::tree::OffTreeEdge;
+use crate::util::FxHashMap;
+
+/// A subtask: the off-tree edges sharing one LCA, in score order.
+#[derive(Clone, Debug)]
+pub struct Subtask {
+    /// The shared LCA vertex.
+    pub lca: u32,
+    /// Indices into the score-sorted off-tree edge array, ascending
+    /// (i.e. best score first — Lemma 8's required processing order).
+    pub idxs: Vec<u32>,
+}
+
+impl Subtask {
+    /// Number of edges in the subtask.
+    pub fn len(&self) -> usize {
+        self.idxs.len()
+    }
+
+    /// True if the subtask has no edges.
+    pub fn is_empty(&self) -> bool {
+        self.idxs.is_empty()
+    }
+}
+
+/// Group score-sorted off-tree edges into subtasks keyed by LCA, then sort
+/// subtasks by size descending (stable: equal sizes keep first-seen
+/// order). One serial pass + sort, `O(|E| lg |E|)` work as in Table I.
+pub fn make_subtasks(off_sorted: &[OffTreeEdge]) -> Vec<Subtask> {
+    let mut by_lca: FxHashMap<u32, Vec<u32>> = FxHashMap::default();
+    for (i, e) in off_sorted.iter().enumerate() {
+        by_lca.entry(e.lca).or_default().push(i as u32);
+    }
+    let mut subtasks: Vec<Subtask> =
+        by_lca.into_iter().map(|(lca, idxs)| Subtask { lca, idxs }).collect();
+    // Deterministic: sort by (size desc, lca asc).
+    subtasks.sort_by(|a, b| b.len().cmp(&a.len()).then(a.lca.cmp(&b.lca)));
+    subtasks
+}
+
+/// Split subtasks into (large, small) index lists per the paper's cutoff:
+/// a subtask is large if it has ≥ `cutoff_edges` edges or covers ≥
+/// `cutoff_frac` of all off-tree edges.
+pub fn split_large(
+    subtasks: &[Subtask],
+    total_off_tree: usize,
+    cutoff_edges: usize,
+    cutoff_frac: f64,
+) -> (Vec<usize>, Vec<usize>) {
+    let frac_cut = (cutoff_frac * total_off_tree as f64).ceil() as usize;
+    let mut large = Vec::new();
+    let mut small = Vec::new();
+    for (i, s) in subtasks.iter().enumerate() {
+        if s.len() >= cutoff_edges || (frac_cut > 0 && s.len() >= frac_cut) {
+            large.push(i);
+        } else {
+            small.push(i);
+        }
+    }
+    (large, small)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(lca: u32, score: f64, eid: u32) -> OffTreeEdge {
+        OffTreeEdge { eid, u: 0, v: 1, w: 1.0, lca, resistance: score, score }
+    }
+
+    #[test]
+    fn groups_by_lca_preserving_order() {
+        // already score-sorted
+        let off = vec![mk(5, 9.0, 0), mk(3, 8.0, 1), mk(5, 7.0, 2), mk(3, 6.0, 3), mk(5, 5.0, 4)];
+        let st = make_subtasks(&off);
+        assert_eq!(st.len(), 2);
+        assert_eq!(st[0].lca, 5); // bigger first
+        assert_eq!(st[0].idxs, vec![0, 2, 4]); // ascending = score order
+        assert_eq!(st[1].idxs, vec![1, 3]);
+    }
+
+    #[test]
+    fn size_ties_break_by_lca() {
+        let off = vec![mk(9, 4.0, 0), mk(2, 3.0, 1), mk(9, 2.0, 2), mk(2, 1.0, 3)];
+        let st = make_subtasks(&off);
+        assert_eq!(st[0].lca, 2);
+        assert_eq!(st[1].lca, 9);
+    }
+
+    #[test]
+    fn split_by_edges_and_frac() {
+        let st = vec![
+            Subtask { lca: 0, idxs: (0..50).collect() },
+            Subtask { lca: 1, idxs: (50..58).collect() },
+            Subtask { lca: 2, idxs: (58..60).collect() },
+        ];
+        // total 60, frac 0.10 → cut at 6 edges
+        let (large, small) = split_large(&st, 60, 100_000, 0.10);
+        assert_eq!(large, vec![0, 1]);
+        assert_eq!(small, vec![2]);
+        // absolute cutoff only
+        let (large, small) = split_large(&st, 60, 10, 1.1);
+        assert_eq!(large, vec![0]);
+        assert_eq!(small, vec![1, 2]);
+    }
+}

@@ -1,0 +1,168 @@
+//! CSR → padded-ELL conversion with shape buckets and the HYB split.
+//!
+//! The AOT artifacts are compiled for fixed `[n, k]` shapes (XLA is
+//! static-shape). A matrix is placed in the smallest bucket with
+//! `n_bucket ≥ n`; rows are padded with zero-valued slots (index 0), and
+//! rows with more than `k` entries spill the excess into a COO *tail*
+//! that the Rust coordinator applies after the XLA dispatch — the classic
+//! HYB (ELL + COO) split, which keeps `k` small even when a hub vertex has
+//! thousands of incident edges.
+
+use crate::graph::CsrMatrix;
+
+/// Padded ELL matrix + COO tail targeting one artifact bucket.
+#[derive(Clone, Debug)]
+pub struct EllMatrix {
+    /// Logical dimension (rows of the original matrix).
+    pub n: usize,
+    /// Bucket dimension (`values.len() / k`), ≥ `n`.
+    pub n_bucket: usize,
+    /// ELL slot count per row.
+    pub k: usize,
+    /// Row-major `[n_bucket, k]` slot values (f32 for the XLA path).
+    pub values: Vec<f32>,
+    /// Row-major `[n_bucket, k]` slot column indices.
+    pub indices: Vec<i32>,
+    /// COO tail: entries that did not fit in `k` slots.
+    pub tail: Vec<(u32, u32, f64)>,
+}
+
+impl EllMatrix {
+    /// Convert a CSR matrix to ELL form for bucket `(n_bucket, k)`.
+    ///
+    /// Panics if `n_bucket < a.n`.
+    pub fn from_csr(a: &CsrMatrix, n_bucket: usize, k: usize) -> EllMatrix {
+        assert!(n_bucket >= a.n, "bucket {n_bucket} too small for n={}", a.n);
+        let mut values = vec![0f32; n_bucket * k];
+        let mut indices = vec![0i32; n_bucket * k];
+        let mut tail = Vec::new();
+        for i in 0..a.n {
+            let (cols, vals) = a.row(i);
+            for (slot, (&c, &v)) in cols.iter().zip(vals).enumerate() {
+                if slot < k {
+                    values[i * k + slot] = v as f32;
+                    indices[i * k + slot] = c as i32;
+                } else {
+                    tail.push((i as u32, c, v));
+                }
+            }
+        }
+        EllMatrix { n: a.n, n_bucket, k, values, indices, tail }
+    }
+
+    /// Fraction of ELL slots that are padding (diagnostics / perf model).
+    pub fn padding_ratio(&self) -> f64 {
+        let nnz_ell: usize = self.values.iter().filter(|&&v| v != 0.0).count();
+        1.0 - nnz_ell as f64 / (self.n_bucket * self.k) as f64
+    }
+
+    /// Apply the COO tail: `y += tail · x` (f64 accumulate on the Rust
+    /// side; the tail is tiny by construction).
+    pub fn apply_tail(&self, x: &[f64], y: &mut [f64]) {
+        for &(i, j, v) in &self.tail {
+            y[i as usize] += v * x[j as usize];
+        }
+    }
+}
+
+/// Shape buckets shipped in `artifacts/manifest.tsv` (kept in sync with
+/// `python/compile/aot.py::SPMV_BUCKETS`).
+pub const N_BUCKETS: [usize; 7] = [1024, 2048, 4096, 8192, 16384, 32768, 65536];
+
+/// Pick the smallest shipped `n` bucket that fits `n` rows.
+pub fn pick_n_bucket(n: usize) -> Option<usize> {
+    N_BUCKETS.iter().copied().find(|&b| b >= n)
+}
+
+/// Pick the ELL width for a matrix: smallest shipped `k` covering ≥ the
+/// `coverage` fraction of rows fully (the rest spill to the COO tail).
+pub fn pick_k(a: &CsrMatrix, ks: &[usize], coverage: f64) -> usize {
+    let mut row_nnz: Vec<usize> = (0..a.n).map(|i| a.rowptr[i + 1] - a.rowptr[i]).collect();
+    row_nnz.sort_unstable();
+    let idx = ((coverage * (a.n.saturating_sub(1)) as f64).floor() as usize)
+        .min(a.n.saturating_sub(1));
+    let need = row_nnz.get(idx).copied().unwrap_or(0);
+    for &k in ks {
+        if k >= need {
+            return k;
+        }
+    }
+    *ks.last().expect("empty k list")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{grounded_laplacian, CsrMatrix};
+    use crate::solver::spmv;
+    use crate::util::Rng;
+
+    fn ell_matvec_ref(e: &EllMatrix, x: &[f64]) -> Vec<f64> {
+        // emulate the XLA kernel in f64 for testing the conversion
+        let mut y = vec![0.0; e.n];
+        for i in 0..e.n {
+            let mut acc = 0.0;
+            for s in 0..e.k {
+                acc += e.values[i * e.k + s] as f64 * x[e.indices[i * e.k + s] as usize];
+            }
+            y[i] = acc;
+        }
+        e.apply_tail(x, &mut y);
+        y
+    }
+
+    #[test]
+    fn conversion_preserves_matvec() {
+        let g = crate::gen::hub_graph(300, 2, 150, &mut Rng::new(5));
+        let a = grounded_laplacian(&g, 0);
+        let k = 8; // hub rows will overflow into the tail
+        let e = EllMatrix::from_csr(&a, 1024, k);
+        assert!(!e.tail.is_empty(), "hub graph must produce a COO tail at k=8");
+        let mut rng = Rng::new(6);
+        let mut x = vec![0.0; 1024];
+        for v in x.iter_mut().take(a.n) {
+            *v = rng.normal();
+        }
+        let got = ell_matvec_ref(&e, &x);
+        let mut want = vec![0.0; a.n];
+        spmv(&a, &x[..a.n], &mut want);
+        for (u, v) in got.iter().zip(&want) {
+            assert!((u - v).abs() < 1e-3 * (1.0 + v.abs()), "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(pick_n_bucket(100), Some(1024));
+        assert_eq!(pick_n_bucket(1024), Some(1024));
+        assert_eq!(pick_n_bucket(1025), Some(2048));
+        assert_eq!(pick_n_bucket(50_000), Some(65536));
+        assert_eq!(pick_n_bucket(20_000), Some(32768));
+        assert_eq!(pick_n_bucket(100_000), None);
+    }
+
+    #[test]
+    fn pick_k_covers_most_rows() {
+        // 10 rows of nnz 3, one row of nnz 50
+        let mut t = Vec::new();
+        for i in 0..10u32 {
+            for j in 0..3u32 {
+                t.push((i, (i + j) % 11, 1.0));
+            }
+        }
+        for j in 0..50u32 {
+            t.push((10, j % 11, 1.0));
+        }
+        let a = CsrMatrix::from_triplets(11, t);
+        let k = pick_k(&a, &[4, 8, 16, 32], 0.9);
+        assert_eq!(k, 4);
+    }
+
+    #[test]
+    fn padding_ratio_sane() {
+        let a = CsrMatrix::from_triplets(2, vec![(0, 0, 1.0), (1, 1, 1.0)]);
+        let e = EllMatrix::from_csr(&a, 4, 2);
+        // 2 nonzeros in 8 slots → 75% padding
+        assert!((e.padding_ratio() - 0.75).abs() < 1e-12);
+    }
+}

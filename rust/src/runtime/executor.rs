@@ -1,0 +1,260 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! request path.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): artifacts produced by
+//! `python/compile/aot.py` are parsed with `HloModuleProto::from_text_file`
+//! (text re-assigns instruction ids — the jax≥0.5 / xla_extension 0.5.1
+//! compatibility path), compiled once per bucket, and cached. Python never
+//! runs here.
+
+use super::ell::EllMatrix;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+thread_local! {
+    /// Per-thread PJRT CPU client (the `xla` crate's client is `Rc`-based,
+    /// so it cannot cross threads; the XLA request path is single-threaded
+    /// by design — PCG is a sequential recurrence).
+    static CLIENT: RefCell<Option<Rc<xla::PjRtClient>>> = const { RefCell::new(None) };
+}
+
+/// Get (or create) this thread's PJRT CPU client.
+pub fn client() -> anyhow::Result<Rc<xla::PjRtClient>> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if let Some(c) = slot.as_ref() {
+            return Ok(c.clone());
+        }
+        let c = Rc::new(
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?,
+        );
+        *slot = Some(c.clone());
+        Ok(c)
+    })
+}
+
+/// Artifact registry: locates `*.hlo.txt` files via `manifest.tsv` and
+/// caches compiled executables per file. Single-threaded (PJRT handles in
+/// the published `xla` crate are `Rc`-based).
+pub struct Runtime {
+    dir: PathBuf,
+    manifest: Vec<ManifestRow>,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// One row of `artifacts/manifest.tsv`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestRow {
+    /// Artifact kind: `spmv`, `pcg_step`, `jacobi_pcg`.
+    pub kind: String,
+    /// Row-dimension bucket.
+    pub n: usize,
+    /// ELL width.
+    pub k: usize,
+    /// Scan length (jacobi_pcg only; 0 otherwise).
+    pub iters: usize,
+    /// File name within the artifact dir.
+    pub file: String,
+}
+
+impl Runtime {
+    /// Open the artifact directory (defaults to `$PDGRASS_ARTIFACTS` or
+    /// `artifacts/` relative to the workspace root).
+    pub fn open_default() -> anyhow::Result<Runtime> {
+        let dir = std::env::var("PDGRASS_ARTIFACTS").unwrap_or_else(|_| default_dir());
+        Self::open(Path::new(&dir))
+    }
+
+    /// Open a specific artifact directory (reads `manifest.tsv`).
+    pub fn open(dir: &Path) -> anyhow::Result<Runtime> {
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                manifest_path.display()
+            )
+        })?;
+        let mut manifest = Vec::new();
+        for line in text.lines().skip(1) {
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 5 {
+                continue;
+            }
+            manifest.push(ManifestRow {
+                kind: f[0].to_string(),
+                n: f[1].parse()?,
+                k: f[2].parse()?,
+                iters: f[3].parse()?,
+                file: f[4].to_string(),
+            });
+        }
+        anyhow::ensure!(!manifest.is_empty(), "empty manifest at {}", manifest_path.display());
+        Ok(Runtime { dir: dir.to_path_buf(), manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// All manifest rows.
+    pub fn manifest(&self) -> &[ManifestRow] {
+        &self.manifest
+    }
+
+    /// Shipped `k` widths for a given kind and n-bucket.
+    pub fn ks_for(&self, kind: &str, n_bucket: usize) -> Vec<usize> {
+        let mut ks: Vec<usize> = self
+            .manifest
+            .iter()
+            .filter(|r| r.kind == kind && r.n == n_bucket)
+            .map(|r| r.k)
+            .collect();
+        ks.sort_unstable();
+        ks
+    }
+
+    /// Find the manifest row for `(kind, n, k)`.
+    pub fn find(&self, kind: &str, n: usize, k: usize) -> Option<&ManifestRow> {
+        self.manifest.iter().find(|r| r.kind == kind && r.n == n && r.k == k)
+    }
+
+    /// Compile (or fetch cached) executable for a manifest row.
+    pub fn load(&self, row: &ManifestRow) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(&row.file) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(&row.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client()?
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(row.file.clone(), exe.clone());
+        Ok(exe)
+    }
+}
+
+fn default_dir() -> String {
+    // workspace root = dir containing Cargo.toml; fall back to ./artifacts
+    for base in [".", "..", "../.."] {
+        let p = Path::new(base).join("artifacts/manifest.tsv");
+        if p.exists() {
+            return Path::new(base).join("artifacts").to_string_lossy().into_owned();
+        }
+    }
+    "artifacts".to_string()
+}
+
+/// A compiled SpMV bound to one ELL matrix.
+///
+/// §Perf-L3: the (static) matrix operands are uploaded to **device
+/// buffers once** at construction and every `apply` uses `execute_b`, so
+/// the per-dispatch traffic is just the `x` vector — uploading the 2·n·k
+/// matrix literals per call dominated the dispatch cost before this
+/// (see EXPERIMENTS.md §Perf).
+pub struct XlaSpmv {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    vals_buf: xla::PjRtBuffer,
+    idx_buf: xla::PjRtBuffer,
+    /// Scratch for the padded f32 input (avoids per-call allocation).
+    xpad: RefCell<Vec<f32>>,
+    /// The ELL split (owned for the COO tail + dimensions).
+    pub ell: EllMatrix,
+}
+
+impl XlaSpmv {
+    /// Prepare an XLA SpMV for matrix `ell` using runtime `rt`:
+    /// compile (cached) + upload the matrix operands to the device.
+    pub fn new(rt: &Runtime, ell: EllMatrix) -> anyhow::Result<XlaSpmv> {
+        let row = rt
+            .find("spmv", ell.n_bucket, ell.k)
+            .ok_or_else(|| anyhow::anyhow!("no spmv artifact for n={} k={}", ell.n_bucket, ell.k))?
+            .clone();
+        let exe = rt.load(&row)?;
+        let c = client()?;
+        let vals_lit = xla::Literal::vec1(&ell.values)
+            .reshape(&[ell.n_bucket as i64, ell.k as i64])
+            .map_err(|e| anyhow::anyhow!("reshape values: {e:?}"))?;
+        let idx_lit = xla::Literal::vec1(&ell.indices)
+            .reshape(&[ell.n_bucket as i64, ell.k as i64])
+            .map_err(|e| anyhow::anyhow!("reshape indices: {e:?}"))?;
+        let vals_buf = c
+            .buffer_from_host_literal(None, &vals_lit)
+            .map_err(|e| anyhow::anyhow!("upload values: {e:?}"))?;
+        let idx_buf = c
+            .buffer_from_host_literal(None, &idx_lit)
+            .map_err(|e| anyhow::anyhow!("upload indices: {e:?}"))?;
+        // `BufferFromHostLiteral` copies ASYNCHRONOUSLY and the published
+        // wrapper exposes no readiness future; fence with a synchronous
+        // readback so the source literals (dropped at return) outlive the
+        // transfer. One-time cost at preparation.
+        vals_buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fence values upload: {e:?}"))?;
+        idx_buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fence indices upload: {e:?}"))?;
+        let xpad = RefCell::new(vec![0f32; ell.n_bucket]);
+        Ok(XlaSpmv { exe, vals_buf, idx_buf, xpad, ell })
+    }
+
+    /// `y = A x` through the compiled Pallas kernel (+ COO tail in Rust).
+    /// `x` and `y` are logical-length (`ell.n`) f64 slices.
+    pub fn apply(&self, x: &[f64], y: &mut [f64]) -> anyhow::Result<()> {
+        assert_eq!(x.len(), self.ell.n);
+        assert_eq!(y.len(), self.ell.n);
+        let c = client()?;
+        let x_buf = {
+            let mut xpad = self.xpad.borrow_mut();
+            for (i, &v) in x.iter().enumerate() {
+                xpad[i] = v as f32;
+            }
+            c.buffer_from_host_buffer(&xpad[..], &[self.ell.n_bucket], None)
+                .map_err(|e| anyhow::anyhow!("upload x: {e:?}"))?
+        };
+        let result = self
+            .exe
+            .execute_b(&[&self.vals_buf, &self.idx_buf, &x_buf])
+            .map_err(|e| anyhow::anyhow!("execute spmv: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let yv: Vec<f32> = out.to_vec().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        for i in 0..self.ell.n {
+            y[i] = yv[i] as f64;
+        }
+        self.ell.apply_tail(x, y);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("pdgrass_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "kind\tn\tk\titers\tfile\nspmv\t1024\t8\t0\tspmv_n1024_k8.hlo.txt\n",
+        )
+        .unwrap();
+        let rt = Runtime::open(&dir).unwrap();
+        assert_eq!(rt.manifest().len(), 1);
+        assert_eq!(rt.ks_for("spmv", 1024), vec![8]);
+        assert!(rt.find("spmv", 1024, 8).is_some());
+        assert!(rt.find("spmv", 1024, 16).is_none());
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        match Runtime::open(Path::new("/nonexistent/dir")) {
+            Ok(_) => panic!("expected error"),
+            Err(e) => assert!(e.to_string().contains("make artifacts")),
+        }
+    }
+}

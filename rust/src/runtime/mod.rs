@@ -1,0 +1,10 @@
+//! Runtime layer: PJRT client wrapper, ELL conversion/buckets, and the
+//! XLA-backed PCG paths executing the AOT-compiled Pallas kernel.
+
+pub mod ell;
+pub mod executor;
+pub mod pcg_xla;
+
+pub use ell::{pick_k, pick_n_bucket, EllMatrix};
+pub use executor::{client, ManifestRow, Runtime, XlaSpmv};
+pub use pcg_xla::{iterations_to_tol, jacobi_pcg_xla, pcg_xla, prepare_spmv};

@@ -1,0 +1,157 @@
+//! PCG with the SpMV hot path executed by the compiled Pallas kernel.
+//!
+//! Two entry points:
+//!
+//! * [`pcg_xla`] — the paper's quality evaluation on the XLA path: the
+//!   outer PCG loop (and the sparsifier LDLᵀ preconditioner solve) stay in
+//!   Rust f64, while every `L_G·p` dispatches the AOT-compiled ELL kernel
+//!   (f32). Cross-validated against `solver::pcg` in
+//!   `rust/tests/xla_parity.rs`.
+//! * [`jacobi_pcg_xla`] — fully self-contained: one PJRT dispatch runs a
+//!   whole `lax.scan` of Jacobi-PCG iterations and returns the residual
+//!   history (used by the end-to-end demo and as the L2-fusion perf
+//!   reference).
+
+use super::ell::{pick_k, pick_n_bucket, EllMatrix};
+use super::executor::{Runtime, XlaSpmv};
+use crate::graph::CsrMatrix;
+use crate::solver::pcg::{PcgResult, Preconditioner};
+use crate::solver::spmv::{axpy, dot, norm2};
+
+/// Build the [`XlaSpmv`] for a matrix, picking shipped buckets.
+pub fn prepare_spmv(rt: &Runtime, a: &CsrMatrix) -> anyhow::Result<XlaSpmv> {
+    let n_bucket = pick_n_bucket(a.n)
+        .ok_or_else(|| anyhow::anyhow!("matrix n={} exceeds largest artifact bucket", a.n))?;
+    let ks = rt.ks_for("spmv", n_bucket);
+    anyhow::ensure!(!ks.is_empty(), "no spmv artifacts for n-bucket {n_bucket}");
+    let k = pick_k(a, &ks, 0.85);
+    let ell = EllMatrix::from_csr(a, n_bucket, k);
+    XlaSpmv::new(rt, ell)
+}
+
+/// PCG solving `A x = b` with preconditioner `m`; the SpMV runs on the
+/// XLA/Pallas path. Semantics match [`crate::solver::pcg::pcg`].
+pub fn pcg_xla<M: Preconditioner>(
+    rt: &Runtime,
+    a: &CsrMatrix,
+    b: &[f64],
+    m: &M,
+    tol: f64,
+    maxit: usize,
+) -> anyhow::Result<PcgResult> {
+    let spmv = prepare_spmv(rt, a)?;
+    let n = a.n;
+    let bnorm = norm2(b).max(f64::MIN_POSITIVE);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut z = vec![0.0; n];
+    m.apply(&r, &mut z);
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    let mut ap = vec![0.0; n];
+    let mut history = Vec::new();
+    let mut relres = norm2(&r) / bnorm;
+    if relres <= tol {
+        return Ok(PcgResult { x, iterations: 0, relres, converged: true, history });
+    }
+    for it in 1..=maxit {
+        spmv.apply(&p, &mut ap)?;
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            return Ok(PcgResult { x, iterations: it - 1, relres, converged: false, history });
+        }
+        let alpha = rz / pap;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        relres = norm2(&r) / bnorm;
+        history.push(relres);
+        if relres <= tol {
+            return Ok(PcgResult { x, iterations: it, relres, converged: true, history });
+        }
+        m.apply(&r, &mut z);
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+    Ok(PcgResult { x, iterations: maxit, relres, converged: false, history })
+}
+
+/// Run the scan-fused Jacobi-PCG artifact: a single PJRT dispatch performs
+/// the whole fixed-length iteration. Returns `(x, relres_history)`.
+pub fn jacobi_pcg_xla(
+    rt: &Runtime,
+    a: &CsrMatrix,
+    b: &[f64],
+) -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
+    let max_nnz = (0..a.n).map(|i| a.rowptr[i + 1] - a.rowptr[i]).max().unwrap_or(0);
+    let row = rt
+        .manifest()
+        .iter()
+        .filter(|r| r.kind == "jacobi_pcg" && r.n >= a.n && r.k >= max_nnz)
+        .min_by_key(|r| (r.n, r.k))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no jacobi_pcg artifact fits n={} with k ≥ {max_nnz} \
+                 (the scan-fused path has no COO tail; use pcg_xla instead)",
+                a.n
+            )
+        })?;
+    let ell = EllMatrix::from_csr(a, row.n, row.k);
+    debug_assert!(ell.tail.is_empty());
+    let exe = rt.load(row)?;
+    let nb = row.n;
+    let diag = a.diagonal();
+    // Padded rows: inv_diag = 1.0 and b = 0 keeps them inert (r ≡ 0).
+    let mut inv_diag = vec![1f32; nb];
+    for (i, &d) in diag.iter().enumerate() {
+        inv_diag[i] = (1.0 / d) as f32;
+    }
+    let mut bpad = vec![0f32; nb];
+    for (i, &v) in b.iter().enumerate() {
+        bpad[i] = v as f32;
+    }
+    let vals_lit = xla::Literal::vec1(&ell.values)
+        .reshape(&[nb as i64, row.k as i64])
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+    let idx_lit = xla::Literal::vec1(&ell.indices)
+        .reshape(&[nb as i64, row.k as i64])
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+    let d_lit = xla::Literal::vec1(&inv_diag);
+    let b_lit = xla::Literal::vec1(&bpad);
+    let x0_lit = xla::Literal::vec1(&vec![0f32; nb]);
+    let result = exe
+        .execute(&[&vals_lit, &idx_lit, &d_lit, &b_lit, &x0_lit])
+        .map_err(|e| anyhow::anyhow!("execute jacobi_pcg: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetch: {e:?}"))?;
+    let (x_lit, hist_lit) =
+        result.to_tuple2().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+    let x32: Vec<f32> = x_lit.to_vec().map_err(|e| anyhow::anyhow!("x: {e:?}"))?;
+    let h32: Vec<f32> = hist_lit.to_vec().map_err(|e| anyhow::anyhow!("hist: {e:?}"))?;
+    Ok((
+        x32[..a.n].iter().map(|&v| v as f64).collect(),
+        h32.iter().map(|&v| v as f64).collect(),
+    ))
+}
+
+/// Iterations to reach `tol` according to a residual history (1-based);
+/// `None` if never reached.
+pub fn iterations_to_tol(history: &[f64], tol: f64) -> Option<usize> {
+    history.iter().position(|&r| r <= tol).map(|i| i + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iterations_to_tol_finds_first() {
+        let h = [0.5, 0.1, 0.01, 0.001, 0.0001];
+        assert_eq!(iterations_to_tol(&h, 1e-2), Some(3));
+        assert_eq!(iterations_to_tol(&h, 1e-9), None);
+        assert_eq!(iterations_to_tol(&h, 0.5), Some(1));
+    }
+}

@@ -1,0 +1,282 @@
+//! Sparse LDLᵀ factorization (up-looking, elimination-tree based — the
+//! classic Davis `LDL` algorithm) and triangular solves.
+//!
+//! The PCG evaluation uses `L_P` (the sparsifier Laplacian, grounded) as
+//! the preconditioner; it is factored **once** and each PCG iteration
+//! applies two triangular solves — the same cost profile as MATLAB's
+//! `pcg(L_G, b, tol, maxit, L_chol, L_chol')` setup the paper uses.
+
+use crate::graph::CsrMatrix;
+
+/// LDLᵀ factors: unit lower-triangular `L` (strict part stored CSC) and
+/// diagonal `D`.
+#[derive(Clone, Debug)]
+pub struct LdlFactor {
+    n: usize,
+    /// Column pointers of strict-lower L (CSC), length n+1.
+    lp: Vec<usize>,
+    /// Row indices of L entries.
+    li: Vec<u32>,
+    /// Values of L entries.
+    lx: Vec<f64>,
+    /// Diagonal of D.
+    d: Vec<f64>,
+}
+
+/// Factorization failure: a non-positive pivot (matrix not positive
+/// definite to working precision).
+#[derive(Debug)]
+pub struct NotPositiveDefinite {
+    /// Pivot index where factorization broke down.
+    pub at: usize,
+    /// The offending pivot value.
+    pub pivot: f64,
+}
+
+impl std::fmt::Display for NotPositiveDefinite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "non-positive pivot {} at index {}", self.pivot, self.at)
+    }
+}
+
+impl std::error::Error for NotPositiveDefinite {}
+
+impl LdlFactor {
+    /// Factor a symmetric positive-definite CSR matrix (full storage;
+    /// only the upper triangle is read, by symmetry of access).
+    pub fn factor(a: &CsrMatrix) -> Result<LdlFactor, NotPositiveDefinite> {
+        let n = a.n;
+        // --- symbolic: elimination tree + column counts ---
+        let mut parent = vec![usize::MAX; n];
+        let mut flag = vec![usize::MAX; n];
+        let mut lnz = vec![0usize; n];
+        for k in 0..n {
+            flag[k] = k;
+            let (cols, _) = a.row(k);
+            for &c in cols {
+                let mut i = c as usize;
+                if i >= k {
+                    continue;
+                }
+                while flag[i] != k {
+                    if parent[i] == usize::MAX {
+                        parent[i] = k;
+                    }
+                    lnz[i] += 1;
+                    flag[i] = k;
+                    i = parent[i];
+                }
+            }
+        }
+        let mut lp = vec![0usize; n + 1];
+        for i in 0..n {
+            lp[i + 1] = lp[i] + lnz[i];
+        }
+        let nnz_l = lp[n];
+        let mut li = vec![0u32; nnz_l];
+        let mut lx = vec![0f64; nnz_l];
+        let mut d = vec![0f64; n];
+        // --- numeric ---
+        let mut y = vec![0f64; n];
+        let mut pattern = vec![0usize; n];
+        let mut lfill = lp.clone(); // next free slot per column
+        let mut flag = vec![usize::MAX; n];
+        let mut stack = vec![0usize; n];
+        for k in 0..n {
+            let mut top = n;
+            flag[k] = k;
+            y[k] = 0.0;
+            let (cols, vals) = a.row(k);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let i0 = c as usize;
+                if i0 > k {
+                    continue;
+                }
+                y[i0] += v;
+                // walk up the etree collecting the row-k pattern
+                let mut len = 0usize;
+                let mut i = i0;
+                while flag[i] != k {
+                    stack[len] = i;
+                    len += 1;
+                    flag[i] = k;
+                    i = parent[i];
+                }
+                while len > 0 {
+                    len -= 1;
+                    top -= 1;
+                    pattern[top] = stack[len];
+                }
+            }
+            d[k] = y[k];
+            y[k] = 0.0;
+            for s in top..n {
+                let i = pattern[s];
+                let yi = y[i];
+                y[i] = 0.0;
+                for p in lp[i]..lfill[i] {
+                    y[li[p] as usize] -= lx[p] * yi;
+                }
+                let dii = d[i];
+                let lki = yi / dii;
+                d[k] -= lki * yi;
+                li[lfill[i]] = k as u32;
+                lx[lfill[i]] = lki;
+                lfill[i] += 1;
+            }
+            if d[k] <= 0.0 || !d[k].is_finite() {
+                return Err(NotPositiveDefinite { at: k, pivot: d[k] });
+            }
+        }
+        Ok(LdlFactor { n, lp, li, lx, d })
+    }
+
+    /// Dimension.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True if the factor is empty.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Nonzeros in the strict lower factor (fill-in metric).
+    pub fn nnz_l(&self) -> usize {
+        self.lx.len()
+    }
+
+    /// Solve `L D Lᵀ x = b` in place.
+    pub fn solve(&self, x: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        // forward: L y = b   (unit diagonal)
+        for j in 0..self.n {
+            let xj = x[j];
+            if xj != 0.0 {
+                for p in self.lp[j]..self.lp[j + 1] {
+                    x[self.li[p] as usize] -= self.lx[p] * xj;
+                }
+            }
+        }
+        // diagonal
+        for j in 0..self.n {
+            x[j] /= self.d[j];
+        }
+        // backward: Lᵀ x = y
+        for j in (0..self.n).rev() {
+            let mut acc = x[j];
+            for p in self.lp[j]..self.lp[j + 1] {
+                acc -= self.lx[p] * x[self.li[p] as usize];
+            }
+            x[j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{grounded_laplacian, CsrMatrix};
+    use crate::solver::spmv::spmv;
+    use crate::util::Rng;
+
+    /// Dense Cholesky-solve oracle for testing.
+    fn dense_solve(a: &CsrMatrix, b: &[f64]) -> Vec<f64> {
+        let n = a.n;
+        let mut m = a.to_dense();
+        let mut x = b.to_vec();
+        // Gaussian elimination with partial pivoting
+        for k in 0..n {
+            let piv = (k..n).max_by(|&i, &j| m[i][k].abs().partial_cmp(&m[j][k].abs()).unwrap()).unwrap();
+            m.swap(k, piv);
+            x.swap(k, piv);
+            for i in k + 1..n {
+                let f = m[i][k] / m[k][k];
+                for j in k..n {
+                    m[i][j] -= f * m[k][j];
+                }
+                x[i] -= f * x[k];
+            }
+        }
+        for k in (0..n).rev() {
+            for j in k + 1..n {
+                x[k] -= m[k][j] * x[j];
+            }
+            x[k] /= m[k][k];
+        }
+        x
+    }
+
+    #[test]
+    fn factor_solve_small() {
+        // SPD tridiagonal
+        let a = CsrMatrix::from_triplets(
+            3,
+            vec![
+                (0, 0, 4.0),
+                (0, 1, -1.0),
+                (1, 0, -1.0),
+                (1, 1, 4.0),
+                (1, 2, -1.0),
+                (2, 1, -1.0),
+                (2, 2, 4.0),
+            ],
+        );
+        let f = LdlFactor::factor(&a).unwrap();
+        let b = vec![1.0, 2.0, 3.0];
+        let mut x = b.clone();
+        f.solve(&mut x);
+        let mut ax = vec![0.0; 3];
+        spmv(&a, &x, &mut ax);
+        for (u, v) in ax.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-12, "{ax:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn matches_dense_oracle_on_random_laplacians() {
+        crate::util::proptest::check_default("ldl_vs_dense", |rng: &mut Rng| {
+            let n = 5 + rng.below(40);
+            // random connected graph: path + random extra edges
+            let mut edges: Vec<(u32, u32, f64)> = (0..n as u32 - 1)
+                .map(|i| (i, i + 1, 0.5 + rng.next_f64() * 5.0))
+                .collect();
+            for _ in 0..n {
+                let a = rng.below(n) as u32;
+                let b = rng.below(n) as u32;
+                if a != b {
+                    edges.push((a, b, 0.5 + rng.next_f64() * 5.0));
+                }
+            }
+            let g = crate::graph::Graph::from_edges(n, &edges);
+            let a = grounded_laplacian(&g, 0);
+            let f = LdlFactor::factor(&a).map_err(|e| e.to_string())?;
+            let b: Vec<f64> = (0..a.n).map(|_| rng.normal()).collect();
+            let mut x = b.clone();
+            f.solve(&mut x);
+            let oracle = dense_solve(&a, &b);
+            for (u, v) in x.iter().zip(&oracle) {
+                crate::util::proptest::close(*u, *v, 1e-8, 1e-8)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = CsrMatrix::from_triplets(2, vec![(0, 0, 1.0), (0, 1, 2.0), (1, 0, 2.0), (1, 1, 1.0)]);
+        assert!(LdlFactor::factor(&a).is_err());
+    }
+
+    #[test]
+    fn tree_factor_has_no_fill() {
+        // A path Laplacian (already banded) must factor with nnz(L) = n-1.
+        let g = crate::graph::Graph::from_edges(
+            6,
+            &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (3, 4, 1.0), (4, 5, 1.0)],
+        );
+        let a = grounded_laplacian(&g, 5);
+        let f = LdlFactor::factor(&a).unwrap();
+        assert_eq!(f.nnz_l(), a.n - 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Linear-solver substrate: CSR SpMV, RCM ordering, sparse LDLᵀ, and the
+//! PCG evaluation harness (the paper's sparsifier-quality metric).
+
+pub mod chol;
+pub mod order;
+pub mod pcg;
+pub mod spmv;
+
+pub use chol::{LdlFactor, NotPositiveDefinite};
+pub use order::{bandwidth, permute_sym, rcm};
+pub use pcg::{pcg, pcg_iterations, Identity, Jacobi, PcgResult, Preconditioner, SparsifierPrecond};
+pub use spmv::{axpy, dot, norm2, spmv, spmv_par};

@@ -1,0 +1,257 @@
+//! Preconditioned conjugate gradient — the paper's quality metric.
+//!
+//! §V: "given a subgraph P of the original graph G, the PCG solver uses
+//! `L_P` as the preconditioner to solve `‖L_G x − b‖ ≤ 1e-3 ‖b‖`
+//! iteratively. A lower iteration count indicates a higher-quality
+//! sparsifier." This module reproduces MATLAB `pcg` semantics: the
+//! Hestenes–Stiefel recurrence with the recursive residual, and the same
+//! relative-residual stopping rule.
+
+use super::chol::{LdlFactor, NotPositiveDefinite};
+use super::order::{permute_sym, permute_vec, rcm, unpermute_vec};
+use super::spmv::{axpy, dot, norm2, spmv};
+use crate::graph::{grounded_laplacian, CsrMatrix, Graph};
+
+/// Preconditioner interface: `z = M⁻¹ r`.
+pub trait Preconditioner {
+    /// Apply the preconditioner.
+    fn apply(&self, r: &[f64], z: &mut [f64]);
+}
+
+/// Identity (no preconditioning) — the plain-CG baseline.
+pub struct Identity;
+
+impl Preconditioner for Identity {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        z.copy_from_slice(r);
+    }
+}
+
+/// Jacobi (diagonal) preconditioner — cheap baseline, and the
+/// preconditioner baked into the XLA PCG step (L2 kernel).
+pub struct Jacobi {
+    inv_diag: Vec<f64>,
+}
+
+impl Jacobi {
+    /// Build from a matrix's diagonal.
+    pub fn new(a: &CsrMatrix) -> Jacobi {
+        Jacobi { inv_diag: a.diagonal().iter().map(|&d| 1.0 / d).collect() }
+    }
+}
+
+impl Preconditioner for Jacobi {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        for i in 0..r.len() {
+            z[i] = r[i] * self.inv_diag[i];
+        }
+    }
+}
+
+/// Sparsifier preconditioner: RCM-permuted LDLᵀ factorization of the
+/// grounded `L_P`, applied via two triangular solves.
+pub struct SparsifierPrecond {
+    perm: Vec<u32>,
+    factor: LdlFactor,
+    buf: std::cell::RefCell<Vec<f64>>,
+}
+
+impl SparsifierPrecond {
+    /// Factor the grounded Laplacian of sparsifier `p` (ground vertex 0).
+    pub fn new(p: &Graph) -> Result<SparsifierPrecond, NotPositiveDefinite> {
+        let lp = grounded_laplacian(p, 0);
+        Self::from_matrix(&lp)
+    }
+
+    /// Factor an arbitrary SPD matrix with RCM reordering.
+    pub fn from_matrix(a: &CsrMatrix) -> Result<SparsifierPrecond, NotPositiveDefinite> {
+        let perm = rcm(a);
+        let ap = permute_sym(a, &perm);
+        let factor = LdlFactor::factor(&ap)?;
+        Ok(SparsifierPrecond { perm, factor, buf: std::cell::RefCell::new(vec![0.0; a.n]) })
+    }
+
+    /// Fill-in of the factor (diagnostics).
+    pub fn nnz_l(&self) -> usize {
+        self.factor.nnz_l()
+    }
+}
+
+impl Preconditioner for SparsifierPrecond {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        let mut buf = self.buf.borrow_mut();
+        permute_vec(r, &self.perm, &mut buf);
+        self.factor.solve(&mut buf);
+        unpermute_vec(&buf, &self.perm, z);
+    }
+}
+
+/// PCG outcome.
+#[derive(Clone, Debug)]
+pub struct PcgResult {
+    /// Solution estimate.
+    pub x: Vec<f64>,
+    /// Iterations performed (MATLAB `iter`).
+    pub iterations: usize,
+    /// Final relative residual `‖r‖/‖b‖`.
+    pub relres: f64,
+    /// True iff the tolerance was met within `maxit`.
+    pub converged: bool,
+    /// Relative residual after each iteration (for convergence plots).
+    pub history: Vec<f64>,
+}
+
+/// Solve `A x = b` by PCG with preconditioner `m`, tolerance
+/// `‖r‖ ≤ tol·‖b‖`, at most `maxit` iterations. x₀ = 0.
+pub fn pcg<M: Preconditioner>(
+    a: &CsrMatrix,
+    b: &[f64],
+    m: &M,
+    tol: f64,
+    maxit: usize,
+) -> PcgResult {
+    let n = a.n;
+    assert_eq!(b.len(), n);
+    let bnorm = norm2(b).max(f64::MIN_POSITIVE);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut z = vec![0.0; n];
+    m.apply(&r, &mut z);
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    let mut ap = vec![0.0; n];
+    let mut history = Vec::new();
+    let mut relres = norm2(&r) / bnorm;
+    if relres <= tol {
+        return PcgResult { x, iterations: 0, relres, converged: true, history };
+    }
+    for it in 1..=maxit {
+        spmv(a, &p, &mut ap);
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            // matrix not SPD along p (numerical breakdown)
+            return PcgResult { x, iterations: it - 1, relres, converged: false, history };
+        }
+        let alpha = rz / pap;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        relres = norm2(&r) / bnorm;
+        history.push(relres);
+        if relres <= tol {
+            return PcgResult { x, iterations: it, relres, converged: true, history };
+        }
+        m.apply(&r, &mut z);
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+    PcgResult { x, iterations: maxit, relres, converged: false, history }
+}
+
+/// Convenience: PCG iteration count for solving `L_G x = b` with the
+/// sparsifier preconditioner — the paper's quality measurement. The RHS is
+/// deterministic per `seed`; tolerance and cap follow §V (1e-3; cap high
+/// enough that all suite runs converge).
+pub fn pcg_iterations(
+    g: &Graph,
+    sparsifier: &Graph,
+    seed: u64,
+    tol: f64,
+    maxit: usize,
+) -> anyhow::Result<(usize, bool)> {
+    let lg = grounded_laplacian(g, 0);
+    let m = SparsifierPrecond::new(sparsifier)
+        .map_err(|e| anyhow::anyhow!("preconditioner factorization failed: {e}"))?;
+    let mut rng = crate::util::Rng::new(seed);
+    let b: Vec<f64> = (0..lg.n).map(|_| rng.normal()).collect();
+    let res = pcg(&lg, &b, &m, tol, maxit);
+    Ok((res.iterations, res.converged))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::Rng;
+
+    fn laplacian_system(seed: u64) -> (CsrMatrix, Vec<f64>, Graph) {
+        let g = gen::grid(15, 15, 0.5, &mut Rng::new(seed));
+        let a = grounded_laplacian(&g, 0);
+        let mut rng = Rng::new(seed + 1);
+        let b: Vec<f64> = (0..a.n).map(|_| rng.normal()).collect();
+        (a, b, g)
+    }
+
+    #[test]
+    fn cg_converges_on_spd() {
+        let (a, b, _) = laplacian_system(1);
+        let res = pcg(&a, &b, &Identity, 1e-8, 5000);
+        assert!(res.converged, "relres {}", res.relres);
+        // verify actual residual
+        let mut ax = vec![0.0; a.n];
+        spmv(&a, &res.x, &mut ax);
+        axpy(-1.0, &b, &mut ax);
+        assert!(norm2(&ax) / norm2(&b) < 1e-7);
+    }
+
+    #[test]
+    fn jacobi_no_worse_than_identity() {
+        let (a, b, _) = laplacian_system(2);
+        let plain = pcg(&a, &b, &Identity, 1e-6, 5000);
+        let jac = pcg(&a, &b, &Jacobi::new(&a), 1e-6, 5000);
+        assert!(jac.converged && plain.converged);
+        assert!(jac.iterations <= plain.iterations + 15);
+    }
+
+    #[test]
+    fn exact_preconditioner_converges_immediately() {
+        // Preconditioning with A itself → 1 iteration.
+        let (a, b, _) = laplacian_system(3);
+        let m = SparsifierPrecond::from_matrix(&a).unwrap();
+        let res = pcg(&a, &b, &m, 1e-10, 50);
+        assert!(res.converged);
+        assert!(res.iterations <= 2, "got {}", res.iterations);
+    }
+
+    #[test]
+    fn sparsifier_preconditioner_beats_jacobi() {
+        let (a, b, g) = laplacian_system(4);
+        // sparsifier = spanning tree + some recovered edges
+        let sp = crate::tree::build_spanning(&g);
+        let params = crate::recovery::Params::new(0.10, 2);
+        let r = crate::recovery::pdgrass(&g, &sp, &params);
+        let p = crate::recovery::sparsifier(&g, &sp, &r.edges);
+        let m = SparsifierPrecond::new(&p).unwrap();
+        let with_p = pcg(&a, &b, &m, 1e-3, 5000);
+        let with_j = pcg(&a, &b, &Jacobi::new(&a), 1e-3, 5000);
+        assert!(with_p.converged);
+        assert!(
+            with_p.iterations < with_j.iterations,
+            "sparsifier {} vs jacobi {}",
+            with_p.iterations,
+            with_j.iterations
+        );
+    }
+
+    #[test]
+    fn history_is_monotonic_enough_and_matches_iterations() {
+        let (a, b, _) = laplacian_system(5);
+        let res = pcg(&a, &b, &Jacobi::new(&a), 1e-6, 5000);
+        assert_eq!(res.history.len(), res.iterations);
+        assert!(res.history.last().unwrap() <= &1e-6);
+    }
+
+    #[test]
+    fn pcg_iterations_helper() {
+        let g = gen::grid(12, 12, 0.5, &mut Rng::new(6));
+        let sp = crate::tree::build_spanning(&g);
+        let r = crate::recovery::pdgrass(&g, &sp, &crate::recovery::Params::new(0.05, 1));
+        let p = crate::recovery::sparsifier(&g, &sp, &r.edges);
+        let (iters, conv) = pcg_iterations(&g, &p, 42, 1e-3, 10_000).unwrap();
+        assert!(conv);
+        assert!(iters > 0 && iters < 10_000);
+    }
+}

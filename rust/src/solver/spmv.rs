@@ -1,0 +1,127 @@
+//! CSR sparse matrix–vector product — the PCG hot loop.
+//!
+//! Two paths exist in the repo: this pure-Rust CSR kernel, and the
+//! XLA-compiled Pallas ELL kernel (`runtime::`). They are cross-validated
+//! in `rust/tests/xla_parity.rs`.
+
+use crate::graph::CsrMatrix;
+use crate::par;
+
+/// `y = A·x`, serial.
+pub fn spmv(a: &CsrMatrix, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), a.n);
+    debug_assert_eq!(y.len(), a.n);
+    for i in 0..a.n {
+        let (s, e) = (a.rowptr[i], a.rowptr[i + 1]);
+        let mut acc = 0.0;
+        for p in s..e {
+            acc += a.vals[p] * x[a.colidx[p] as usize];
+        }
+        y[i] = acc;
+    }
+}
+
+/// `y = A·x`, rows split across threads (row-disjoint writes).
+pub fn spmv_par(a: &CsrMatrix, x: &[f64], y: &mut [f64], threads: usize) {
+    debug_assert_eq!(x.len(), a.n);
+    debug_assert_eq!(y.len(), a.n);
+    let ptr = par::as_send_ptr(y);
+    par::par_chunks(a.n, threads, |_, range| {
+        for i in range {
+            let (s, e) = (a.rowptr[i], a.rowptr[i + 1]);
+            let mut acc = 0.0;
+            for p in s..e {
+                acc += a.vals[p] * x[a.colidx[p] as usize];
+            }
+            // SAFETY: row ranges are disjoint across threads.
+            unsafe { ptr.write(i, acc) };
+        }
+    });
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y ← y + alpha·x`.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..y.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Euclidean norm.
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn small() -> CsrMatrix {
+        // [[2,-1,0],[-1,2,-1],[0,-1,2]]
+        CsrMatrix::from_triplets(
+            3,
+            vec![
+                (0, 0, 2.0),
+                (0, 1, -1.0),
+                (1, 0, -1.0),
+                (1, 1, 2.0),
+                (1, 2, -1.0),
+                (2, 1, -1.0),
+                (2, 2, 2.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn spmv_small() {
+        let a = small();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 3];
+        spmv(&a, &x, &mut y);
+        assert_eq!(y, [0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn spmv_par_matches_serial() {
+        let mut rng = Rng::new(8);
+        let n = 500;
+        let mut t = Vec::new();
+        for i in 0..n as u32 {
+            t.push((i, i, 4.0 + rng.next_f64()));
+            for _ in 0..5 {
+                let j = rng.below(n) as u32;
+                t.push((i, j, rng.next_f64() - 0.5));
+            }
+        }
+        let a = CsrMatrix::from_triplets(n, t);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let mut y1 = vec![0.0; n];
+        let mut y2 = vec![0.0; n];
+        spmv(&a, &x, &mut y1);
+        spmv_par(&a, &x, &mut y2, 4);
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn blas1_helpers() {
+        let a = [1.0, 2.0, 3.0];
+        let mut b = [1.0, 1.0, 1.0];
+        assert_eq!(dot(&a, &b), 6.0);
+        axpy(2.0, &a, &mut b);
+        assert_eq!(b, [3.0, 5.0, 7.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+}

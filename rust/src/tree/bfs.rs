@@ -1,0 +1,50 @@
+//! Unweighted breadth-first search over the graph.
+//!
+//! Definition 1 (effective weight) needs `dist_G(root, ·)` — unweighted
+//! hop distances from the maximum-degree root.
+
+use crate::graph::Graph;
+
+/// Hop distances from `root`; unreachable vertices get `u32::MAX`.
+pub fn bfs_distances(g: &Graph, root: u32) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut dist = vec![u32::MAX; n];
+    let mut queue = std::collections::VecDeque::with_capacity(n / 4 + 1);
+    dist[root as usize] = 0;
+    queue.push_back(root);
+    while let Some(u) = queue.pop_front() {
+        let du = dist[u as usize];
+        for &v in g.neighbor_ids(u) {
+            if dist[v as usize] == u32::MAX {
+                dist[v as usize] = du + 1;
+                queue.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_distances() {
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)]);
+        assert_eq!(bfs_distances(&g, 0), vec![0, 1, 2, 3]);
+        assert_eq!(bfs_distances(&g, 2), vec![2, 1, 0, 1]);
+    }
+
+    #[test]
+    fn unreachable_is_max() {
+        let g = Graph::from_edges(3, &[(0, 1, 1.0)]);
+        let d = bfs_distances(&g, 0);
+        assert_eq!(d[2], u32::MAX);
+    }
+
+    #[test]
+    fn ignores_weights() {
+        let g = Graph::from_edges(3, &[(0, 1, 100.0), (1, 2, 0.001)]);
+        assert_eq!(bfs_distances(&g, 0), vec![0, 1, 2]);
+    }
+}

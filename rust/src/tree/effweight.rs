@@ -1,0 +1,62 @@
+//! Effective weight of edges (Definition 1 of the paper):
+//!
+//! `W_eff(e=(u,v)) = w(u,v) · log(max(deg u, deg v)) /
+//!                   (dist_G(root,u) + dist_G(root,v))`
+//!
+//! where `root` is the maximum-degree vertex and distances are unweighted
+//! BFS hop counts. The maximum spanning tree under `W_eff` favors heavy
+//! edges between high-degree vertices close to the root — feGRASS's
+//! low-stretch-ish tree heuristic, kept identical here so the recovery
+//! comparison is apples-to-apples (the paper reuses feGRASS's tree).
+
+use super::bfs::bfs_distances;
+use crate::graph::Graph;
+use crate::par;
+
+/// Effective weights for all edges, in edge-id order, plus the chosen root.
+pub fn effective_weights(g: &Graph) -> (Vec<f64>, u32) {
+    let root = g.max_degree_vertex();
+    let dist = bfs_distances(g, root);
+    let mut w = vec![0f64; g.num_edges()];
+    let edges = g.edges();
+    let threads = par::num_threads();
+    par::par_fill(&mut w, threads, 4096, |i| {
+        let e = edges[i];
+        let du = dist[e.u as usize];
+        let dv = dist[e.v as usize];
+        debug_assert!(du != u32::MAX && dv != u32::MAX, "graph must be connected");
+        let maxdeg = g.degree(e.u).max(g.degree(e.v)) as f64;
+        // root-root never happens (no self loops); du + dv >= 1.
+        let denom = (du + dv) as f64;
+        e.w * maxdeg.ln().max(f64::MIN_POSITIVE) / denom
+    });
+    (w, root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_weight_formula() {
+        // star with one extra edge: root = 0 (degree 3)
+        let g = Graph::from_edges(4, &[(0, 1, 2.0), (0, 2, 1.0), (0, 3, 1.0), (1, 2, 4.0)]);
+        let (w, root) = effective_weights(&g);
+        assert_eq!(root, 0);
+        // edge (0,1): dist 0+1, maxdeg = max(3,2)=3 → 2*ln3/1
+        let e01 = g.edges().iter().position(|e| (e.u, e.v) == (0, 1)).unwrap();
+        assert!((w[e01] - 2.0 * 3f64.ln()).abs() < 1e-12);
+        // edge (1,2): dist 1+1, maxdeg = 2 → 4*ln2/2
+        let e12 = g.edges().iter().position(|e| (e.u, e.v) == (1, 2)).unwrap();
+        assert!((w[e12] - 4.0 * 2f64.ln() / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn heavier_edges_get_heavier_effweight() {
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (0, 2, 10.0), (1, 3, 1.0), (2, 3, 1.0)]);
+        let (w, _) = effective_weights(&g);
+        let light = g.edges().iter().position(|e| (e.u, e.v) == (0, 1)).unwrap();
+        let heavy = g.edges().iter().position(|e| (e.u, e.v) == (0, 2)).unwrap();
+        assert!(w[heavy] > w[light]);
+    }
+}

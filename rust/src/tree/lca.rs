@@ -1,0 +1,187 @@
+//! Binary-lifting LCA skip table (step 1 of Algorithm 1).
+//!
+//! The paper computes off-tree edge LCAs dynamically (footnote 3: no tree
+//! partitioning / offline Tarjan needed) with a skip table: `up[k][v]` is
+//! the `2^k`-th ancestor of `v`. Construction is `O(n log n)` work and the
+//! level-by-level fill parallelizes (`O(lg² V)` span, Table I row 1).
+
+use super::rooted::RootedTree;
+use crate::par;
+
+/// Binary-lifting ancestor table over a rooted tree.
+#[derive(Clone, Debug)]
+pub struct SkipTable {
+    /// `up[k][v]` = 2^k-th ancestor of `v` (saturating at the root).
+    up: Vec<Vec<u32>>,
+    /// Unweighted depths (copied from the tree for cache-friendly queries).
+    depth: Vec<u32>,
+}
+
+impl SkipTable {
+    /// Build the table; `levels = ceil(log2(max_depth + 1)) + 1`.
+    pub fn build(tree: &RootedTree) -> SkipTable {
+        let n = tree.len();
+        let max_depth = tree.depth.iter().copied().max().unwrap_or(0);
+        let levels = (32 - max_depth.leading_zeros()).max(1) as usize;
+        let mut up: Vec<Vec<u32>> = Vec::with_capacity(levels);
+        up.push(tree.parent.clone());
+        let threads = par::num_threads();
+        for k in 1..levels {
+            let prev = &up[k - 1];
+            let mut next = vec![0u32; n];
+            par::par_fill(&mut next, threads, 8192, |v| {
+                prev[prev[v] as usize]
+            });
+            up.push(next);
+        }
+        SkipTable { up, depth: tree.depth.clone() }
+    }
+
+    /// Number of levels in the table.
+    pub fn levels(&self) -> usize {
+        self.up.len()
+    }
+
+    /// The `d`-th ancestor of `v` (saturating at the root).
+    pub fn ancestor(&self, mut v: u32, mut d: u32) -> u32 {
+        let mut k = 0;
+        while d > 0 {
+            if d & 1 == 1 {
+                v = self.up[k.min(self.up.len() - 1)][v as usize];
+            }
+            d >>= 1;
+            k += 1;
+        }
+        v
+    }
+
+    /// Lowest common ancestor of `u` and `v`.
+    pub fn lca(&self, mut u: u32, mut v: u32) -> u32 {
+        let (du, dv) = (self.depth[u as usize], self.depth[v as usize]);
+        if du > dv {
+            u = self.ancestor(u, du - dv);
+        } else if dv > du {
+            v = self.ancestor(v, dv - du);
+        }
+        if u == v {
+            return u;
+        }
+        for k in (0..self.up.len()).rev() {
+            let (au, av) = (self.up[k][u as usize], self.up[k][v as usize]);
+            if au != av {
+                u = au;
+                v = av;
+            }
+        }
+        self.up[0][u as usize]
+    }
+
+    /// Unweighted tree distance between `u` and `v`.
+    pub fn dist(&self, u: u32, v: u32) -> u32 {
+        let l = self.lca(u, v);
+        self.depth[u as usize] + self.depth[v as usize] - 2 * self.depth[l as usize]
+    }
+
+    /// Depth accessor.
+    pub fn depth(&self, v: u32) -> u32 {
+        self.depth[v as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::tree::RootedTree;
+    use crate::util::Rng;
+
+    /// Balanced-ish test tree:
+    ///        0
+    ///       / \
+    ///      1   2
+    ///     / \   \
+    ///    3   4   5
+    ///   /
+    ///  6
+    fn sample() -> (RootedTree, SkipTable) {
+        let g = Graph::from_edges(
+            7,
+            &[(0, 1, 1.0), (0, 2, 1.0), (1, 3, 1.0), (1, 4, 1.0), (2, 5, 1.0), (3, 6, 1.0)],
+        );
+        let t = RootedTree::build(&g, &[true; 6], 0);
+        let s = SkipTable::build(&t);
+        (t, s)
+    }
+
+    #[test]
+    fn ancestors() {
+        let (_, s) = sample();
+        assert_eq!(s.ancestor(6, 1), 3);
+        assert_eq!(s.ancestor(6, 2), 1);
+        assert_eq!(s.ancestor(6, 3), 0);
+        assert_eq!(s.ancestor(6, 10), 0); // saturates
+        assert_eq!(s.ancestor(0, 5), 0);
+    }
+
+    #[test]
+    fn lca_cases() {
+        let (_, s) = sample();
+        assert_eq!(s.lca(3, 4), 1);
+        assert_eq!(s.lca(6, 4), 1);
+        assert_eq!(s.lca(6, 5), 0);
+        assert_eq!(s.lca(1, 6), 1); // ancestor case
+        assert_eq!(s.lca(2, 2), 2); // identity
+        assert_eq!(s.lca(0, 5), 0);
+    }
+
+    #[test]
+    fn dist_cases() {
+        let (_, s) = sample();
+        assert_eq!(s.dist(3, 4), 2);
+        assert_eq!(s.dist(6, 5), 5);
+        assert_eq!(s.dist(0, 6), 3);
+        assert_eq!(s.dist(4, 4), 0);
+    }
+
+    /// Property: LCA from the skip table matches a naive parent-walk LCA
+    /// on random trees.
+    #[test]
+    fn matches_naive_on_random_trees() {
+        crate::util::proptest::check_default("lca_naive", |rng: &mut Rng| {
+            let n = 2 + rng.below(300);
+            // random attachment tree
+            let mut edges = Vec::with_capacity(n - 1);
+            for v in 1..n {
+                let p = rng.below(v);
+                edges.push((p as u32, v as u32, 1.0 + rng.next_f64()));
+            }
+            let g = Graph::from_edges(n, &edges);
+            let flags = vec![true; g.num_edges()];
+            let t = RootedTree::build(&g, &flags, 0);
+            let s = SkipTable::build(&t);
+            for _ in 0..50 {
+                let u = rng.below(n) as u32;
+                let v = rng.below(n) as u32;
+                let naive = naive_lca(&t, u, v);
+                if s.lca(u, v) != naive {
+                    return Err(format!("lca({u},{v}) = {} != naive {naive}", s.lca(u, v)));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    fn naive_lca(t: &RootedTree, mut u: u32, mut v: u32) -> u32 {
+        while t.depth[u as usize] > t.depth[v as usize] {
+            u = t.parent[u as usize];
+        }
+        while t.depth[v as usize] > t.depth[u as usize] {
+            v = t.parent[v as usize];
+        }
+        while u != v {
+            u = t.parent[u as usize];
+            v = t.parent[v as usize];
+        }
+        u
+    }
+}

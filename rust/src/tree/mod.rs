@@ -1,0 +1,19 @@
+//! Spanning-tree substrate: BFS, effective weights (Def. 1), maximum
+//! spanning tree, rooted representation, binary-lifting LCA, resistance
+//! distances (Def. 2).
+
+pub mod bfs;
+pub mod effweight;
+pub mod lca;
+pub mod mst;
+pub mod resistance;
+pub mod rooted;
+pub mod spanning;
+
+pub use bfs::bfs_distances;
+pub use effweight::effective_weights;
+pub use lca::SkipTable;
+pub use mst::{max_spanning_tree, UnionFind};
+pub use resistance::{off_tree_edges, OffTreeEdge};
+pub use rooted::RootedTree;
+pub use spanning::{build_spanning, Spanning};

@@ -1,0 +1,132 @@
+//! Maximum spanning tree (Kruskal over effective weights) + union-find.
+
+use crate::graph::Graph;
+use crate::par;
+
+/// Disjoint-set union with path halving and union by rank.
+#[derive(Clone, Debug)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+}
+
+impl UnionFind {
+    /// `n` singleton sets.
+    pub fn new(n: usize) -> UnionFind {
+        UnionFind { parent: (0..n as u32).collect(), rank: vec![0; n] }
+    }
+
+    /// Find representative with path halving.
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let gp = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+        x
+    }
+
+    /// Union by rank; returns false if already in the same set.
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        let (ra, rb) = if self.rank[ra as usize] < self.rank[rb as usize] {
+            (rb, ra)
+        } else {
+            (ra, rb)
+        };
+        self.parent[rb as usize] = ra;
+        if self.rank[ra as usize] == self.rank[rb as usize] {
+            self.rank[ra as usize] += 1;
+        }
+        true
+    }
+
+    /// Are `a` and `b` in the same set?
+    pub fn same(&mut self, a: u32, b: u32) -> bool {
+        self.find(a) == self.find(b)
+    }
+}
+
+/// Kruskal maximum spanning tree under per-edge `keys`.
+///
+/// Returns `is_tree_edge` flags (len |E|). Panics if the graph is
+/// disconnected (the pipeline extracts the largest component first).
+pub fn max_spanning_tree(g: &Graph, keys: &[f64]) -> Vec<bool> {
+    let m = g.num_edges();
+    assert_eq!(keys.len(), m);
+    let mut order: Vec<u32> = (0..m as u32).collect();
+    // Descending by key; stable so equal-key edges keep id order (matches
+    // the serial feGRASS implementation's deterministic tie-break).
+    par::sort::par_sort_by(&mut order, par::num_threads(), &|&a, &b| {
+        keys[b as usize]
+            .partial_cmp(&keys[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut uf = UnionFind::new(g.num_vertices());
+    let mut in_tree = vec![false; m];
+    let mut picked = 0usize;
+    let need = g.num_vertices() - 1;
+    for &id in &order {
+        let e = g.edge(id);
+        if uf.union(e.u, e.v) {
+            in_tree[id as usize] = true;
+            picked += 1;
+            if picked == need {
+                break;
+            }
+        }
+    }
+    assert_eq!(picked, need, "graph is disconnected: {picked} < {need} tree edges");
+    in_tree
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_find_basics() {
+        let mut uf = UnionFind::new(5);
+        assert!(uf.union(0, 1));
+        assert!(uf.union(1, 2));
+        assert!(!uf.union(0, 2));
+        assert!(uf.same(0, 2));
+        assert!(!uf.same(0, 3));
+    }
+
+    #[test]
+    fn picks_max_tree() {
+        // square with diagonal; keys favor the diagonal + two heavy sides
+        let g = Graph::from_edges(
+            4,
+            &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (3, 0, 1.0), (0, 2, 1.0)],
+        );
+        let keys = vec![5.0, 1.0, 4.0, 3.0, 10.0];
+        let t = max_spanning_tree(&g, &keys);
+        assert_eq!(t.iter().filter(|&&b| b).count(), 3);
+        assert!(t[4]); // diagonal (key 10)
+        assert!(t[0]); // key 5
+        assert!(t[2]); // key 4
+        assert!(!t[1] && !t[3]);
+    }
+
+    #[test]
+    fn tree_of_tree_is_identity() {
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 2.0), (2, 3, 0.5)]);
+        let keys: Vec<f64> = g.edges().iter().map(|e| e.w).collect();
+        let t = max_spanning_tree(&g, &keys);
+        assert!(t.iter().all(|&b| b));
+    }
+
+    #[test]
+    #[should_panic(expected = "disconnected")]
+    fn disconnected_panics() {
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (2, 3, 1.0)]);
+        let keys = vec![1.0, 1.0];
+        max_spanning_tree(&g, &keys);
+    }
+}

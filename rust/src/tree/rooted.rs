@@ -1,0 +1,205 @@
+//! Rooted spanning tree representation.
+//!
+//! After Kruskal picks the tree edges, we root the tree at the
+//! maximum-degree vertex (the same root used for effective weights) and
+//! precompute, per vertex:
+//!
+//! * `parent` and the weight of the parent edge,
+//! * `depth` — unweighted hop depth (for LCA and β* caps),
+//! * `rdepth` — *resistive* depth `Σ 1/w` along the root path, so the
+//!   resistance distance of Definition 2 is
+//!   `R_T(u,v) = rdepth(u) + rdepth(v) − 2·rdepth(lca)`,
+//! * a children-CSR so β-hop tree BFS (similarity neighborhoods) is cheap.
+
+use crate::graph::Graph;
+
+/// Rooted spanning tree with per-vertex ancestry data.
+#[derive(Clone, Debug)]
+pub struct RootedTree {
+    /// Root vertex id.
+    pub root: u32,
+    /// Parent of each vertex (`parent[root] == root`).
+    pub parent: Vec<u32>,
+    /// Weight of the edge to the parent (`0` for the root).
+    pub parent_w: Vec<f64>,
+    /// Unweighted depth from the root.
+    pub depth: Vec<u32>,
+    /// Resistive depth: `Σ 1/w` along the root path.
+    pub rdepth: Vec<f64>,
+    /// BFS order from the root (root first).
+    pub order: Vec<u32>,
+    /// Children CSR offsets.
+    cxadj: Vec<usize>,
+    /// Children CSR ids.
+    cadj: Vec<u32>,
+}
+
+impl RootedTree {
+    /// Build the rooted tree from `is_tree_edge` flags over `g`'s edges.
+    pub fn build(g: &Graph, is_tree_edge: &[bool], root: u32) -> RootedTree {
+        let n = g.num_vertices();
+        assert_eq!(is_tree_edge.len(), g.num_edges());
+        // Tree adjacency restricted to tree edges.
+        let mut parent = vec![u32::MAX; n];
+        let mut parent_w = vec![0f64; n];
+        let mut depth = vec![0u32; n];
+        let mut rdepth = vec![0f64; n];
+        let mut order = Vec::with_capacity(n);
+        parent[root as usize] = root;
+        order.push(root);
+        let mut head = 0usize;
+        while head < order.len() {
+            let u = order[head];
+            head += 1;
+            for (v, w, eid) in g.neighbors(u) {
+                if is_tree_edge[eid as usize] && parent[v as usize] == u32::MAX {
+                    parent[v as usize] = u;
+                    parent_w[v as usize] = w;
+                    depth[v as usize] = depth[u as usize] + 1;
+                    rdepth[v as usize] = rdepth[u as usize] + 1.0 / w;
+                    order.push(v);
+                }
+            }
+        }
+        assert_eq!(order.len(), n, "tree does not span the graph");
+        // children CSR
+        let mut cnt = vec![0usize; n];
+        for v in 0..n as u32 {
+            if v != root {
+                cnt[parent[v as usize] as usize] += 1;
+            }
+        }
+        let mut cxadj = vec![0usize; n + 1];
+        for i in 0..n {
+            cxadj[i + 1] = cxadj[i] + cnt[i];
+        }
+        let mut cadj = vec![0u32; n - 1];
+        let mut cur = cxadj.clone();
+        for &v in &order {
+            if v != root {
+                let p = parent[v as usize] as usize;
+                cadj[cur[p]] = v;
+                cur[p] += 1;
+            }
+        }
+        RootedTree { root, parent, parent_w, depth, rdepth, order, cxadj, cadj }
+    }
+
+    /// Number of vertices.
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    /// True when the tree has no vertices.
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Children of `v`.
+    pub fn children(&self, v: u32) -> &[u32] {
+        &self.cadj[self.cxadj[v as usize]..self.cxadj[v as usize + 1]]
+    }
+
+    /// Tree-adjacent vertices of `v` (parent, then children).
+    pub fn tree_neighbors(&self, v: u32) -> impl Iterator<Item = u32> + '_ {
+        let p = self.parent[v as usize];
+        let par = if p == v { None } else { Some(p) };
+        par.into_iter().chain(self.children(v).iter().copied())
+    }
+
+    /// β-hop tree neighborhood of `u` (all vertices within `beta` tree
+    /// hops, including `u`), via bounded BFS. Used by both similarity
+    /// conditions (Definitions 4 and 5).
+    pub fn neighborhood(&self, u: u32, beta: u32) -> Vec<u32> {
+        let mut out = vec![u];
+        if beta == 0 {
+            return out;
+        }
+        // Tree BFS is cycle-free apart from the parent pointer, so a
+        // "came-from" check replaces a visited set.
+        let mut frontier: Vec<(u32, u32)> = vec![(u, u)]; // (vertex, from)
+        for _ in 0..beta {
+            let mut next = Vec::new();
+            for &(v, from) in &frontier {
+                for nb in self.tree_neighbors(v) {
+                    if nb != from {
+                        out.push(nb);
+                        next.push((nb, v));
+                    }
+                }
+            }
+            if next.is_empty() {
+                break;
+            }
+            frontier = next;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Path 0-1-2-3 with weights 1, 2, 4 → rooted at 0.
+    fn path_tree() -> (Graph, RootedTree) {
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 2.0), (2, 3, 4.0)]);
+        let t = RootedTree::build(&g, &[true, true, true], 0);
+        (g, t)
+    }
+
+    #[test]
+    fn depths_and_parents() {
+        let (_, t) = path_tree();
+        assert_eq!(t.parent, vec![0, 0, 1, 2]);
+        assert_eq!(t.depth, vec![0, 1, 2, 3]);
+        assert_eq!(t.rdepth, vec![0.0, 1.0, 1.5, 1.75]);
+        assert_eq!(t.order[0], 0);
+    }
+
+    #[test]
+    fn children_csr() {
+        let g = Graph::from_edges(5, &[(0, 1, 1.0), (0, 2, 1.0), (2, 3, 1.0), (2, 4, 1.0)]);
+        let t = RootedTree::build(&g, &[true; 4], 0);
+        let mut c0 = t.children(0).to_vec();
+        c0.sort();
+        assert_eq!(c0, vec![1, 2]);
+        let mut c2 = t.children(2).to_vec();
+        c2.sort();
+        assert_eq!(c2, vec![3, 4]);
+        assert!(t.children(1).is_empty());
+    }
+
+    #[test]
+    fn tree_neighbors_parent_and_children() {
+        let (_, t) = path_tree();
+        let n1: Vec<u32> = t.tree_neighbors(1).collect();
+        assert_eq!(n1, vec![0, 2]);
+        let n0: Vec<u32> = t.tree_neighbors(0).collect();
+        assert_eq!(n0, vec![1]); // root has no parent
+    }
+
+    #[test]
+    fn neighborhood_hops() {
+        let (_, t) = path_tree();
+        let mut nb = t.neighborhood(1, 1);
+        nb.sort();
+        assert_eq!(nb, vec![0, 1, 2]);
+        let mut nb2 = t.neighborhood(0, 2);
+        nb2.sort();
+        assert_eq!(nb2, vec![0, 1, 2]);
+        assert_eq!(t.neighborhood(3, 0), vec![3]);
+    }
+
+    #[test]
+    fn skips_off_tree_edges() {
+        // square: tree = 3 edges, off-tree edge (0,3) excluded from BFS.
+        // NB: from_edges canonicalizes edge order to (0,1),(0,3),(1,2),(2,3).
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (0, 3, 1.0)]);
+        let t = RootedTree::build(&g, &[true, false, true, true], 0);
+        assert_eq!(t.depth[3], 3);
+        let mut nb = t.neighborhood(0, 1);
+        nb.sort();
+        assert_eq!(nb, vec![0, 1]); // 3 is NOT a tree neighbor of 0
+    }
+}

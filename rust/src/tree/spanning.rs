@@ -1,0 +1,72 @@
+//! Spanning-tree bundle: ties together effective weights, Kruskal,
+//! rooting, and the LCA skip table — "step 1" of both feGRASS and pdGRASS
+//! (the paper reuses feGRASS's tree so the recovery comparison is fair;
+//! so do we).
+
+use super::effweight::effective_weights;
+use super::lca::SkipTable;
+use super::mst::max_spanning_tree;
+use super::rooted::RootedTree;
+use crate::graph::Graph;
+
+/// Everything downstream recovery needs about the spanning tree.
+#[derive(Clone, Debug)]
+pub struct Spanning {
+    /// Rooted tree with depths and resistive depths.
+    pub tree: RootedTree,
+    /// Binary-lifting LCA table.
+    pub skip: SkipTable,
+    /// Per-graph-edge flag: is this edge in the tree?
+    pub is_tree_edge: Vec<bool>,
+    /// BFS root = maximum-degree vertex.
+    pub root: u32,
+}
+
+/// Build the spanning tree: effective weights (Def. 1) → maximum spanning
+/// tree (Kruskal) → root at the max-degree vertex → skip table.
+pub fn build_spanning(g: &Graph) -> Spanning {
+    let (eff, root) = effective_weights(g);
+    let is_tree_edge = max_spanning_tree(g, &eff);
+    let tree = RootedTree::build(g, &is_tree_edge, root);
+    let skip = SkipTable::build(&tree);
+    Spanning { tree, skip, is_tree_edge, root }
+}
+
+impl Spanning {
+    /// Number of off-tree edges.
+    pub fn num_off_tree(&self) -> usize {
+        self.is_tree_edge.iter().filter(|&&b| !b).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::Rng;
+
+    #[test]
+    fn spans_and_roots_at_max_degree() {
+        let g = gen::grid(12, 12, 0.3, &mut Rng::new(3));
+        let sp = build_spanning(&g);
+        assert_eq!(sp.is_tree_edge.iter().filter(|&&b| b).count(), g.num_vertices() - 1);
+        assert_eq!(sp.root, g.max_degree_vertex());
+        assert_eq!(sp.tree.root, sp.root);
+        assert_eq!(sp.num_off_tree(), g.num_edges() - (g.num_vertices() - 1));
+    }
+
+    #[test]
+    fn tree_depths_consistent_with_parents() {
+        let g = gen::tri_mesh(15, 15, &mut Rng::new(4));
+        let sp = build_spanning(&g);
+        for v in 0..g.num_vertices() as u32 {
+            if v == sp.root {
+                assert_eq!(sp.tree.depth[v as usize], 0);
+            } else {
+                let p = sp.tree.parent[v as usize];
+                assert_eq!(sp.tree.depth[v as usize], sp.tree.depth[p as usize] + 1);
+                assert!(sp.tree.rdepth[v as usize] > sp.tree.rdepth[p as usize]);
+            }
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Compact bit set over `usize` indices.
+//!
+//! Used for vertex marking in the recovery phase (the feGRASS vertex-cover
+//! marks and the pdGRASS visited sets) where a `HashSet<u32>` would thrash.
+
+/// Fixed-capacity bit set with O(1) set/get and a fast epoch-style clear.
+#[derive(Clone, Debug)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitSet {
+    /// New all-zero bit set with capacity for `len` bits.
+    pub fn new(len: usize) -> Self {
+        Self { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// Number of addressable bits.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if no addressable bits.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set bit `i`. Returns the previous value.
+    pub fn set(&mut self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        let prev = (self.words[w] >> b) & 1 == 1;
+        self.words[w] |= 1 << b;
+        prev
+    }
+
+    /// Clear bit `i`.
+    pub fn unset(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] &= !(1 << (i % 64));
+    }
+
+    /// Read bit `i`.
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Zero every bit.
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Population count.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate over set bit indices in increasing order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+/// Epoch-stamped mark array: `clear()` is O(1) (bump the epoch).
+///
+/// The feGRASS recovery clears its vertex-cover marks between passes; with
+/// thousands of passes (com-Youtube pathology) an O(V) clear per pass is a
+/// real cost, so marks are epoch-stamped.
+#[derive(Clone, Debug)]
+pub struct EpochMarks {
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+impl EpochMarks {
+    /// New mark array for `len` items, all unmarked.
+    pub fn new(len: usize) -> Self {
+        Self { stamp: vec![0; len], epoch: 1 }
+    }
+
+    /// Number of addressable items.
+    pub fn len(&self) -> usize {
+        self.stamp.len()
+    }
+
+    /// True if no addressable items.
+    pub fn is_empty(&self) -> bool {
+        self.stamp.is_empty()
+    }
+
+    /// Mark item `i`; returns previous state.
+    pub fn mark(&mut self, i: usize) -> bool {
+        let prev = self.stamp[i] == self.epoch;
+        self.stamp[i] = self.epoch;
+        prev
+    }
+
+    /// Is item `i` marked in the current epoch?
+    pub fn is_marked(&self, i: usize) -> bool {
+        self.stamp[i] == self.epoch
+    }
+
+    /// Unmark everything in O(1) amortized (O(n) once per u32 wraparound).
+    pub fn clear(&mut self) {
+        if self.epoch == u32::MAX {
+            self.stamp.fill(0);
+            self.epoch = 1;
+        } else {
+            self.epoch += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_unset() {
+        let mut b = BitSet::new(200);
+        assert!(!b.get(131));
+        assert!(!b.set(131));
+        assert!(b.get(131));
+        assert!(b.set(131));
+        b.unset(131);
+        assert!(!b.get(131));
+    }
+
+    #[test]
+    fn count_and_iter() {
+        let mut b = BitSet::new(300);
+        for i in [0usize, 63, 64, 65, 199, 299] {
+            b.set(i);
+        }
+        assert_eq!(b.count(), 6);
+        assert_eq!(b.iter().collect::<Vec<_>>(), vec![0, 63, 64, 65, 199, 299]);
+        b.clear();
+        assert_eq!(b.count(), 0);
+    }
+
+    #[test]
+    fn epoch_marks_fast_clear() {
+        let mut m = EpochMarks::new(10);
+        assert!(!m.mark(3));
+        assert!(m.is_marked(3));
+        m.clear();
+        assert!(!m.is_marked(3));
+        assert!(!m.mark(3));
+        assert!(m.mark(3));
+    }
+
+    #[test]
+    fn epoch_wraparound() {
+        let mut m = EpochMarks::new(4);
+        m.epoch = u32::MAX - 1;
+        m.mark(0);
+        m.clear(); // epoch == MAX
+        m.mark(1);
+        assert!(!m.is_marked(0));
+        m.clear(); // wraps: fill(0), epoch=1
+        assert!(!m.is_marked(1));
+        m.mark(2);
+        assert!(m.is_marked(2));
+    }
+}

@@ -1,0 +1,79 @@
+//! Minimal multiply-based hasher (FxHash-style) for integer keys.
+//!
+//! §Perf-L3: the recovery's per-subtask incidence maps are keyed by `u32`
+//! vertex ids; std's SipHash is DoS-resistant but ~4× slower than a
+//! multiply-mix for these hot lookups, and the keys are not
+//! attacker-controlled.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiply-mix hasher for small integer keys.
+#[derive(Default)]
+pub struct FxHasher {
+    state: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl Hasher for FxHasher {
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u64(b as u64);
+        }
+    }
+
+    fn write_u32(&mut self, i: u32) {
+        self.write_u64(i as u64);
+    }
+
+    fn write_u64(&mut self, i: u64) {
+        self.state = (self.state.rotate_left(5) ^ i).wrapping_mul(SEED);
+    }
+
+    fn write_usize(&mut self, i: usize) {
+        self.write_u64(i as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`].
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// HashMap with the fast integer hasher.
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_works() {
+        let mut m: FxHashMap<u32, u32> = FxHashMap::default();
+        for i in 0..10_000u32 {
+            m.insert(i, i * 2);
+        }
+        for i in 0..10_000u32 {
+            assert_eq!(m.get(&i), Some(&(i * 2)));
+        }
+        assert_eq!(m.len(), 10_000);
+    }
+
+    #[test]
+    fn distributes_sequential_keys() {
+        // Sequential keys must not collide into the same few buckets:
+        // check the low bits of hashes spread out.
+        use std::hash::{BuildHasher, Hash};
+        let bh = FxBuildHasher::default();
+        let mut buckets = [0usize; 16];
+        for i in 0..16_000u32 {
+            let mut h = bh.build_hasher();
+            i.hash(&mut h);
+            buckets[(h.finish() & 15) as usize] += 1;
+        }
+        let (min, max) = (buckets.iter().min().unwrap(), buckets.iter().max().unwrap());
+        assert!(*max < 2 * *min + 200, "skewed buckets: {buckets:?}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Shared utilities: deterministic PRNG, bit sets / epoch marks, timing,
+//! statistics + table formatting, and a minimal property-testing driver.
+
+pub mod bitset;
+pub mod fxhash;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use bitset::{BitSet, EpochMarks};
+pub use fxhash::{FxBuildHasher, FxHashMap};
+pub use rng::Rng;
+pub use stats::{geomean, sci, sig3, Summary, Table};
+pub use timer::{min_of, time_ms, Timer};

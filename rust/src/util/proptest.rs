@@ -1,0 +1,91 @@
+//! Minimal property-based testing driver.
+//!
+//! The offline vendor set has no `proptest` crate, so we provide the core
+//! of it: run a property over many PRNG-generated cases, and on failure
+//! report the case seed so the exact input can be replayed by constructing
+//! `Rng::new(seed)`. Used throughout `rust/tests/` for algorithm
+//! invariants (LCA lemmas, subtask disjointness, PCG convergence, ...).
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases to generate.
+    pub cases: usize,
+    /// Base seed; case `i` uses seed `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, base_seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` over `cfg.cases` seeded RNGs. `prop` should panic or return
+/// `Err(reason)` on a violated property. Panics with the offending seed on
+/// first failure.
+pub fn check<F>(cfg: Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for i in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(reason) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {i} (seed={seed:#x}): {reason}");
+        }
+    }
+}
+
+/// Convenience wrapper with default config.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(Config::default(), name, prop)
+}
+
+/// Property helper: assert two f64s are within `atol + rtol*|b|`.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> Result<(), String> {
+    if (a - b).abs() <= atol + rtol * b.abs() {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (rtol={rtol}, atol={atol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(Config { cases: 10, base_seed: 1 }, "count", |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'bad' failed")]
+    fn failing_property_reports_seed() {
+        check(Config { cases: 5, base_seed: 2 }, "bad", |r| {
+            if r.next_u64() % 2 == 0 || true {
+                Err("always fails".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0).is_ok());
+        assert!(close(1.0, 2.0, 1e-6, 0.0).is_err());
+        assert!(close(0.0, 1e-9, 0.0, 1e-6).is_ok());
+    }
+}

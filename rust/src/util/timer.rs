@@ -1,0 +1,82 @@
+//! Wall-clock timing helpers for the bench harness and experiment drivers.
+
+use std::time::{Duration, Instant};
+
+/// Simple scoped stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start a timer now.
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed milliseconds as f64.
+    pub fn ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Elapsed microseconds as f64.
+    pub fn us(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+/// Time a closure, returning (result, elapsed ms).
+pub fn time_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.ms())
+}
+
+/// Run `f` `trials` times and return the minimum elapsed ms together with
+/// the last result — the paper reports minimum-of-5 runtimes.
+pub fn min_of<T>(trials: usize, mut f: impl FnMut() -> T) -> (T, f64) {
+    assert!(trials > 0);
+    let mut best = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..trials {
+        let (r, ms) = time_ms(&mut f);
+        best = best.min(ms);
+        out = Some(r);
+    }
+    (out.unwrap(), best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_is_monotone() {
+        let t = Timer::start();
+        let a = t.us();
+        std::thread::sleep(Duration::from_millis(2));
+        let b = t.us();
+        assert!(b > a);
+        assert!(t.ms() >= 2.0);
+    }
+
+    #[test]
+    fn time_ms_returns_result() {
+        let (v, ms) = time_ms(|| 40 + 2);
+        assert_eq!(v, 42);
+        assert!(ms >= 0.0);
+    }
+
+    #[test]
+    fn min_of_runs_n_times() {
+        let mut count = 0;
+        let (_, ms) = min_of(5, || count += 1);
+        assert_eq!(count, 5);
+        assert!(ms >= 0.0);
+    }
+}

@@ -1,0 +1,75 @@
+//! CLI + config integration: the launcher surface a user actually touches.
+
+use pdgrass::cli;
+use pdgrass::config::{Doc, RunConfig};
+
+fn args(a: &[&str]) -> Vec<String> {
+    a.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn sparsify_and_evaluate_verbs() {
+    cli::run(&args(&["sparsify", "--graph", "01-mi2010", "--alpha", "0.05", "--scale", "0.02"]))
+        .unwrap();
+    cli::run(&args(&["evaluate", "--graph", "01-mi2010", "--alpha", "0.05", "--scale", "0.02"]))
+        .unwrap();
+}
+
+#[test]
+fn sparsify_writes_mtx() {
+    let dir = std::env::temp_dir().join("pdgrass_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("out.mtx");
+    cli::run(&args(&[
+        "sparsify",
+        "--graph",
+        "15-M6",
+        "--alpha",
+        "0.02",
+        "--scale",
+        "0.02",
+        "--out",
+        out.to_str().unwrap(),
+    ]))
+    .unwrap();
+    let g = pdgrass::graph::read_mtx(&out).unwrap();
+    assert!(g.num_edges() > g.num_vertices() - 1);
+    std::fs::remove_file(&out).ok();
+}
+
+#[test]
+fn config_file_drives_experiments() {
+    let dir = std::env::temp_dir().join("pdgrass_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("run.toml");
+    std::fs::write(
+        &cfg_path,
+        "[run]\nalphas = [0.02]\ngraphs = [\"01-mi2010\"]\nscale = 0.02\ntrials = 1\n",
+    )
+    .unwrap();
+    cli::run(&args(&["table2", "--config", cfg_path.to_str().unwrap()])).unwrap();
+    std::fs::remove_file(&cfg_path).ok();
+}
+
+#[test]
+fn bad_config_is_a_clean_error() {
+    let dir = std::env::temp_dir().join("pdgrass_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("bad.toml");
+    std::fs::write(&cfg_path, "[run]\nnot_a_key = 3\n").unwrap();
+    let err = cli::run(&args(&["table2", "--config", cfg_path.to_str().unwrap()]))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown config key"), "{err}");
+    std::fs::remove_file(&cfg_path).ok();
+}
+
+#[test]
+fn defaults_round_trip() {
+    let doc = Doc::parse("").unwrap();
+    let cfg = RunConfig::from_doc(&doc).unwrap();
+    assert_eq!(cfg.alphas, vec![0.02, 0.05, 0.10]);
+    assert!(cfg.graphs.is_empty());
+    let p = cfg.pipeline();
+    assert_eq!(p.alpha, 0.02);
+}

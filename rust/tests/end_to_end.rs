@@ -1,0 +1,127 @@
+//! End-to-end pipeline integration tests over the suite families.
+
+use pdgrass::coordinator::{run_graph, PipelineConfig};
+use pdgrass::recovery::{self, Params};
+use pdgrass::tree::build_spanning;
+
+fn cfg(scale: f64) -> PipelineConfig {
+    PipelineConfig { scale, trials: 1, ..Default::default() }
+}
+
+/// One row per family, full pipeline, structural assertions.
+#[test]
+fn one_row_per_family() {
+    for (name, skewed) in [
+        ("01-mi2010", false),
+        ("07-com-DBLP", false),
+        ("09-com-Youtube", true),
+        ("15-M6", false),
+    ] {
+        let r = run_graph(name, &cfg(0.05)).unwrap();
+        assert_eq!(r.pd_passes, 1, "{name}: pdGRASS must finish in one pass");
+        assert!(r.iter_fe > 0 && r.iter_pd > 0, "{name}: PCG must converge");
+        assert!(r.fe_passes >= 1);
+        if skewed {
+            assert!(
+                r.fe_passes > 3,
+                "{name}: skewed input should force multiple feGRASS passes, got {}",
+                r.fe_passes
+            );
+            // skewed input → one dominant subtask
+            assert!(
+                r.stats.biggest_subtask * 3 > r.e / 10,
+                "{name}: expected a dominant subtask, biggest={} |E|={}",
+                r.stats.biggest_subtask,
+                r.e
+            );
+        }
+    }
+}
+
+/// Sparsifier size law: |E_P| = |V| − 1 + α|V| exactly (when enough
+/// off-tree edges exist).
+#[test]
+fn sparsifier_size_law() {
+    for alpha in [0.02, 0.05, 0.10] {
+        let g = pdgrass::gen::suite::build("14-NACA0015", 0.05, 7);
+        let sp = build_spanning(&g);
+        let params = Params::new(alpha, 2);
+        let r = recovery::pdgrass(&g, &sp, &params);
+        let p = recovery::sparsifier(&g, &sp, &r.edges);
+        let expect = g.num_vertices() - 1 + params.target(g.num_vertices());
+        assert_eq!(p.num_edges(), expect, "alpha={alpha}");
+        assert!(pdgrass::graph::is_connected(&p));
+    }
+}
+
+/// Quality monotonicity: more recovered edges → no worse PCG iterations
+/// (the paper's central quality claim, Fig. 1 upward drift).
+#[test]
+fn quality_improves_with_alpha() {
+    let g = pdgrass::gen::suite::build("15-M6", 0.05, 11);
+    let sp = build_spanning(&g);
+    let mut iters = Vec::new();
+    for alpha in [0.0, 0.05, 0.20] {
+        let r = recovery::pdgrass(&g, &sp, &Params::new(alpha, 2));
+        let p = recovery::sparsifier(&g, &sp, &r.edges);
+        let (it, conv) = pdgrass::solver::pcg_iterations(&g, &p, 99, 1e-3, 50_000).unwrap();
+        assert!(conv);
+        iters.push(it);
+    }
+    assert!(
+        iters[2] < iters[0],
+        "alpha=0.20 ({}) must beat tree-only ({})",
+        iters[2],
+        iters[0]
+    );
+    assert!(iters[1] <= iters[0] + 2);
+}
+
+/// pdGRASS vs feGRASS quality at growing α: the iteration ratio
+/// iter_fe/iter_pd must not shrink as α grows (Table II trend).
+#[test]
+fn iter_ratio_trend() {
+    let mut ratios = Vec::new();
+    for alpha in [0.02, 0.10] {
+        let mut c = cfg(0.08);
+        c.alpha = alpha;
+        let r = run_graph("14-NACA0015", &c).unwrap();
+        ratios.push(r.iter_fe as f64 / r.iter_pd as f64);
+    }
+    assert!(
+        ratios[1] >= ratios[0] * 0.8,
+        "iteration ratio should grow (or hold) with alpha: {ratios:?}"
+    );
+}
+
+/// feGRASS and pdGRASS recover the same number of edges (the target), so
+/// quality comparisons are apples-to-apples.
+#[test]
+fn equal_edge_budgets() {
+    let g = pdgrass::gen::suite::build("10-coAuthorsCiteseer", 0.05, 13);
+    let sp = build_spanning(&g);
+    let params = Params::new(0.05, 2);
+    let fe = recovery::fegrass(&g, &sp, &params);
+    let pd = recovery::pdgrass(&g, &sp, &params);
+    assert_eq!(fe.edges.len(), pd.edges.len());
+}
+
+/// MatrixMarket round trip through the real pipeline: write the
+/// sparsifier, read it back, equal PCG behaviour.
+#[test]
+fn mtx_roundtrip_pipeline() {
+    let g = pdgrass::gen::suite::build("01-mi2010", 0.03, 17);
+    let sp = build_spanning(&g);
+    let r = recovery::pdgrass(&g, &sp, &Params::new(0.05, 1));
+    let p = recovery::sparsifier(&g, &sp, &r.edges);
+    let dir = std::env::temp_dir().join("pdgrass_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sparsifier.mtx");
+    pdgrass::graph::write_mtx(&p, &path).unwrap();
+    let p2 = pdgrass::graph::read_mtx(&path).unwrap();
+    assert_eq!(p.num_edges(), p2.num_edges());
+    let (i1, _) = pdgrass::solver::pcg_iterations(&g, &p, 5, 1e-3, 50_000).unwrap();
+    let (i2, _) = pdgrass::solver::pcg_iterations(&g, &p2, 5, 1e-3, 50_000).unwrap();
+    assert_eq!(i1, i2);
+    std::fs::remove_file(&path).ok();
+}

