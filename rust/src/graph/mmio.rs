@@ -4,10 +4,15 @@
 //! `.mtx` files (symmetric coordinate matrices read as undirected graphs).
 //! This reader accepts `matrix coordinate (real|pattern|integer) symmetric
 //! |general` headers; pattern matrices get weight 1.0 (the suite registry
-//! then assigns random weights in [1, 10] as the paper does). The writer
-//! emits `coordinate real symmetric`, lower-triangular entries.
+//! then assigns random weights in [1, 10] as the paper does). A `general`
+//! file stores *both* triangles, so each undirected edge usually appears
+//! twice — as (i,j) and (j,i); the reader collapses those mirror pairs
+//! (averaging the two triangles, i.e. reading `(A + Aᵀ)/2`) instead of
+//! letting the duplicate double every edge weight. The writer emits
+//! `coordinate real symmetric`, lower-triangular entries.
 
 use super::csr::Graph;
+use crate::util::FxHashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
@@ -28,6 +33,7 @@ pub fn read_mtx_from<R: BufRead>(mut r: R) -> anyhow::Result<Graph> {
         anyhow::bail!("unsupported MatrixMarket header: {header}");
     }
     let pattern = header.contains("pattern");
+    let general = header.contains("general");
     if header.contains("complex") {
         anyhow::bail!("complex matrices unsupported");
     }
@@ -77,7 +83,45 @@ pub fn read_mtx_from<R: BufRead>(mut r: R) -> anyhow::Result<Graph> {
             }
         }
     }
+    if general {
+        raw = dedup_general(raw);
+    }
     Ok(Graph::from_edges(nrows, &raw))
+}
+
+/// Collapse the two triangles of a `general` coordinate file.
+///
+/// A symmetric matrix stored as `general` lists every off-diagonal entry
+/// twice — (i,j) and (j,i). `Graph::from_edges` merges duplicates by
+/// *summing* (parallel conductances), which would silently double every
+/// edge weight, so mirror pairs are combined here first: per canonical
+/// pair, sum each triangle's contributions and divide by the number of
+/// triangles present — `(A + Aᵀ)/2` — which also reads one-sided
+/// (genuinely asymmetric) entries at face value. Genuine parallel entries
+/// *within* one triangle still sum.
+fn dedup_general(raw: Vec<(u32, u32, f64)>) -> Vec<(u32, u32, f64)> {
+    // value: [lower-triangle sum, upper-triangle sum], NaN = side absent.
+    let mut acc: FxHashMap<(u32, u32), [f64; 2]> = FxHashMap::default();
+    for (i, j, w) in raw {
+        let key = (i.min(j), i.max(j));
+        let side = usize::from(i < j);
+        let sides = acc.entry(key).or_insert([f64::NAN; 2]);
+        if sides[side].is_nan() {
+            sides[side] = w;
+        } else {
+            sides[side] += w;
+        }
+    }
+    let mut out: Vec<(u32, u32, f64)> = acc
+        .into_iter()
+        .map(|((u, v), sides)| {
+            let present: Vec<f64> = sides.into_iter().filter(|s| !s.is_nan()).collect();
+            (u, v, present.iter().sum::<f64>() / present.len() as f64)
+        })
+        .collect();
+    // Hash order is nondeterministic; edge ids must not be.
+    out.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    out
 }
 
 /// Write a graph as `coordinate real symmetric` MatrixMarket.
@@ -120,6 +164,57 @@ mod tests {
     fn parses_pattern() {
         let src = "%%MatrixMarket matrix coordinate pattern symmetric\n\
                    2 2 1\n\
+                   2 1\n";
+        let g = read_mtx_from(Cursor::new(src)).unwrap();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.edges()[0].w, 1.0);
+    }
+
+    #[test]
+    fn general_mirror_pairs_are_deduplicated() {
+        // Both triangles stored: every off-diagonal appears as (i,j) AND
+        // (j,i). The duplicate must not double the edge weight (the seed
+        // reader pushed both copies into the edge list, and from_edges
+        // summed them).
+        let src = "%%MatrixMarket matrix coordinate real general\n\
+                   3 3 8\n\
+                   1 1 4.0\n\
+                   2 1 -1.5\n\
+                   1 2 -1.5\n\
+                   3 2 -0.5\n\
+                   2 3 -0.5\n\
+                   3 1 -2.0\n\
+                   1 3 -2.0\n\
+                   2 2 3.0\n";
+        let g = read_mtx_from(Cursor::new(src)).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3, "mirror pairs must collapse to one edge");
+        let w = |u: u32, v: u32| g.edges().iter().find(|e| e.u == u && e.v == v).unwrap().w;
+        assert!((w(0, 1) - 1.5).abs() < 1e-12, "weight doubled: {}", w(0, 1));
+        assert!((w(1, 2) - 0.5).abs() < 1e-12);
+        assert!((w(0, 2) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn general_one_sided_entries_read_at_face_value() {
+        // A general file that only stores one triangle (some exporters do)
+        // must keep the stated weights, not halve them.
+        let src = "%%MatrixMarket matrix coordinate real general\n\
+                   3 3 2\n\
+                   2 1 1.25\n\
+                   3 2 2.5\n";
+        let g = read_mtx_from(Cursor::new(src)).unwrap();
+        assert_eq!(g.num_edges(), 2);
+        let w = |u: u32, v: u32| g.edges().iter().find(|e| e.u == u && e.v == v).unwrap().w;
+        assert!((w(0, 1) - 1.25).abs() < 1e-12);
+        assert!((w(1, 2) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn general_pattern_both_triangles() {
+        let src = "%%MatrixMarket matrix coordinate pattern general\n\
+                   2 2 2\n\
+                   1 2\n\
                    2 1\n";
         let g = read_mtx_from(Cursor::new(src)).unwrap();
         assert_eq!(g.num_edges(), 1);

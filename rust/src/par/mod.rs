@@ -2,63 +2,70 @@
 //!
 //! The paper implements pdGRASS in C++17 + OpenMP. The offline vendor set
 //! has neither `rayon` nor OpenMP bindings, so this module implements the
-//! primitives the algorithm needs from `std::thread` scoped threads:
+//! primitives the algorithm needs on top of a **persistent work-stealing
+//! thread pool** ([`pool::ThreadPool`]) — the analogue of OpenMP's
+//! long-lived runtime. Workers are created once, lazily, and every
+//! primitive dispatches onto them; nothing here spawns per-call OS
+//! threads anymore (spawn-per-call cost used to dominate small hot loops
+//! like the per-PCG-iteration `spmv_par`; `benches/micro.rs` measures the
+//! difference).
 //!
 //! - [`par_for`] — dynamically-scheduled parallel index loop (the OpenMP
 //!   `parallel for schedule(dynamic)` used for outer subtask parallelism),
 //! - [`par_chunks`] — statically chunked loop (OpenMP `schedule(static)`),
 //! - [`par_map`] — parallel map collecting results in order,
+//! - [`par_fill`] — parallel disjoint-index slice fill,
 //! - [`sort::par_sort_by`] — parallel stable merge sort (steps 2–3 of
-//!   pdGRASS sort off-tree edges and subtasks).
+//!   pdGRASS sort off-tree edges and subtasks), forked via
+//!   [`pool::ThreadPool::join`].
+//!
+//! Every primitive keeps a serial fast path for `threads == 1` (or
+//! trivially small inputs), takes a per-call `threads` override, and
+//! produces output independent of scheduling (`all_strategies_agree` in
+//! `recovery::pdgrass` pins this down). Nested use — e.g. `par_map`
+//! inside a `par_for` task, the Mixed-strategy shape — is supported and
+//! deadlock-free; a panic inside a pooled task propagates to the caller
+//! instead of hanging the join (see `pool` for the execution model).
 //!
 //! Thread count comes from [`num_threads`]: the `PDGRASS_THREADS` env var
-//! if set, else `std::thread::available_parallelism()`.
+//! if it parses to a positive integer (`0` clamps to 1, garbage falls
+//! back), else `std::thread::available_parallelism()`. The global pool is
+//! sized from this value at first use.
 
+pub mod pool;
 pub mod sort;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+pub use pool::ThreadPool;
 
 /// Number of worker threads to use by default.
 pub fn num_threads() -> usize {
-    if let Ok(s) = std::env::var("PDGRASS_THREADS") {
-        if let Ok(n) = s.trim().parse::<usize>() {
-            return n.max(1);
-        }
+    num_threads_from(std::env::var("PDGRASS_THREADS").ok().as_deref())
+}
+
+/// Resolve a thread count from the raw `PDGRASS_THREADS` value.
+///
+/// Split out of [`num_threads`] so the override semantics are testable
+/// without mutating process-global environment from parallel tests:
+/// a parseable positive integer wins, `0` clamps to 1, anything else
+/// (unset, garbage, negative, empty) falls back to
+/// `available_parallelism`.
+pub fn num_threads_from(var: Option<&str>) -> usize {
+    match var.and_then(|s| s.trim().parse::<usize>().ok()) {
+        Some(n) => n.max(1),
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 /// Dynamically-scheduled parallel for over `0..n`, with `grain` indices
-/// claimed per atomic fetch. `f` is called once per index.
+/// claimed per atomic fetch. `f` is called once per index, on the global
+/// pool plus the calling thread.
 ///
 /// Equivalent OpenMP: `#pragma omp parallel for schedule(dynamic, grain)`.
 pub fn par_for<F>(n: usize, threads: usize, grain: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
-    let threads = threads.max(1).min(n.max(1));
-    if threads == 1 || n <= grain {
-        for i in 0..n {
-            f(i);
-        }
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    let grain = grain.max(1);
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let start = next.fetch_add(grain, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + grain).min(n);
-                for i in start..end {
-                    f(i);
-                }
-            });
-        }
-    });
+    ThreadPool::global().run_scope(n, threads, grain, f);
 }
 
 /// Statically chunked parallel loop: splits `0..n` into `threads`
@@ -73,16 +80,11 @@ where
         return;
     }
     let per = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        for t in 0..threads {
-            let f = &f;
-            s.spawn(move || {
-                let lo = t * per;
-                let hi = ((t + 1) * per).min(n);
-                if lo < hi {
-                    f(t, lo..hi);
-                }
-            });
+    ThreadPool::global().run_scope(threads, threads, 1, |t| {
+        let lo = t * per;
+        let hi = ((t + 1) * per).min(n);
+        if lo < hi {
+            f(t, lo..hi);
         }
     });
 }
@@ -150,7 +152,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn par_for_visits_every_index_once() {
@@ -175,6 +177,22 @@ mod tests {
     }
 
     #[test]
+    fn par_chunks_ranges_are_static() {
+        // Static schedule contract: thread t always gets the t-th
+        // contiguous block, independent of execution order.
+        let n = 103usize;
+        let threads = 4usize;
+        let per = n.div_ceil(threads);
+        let starts: Vec<AtomicU64> = (0..threads).map(|_| AtomicU64::new(u64::MAX)).collect();
+        par_chunks(n, threads, |t, range| {
+            starts[t].store(range.start as u64, Ordering::Relaxed);
+        });
+        for (t, s) in starts.iter().enumerate() {
+            assert_eq!(s.load(Ordering::Relaxed), (t * per) as u64);
+        }
+    }
+
+    #[test]
     fn par_map_preserves_order() {
         let xs: Vec<u64> = (0..500).collect();
         let ys = par_map(&xs, 4, |x| x * x);
@@ -193,11 +211,26 @@ mod tests {
         par_for(0, 4, 1, |_| panic!("should not run"));
         let v: Vec<u32> = vec![];
         assert!(par_map(&v, 4, |x| *x).is_empty());
+        par_chunks(0, 4, |_, range| assert!(range.is_empty()));
+        let mut empty: [u8; 0] = [];
+        par_fill(&mut empty, 4, 1, |_| 0);
     }
 
     #[test]
     fn num_threads_env_override() {
-        // Can't mutate env safely in parallel tests; just sanity-check >= 1.
+        // Valid values win.
+        assert_eq!(num_threads_from(Some("3")), 3);
+        assert_eq!(num_threads_from(Some(" 5 ")), 5);
+        assert_eq!(num_threads_from(Some("1")), 1);
+        // Zero clamps to 1 instead of disabling the substrate.
+        assert_eq!(num_threads_from(Some("0")), 1);
+        // Garbage, negatives, and empty fall back to autodetection.
+        let auto = num_threads_from(None);
+        assert!(auto >= 1);
+        assert_eq!(num_threads_from(Some("not-a-number")), auto);
+        assert_eq!(num_threads_from(Some("-2")), auto);
+        assert_eq!(num_threads_from(Some("")), auto);
+        // And the live value is always usable.
         assert!(num_threads() >= 1);
     }
 }

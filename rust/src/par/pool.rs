@@ -1,0 +1,497 @@
+//! Persistent work-stealing thread pool — the substrate's answer to a
+//! long-lived OpenMP runtime.
+//!
+//! Before this module existed, every `par_for`/`par_chunks`/`par_map`/
+//! `par_sort_by` call spawned and joined fresh OS threads via
+//! `std::thread::scope`, so hot loops (one `spmv_par` per PCG iteration,
+//! one inner-parallel block per recovery step) paid thread-creation cost
+//! thousands of times per run. The pool is created **once**, lazily, and
+//! every parallel primitive dispatches onto it.
+//!
+//! # Architecture
+//!
+//! * A global singleton ([`ThreadPool::global`]) sized by
+//!   [`super::num_threads`] (the `PDGRASS_THREADS` override is read at
+//!   first use). Worker threads sleep on a condvar when idle.
+//! * Tasks land in a shared **injector** queue when submitted from
+//!   outside the pool, or in the submitting worker's **per-worker slot**
+//!   when submitted from inside (nested parallelism). Workers drain their
+//!   own slot first (FIFO), then the injector, then **steal** from other
+//!   workers' slots (LIFO end).
+//! * [`ThreadPool::run_scope`] is the core primitive: a dynamically
+//!   scheduled index loop `f(0..n)` with an atomic claim cursor, the
+//!   direct analogue of `#pragma omp parallel for schedule(dynamic,
+//!   grain)`. The *caller participates*: it runs the same claim loop
+//!   inline, so a scope always makes progress even if every worker is
+//!   busy — this is what makes **nested** submission (the Mixed-strategy
+//!   shape: `par_map` inside a `par_for` task) deadlock-free. Waiting
+//!   happens only on chunks that some thread is actively executing, and
+//!   a chunk's nested scopes are strictly younger than the scope being
+//!   waited on, so the wait-for relation follows scope-creation order
+//!   and cannot cycle.
+//! * The per-call `threads` argument bounds how many pool workers are
+//!   recruited for that scope (`threads - 1` helper tasks + the caller),
+//!   so callers can run narrower than the pool, or wider — extra helper
+//!   tasks beyond the worker count simply drain as no-ops.
+//!
+//! # Panics
+//!
+//! A panic inside a pooled task is caught on the worker, recorded on the
+//! scope, and **re-thrown on the calling thread** once the scope drains —
+//! the join never hangs, and workers survive to serve the next scope.
+//!
+//! # Safety
+//!
+//! `run_scope` lifetime-erases the borrowed closure into the scope
+//! object. This is sound because `run_scope` does not return until every
+//! claimed index has been accounted for (`pending == 0`), and a stale
+//! queued task whose scope already drained observes `next >= n` and
+//! exits without ever dereferencing the closure pointer.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// One dynamically-scheduled parallel loop in flight.
+struct Scope {
+    /// Index-space size.
+    n: usize,
+    /// Indices claimed per atomic fetch.
+    grain: usize,
+    /// Claim cursor.
+    next: AtomicUsize,
+    /// Indices not yet executed-or-skipped; the scope is complete at 0.
+    pending: AtomicUsize,
+    /// Set when any chunk panicked; later chunks are skipped (but still
+    /// drained so `pending` reaches 0 and the join cannot hang).
+    panicked: AtomicBool,
+    /// First panic payload, re-thrown by the caller.
+    payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    /// Lifetime-erased `&dyn Fn(usize) + Sync`. Only dereferenced after a
+    /// successful claim (`start < n`), which can only happen while the
+    /// owning `run_scope` frame is still alive.
+    func: *const (dyn Fn(usize) + Sync),
+    /// Completion signal for the owning `run_scope`.
+    done_lock: Mutex<()>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `func` is only dereferenced under the `pending > 0` liveness
+// protocol documented on the module; all other fields are Sync.
+unsafe impl Send for Scope {}
+unsafe impl Sync for Scope {}
+
+impl Scope {
+    /// Claim-and-run loop. Executed by recruited workers and inline by
+    /// the scope's creator.
+    fn run(&self) {
+        loop {
+            let start = self.next.fetch_add(self.grain, Ordering::Relaxed);
+            if start >= self.n {
+                break;
+            }
+            let end = (start + self.grain).min(self.n);
+            if !self.panicked.load(Ordering::Relaxed) {
+                // SAFETY: claim succeeded, so the creator is still inside
+                // `run_scope` and the closure borrow is live.
+                let f = unsafe { &*self.func };
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    for i in start..end {
+                        f(i);
+                    }
+                }));
+                if let Err(p) = result {
+                    self.panicked.store(true, Ordering::Relaxed);
+                    let mut slot = self.payload.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(p);
+                    }
+                }
+            }
+            if self.pending.fetch_sub(end - start, Ordering::AcqRel) == end - start {
+                let _g = self.done_lock.lock().unwrap();
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.pending.load(Ordering::Acquire) == 0
+    }
+}
+
+/// A queued unit of work: one claim loop over a scope.
+type Task = Arc<Scope>;
+
+/// State shared between the pool handle and its workers.
+struct Shared {
+    /// Global queue for submissions from non-pool threads.
+    injector: Mutex<VecDeque<Task>>,
+    /// Per-worker slots for nested submissions (stolen by other workers).
+    slots: Vec<Mutex<VecDeque<Task>>>,
+    /// Sleep/wake protocol for idle workers.
+    sleep_lock: Mutex<()>,
+    wake_cv: Condvar,
+}
+
+impl Shared {
+    fn pop_for_worker(&self, idx: usize) -> Option<Task> {
+        if let Some(t) = self.slots[idx].lock().unwrap().pop_front() {
+            return Some(t);
+        }
+        if let Some(t) = self.injector.lock().unwrap().pop_front() {
+            return Some(t);
+        }
+        let k = self.slots.len();
+        for d in 1..k {
+            if let Some(t) = self.slots[(idx + d) % k].lock().unwrap().pop_back() {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn has_work(&self) -> bool {
+        if !self.injector.lock().unwrap().is_empty() {
+            return true;
+        }
+        self.slots.iter().any(|s| !s.lock().unwrap().is_empty())
+    }
+}
+
+thread_local! {
+    /// `(pool identity, worker index)` for pool worker threads.
+    static WORKER: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
+}
+
+fn worker_loop(shared: Arc<Shared>, idx: usize) {
+    WORKER.with(|w| w.set(Some((Arc::as_ptr(&shared) as usize, idx))));
+    loop {
+        if let Some(task) = shared.pop_for_worker(idx) {
+            task.run();
+            continue;
+        }
+        let guard = shared.sleep_lock.lock().unwrap();
+        if shared.has_work() {
+            continue;
+        }
+        // Submitters push first, then lock `sleep_lock` and notify, so a
+        // task enqueued between the check above and this wait still wakes
+        // us: the notifier blocks on the lock until we are waiting.
+        drop(shared.wake_cv.wait(guard).unwrap());
+    }
+}
+
+/// Persistent worker pool; see the module docs for the execution model.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+impl ThreadPool {
+    /// The process-wide pool, created on first use with
+    /// `num_threads().max(2)` workers (so explicit `threads > 1` calls
+    /// parallelize even when `PDGRASS_THREADS=1` serializes defaults).
+    pub fn global() -> &'static ThreadPool {
+        GLOBAL.get_or_init(|| ThreadPool::new(super::num_threads().max(2)))
+    }
+
+    /// Build a pool with `workers` threads. Workers live for the process
+    /// lifetime; prefer [`ThreadPool::global`] outside of tests.
+    fn new(workers: usize) -> ThreadPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            injector: Mutex::new(VecDeque::new()),
+            slots: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            sleep_lock: Mutex::new(()),
+            wake_cv: Condvar::new(),
+        });
+        for i in 0..workers {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("pdgrass-pool-{i}"))
+                .spawn(move || worker_loop(shared, i))
+                .expect("spawn pool worker");
+        }
+        ThreadPool { shared, workers }
+    }
+
+    /// Number of worker threads (excluding participating callers).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Worker index of the current thread *in this pool*, if any.
+    fn current_worker(&self) -> Option<usize> {
+        let me = Arc::as_ptr(&self.shared) as usize;
+        WORKER
+            .with(|w| w.get())
+            .and_then(|(pool, idx)| if pool == me { Some(idx) } else { None })
+    }
+
+    /// Enqueue `count` claim-loop tasks for `scope` and wake workers.
+    fn submit(&self, scope: &Task, count: usize) {
+        if count == 0 {
+            return;
+        }
+        match self.current_worker() {
+            Some(idx) => {
+                let mut q = self.shared.slots[idx].lock().unwrap();
+                for _ in 0..count {
+                    q.push_back(scope.clone());
+                }
+            }
+            None => {
+                let mut q = self.shared.injector.lock().unwrap();
+                for _ in 0..count {
+                    q.push_back(scope.clone());
+                }
+            }
+        }
+        // Wake at most `count` sleepers (tasks were pushed above, so a
+        // worker racing past the wake re-checks the queues under
+        // `sleep_lock` before sleeping and cannot miss them).
+        let _g = self.shared.sleep_lock.lock().unwrap();
+        for _ in 0..count.min(self.workers) {
+            self.shared.wake_cv.notify_one();
+        }
+    }
+
+    /// Dynamically-scheduled parallel loop: run `f(i)` for `i in 0..n`
+    /// with `grain` indices claimed per atomic fetch, recruiting up to
+    /// `threads - 1` pool workers alongside the calling thread.
+    ///
+    /// Serial fast path when `threads <= 1` or `n <= grain` (same
+    /// contract the pre-pool `par_for` had). Nested calls are safe from
+    /// any thread, including pool workers. A panic in `f` propagates to
+    /// the caller after the scope drains.
+    pub fn run_scope<F>(&self, n: usize, threads: usize, grain: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let threads = threads.max(1).min(n.max(1));
+        let grain = grain.max(1);
+        if threads == 1 || n <= grain {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: lifetime erasure; see the module-level safety notes.
+        let func: *const (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f_ref)
+        };
+        let scope: Task = Arc::new(Scope {
+            n,
+            grain,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n),
+            panicked: AtomicBool::new(false),
+            payload: Mutex::new(None),
+            func,
+            done_lock: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+        let chunks = n.div_ceil(grain);
+        let helpers = (threads - 1).min(chunks - 1).min(self.workers);
+        self.submit(&scope, helpers);
+        // The caller participates — guarantees progress under nesting.
+        scope.run();
+        // Wait for chunks still in flight on recruited workers. The
+        // notify protocol alone is miss-free (the final decrement takes
+        // `done_lock` before notifying; we check under the same lock);
+        // the timeout is deliberate belt-and-braces so a future protocol
+        // regression degrades to a 10 ms-poll stall instead of a hang.
+        let mut guard = scope.done_lock.lock().unwrap();
+        while !scope.is_done() {
+            let (g, _) = scope
+                .done_cv
+                .wait_timeout(guard, Duration::from_millis(10))
+                .unwrap();
+            guard = g;
+        }
+        drop(guard);
+        if scope.panicked.load(Ordering::Relaxed) {
+            match scope.payload.lock().unwrap().take() {
+                Some(p) => resume_unwind(p),
+                None => panic!("pdgrass pool: worker task panicked"),
+            }
+        }
+    }
+
+    /// Fork–join pair: runs `a` and `b`, potentially in parallel (`a` may
+    /// be picked up by a worker while the caller runs `b`, or the caller
+    /// runs both). Returns after both complete; panics propagate.
+    pub fn join<A, B>(&self, a: A, b: B)
+    where
+        A: FnOnce() + Send,
+        B: FnOnce() + Send,
+    {
+        let a = Mutex::new(Some(a));
+        let b = Mutex::new(Some(b));
+        self.run_scope(2, 2, 1, |i| {
+            if i == 0 {
+                (b.lock().unwrap().take().expect("join slot b claimed twice"))();
+            } else {
+                (a.lock().unwrap().take().expect("join slot a claimed twice"))();
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::{par_for, par_map};
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_scope_visits_every_index_once() {
+        let pool = ThreadPool::global();
+        for threads in [2usize, 3, 8, 64] {
+            for grain in [1usize, 7, 1000] {
+                let hits: Vec<AtomicU64> = (0..500).map(|_| AtomicU64::new(0)).collect();
+                pool.run_scope(500, threads, grain, |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                    "threads={threads} grain={grain}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_and_tiny_scopes() {
+        let pool = ThreadPool::global();
+        pool.run_scope(0, 8, 1, |_| panic!("must not run"));
+        let hit = AtomicU64::new(0);
+        pool.run_scope(1, 8, 1, |_| {
+            hit.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn threads_exceeding_pool_and_n() {
+        // More threads than indices and than pool workers: every index
+        // still runs exactly once and the call returns.
+        let hits: Vec<AtomicU64> = (0..3).map(|_| AtomicU64::new(0)).collect();
+        par_for(3, 1024, 1, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn nested_par_map_inside_par_for() {
+        // The Mixed-strategy shape from recovery/pdgrass.rs: an outer
+        // dynamic loop whose body runs an inner parallel map.
+        let totals: Vec<AtomicU64> = (0..12).map(|_| AtomicU64::new(0)).collect();
+        par_for(12, 4, 1, |i| {
+            let xs: Vec<u64> = (0..200).collect();
+            let ys = par_map(&xs, 4, |&x| x * 2);
+            let sum: u64 = ys.iter().sum();
+            totals[i].store(sum, Ordering::Relaxed);
+        });
+        let expect: u64 = (0..200u64).map(|x| x * 2).sum();
+        for t in &totals {
+            assert_eq!(t.load(Ordering::Relaxed), expect);
+        }
+    }
+
+    #[test]
+    fn deeply_nested_scopes_terminate() {
+        fn level(depth: usize, counter: &AtomicU64) {
+            if depth == 0 {
+                counter.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            par_for(2, 2, 1, |_| level(depth - 1, counter));
+        }
+        let c = AtomicU64::new(0);
+        level(5, &c);
+        assert_eq!(c.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn panic_in_pooled_task_fails_caller_without_hanging() {
+        let result = std::panic::catch_unwind(|| {
+            par_for(256, 4, 1, |i| {
+                if i == 97 {
+                    panic!("expected test panic at 97");
+                }
+            });
+        });
+        assert!(result.is_err(), "worker panic must reach the caller");
+        // The pool must remain fully usable after a panicked scope.
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        par_for(100, 4, 3, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn panic_payload_is_preserved() {
+        let result = std::panic::catch_unwind(|| {
+            ThreadPool::global().run_scope(64, 8, 1, |i| {
+                if i == 13 {
+                    panic!("boom-13");
+                }
+            });
+        });
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(str::to_string)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("boom-13"), "payload lost: {msg:?}");
+    }
+
+    #[test]
+    fn join_runs_both_sides() {
+        let (a, b) = (AtomicU64::new(0), AtomicU64::new(0));
+        ThreadPool::global().join(
+            || {
+                a.store(11, Ordering::Relaxed);
+            },
+            || {
+                b.store(22, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(a.load(Ordering::Relaxed), 11);
+        assert_eq!(b.load(Ordering::Relaxed), 22);
+    }
+
+    #[test]
+    fn join_propagates_panics() {
+        let ok = AtomicU64::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            ThreadPool::global().join(
+                || panic!("left side fails"),
+                || {
+                    ok.fetch_add(1, Ordering::Relaxed);
+                },
+            );
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn global_pool_is_singleton_and_sized() {
+        let p1 = ThreadPool::global();
+        let p2 = ThreadPool::global();
+        assert!(std::ptr::eq(p1, p2));
+        assert!(p1.workers() >= 2);
+    }
+}

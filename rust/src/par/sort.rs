@@ -2,10 +2,12 @@
 //!
 //! pdGRASS steps 2–3 sort the off-tree edges by resistance distance and the
 //! subtasks by size; the paper's span analysis assumes an `O(lg² n)`-span
-//! parallel merge sort. This is a fork–join merge sort over scoped threads
-//! with a sequential cutoff; stability matters because the paper specifies
-//! a *stable* sort of edges (ties keep insertion order, which the subtask
-//! linked lists rely on).
+//! parallel merge sort. This is a fork–join merge sort dispatched onto the
+//! persistent pool ([`super::pool::ThreadPool::join`]) with a sequential
+//! cutoff — no per-call thread spawns; stability matters because the paper
+//! specifies a *stable* sort of edges (ties keep insertion order, which
+//! the subtask linked lists rely on). The merge structure is independent
+//! of scheduling, so output is deterministic for any pool state.
 
 /// Parallel stable sort by a key-extraction function.
 pub fn par_sort_by_key<T, K, F>(v: &mut [T], threads: usize, key: F)
@@ -35,6 +37,8 @@ where
 }
 
 /// Recursive fork–join merge sort. `depth` levels of forking, then serial.
+/// Forks run on the persistent pool; the caller works the right half
+/// while a pool worker (or the caller itself) sorts the left.
 fn msort<T, F>(v: &mut [T], buf: &mut [T], cmp: &F, depth: usize)
 where
     T: Send + Clone,
@@ -47,10 +51,10 @@ where
     let mid = v.len() / 2;
     let (vl, vr) = v.split_at_mut(mid);
     let (bl, br) = buf.split_at_mut(mid);
-    std::thread::scope(|s| {
-        s.spawn(|| msort(vl, bl, cmp, depth - 1));
-        msort(vr, br, cmp, depth - 1);
-    });
+    crate::par::ThreadPool::global().join(
+        || msort(vl, bl, cmp, depth - 1),
+        || msort(vr, br, cmp, depth - 1),
+    );
     // Stable merge into buf, copy back.
     merge(vl, vr, buf, cmp);
     v.clone_from_slice(buf);

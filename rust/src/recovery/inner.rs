@@ -18,6 +18,11 @@
 //! ("skipped in parallel": 57% of com-Youtube iterations in the paper).
 //! With JBP, a serial judge — now a cheap flag check — filters them out
 //! first, so every thread explores: 100% utilization.
+//!
+//! The per-block `par_map` here runs on the persistent pool, and under
+//! the Mixed strategy it runs *nested inside* an outer pooled task; one
+//! block is dispatched per explore phase, so pooled dispatch (queue push
+//! instead of thread spawn/join per block) matters for throughput.
 
 use super::subctx::SubtaskCtx;
 use super::{Params, Stats};

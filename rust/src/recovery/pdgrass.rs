@@ -1,6 +1,12 @@
 //! pdGRASS (Algorithm 1): strict-similarity recovery over LCA subtasks
 //! with serial / outer / inner / mixed parallel strategies.
 //!
+//! All parallel strategies dispatch onto the persistent pool
+//! (`par::pool`): Outer fans subtasks out with `par_map`, Mixed
+//! additionally runs inner-parallel blocks *from inside* pooled tasks —
+//! the nested-submission shape the pool's scoped execution model exists
+//! for. Outputs are scheduling-independent (`all_strategies_agree`).
+//!
 //! Steps: 1) resistance distances per off-tree edge (one LCA query each),
 //! 2) parallel stable sort by criticality, 3) subtask creation by shared
 //! LCA + size sort, 4) recovery under the strict condition with the chosen

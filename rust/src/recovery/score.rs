@@ -1,8 +1,8 @@
 //! Step 2 of Algorithm 1: sort off-tree edges by spectral criticality.
 //!
-//! Parallel *stable* sort, descending by `score = w·R_T`; stability makes
-//! runs reproducible and matches the serial feGRASS tie-break (edge-id
-//! order).
+//! Parallel *stable* sort (fork–join on the persistent pool), descending
+//! by `score = w·R_T`; stability makes runs reproducible and matches the
+//! serial feGRASS tie-break (edge-id order).
 
 use crate::par;
 use crate::tree::OffTreeEdge;

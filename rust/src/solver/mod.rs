@@ -8,5 +8,7 @@ pub mod spmv;
 
 pub use chol::{LdlFactor, NotPositiveDefinite};
 pub use order::{bandwidth, permute_sym, rcm};
-pub use pcg::{pcg, pcg_iterations, Identity, Jacobi, PcgResult, Preconditioner, SparsifierPrecond};
+pub use pcg::{
+    pcg, pcg_iterations, pcg_par, Identity, Jacobi, PcgResult, Preconditioner, SparsifierPrecond,
+};
 pub use spmv::{axpy, dot, norm2, spmv, spmv_par};

@@ -9,7 +9,7 @@
 
 use super::chol::{LdlFactor, NotPositiveDefinite};
 use super::order::{permute_sym, permute_vec, rcm, unpermute_vec};
-use super::spmv::{axpy, dot, norm2, spmv};
+use super::spmv::{axpy, dot, norm2, spmv_par};
 use crate::graph::{grounded_laplacian, CsrMatrix, Graph};
 
 /// Preconditioner interface: `z = M⁻¹ r`.
@@ -110,6 +110,23 @@ pub fn pcg<M: Preconditioner>(
     tol: f64,
     maxit: usize,
 ) -> PcgResult {
+    pcg_par(a, b, m, tol, maxit, 1)
+}
+
+/// As [`pcg`], with the per-iteration SpMV hot loop dispatched onto the
+/// persistent thread pool across `threads` workers. `threads == 1` is
+/// exactly [`pcg`] (identical arithmetic, identical iteration counts);
+/// larger counts keep bitwise-identical results too, because the row-
+/// parallel SpMV performs the same per-row reductions — only the BLAS-1
+/// tail stays serial (it is memory-bound and tiny next to the SpMV).
+pub fn pcg_par<M: Preconditioner>(
+    a: &CsrMatrix,
+    b: &[f64],
+    m: &M,
+    tol: f64,
+    maxit: usize,
+    threads: usize,
+) -> PcgResult {
     let n = a.n;
     assert_eq!(b.len(), n);
     let bnorm = norm2(b).max(f64::MIN_POSITIVE);
@@ -126,7 +143,7 @@ pub fn pcg<M: Preconditioner>(
         return PcgResult { x, iterations: 0, relres, converged: true, history };
     }
     for it in 1..=maxit {
-        spmv(a, &p, &mut ap);
+        spmv_par(a, &p, &mut ap, threads);
         let pap = dot(&p, &ap);
         if pap <= 0.0 || !pap.is_finite() {
             // matrix not SPD along p (numerical breakdown)
@@ -175,6 +192,7 @@ pub fn pcg_iterations(
 mod tests {
     use super::*;
     use crate::gen;
+    use crate::solver::spmv::spmv;
     use crate::util::Rng;
 
     fn laplacian_system(seed: u64) -> (CsrMatrix, Vec<f64>, Graph) {
@@ -242,6 +260,23 @@ mod tests {
         let res = pcg(&a, &b, &Jacobi::new(&a), 1e-6, 5000);
         assert_eq!(res.history.len(), res.iterations);
         assert!(res.history.last().unwrap() <= &1e-6);
+    }
+
+    #[test]
+    fn pcg_par_matches_serial_exactly() {
+        // Row-parallel SpMV does the same per-row reductions, so the
+        // iterate sequence (and thus iteration count and history) must be
+        // identical, not merely close.
+        let (a, b, _) = laplacian_system(7);
+        let m = Jacobi::new(&a);
+        let serial = pcg(&a, &b, &m, 1e-6, 5000);
+        for threads in [2usize, 4, 8] {
+            let par = pcg_par(&a, &b, &m, 1e-6, 5000, threads);
+            assert_eq!(par.iterations, serial.iterations, "threads={threads}");
+            assert_eq!(par.converged, serial.converged);
+            assert_eq!(par.history, serial.history, "threads={threads}");
+            assert_eq!(par.x, serial.x, "threads={threads}");
+        }
     }
 
     #[test]

@@ -22,9 +22,18 @@ pub fn spmv(a: &CsrMatrix, x: &[f64], y: &mut [f64]) {
 }
 
 /// `y = A·x`, rows split across threads (row-disjoint writes).
+///
+/// Dispatches onto the persistent pool (`par::pool`), so the per-call
+/// cost is a queue push + condvar wake rather than thread spawn/join —
+/// this runs once per PCG iteration, which is exactly the spawn-per-call
+/// hot loop the pool exists for.
 pub fn spmv_par(a: &CsrMatrix, x: &[f64], y: &mut [f64], threads: usize) {
     debug_assert_eq!(x.len(), a.n);
     debug_assert_eq!(y.len(), a.n);
+    if threads <= 1 {
+        spmv(a, x, y);
+        return;
+    }
     let ptr = par::as_send_ptr(y);
     par::par_chunks(a.n, threads, |_, range| {
         for i in range {

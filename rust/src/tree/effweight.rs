@@ -14,6 +14,10 @@ use crate::graph::Graph;
 use crate::par;
 
 /// Effective weights for all edges, in edge-id order, plus the chosen root.
+///
+/// The per-edge formula evaluation is a `par_fill` on the persistent
+/// pool (coarse 4096-index grain: the body is a few loads and an `ln`,
+/// so the win is bandwidth, not latency).
 pub fn effective_weights(g: &Graph) -> (Vec<f64>, u32) {
     let root = g.max_degree_vertex();
     let dist = bfs_distances(g, root);

@@ -1,0 +1,173 @@
+//! Offline subset of the `anyhow` crate.
+//!
+//! This environment has no registry access, so the repo vendors the small
+//! slice of `anyhow` it actually uses: [`Error`], [`Result`], and the
+//! [`anyhow!`], [`bail!`], [`ensure!`] macros. Semantics match upstream
+//! for this subset:
+//!
+//! * `Error` wraps any `std::error::Error + Send + Sync + 'static` (so
+//!   `?` works on io/parse/domain errors) or a formatted message;
+//! * `Error` deliberately does **not** implement `std::error::Error`,
+//!   which is what makes the blanket `From` impl coherent — the same
+//!   trick upstream uses.
+
+use std::fmt;
+
+/// A type-erased error: either a wrapped source error or a message.
+pub struct Error {
+    inner: Box<dyn std::error::Error + Send + Sync + 'static>,
+}
+
+/// `Result<T, anyhow::Error>`, the crate's ubiquitous alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Message-only error payload backing [`Error::msg`].
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for MessageError {}
+
+impl Error {
+    /// Create an error from a plain message (what [`anyhow!`] expands to).
+    pub fn msg(message: String) -> Error {
+        Error { inner: Box::new(MessageError(message)) }
+    }
+
+    /// Downcast-free access to the chain root as `dyn Error`.
+    pub fn as_dyn(&self) -> &(dyn std::error::Error + Send + Sync + 'static) {
+        &*self.inner
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Match upstream: Debug prints the display chain, which is what
+        // `unwrap()` panics show.
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { inner: Box::new(e) }
+    }
+}
+
+/// Construct an [`Error`] from a format string (captures allowed) or any
+/// `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($msg:literal $(,)?) => {
+        return ::std::result::Result::Err($crate::anyhow!($msg))
+    };
+    ($err:expr $(,)?) => {
+        return ::std::result::Result::Err($crate::anyhow!($err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] when `cond` is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::Error::msg(::std::format!(
+                "condition failed: {}",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $msg:literal $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($msg));
+        }
+    };
+    ($cond:expr, $err:expr $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($err));
+        }
+    };
+    ($cond:expr, $fmt:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($fmt, $($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let n: i32 = s.parse()?; // ParseIntError -> Error via blanket From
+        ensure!(n >= 0, "negative: {n}");
+        if n > 100 {
+            bail!("too big: {} > {}", n, 100);
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_macros() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+        assert_eq!(parse("-3").unwrap_err().to_string(), "negative: -3");
+        assert_eq!(parse("500").unwrap_err().to_string(), "too big: 500 > 100");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let x = 7;
+        let b = anyhow!("captured {x}");
+        assert_eq!(b.to_string(), "captured 7");
+        let c = anyhow!("fmt {} {}", 1, 2);
+        assert_eq!(c.to_string(), "fmt 1 2");
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "disk on fire");
+        let d = anyhow!(io);
+        assert_eq!(d.to_string(), "disk on fire");
+    }
+
+    #[test]
+    fn debug_is_display() {
+        let e = anyhow!("shown");
+        assert_eq!(format!("{e:?}"), "shown");
+    }
+}
