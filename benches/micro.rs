@@ -66,7 +66,7 @@ fn bench_dispatch() {
             for _ in 0..calls {
                 let ptr = SendCell(out.as_mut_ptr());
                 spawn_per_call_for(n, threads, grain, |i| unsafe {
-                    *ptr.0.add(i) = (i as f64).sqrt();
+                    *ptr.p().add(i) = (i as f64).sqrt();
                 });
             }
         });
@@ -74,7 +74,7 @@ fn bench_dispatch() {
             for _ in 0..calls {
                 let ptr = SendCell(out.as_mut_ptr());
                 pdgrass::par::par_for(n, threads, grain, |i| unsafe {
-                    *ptr.0.add(i) = (i as f64).sqrt();
+                    *ptr.p().add(i) = (i as f64).sqrt();
                 });
             }
         });
@@ -89,13 +89,203 @@ fn bench_dispatch() {
 }
 
 /// Raw-pointer cell for the disjoint-index writes in `bench_dispatch`.
+/// Accessed via the method so closures capture the whole cell (edition
+/// 2021 disjoint capture would grab the `!Sync` raw pointer field).
 struct SendCell(*mut f64);
 unsafe impl Send for SendCell {}
 unsafe impl Sync for SendCell {}
+impl SendCell {
+    fn p(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+/// BLAS-1 serial vs pooled: the ops that dominate a PCG iteration after
+/// the SpMV. Pooled dots reduce over the fixed chunk tree; the pooled
+/// win should appear at large n while tiny n stays near-serial (the
+/// primitives' serial fast paths).
+fn bench_blas1() {
+    use pdgrass::solver::{axpy, axpy_par, dot, dot_par, norm2, norm2_par};
+    let threads = 4usize;
+    let calls = 50usize;
+    let mut rng = Rng::new(3);
+    for n in [4096usize, 1 << 20] {
+        let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f64; n];
+        let (_, ms) = min_of(5, || {
+            let mut acc = 0.0;
+            for _ in 0..calls {
+                acc += dot(&a, &b);
+            }
+            acc
+        });
+        report(&format!("dot_serial(n={n})"), 5, ms, (calls * n) as u64, "elt");
+        let (_, ms_p) = min_of(5, || {
+            let mut acc = 0.0;
+            for _ in 0..calls {
+                acc += dot_par(&a, &b, threads);
+            }
+            acc
+        });
+        report(&format!("dot_pooled(n={n})"), 5, ms_p, (calls * n) as u64, "elt");
+        let (_, ms) = min_of(5, || {
+            let mut acc = 0.0;
+            for _ in 0..calls {
+                acc += norm2(&a);
+            }
+            acc
+        });
+        report(&format!("norm2_serial(n={n})"), 5, ms, (calls * n) as u64, "elt");
+        let (_, ms_p) = min_of(5, || {
+            let mut acc = 0.0;
+            for _ in 0..calls {
+                acc += norm2_par(&a, threads);
+            }
+            acc
+        });
+        report(&format!("norm2_pooled(n={n})"), 5, ms_p, (calls * n) as u64, "elt");
+        let (_, ms) = min_of(5, || {
+            for _ in 0..calls {
+                axpy(1e-9, &a, &mut y);
+            }
+        });
+        report(&format!("axpy_serial(n={n})"), 5, ms, (calls * n) as u64, "elt");
+        let (_, ms_p) = min_of(5, || {
+            for _ in 0..calls {
+                axpy_par(1e-9, &a, &mut y, threads);
+            }
+        });
+        report(&format!("axpy_pooled(n={n})"), 5, ms_p, (calls * n) as u64, "elt");
+    }
+}
+
+/// The pre-rewrite clone-based fork–join merge sort, kept here (only
+/// here) as the baseline for the sort comparison: it requires
+/// `T: Clone`, allocates a full clone of the input up front, and clones
+/// every element once per merge level.
+mod clone_sort_baseline {
+    pub fn par_sort_by<T, F>(v: &mut [T], threads: usize, cmp: &F)
+    where
+        T: Send + Clone,
+        F: Fn(&T, &T) -> std::cmp::Ordering + Sync,
+    {
+        let threads = threads.max(1);
+        if threads == 1 || v.len() < 4096 {
+            v.sort_by(cmp);
+            return;
+        }
+        let mut buf = v.to_vec();
+        let depth = (threads as f64).log2().ceil() as usize;
+        msort(v, &mut buf, cmp, depth);
+    }
+
+    fn msort<T, F>(v: &mut [T], buf: &mut [T], cmp: &F, depth: usize)
+    where
+        T: Send + Clone,
+        F: Fn(&T, &T) -> std::cmp::Ordering + Sync,
+    {
+        if depth == 0 || v.len() < 4096 {
+            v.sort_by(cmp);
+            return;
+        }
+        let mid = v.len() / 2;
+        let (vl, vr) = v.split_at_mut(mid);
+        let (bl, br) = buf.split_at_mut(mid);
+        pdgrass::par::ThreadPool::global()
+            .join(|| msort(vl, bl, cmp, depth - 1), || msort(vr, br, cmp, depth - 1));
+        merge(vl, vr, buf, cmp);
+        v.clone_from_slice(buf);
+    }
+
+    fn merge<T, F>(a: &[T], b: &[T], out: &mut [T], cmp: &F)
+    where
+        T: Clone,
+        F: Fn(&T, &T) -> std::cmp::Ordering,
+    {
+        let (mut i, mut j, mut k) = (0, 0, 0);
+        while i < a.len() && j < b.len() {
+            if cmp(&a[i], &b[j]) != std::cmp::Ordering::Greater {
+                out[k] = a[i].clone();
+                i += 1;
+            } else {
+                out[k] = b[j].clone();
+                j += 1;
+            }
+            k += 1;
+        }
+        while i < a.len() {
+            out[k] = a[i].clone();
+            i += 1;
+            k += 1;
+        }
+        while j < b.len() {
+            out[k] = b[j].clone();
+            j += 1;
+            k += 1;
+        }
+    }
+}
+
+/// Old clone-per-merge sort vs the new move-based ping-pong sort, on an
+/// `OffTreeEdge`-shaped 48-byte payload (the recovery step-2 workload).
+fn bench_sort() {
+    #[derive(Clone)]
+    struct FatEdge {
+        _eid: u32,
+        _u: u32,
+        _v: u32,
+        _lca: u32,
+        _w: f64,
+        _resistance: f64,
+        score: f64,
+        _pad: f64,
+    }
+    let threads = 4usize;
+    let n = 400_000usize;
+    let mk = |rng: &mut Rng| -> Vec<FatEdge> {
+        (0..n)
+            .map(|i| FatEdge {
+                _eid: i as u32,
+                _u: 0,
+                _v: 1,
+                _lca: 0,
+                _w: 1.0,
+                _resistance: 0.0,
+                score: rng.next_f64(),
+                _pad: 0.0,
+            })
+            .collect()
+    };
+    let cmp = |a: &FatEdge, b: &FatEdge| {
+        b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal)
+    };
+    let (_, ms_old) = min_of(5, || {
+        let mut v = mk(&mut Rng::new(4));
+        clone_sort_baseline::par_sort_by(&mut v, threads, &cmp);
+        v.len()
+    });
+    report(&format!("sort_clone_based(n={n})"), 5, ms_old, n as u64, "elt");
+    let (_, ms_new) = min_of(5, || {
+        let mut v = mk(&mut Rng::new(4));
+        pdgrass::par::sort::par_sort_by(&mut v, threads, &cmp);
+        v.len()
+    });
+    report(&format!("sort_move_based(n={n})"), 5, ms_new, n as u64, "elt");
+    println!(
+        "{:<38} move-based sort {:.2}x vs clone-based",
+        "",
+        ms_old / ms_new.max(1e-9)
+    );
+}
 
 fn main() {
     println!("# micro bench: parallel-substrate dispatch cost (spawn vs persistent pool)");
     bench_dispatch();
+    println!("# micro bench: BLAS-1 serial vs pooled (PCG inner-loop ops)");
+    bench_blas1();
+    println!("# micro bench: clone-based vs move-based parallel sort");
+    bench_sort();
 
     let g = pdgrass::gen::suite::build("15-M6", 0.5, 42);
     println!("# micro bench on 15-M6@0.5: |V|={} |E|={}", g.num_vertices(), g.num_edges());

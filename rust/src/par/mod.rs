@@ -15,9 +15,14 @@
 //! - [`par_chunks`] — statically chunked loop (OpenMP `schedule(static)`),
 //! - [`par_map`] — parallel map collecting results in order,
 //! - [`par_fill`] — parallel disjoint-index slice fill,
+//! - [`par_update`] — parallel in-place elementwise update (the
+//!   `axpy`-shaped BLAS-1 kernel: disjoint writes, zero allocation),
+//! - [`par_reduce`] — deterministic fixed-tree reduction (`dot`/`norm2`
+//!   in the PCG loop), see below,
 //! - [`sort::par_sort_by`] — parallel stable merge sort (steps 2–3 of
-//!   pdGRASS sort off-tree edges and subtasks), forked via
-//!   [`pool::ThreadPool::join`].
+//!   pdGRASS sort off-tree edges and subtasks): out-of-place ping-pong
+//!   merges over one scratch buffer, splitter-parallel merge forked via
+//!   [`pool::ThreadPool::join`], no `T: Clone` bound.
 //!
 //! Every primitive keeps a serial fast path for `threads == 1` (or
 //! trivially small inputs), takes a per-call `threads` override, and
@@ -27,15 +32,41 @@
 //! deadlock-free; a panic inside a pooled task propagates to the caller
 //! instead of hanging the join (see `pool` for the execution model).
 //!
+//! # Determinism contract of [`par_reduce`]
+//!
+//! [`par_reduce`] folds leaf partials over a **fixed binary chunk tree**
+//! whose shape (leaf boundaries and combine order) depends only on
+//! `(n, grain)` — never on the thread count, pool state, or claim order.
+//! `threads` only chooses how many tree levels are forked onto the pool.
+//! Consequently, for non-associative combines (floating-point `+`) the
+//! result is bitwise identical across repeated runs **and across thread
+//! counts** at fixed `(n, grain)`. This is load-bearing for
+//! `solver::pcg_par`: every `dot`/`norm2` in the iteration reduces over
+//! the same tree at every thread count, so parallel PCG reproduces the
+//! serial iterate sequence exactly, not merely to rounding.
+//!
 //! Thread count comes from [`num_threads`]: the `PDGRASS_THREADS` env var
 //! if it parses to a positive integer (`0` clamps to 1, garbage falls
 //! back), else `std::thread::available_parallelism()`. The global pool is
 //! sized from this value at first use.
 
 pub mod pool;
+pub mod reduce;
 pub mod sort;
 
 pub use pool::ThreadPool;
+pub use reduce::par_reduce;
+
+/// Fork depth for binary fork–join trees: `ceil(log2(threads))` levels,
+/// so a tree forked this deep exposes at least `threads` leaves.
+/// Shared by [`par_reduce`] and [`sort::par_sort_by`].
+pub(crate) fn fork_depth(threads: usize) -> usize {
+    if threads <= 1 {
+        0
+    } else {
+        (usize::BITS - (threads - 1).leading_zeros()) as usize
+    }
+}
 
 /// Number of worker threads to use by default.
 pub fn num_threads() -> usize {
@@ -128,6 +159,15 @@ impl<T> SendPtr<T> {
     pub(crate) unsafe fn write(&self, i: usize, val: T) {
         *self.0.add(i) = val;
     }
+
+    /// Raw pointer to offset `i`.
+    ///
+    /// # Safety
+    /// Same contract as [`SendPtr::write`]: `i` in bounds, and the caller
+    /// must not create aliasing accesses to offset `i` across threads.
+    pub(crate) unsafe fn at(&self, i: usize) -> *mut T {
+        self.0.add(i)
+    }
 }
 
 pub(crate) fn as_send_ptr<T>(v: &mut [T]) -> SendPtr<T> {
@@ -146,6 +186,24 @@ where
     par_for(n, threads, grain, |i| {
         // SAFETY: each index written exactly once; slice outlives the scope.
         unsafe { ptr.write(i, f(i)) };
+    });
+}
+
+/// Parallel in-place elementwise update: `f(i, &mut v[i])` for every
+/// index — the shape of every BLAS-1 `axpy`-style kernel in the PCG
+/// loop. Disjoint writes, zero allocation; `grain` indices are claimed
+/// per atomic fetch as in [`par_for`].
+pub fn par_update<T, F>(v: &mut [T], threads: usize, grain: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = v.len();
+    let ptr = as_send_ptr(v);
+    par_for(n, threads, grain, |i| {
+        // SAFETY: each index is visited exactly once per scope and the
+        // slice outlives the scope join.
+        unsafe { f(i, &mut *ptr.at(i)) };
     });
 }
 
@@ -207,6 +265,13 @@ mod tests {
     }
 
     #[test]
+    fn par_update_applies_in_place() {
+        let mut v: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        par_update(&mut v, 4, 16, |i, x| *x = 2.0 * *x + i as f64);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == 3.0 * i as f64));
+    }
+
+    #[test]
     fn zero_len_is_fine() {
         par_for(0, 4, 1, |_| panic!("should not run"));
         let v: Vec<u32> = vec![];
@@ -214,6 +279,24 @@ mod tests {
         par_chunks(0, 4, |_, range| assert!(range.is_empty()));
         let mut empty: [u8; 0] = [];
         par_fill(&mut empty, 4, 1, |_| 0);
+        let mut e2: [f64; 0] = [];
+        par_update(&mut e2, 4, 1, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn fork_depth_covers_thread_counts() {
+        assert_eq!(fork_depth(0), 0);
+        assert_eq!(fork_depth(1), 0);
+        assert_eq!(fork_depth(2), 1);
+        assert_eq!(fork_depth(3), 2);
+        assert_eq!(fork_depth(4), 2);
+        assert_eq!(fork_depth(5), 3);
+        assert_eq!(fork_depth(8), 3);
+        assert_eq!(fork_depth(9), 4);
+        // 2^depth >= threads always.
+        for t in 1usize..=64 {
+            assert!(1usize << fork_depth(t) >= t, "t={t}");
+        }
     }
 
     #[test]

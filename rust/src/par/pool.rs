@@ -333,15 +333,42 @@ impl ThreadPool {
         A: FnOnce() + Send,
         B: FnOnce() + Send,
     {
-        let a = Mutex::new(Some(a));
-        let b = Mutex::new(Some(b));
+        self.join_map(a, b);
+    }
+
+    /// Value-returning fork–join: runs `a` and `b`, potentially in
+    /// parallel, and returns `(a(), b())` — the reduce-friendly form of
+    /// [`ThreadPool::join`] that `par::par_reduce` and the merge-sort fork
+    /// tree build on. The caller claims slot 0 first, so it runs `b`
+    /// inline while a worker (if one is free) picks up `a`; with no free
+    /// worker the caller simply runs both. If either closure panics the
+    /// panic is re-thrown here after both slots are accounted for, and no
+    /// partial result escapes.
+    pub fn join_map<RA, RB, A, B>(&self, a: A, b: B) -> (RA, RB)
+    where
+        RA: Send,
+        RB: Send,
+        A: FnOnce() -> RA + Send,
+        B: FnOnce() -> RB + Send,
+    {
+        let fa = Mutex::new(Some(a));
+        let fb = Mutex::new(Some(b));
+        let ra: Mutex<Option<RA>> = Mutex::new(None);
+        let rb: Mutex<Option<RB>> = Mutex::new(None);
         self.run_scope(2, 2, 1, |i| {
             if i == 0 {
-                (b.lock().unwrap().take().expect("join slot b claimed twice"))();
+                let f = fb.lock().unwrap().take().expect("join slot b claimed twice");
+                *rb.lock().unwrap() = Some(f());
             } else {
-                (a.lock().unwrap().take().expect("join slot a claimed twice"))();
+                let f = fa.lock().unwrap().take().expect("join slot a claimed twice");
+                *ra.lock().unwrap() = Some(f());
             }
         });
+        // `run_scope` returned without re-throwing, so both closures ran
+        // to completion and both slots are filled.
+        let ra = ra.into_inner().unwrap().expect("join_map side a incomplete");
+        let rb = rb.into_inner().unwrap().expect("join_map side b incomplete");
+        (ra, rb)
     }
 }
 
@@ -483,6 +510,27 @@ mod tests {
                     ok.fetch_add(1, Ordering::Relaxed);
                 },
             );
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn join_map_returns_both_values() {
+        let (a, b) = ThreadPool::global().join_map(|| 6u64 * 7, || "forty-two".to_string());
+        assert_eq!(a, 42);
+        assert_eq!(b, "forty-two");
+        // Nested: each side forks again.
+        let (l, r) = ThreadPool::global().join_map(
+            || ThreadPool::global().join_map(|| 1u64, || 2u64),
+            || ThreadPool::global().join_map(|| 3u64, || 4u64),
+        );
+        assert_eq!((l, r), ((1, 2), (3, 4)));
+    }
+
+    #[test]
+    fn join_map_panic_propagates_before_unwrap() {
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            ThreadPool::global().join_map(|| 1u64, || -> u64 { panic!("side b fails") })
         }));
         assert!(result.is_err());
     }

@@ -1,0 +1,193 @@
+//! Deterministic parallel reduction over an index range.
+//!
+//! [`par_reduce`] evaluates `map` on leaf sub-ranges of `0..n` and folds
+//! the partials with `combine` over a **fixed-shape binary chunk tree**.
+//! The tree shape — leaf boundaries and combine order — is a pure
+//! function of `(n, grain)`: the range is viewed as `ceil(n/grain)`
+//! grain-sized chunks and split at the chunk midpoint, recursively, until
+//! a single chunk remains. The `threads` argument only sets how many
+//! levels of the tree are *forked* onto the pool (via
+//! [`super::pool::ThreadPool::join_map`]); it never changes the shape.
+//!
+//! # Determinism contract
+//!
+//! For non-associative `combine` (floating-point `+`), the result is
+//! therefore **bitwise identical** across runs *and across thread
+//! counts* for a fixed `(n, grain)` — strictly stronger than
+//! run-to-run reproducibility. This is what lets `solver::pcg_par`
+//! produce the exact same iterate sequence at every thread count, and
+//! `pcg` (threads = 1) to be the same arithmetic as the pooled path.
+//!
+//! Scheduling cannot perturb the result because each tree node's value is
+//! produced by exactly one closure and combined at exactly one parent;
+//! there is no claim-order-dependent accumulation anywhere.
+
+use std::ops::Range;
+
+/// Reduce `0..n`: `combine(map(leaf₀), map(leaf₁), …)` over the fixed
+/// chunk tree described in the module docs.
+///
+/// * `map` folds one leaf range serially (it must accept the empty range
+///   when `n == 0` and return the identity).
+/// * `combine` joins two subtree partials; called in tree order,
+///   left-to-right.
+/// * `threads` bounds fork depth (`ceil(log2(threads))` levels); `1`
+///   runs entirely on the calling thread with the same tree shape.
+/// * `grain` is the leaf size (clamped to ≥ 1); leaves are
+///   `grain`-aligned so the shape is independent of everything but
+///   `(n, grain)`.
+///
+/// Panics in `map`/`combine` propagate to the caller (see `pool`).
+pub fn par_reduce<T, M, C>(n: usize, threads: usize, grain: usize, map: M, combine: C) -> T
+where
+    T: Send,
+    M: Fn(Range<usize>) -> T + Sync,
+    C: Fn(T, T) -> T + Sync,
+{
+    let grain = grain.max(1);
+    let depth = super::fork_depth(threads.max(1));
+    reduce_node(0, n, grain, depth, &map, &combine)
+}
+
+/// One node of the chunk tree over `lo..hi`. Forks while `depth > 0`;
+/// the split point is the same either way, so forked and serial
+/// evaluation produce identical combine trees.
+fn reduce_node<T, M, C>(
+    lo: usize,
+    hi: usize,
+    grain: usize,
+    depth: usize,
+    map: &M,
+    combine: &C,
+) -> T
+where
+    T: Send,
+    M: Fn(Range<usize>) -> T + Sync,
+    C: Fn(T, T) -> T + Sync,
+{
+    let chunks = (hi - lo).div_ceil(grain);
+    if chunks <= 1 {
+        return map(lo..hi);
+    }
+    // Grain-aligned midpoint: left subtree gets ceil(chunks/2) chunks.
+    let mid = lo + chunks.div_ceil(2) * grain;
+    if depth == 0 {
+        let left = reduce_node(lo, mid, grain, 0, map, combine);
+        let right = reduce_node(mid, hi, grain, 0, map, combine);
+        combine(left, right)
+    } else {
+        let (left, right) = super::ThreadPool::global().join_map(
+            || reduce_node(lo, mid, grain, depth - 1, map, combine),
+            || reduce_node(mid, hi, grain, depth - 1, map, combine),
+        );
+        combine(left, right)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sum_range(xs: &[f64]) -> impl Fn(Range<usize>) -> f64 + Sync + '_ {
+        move |r: Range<usize>| {
+            let mut s = 0.0;
+            for i in r {
+                s += xs[i];
+            }
+            s
+        }
+    }
+
+    #[test]
+    fn reduce_matches_serial_sum() {
+        let mut rng = Rng::new(11);
+        for n in [0usize, 1, 5, 100, 4096, 10_001] {
+            let xs: Vec<f64> = (0..n).map(|_| rng.next_f64() - 0.5).collect();
+            let serial: f64 = xs.iter().sum();
+            for threads in [1usize, 2, 4, 8] {
+                for grain in [1usize, 64, 4096] {
+                    let s = par_reduce(n, threads, grain, sum_range(&xs), |a, b| a + b);
+                    assert!(
+                        (s - serial).abs() <= 1e-12 * serial.abs().max(1.0),
+                        "n={n} threads={threads} grain={grain}: {s} vs {serial}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_is_bitwise_identical_across_thread_counts() {
+        let mut rng = Rng::new(12);
+        let xs: Vec<f64> = (0..30_000).map(|_| rng.next_f64() - 0.5).collect();
+        for grain in [1usize, 17, 1024] {
+            let reference = par_reduce(xs.len(), 1, grain, sum_range(&xs), |a, b| a + b);
+            for threads in [2usize, 3, 4, 8, 64] {
+                for _run in 0..3 {
+                    let s = par_reduce(xs.len(), threads, grain, sum_range(&xs), |a, b| a + b);
+                    assert_eq!(
+                        s.to_bits(),
+                        reference.to_bits(),
+                        "grain={grain} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_generic_non_float() {
+        // max over u64 with an identity-producing empty leaf.
+        let xs: Vec<u64> = (0..50_000u64).map(|i| (i * 2654435761) % 1_000_003).collect();
+        let expect = *xs.iter().max().unwrap();
+        let got = par_reduce(
+            xs.len(),
+            4,
+            128,
+            |r: Range<usize>| r.map(|i| xs[i]).max().unwrap_or(0),
+            u64::max,
+        );
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn reduce_empty_range_hits_map_once() {
+        let calls = std::sync::atomic::AtomicUsize::new(0);
+        let s = par_reduce(
+            0,
+            8,
+            4,
+            |r: Range<usize>| {
+                calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                assert!(r.is_empty());
+                0.0f64
+            },
+            |a, b| a + b,
+        );
+        assert_eq!(s, 0.0);
+        assert_eq!(calls.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn reduce_panic_propagates() {
+        let result = std::panic::catch_unwind(|| {
+            par_reduce(
+                10_000,
+                4,
+                8,
+                |r: Range<usize>| {
+                    if r.contains(&7777) {
+                        panic!("leaf boom");
+                    }
+                    r.len() as u64
+                },
+                |a, b| a + b,
+            )
+        });
+        assert!(result.is_err());
+        // Pool remains serviceable.
+        let s = par_reduce(1000, 4, 8, |r: Range<usize>| r.len() as u64, |a, b| a + b);
+        assert_eq!(s, 1000);
+    }
+}

@@ -1,100 +1,463 @@
-//! Parallel stable merge sort.
+//! Parallel stable merge sort without `T: Clone`.
 //!
-//! pdGRASS steps 2–3 sort the off-tree edges by resistance distance and the
-//! subtasks by size; the paper's span analysis assumes an `O(lg² n)`-span
-//! parallel merge sort. This is a fork–join merge sort dispatched onto the
-//! persistent pool ([`super::pool::ThreadPool::join`]) with a sequential
-//! cutoff — no per-call thread spawns; stability matters because the paper
-//! specifies a *stable* sort of edges (ties keep insertion order, which
-//! the subtask linked lists rely on). The merge structure is independent
+//! pdGRASS steps 2–3 sort the off-tree edges by resistance distance and
+//! the subtasks by size; the paper's span analysis assumes an
+//! `O(lg² n)`-span parallel merge sort. This is an **out-of-place merge
+//! sort over a single scratch buffer**: one `Vec<MaybeUninit<T>>` is
+//! allocated up front and every merge level *moves* elements bitwise
+//! between `v` and the scratch (ping-pong), so nothing is cloned and no
+//! per-merge buffers are allocated — the pre-rewrite implementation
+//! required `T: Clone` and cloned whole sub-buffers at every level, an
+//! O(n lg n) clone bill that `recovery`'s `OffTreeEdge` score sort paid
+//! on every pass. Merges of large runs are **splitter-parallel**: the
+//! longer run's median is ranked into the other run by binary search and
+//! the two halves merge concurrently, forked via
+//! [`pool::ThreadPool::join`](super::pool::ThreadPool::join) onto the
+//! persistent pool. Stability holds (ties keep `v`-order, which the
+//! subtask linked lists rely on), and the merge structure is independent
 //! of scheduling, so output is deterministic for any pool state.
+//!
+//! # Panic safety
+//!
+//! The comparator is arbitrary user code and may panic mid-merge while
+//! elements live partly in `v` and partly in the scratch. Every unsafe
+//! phase is covered by a drop guard that, on unwind, moves the
+//! not-yet-merged remainder so that **each element is live in `v` exactly
+//! once** when the panic reaches the caller — no double drops, no leaks;
+//! only the order is unspecified. The scratch buffer is `MaybeUninit`
+//! and is never dropped as `T`.
+
+use crate::par::ThreadPool;
+use std::cmp::Ordering;
+use std::mem::MaybeUninit;
+use std::ptr;
+use std::sync::atomic::{AtomicBool, Ordering as AtOrd};
+
+/// Below this many elements a slice is sorted or merged serially.
+const SEQ_CUTOFF: usize = 4096;
 
 /// Parallel stable sort by a key-extraction function.
+///
+/// `key` is evaluated **exactly once per element** (in parallel, via
+/// [`super::par_map`]): keys are cached up front, an index permutation is
+/// sorted against the cache, and the permutation is applied in place by
+/// cycle-following swaps. The pre-rewrite version re-invoked `key` inside
+/// the comparator on *every comparison* — Θ(n lg n) evaluations, which
+/// made expensive keys dominate the sort.
 pub fn par_sort_by_key<T, K, F>(v: &mut [T], threads: usize, key: F)
 where
-    T: Send + Clone,
-    K: PartialOrd,
+    T: Sync,
+    K: PartialOrd + Send + Sync,
     F: Fn(&T) -> K + Sync,
 {
-    let cmp = |a: &T, b: &T| key(a).partial_cmp(&key(b)).unwrap_or(std::cmp::Ordering::Equal);
-    par_sort_by(v, threads, &cmp);
+    let n = v.len();
+    if n <= 1 {
+        return;
+    }
+    assert!(n <= u32::MAX as usize, "par_sort_by_key: slice longer than u32 index space");
+    let keys: Vec<K> = super::par_map(v, threads, |t| key(t));
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    // Ties broken by original index → stable. Incomparable key pairs
+    // (NaN) fall back to Equal like the pre-rewrite comparator did; as
+    // with `slice::sort_by_key`, keys that violate total order give an
+    // unspecified (but memory-safe) permutation.
+    par_sort_by(&mut idx, threads, &|&a: &u32, &b: &u32| {
+        keys[a as usize]
+            .partial_cmp(&keys[b as usize])
+            .unwrap_or(Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    // idx[new] = old. Invert to target slots, then place every element by
+    // cycle-following swaps — no clones, no key recomputation.
+    let mut inv = vec![0u32; n];
+    for (new_pos, &old_pos) in idx.iter().enumerate() {
+        inv[old_pos as usize] = new_pos as u32;
+    }
+    for i in 0..n {
+        while inv[i] as usize != i {
+            let j = inv[i] as usize;
+            v.swap(i, j);
+            inv.swap(i, j);
+        }
+    }
 }
 
-/// Parallel stable sort with an explicit comparator.
+/// Parallel stable sort with an explicit comparator. `T` only needs to be
+/// `Send` — elements are moved, never cloned.
 pub fn par_sort_by<T, F>(v: &mut [T], threads: usize, cmp: &F)
 where
-    T: Send + Clone,
-    F: Fn(&T, &T) -> std::cmp::Ordering + Sync,
+    T: Send,
+    F: Fn(&T, &T) -> Ordering + Sync,
 {
     let threads = threads.max(1);
-    if threads == 1 || v.len() < 4096 {
+    let n = v.len();
+    // ZSTs: sorting is a permutation of identical values; run std's sort
+    // for the comparator side effects (raw-pointer distance math below
+    // is not defined for zero-sized T).
+    if threads == 1 || n < SEQ_CUTOFF || std::mem::size_of::<T>() == 0 {
         v.sort_by(cmp);
         return;
     }
-    let mut buf = v.to_vec();
-    let depth = (threads as f64).log2().ceil() as usize;
-    msort(v, &mut buf, cmp, depth);
+    // The single scratch allocation for the whole sort; merge levels
+    // ping-pong elements between `v` and this buffer. Never dropped as
+    // `T` — liveness always ends (and, on panic, is restored) in `v`.
+    let mut scratch: Vec<MaybeUninit<T>> = Vec::with_capacity(n);
+    // SAFETY: MaybeUninit<T> requires no initialization.
+    unsafe { scratch.set_len(n) };
+    let depth = super::fork_depth(threads);
+    // SAFETY: scratch has length n and does not alias v; `sort_inplace`'s
+    // contract leaves all n elements live in `v` on return and on unwind.
+    unsafe {
+        sort_inplace(v.as_mut_ptr(), n, scratch.as_mut_ptr() as *mut T, depth, cmp);
+    }
 }
 
-/// Recursive fork–join merge sort. `depth` levels of forking, then serial.
-/// Forks run on the persistent pool; the caller works the right half
-/// while a pool worker (or the caller itself) sorts the left.
-fn msort<T, F>(v: &mut [T], buf: &mut [T], cmp: &F, depth: usize)
+/// `Send`-able raw pointer for moving sub-slices into fork closures.
+///
+/// Access goes through [`Raw::p`] so closures capture the whole wrapper:
+/// edition-2021 disjoint capture would otherwise capture the inner
+/// `*mut T` field directly, which is neither `Send` nor `Sync`. Same
+/// pattern as `par::SendPtr`, but kept separate on purpose: the sort
+/// moves `T` values across threads, so `Raw`'s marker impls are gated on
+/// `T: Send` (compiler-checked), whereas `SendPtr` is unconditionally
+/// `Send`/`Sync` for disjoint-index writes.
+struct Raw<T>(*mut T);
+impl<T> Clone for Raw<T> {
+    fn clone(&self) -> Self {
+        Raw(self.0)
+    }
+}
+impl<T> Copy for Raw<T> {}
+unsafe impl<T: Send> Send for Raw<T> {}
+unsafe impl<T: Send> Sync for Raw<T> {}
+
+impl<T> Raw<T> {
+    fn p(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// Sort `v[0..n]` in place, using `scratch[0..n]` (uninitialized, no
+/// live elements) as workspace.
+///
+/// Liveness contract: on return **and on unwind**, all `n` elements are
+/// live in `v` and `scratch` holds none.
+unsafe fn sort_inplace<T, F>(v: *mut T, n: usize, scratch: *mut T, depth: usize, cmp: &F)
 where
-    T: Send + Clone,
-    F: Fn(&T, &T) -> std::cmp::Ordering + Sync,
+    T: Send,
+    F: Fn(&T, &T) -> Ordering + Sync,
 {
-    if depth == 0 || v.len() < 4096 {
-        v.sort_by(cmp);
+    if depth == 0 || n < SEQ_CUTOFF {
+        // std's sort is stable and panic-safe (slice stays a permutation).
+        std::slice::from_raw_parts_mut(v, n).sort_by(cmp);
         return;
     }
-    let mid = v.len() / 2;
-    let (vl, vr) = v.split_at_mut(mid);
-    let (bl, br) = buf.split_at_mut(mid);
-    crate::par::ThreadPool::global().join(
-        || msort(vl, bl, cmp, depth - 1),
-        || msort(vr, br, cmp, depth - 1),
-    );
-    // Stable merge into buf, copy back.
-    merge(vl, vr, buf, cmp);
-    v.clone_from_slice(buf);
-}
-
-/// Stable two-way merge of sorted `a`, `b` into `out` (len a+b).
-fn merge<T, F>(a: &[T], b: &[T], out: &mut [T], cmp: &F)
-where
-    T: Clone,
-    F: Fn(&T, &T) -> std::cmp::Ordering,
-{
-    debug_assert_eq!(a.len() + b.len(), out.len());
-    let (mut i, mut j, mut k) = (0, 0, 0);
-    while i < a.len() && j < b.len() {
-        // `<=` keeps elements of `a` first on ties → stability.
-        if cmp(&a[i], &b[j]) != std::cmp::Ordering::Greater {
-            out[k] = a[i].clone();
-            i += 1;
-        } else {
-            out[k] = b[j].clone();
-            j += 1;
+    let mid = n / 2;
+    let moved_l = AtomicBool::new(false);
+    let moved_r = AtomicBool::new(false);
+    // On unwind out of the join: any half whose `moved` flag is set is
+    // live in its scratch half (per `sort_move`'s contract) — copy it
+    // back so `v` is fully live again. Order is irrelevant mid-unwind;
+    // only exactly-once liveness matters.
+    struct Unmove<T> {
+        v: *mut T,
+        scratch: *mut T,
+        mid: usize,
+        n: usize,
+        moved_l: *const AtomicBool,
+        moved_r: *const AtomicBool,
+    }
+    impl<T> Drop for Unmove<T> {
+        fn drop(&mut self) {
+            unsafe {
+                if (*self.moved_l).load(AtOrd::Acquire) {
+                    ptr::copy_nonoverlapping(self.scratch, self.v, self.mid);
+                }
+                if (*self.moved_r).load(AtOrd::Acquire) {
+                    ptr::copy_nonoverlapping(
+                        self.scratch.add(self.mid),
+                        self.v.add(self.mid),
+                        self.n - self.mid,
+                    );
+                }
+            }
         }
-        k += 1;
     }
-    while i < a.len() {
-        out[k] = a[i].clone();
-        i += 1;
-        k += 1;
+    let guard = Unmove { v, scratch, mid, n, moved_l: &moved_l, moved_r: &moved_r };
+    {
+        let (vl, sl) = (Raw(v), Raw(scratch));
+        let (vr, sr) = (Raw(v.add(mid)), Raw(scratch.add(mid)));
+        let (ml, mr) = (&moved_l, &moved_r);
+        ThreadPool::global().join(
+            move || unsafe { sort_move(vl.p(), mid, sl.p(), depth - 1, cmp, ml) },
+            move || unsafe { sort_move(vr.p(), n - mid, sr.p(), depth - 1, cmp, mr) },
+        );
     }
-    while j < b.len() {
-        out[k] = b[j].clone();
-        j += 1;
-        k += 1;
+    // Both sorted halves are now live in scratch; the merge below owns
+    // liveness restoration from here (its contract: dst fully live even
+    // on unwind), so the join guard is disarmed.
+    std::mem::forget(guard);
+    par_merge(scratch, mid, scratch.add(mid), n - mid, v, depth, cmp);
+}
+
+/// Sort `src[0..n]`, leaving the sorted run in `dst` (uninitialized on
+/// entry); `src` is stale afterwards.
+///
+/// Liveness contract: on success `dst` is fully live and `moved` is set.
+/// On unwind, *if `moved` is set* the elements are fully live in `dst`,
+/// otherwise fully live in `src`. The flag flips exactly at the point
+/// where liveness transitions (no panic is possible between the store
+/// and the guarded region that upholds the `dst` side).
+unsafe fn sort_move<T, F>(
+    src: *mut T,
+    n: usize,
+    dst: *mut T,
+    depth: usize,
+    cmp: &F,
+    moved: &AtomicBool,
+) where
+    T: Send,
+    F: Fn(&T, &T) -> Ordering + Sync,
+{
+    if depth == 0 || n < SEQ_CUTOFF {
+        // Panic here leaves src live (std sort is in-place) with the
+        // flag still unset — contract holds.
+        std::slice::from_raw_parts_mut(src, n).sort_by(cmp);
+        ptr::copy_nonoverlapping(src, dst, n);
+        moved.store(true, AtOrd::Release);
+        return;
     }
+    let mid = n / 2;
+    {
+        let (sl, dl) = (Raw(src), Raw(dst));
+        let (sr, dr) = (Raw(src.add(mid)), Raw(dst.add(mid)));
+        // Each half sorts *in place* in src (its dst half is only
+        // workspace), so on unwind out of this join both halves are
+        // live in src and the flag is correctly still unset.
+        ThreadPool::global().join(
+            move || unsafe { sort_inplace(sl.p(), mid, dl.p(), depth - 1, cmp) },
+            move || unsafe { sort_inplace(sr.p(), n - mid, dr.p(), depth - 1, cmp) },
+        );
+    }
+    // Liveness transitions to dst now: par_merge guarantees dst fully
+    // live on success and on unwind, and nothing between the store and
+    // its entry can panic.
+    moved.store(true, AtOrd::Release);
+    par_merge(src, mid, src.add(mid), n - mid, dst, depth, cmp);
+}
+
+/// Merge sorted runs `a[0..an]` and `b[0..bn]` into `dst[0..an+bn]`,
+/// splitter-parallel: rank the longer run's median into the other run,
+/// fork the two halves. Ties keep `a` before `b` → stable.
+///
+/// Liveness contract: entry — `a`, `b` live, `dst` uninitialized; on
+/// success **and on unwind** `dst` is fully live and the runs are stale.
+unsafe fn par_merge<T, F>(
+    a: *mut T,
+    an: usize,
+    b: *mut T,
+    bn: usize,
+    dst: *mut T,
+    depth: usize,
+    cmp: &F,
+) where
+    T: Send,
+    F: Fn(&T, &T) -> Ordering + Sync,
+{
+    if depth == 0 || an + bn < SEQ_CUTOFF || an == 0 || bn == 0 {
+        serial_merge(a, an, b, bn, dst, cmp);
+        return;
+    }
+    // The splitter binary search calls `cmp`; nothing is consumed yet,
+    // so on unwind simply move both runs into dst wholesale.
+    struct AllIn<T> {
+        a: *mut T,
+        an: usize,
+        b: *mut T,
+        bn: usize,
+        dst: *mut T,
+    }
+    impl<T> Drop for AllIn<T> {
+        fn drop(&mut self) {
+            unsafe {
+                ptr::copy_nonoverlapping(self.a, self.dst, self.an);
+                ptr::copy_nonoverlapping(self.b, self.dst.add(self.an), self.bn);
+            }
+        }
+    }
+    let guard = AllIn { a, an, b, bn, dst };
+    let (ha, hb);
+    if an >= bn {
+        ha = an / 2;
+        // Rank a's median in b counting strict `Less`: b-elements equal
+        // to the pivot stay right, after all equal a-elements → stable.
+        hb = lower_bound(b, bn, &*a.add(ha), cmp);
+    } else {
+        hb = bn / 2;
+        // Pivot from b: equal a-elements must land *left* (a precedes b
+        // on ties), so count `<=` in a.
+        ha = upper_bound(a, an, &*b.add(hb), cmp);
+    }
+    std::mem::forget(guard);
+    // Fork the two sub-merges over disjoint (a, b, dst) triples. A side
+    // that panics restores its own dst part (recursive contract); a side
+    // that never ran (skipped after the other panicked) is restored here.
+    let entered_l = AtomicBool::new(false);
+    let entered_r = AtomicBool::new(false);
+    struct FillSkipped<T> {
+        a: *mut T,
+        an: usize,
+        b: *mut T,
+        bn: usize,
+        ha: usize,
+        hb: usize,
+        dst: *mut T,
+        entered_l: *const AtomicBool,
+        entered_r: *const AtomicBool,
+    }
+    impl<T> Drop for FillSkipped<T> {
+        fn drop(&mut self) {
+            unsafe {
+                if !(*self.entered_l).load(AtOrd::Acquire) {
+                    ptr::copy_nonoverlapping(self.a, self.dst, self.ha);
+                    ptr::copy_nonoverlapping(self.b, self.dst.add(self.ha), self.hb);
+                }
+                if !(*self.entered_r).load(AtOrd::Acquire) {
+                    let off = self.ha + self.hb;
+                    ptr::copy_nonoverlapping(
+                        self.a.add(self.ha),
+                        self.dst.add(off),
+                        self.an - self.ha,
+                    );
+                    ptr::copy_nonoverlapping(
+                        self.b.add(self.hb),
+                        self.dst.add(off + self.an - self.ha),
+                        self.bn - self.hb,
+                    );
+                }
+            }
+        }
+    }
+    let guard2 = FillSkipped {
+        a,
+        an,
+        b,
+        bn,
+        ha,
+        hb,
+        dst,
+        entered_l: &entered_l,
+        entered_r: &entered_r,
+    };
+    {
+        let (pa, pb, pd) = (Raw(a), Raw(b), Raw(dst));
+        let (el, er) = (&entered_l, &entered_r);
+        ThreadPool::global().join(
+            move || {
+                el.store(true, AtOrd::Release);
+                unsafe { par_merge(pa.p(), ha, pb.p(), hb, pd.p(), depth - 1, cmp) }
+            },
+            move || {
+                er.store(true, AtOrd::Release);
+                unsafe {
+                    par_merge(
+                        pa.p().add(ha),
+                        an - ha,
+                        pb.p().add(hb),
+                        bn - hb,
+                        pd.p().add(ha + hb),
+                        depth - 1,
+                        cmp,
+                    )
+                }
+            },
+        );
+    }
+    std::mem::forget(guard2);
+}
+
+/// Serial stable merge of `a[0..an]`, `b[0..bn]` into `dst` by bitwise
+/// moves. The tail guard doubles as the success-path epilogue: whatever
+/// remains unconsumed (on completion of the loop *or* on a comparator
+/// panic) is copied into the unwritten remainder of `dst`, so `dst` ends
+/// fully live on every exit path.
+unsafe fn serial_merge<T, F>(a: *mut T, an: usize, b: *mut T, bn: usize, dst: *mut T, cmp: &F)
+where
+    F: Fn(&T, &T) -> Ordering,
+{
+    struct Tail<T> {
+        a: *mut T,
+        a_end: *mut T,
+        b: *mut T,
+        b_end: *mut T,
+        dst: *mut T,
+    }
+    impl<T> Drop for Tail<T> {
+        fn drop(&mut self) {
+            unsafe {
+                let ra = self.a_end.offset_from(self.a) as usize;
+                ptr::copy_nonoverlapping(self.a, self.dst, ra);
+                let rb = self.b_end.offset_from(self.b) as usize;
+                ptr::copy_nonoverlapping(self.b, self.dst.add(ra), rb);
+            }
+        }
+    }
+    let mut g = Tail { a, a_end: a.add(an), b, b_end: b.add(bn), dst };
+    while g.a < g.a_end && g.b < g.b_end {
+        // `<=` keeps elements of `a` first on ties → stability.
+        if cmp(&*g.a, &*g.b) != Ordering::Greater {
+            ptr::copy_nonoverlapping(g.a, g.dst, 1);
+            g.a = g.a.add(1);
+        } else {
+            ptr::copy_nonoverlapping(g.b, g.dst, 1);
+            g.b = g.b.add(1);
+        }
+        g.dst = g.dst.add(1);
+    }
+    // Exactly one run has a remaining tail; the guard's Drop moves it.
+    drop(g);
+}
+
+/// Count of elements in sorted `run[0..len]` strictly less than `pivot`.
+unsafe fn lower_bound<T, F>(run: *const T, len: usize, pivot: &T, cmp: &F) -> usize
+where
+    F: Fn(&T, &T) -> Ordering,
+{
+    let (mut lo, mut hi) = (0usize, len);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if cmp(&*run.add(mid), pivot) == Ordering::Less {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Count of elements in sorted `run[0..len]` less than or equal to
+/// `pivot` (i.e. comparing not-`Greater`).
+unsafe fn upper_bound<T, F>(run: *const T, len: usize, pivot: &T, cmp: &F) -> usize
+where
+    F: Fn(&T, &T) -> Ordering,
+{
+    let (mut lo, mut hi) = (0usize, len);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if cmp(&*run.add(mid), pivot) != Ordering::Greater {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::Rng;
+    use std::sync::atomic::{AtomicUsize, Ordering as AtomOrd};
 
     #[test]
     fn sorts_like_std() {
@@ -114,7 +477,7 @@ mod tests {
         // (key, original index); ties on key must keep index order.
         let mut v: Vec<(u32, usize)> =
             (0..30_000).map(|i| ((rng.next_u32() % 16), i)).collect();
-        par_sort_by_key(&mut v, 8, |x| x.0);
+        par_sort_by(&mut v, 8, &|a: &(u32, usize), b: &(u32, usize)| a.0.cmp(&b.0));
         for w in v.windows(2) {
             if w[0].0 == w[1].0 {
                 assert!(w[0].1 < w[1].1, "stability violated: {:?}", w);
@@ -130,5 +493,146 @@ mod tests {
         for w in v.windows(2) {
             assert!(w[0] >= w[1]);
         }
+    }
+
+    /// A payload that is deliberately `!Clone` (and `!Copy`): the whole
+    /// point of the rewrite. Holds (key, original index) for stability
+    /// checking.
+    struct NoClone {
+        key: u64,
+        idx: u32,
+    }
+
+    #[test]
+    fn sorts_non_clone_payload_stably() {
+        let mut rng = Rng::new(8);
+        let mut v: Vec<NoClone> =
+            (0..25_000).map(|i| NoClone { key: rng.next_u64() % 64, idx: i }).collect();
+        par_sort_by(&mut v, 4, &|a: &NoClone, b: &NoClone| a.key.cmp(&b.key));
+        for w in v.windows(2) {
+            assert!(w[0].key <= w[1].key);
+            if w[0].key == w[1].key {
+                assert!(w[0].idx < w[1].idx, "stability violated");
+            }
+        }
+        // Every element survived the ping-pong exactly once.
+        let mut seen: Vec<u32> = v.iter().map(|e| e.idx).collect();
+        seen.sort_unstable();
+        assert!(seen.iter().enumerate().all(|(i, &x)| x == i as u32));
+    }
+
+    #[test]
+    fn key_function_called_exactly_once_per_element() {
+        let calls = AtomicUsize::new(0);
+        let mut rng = Rng::new(9);
+        let n = 20_000usize;
+        let mut v: Vec<u64> = (0..n).map(|_| rng.next_u64() % 500).collect();
+        let mut expect = v.clone();
+        expect.sort();
+        par_sort_by_key(&mut v, 4, |x: &u64| {
+            calls.fetch_add(1, AtomOrd::Relaxed);
+            *x
+        });
+        assert_eq!(v, expect);
+        assert_eq!(
+            calls.load(AtomOrd::Relaxed),
+            n,
+            "expensive key must be cached, not recomputed per comparison"
+        );
+    }
+
+    #[test]
+    fn adversarial_shapes_match_std() {
+        let n = 3 * SEQ_CUTOFF;
+        let cases: Vec<Vec<u64>> = vec![
+            (0..n as u64).collect(),                  // sorted
+            (0..n as u64).rev().collect(),            // reversed
+            vec![7; n],                               // all equal
+            vec![],                                   // empty
+            vec![42],                                 // single
+        ];
+        for mut v in cases {
+            let mut expect = v.clone();
+            expect.sort();
+            par_sort_by(&mut v, 8, &|a: &u64, b: &u64| a.cmp(b));
+            assert_eq!(v, expect);
+        }
+    }
+
+    /// Comparator panics mid-sort on a `Drop` payload: afterwards every
+    /// element must be live in `v` exactly once (no double drop, no
+    /// leak), and the eventual `Vec` drop must run n destructors.
+    #[test]
+    fn comparator_panic_preserves_liveness() {
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct Tracked(u64);
+        impl Drop for Tracked {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, AtomOrd::Relaxed);
+            }
+        }
+        let n = 20_000usize;
+        let mut rng = Rng::new(10);
+        {
+            let mut v: Vec<Tracked> = {
+                let mut vals: Vec<u64> = (0..n as u64).collect();
+                // scramble so merges do real work
+                for i in (1..vals.len()).rev() {
+                    let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+                    vals.swap(i, j);
+                }
+                vals.into_iter().map(Tracked).collect()
+            };
+            let budget = AtomicUsize::new(60_000);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                par_sort_by(&mut v, 4, &|a: &Tracked, b: &Tracked| {
+                    if budget.fetch_sub(1, AtomOrd::Relaxed) == 0 {
+                        panic!("comparator budget exhausted");
+                    }
+                    a.0.cmp(&b.0)
+                });
+            }));
+            assert!(result.is_err(), "comparator panic must propagate");
+            // No element was dropped during the unwind...
+            assert_eq!(DROPS.load(AtomOrd::Relaxed), 0);
+            // ...and the multiset is intact: each value exactly once.
+            let mut seen: Vec<u64> = v.iter().map(|t| t.0).collect();
+            seen.sort_unstable();
+            assert!(seen.iter().enumerate().all(|(i, &x)| x == i as u64));
+        }
+        // Dropping the Vec runs each destructor exactly once.
+        assert_eq!(DROPS.load(AtomOrd::Relaxed), n);
+
+        // Second scenario: each leaf range is already sorted (adaptive
+        // leaf sorts spend ~n comparisons), so a mid-sized budget lands
+        // the panic inside the splitter-parallel merge phase instead,
+        // exercising the AllIn/FillSkipped/Tail guards.
+        DROPS.store(0, AtomOrd::Relaxed);
+        {
+            // 4 leaves of 5000 (threads=4 → fork depth 2, exact halving):
+            // leaf j holds j, j+4, j+8, … ascending, so every merge
+            // interleaves maximally.
+            let mut v: Vec<Tracked> = Vec::with_capacity(n);
+            for leaf in 0..4u64 {
+                for k in 0..(n as u64 / 4) {
+                    v.push(Tracked(leaf + 4 * k));
+                }
+            }
+            let budget = AtomicUsize::new(35_000);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                par_sort_by(&mut v, 4, &|a: &Tracked, b: &Tracked| {
+                    if budget.fetch_sub(1, AtomOrd::Relaxed) == 0 {
+                        panic!("comparator budget exhausted (merge phase)");
+                    }
+                    a.0.cmp(&b.0)
+                });
+            }));
+            assert!(result.is_err(), "merge-phase panic must propagate");
+            assert_eq!(DROPS.load(AtomOrd::Relaxed), 0);
+            let mut seen: Vec<u64> = v.iter().map(|t| t.0).collect();
+            seen.sort_unstable();
+            assert!(seen.iter().enumerate().all(|(i, &x)| x == i as u64));
+        }
+        assert_eq!(DROPS.load(AtomOrd::Relaxed), n);
     }
 }

@@ -35,7 +35,9 @@ pub fn pdgrass_traced(g: &Graph, sp: &Spanning, params: &Params, trace: bool) ->
     let t = crate::util::Timer::start();
     let mut off = off_tree_edges(g, sp);
     step_ms[0] = t.ms();
-    // Step 2: parallel stable sort by criticality, descending.
+    // Step 2: parallel stable sort by criticality, descending (moves
+    // payloads via the sort's scratch buffer; clone-free since the
+    // par::sort rewrite).
     let t = crate::util::Timer::start();
     sort_by_score(&mut off, params.threads);
     step_ms[1] = t.ms();

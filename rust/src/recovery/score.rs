@@ -2,7 +2,10 @@
 //!
 //! Parallel *stable* sort (fork–join on the persistent pool), descending
 //! by `score = w·R_T`; stability makes runs reproducible and matches the
-//! serial feGRASS tie-break (edge-id order).
+//! serial feGRASS tie-break (edge-id order). Since the `par::sort`
+//! rewrite the sort *moves* the 48-byte `OffTreeEdge` payloads through a
+//! single ping-pong scratch buffer instead of cloning whole sub-buffers
+//! at every merge level — this call site no longer clones any edge.
 
 use crate::par;
 use crate::tree::OffTreeEdge;

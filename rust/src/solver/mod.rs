@@ -11,4 +11,6 @@ pub use order::{bandwidth, permute_sym, rcm};
 pub use pcg::{
     pcg, pcg_iterations, pcg_par, Identity, Jacobi, PcgResult, Preconditioner, SparsifierPrecond,
 };
-pub use spmv::{axpy, dot, norm2, spmv, spmv_par};
+pub use spmv::{
+    axpy, axpy_par, dot, dot_par, norm2, norm2_par, spmv, spmv_par, xpay, xpay_par,
+};

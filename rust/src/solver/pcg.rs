@@ -9,7 +9,7 @@
 
 use super::chol::{LdlFactor, NotPositiveDefinite};
 use super::order::{permute_sym, permute_vec, rcm, unpermute_vec};
-use super::spmv::{axpy, dot, norm2, spmv_par};
+use super::spmv::{axpy_par, dot_par, norm2_par, spmv_par, xpay_par};
 use crate::graph::{grounded_laplacian, CsrMatrix, Graph};
 
 /// Preconditioner interface: `z = M⁻¹ r`.
@@ -113,12 +113,25 @@ pub fn pcg<M: Preconditioner>(
     pcg_par(a, b, m, tol, maxit, 1)
 }
 
-/// As [`pcg`], with the per-iteration SpMV hot loop dispatched onto the
-/// persistent thread pool across `threads` workers. `threads == 1` is
-/// exactly [`pcg`] (identical arithmetic, identical iteration counts);
-/// larger counts keep bitwise-identical results too, because the row-
-/// parallel SpMV performs the same per-row reductions — only the BLAS-1
-/// tail stays serial (it is memory-bound and tiny next to the SpMV).
+/// As [`pcg`], with **every** per-iteration vector op — the SpMV, both
+/// dots, the three axpy-shaped updates, and the residual norm —
+/// dispatched onto the persistent thread pool across `threads` workers.
+///
+/// The iteration loop performs **zero heap allocations** (all vectors
+/// and the residual history are sized up front), and none of its BLAS-1
+/// tail remains serial: `x`/`r` updates go through `axpy_par`, the
+/// direction update through `xpay_par`, and the reductions through
+/// `dot_par`/`norm2_par`. The one remaining serial O(n) step is the
+/// preconditioner `m.apply` itself (see CHANGES.md: parallel triangular
+/// solve is an open follow-up).
+///
+/// Results are bitwise identical at every thread count, not merely
+/// close: the row-parallel SpMV performs the same per-row folds, the
+/// elementwise kernels write each slot from the same expression, and the
+/// reductions fold over `par::par_reduce`'s fixed chunk tree whose shape
+/// is independent of `threads` (see `par::reduce`). `threads == 1` is
+/// exactly [`pcg`] — same arithmetic, same iterate sequence, same
+/// iteration counts.
 pub fn pcg_par<M: Preconditioner>(
     a: &CsrMatrix,
     b: &[f64],
@@ -129,41 +142,41 @@ pub fn pcg_par<M: Preconditioner>(
 ) -> PcgResult {
     let n = a.n;
     assert_eq!(b.len(), n);
-    let bnorm = norm2(b).max(f64::MIN_POSITIVE);
+    let bnorm = norm2_par(b, threads).max(f64::MIN_POSITIVE);
     let mut x = vec![0.0; n];
     let mut r = b.to_vec();
     let mut z = vec![0.0; n];
     m.apply(&r, &mut z);
     let mut p = z.clone();
-    let mut rz = dot(&r, &z);
+    let mut rz = dot_par(&r, &z, threads);
     let mut ap = vec![0.0; n];
-    let mut history = Vec::new();
-    let mut relres = norm2(&r) / bnorm;
+    // Pre-size so `push` never reallocates: the loop below is
+    // allocation-free end to end.
+    let mut history = Vec::with_capacity(maxit);
+    let mut relres = norm2_par(&r, threads) / bnorm;
     if relres <= tol {
         return PcgResult { x, iterations: 0, relres, converged: true, history };
     }
     for it in 1..=maxit {
         spmv_par(a, &p, &mut ap, threads);
-        let pap = dot(&p, &ap);
+        let pap = dot_par(&p, &ap, threads);
         if pap <= 0.0 || !pap.is_finite() {
             // matrix not SPD along p (numerical breakdown)
             return PcgResult { x, iterations: it - 1, relres, converged: false, history };
         }
         let alpha = rz / pap;
-        axpy(alpha, &p, &mut x);
-        axpy(-alpha, &ap, &mut r);
-        relres = norm2(&r) / bnorm;
+        axpy_par(alpha, &p, &mut x, threads);
+        axpy_par(-alpha, &ap, &mut r, threads);
+        relres = norm2_par(&r, threads) / bnorm;
         history.push(relres);
         if relres <= tol {
             return PcgResult { x, iterations: it, relres, converged: true, history };
         }
         m.apply(&r, &mut z);
-        let rz_new = dot(&r, &z);
+        let rz_new = dot_par(&r, &z, threads);
         let beta = rz_new / rz;
         rz = rz_new;
-        for i in 0..n {
-            p[i] = z[i] + beta * p[i];
-        }
+        xpay_par(beta, &z, &mut p, threads);
     }
     PcgResult { x, iterations: maxit, relres, converged: false, history }
 }
@@ -192,7 +205,7 @@ pub fn pcg_iterations(
 mod tests {
     use super::*;
     use crate::gen;
-    use crate::solver::spmv::spmv;
+    use crate::solver::spmv::{axpy, norm2, spmv};
     use crate::util::Rng;
 
     fn laplacian_system(seed: u64) -> (CsrMatrix, Vec<f64>, Graph) {
@@ -264,9 +277,10 @@ mod tests {
 
     #[test]
     fn pcg_par_matches_serial_exactly() {
-        // Row-parallel SpMV does the same per-row reductions, so the
-        // iterate sequence (and thus iteration count and history) must be
-        // identical, not merely close.
+        // Row-parallel SpMV does the same per-row folds and every
+        // dot/norm reduces over the thread-count-independent fixed chunk
+        // tree, so the iterate sequence (and thus iteration count and
+        // history) must be identical, not merely close.
         let (a, b, _) = laplacian_system(7);
         let m = Jacobi::new(&a);
         let serial = pcg(&a, &b, &m, 1e-6, 5000);

@@ -48,7 +48,7 @@ pub fn spmv_par(a: &CsrMatrix, x: &[f64], y: &mut [f64], threads: usize) {
     });
 }
 
-/// Dot product.
+/// Dot product (serial left-to-right fold).
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let mut s = 0.0;
@@ -58,7 +58,7 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
-/// `y ← y + alpha·x`.
+/// `y ← y + alpha·x`, serial.
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     for i in 0..y.len() {
@@ -66,9 +66,75 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
-/// Euclidean norm.
+/// `p ← z + beta·p`, serial — the PCG direction update ("xpay").
+pub fn xpay(beta: f64, z: &[f64], p: &mut [f64]) {
+    debug_assert_eq!(z.len(), p.len());
+    for i in 0..p.len() {
+        p[i] = z[i] + beta * p[i];
+    }
+}
+
+/// Euclidean norm (serial).
 pub fn norm2(x: &[f64]) -> f64 {
     dot(x, x).sqrt()
+}
+
+/// Leaf size of the fixed reduction tree used by [`dot_par`] /
+/// [`norm2_par`], and the claim grain of the pooled elementwise kernels.
+/// One constant for all BLAS-1 call sites so every reduction over a
+/// length-n vector shares the same tree shape (see `par::reduce` for why
+/// that makes results bitwise thread-count-independent).
+const BLAS1_GRAIN: usize = 4096;
+
+/// Dot product on the pool over the fixed chunk tree.
+///
+/// Bitwise-deterministic: the reduction tree depends only on the vector
+/// length (grain is fixed), so the result is identical across runs *and*
+/// thread counts — `threads` only sets fork depth. `threads == 1` runs
+/// serially but folds over the same tree, hence `dot_par(a, b, 1) ==
+/// dot_par(a, b, t)` bitwise for every `t`.
+pub fn dot_par(a: &[f64], b: &[f64], threads: usize) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    par::par_reduce(
+        a.len(),
+        threads,
+        BLAS1_GRAIN,
+        |r: std::ops::Range<usize>| {
+            let mut s = 0.0;
+            for i in r {
+                s += a[i] * b[i];
+            }
+            s
+        },
+        |x, y| x + y,
+    )
+}
+
+/// Euclidean norm on the pool; same determinism contract as [`dot_par`].
+pub fn norm2_par(x: &[f64], threads: usize) -> f64 {
+    dot_par(x, x, threads).sqrt()
+}
+
+/// `y ← y + alpha·x` on the pool (disjoint elementwise writes — exact at
+/// any thread count).
+pub fn axpy_par(alpha: f64, x: &[f64], y: &mut [f64], threads: usize) {
+    debug_assert_eq!(x.len(), y.len());
+    if threads <= 1 {
+        axpy(alpha, x, y);
+        return;
+    }
+    par::par_update(y, threads, BLAS1_GRAIN, |i, yi| *yi += alpha * x[i]);
+}
+
+/// `p ← z + beta·p` on the pool (disjoint elementwise writes — exact at
+/// any thread count).
+pub fn xpay_par(beta: f64, z: &[f64], p: &mut [f64], threads: usize) {
+    debug_assert_eq!(z.len(), p.len());
+    if threads <= 1 {
+        xpay(beta, z, p);
+        return;
+    }
+    par::par_update(p, threads, BLAS1_GRAIN, |i, pi| *pi = z[i] + beta * *pi);
 }
 
 #[cfg(test)]
@@ -132,5 +198,50 @@ mod tests {
         axpy(2.0, &a, &mut b);
         assert_eq!(b, [3.0, 5.0, 7.0]);
         assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        let mut p = [1.0, 2.0, 3.0];
+        xpay(2.0, &[10.0, 20.0, 30.0], &mut p);
+        assert_eq!(p, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn pooled_blas1_matches_serial_and_is_thread_invariant() {
+        let mut rng = Rng::new(21);
+        for n in [0usize, 1, 100, 4096, 50_000] {
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let serial = dot(&a, &b);
+            let reference = dot_par(&a, &b, 1);
+            // Tree fold vs left fold: equal to rounding.
+            assert!(
+                (reference - serial).abs() <= 1e-12 * serial.abs().max(1.0),
+                "n={n}: {reference} vs {serial}"
+            );
+            for threads in [2usize, 4, 8] {
+                // Bitwise identical across thread counts.
+                assert_eq!(dot_par(&a, &b, threads).to_bits(), reference.to_bits(), "n={n}");
+                assert_eq!(norm2_par(&a, threads).to_bits(), norm2_par(&a, 1).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_axpy_and_xpay_match_serial_exactly() {
+        let mut rng = Rng::new(22);
+        let n = 30_000;
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let z: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y0: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut ys = y0.clone();
+        axpy(0.37, &x, &mut ys);
+        let mut ps = y0.clone();
+        xpay(-1.25, &z, &mut ps);
+        for threads in [2usize, 4, 8] {
+            let mut yp = y0.clone();
+            axpy_par(0.37, &x, &mut yp, threads);
+            assert_eq!(yp, ys, "axpy threads={threads}");
+            let mut pp = y0.clone();
+            xpay_par(-1.25, &z, &mut pp, threads);
+            assert_eq!(pp, ps, "xpay threads={threads}");
+        }
     }
 }

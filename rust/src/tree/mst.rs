@@ -59,7 +59,8 @@ pub fn max_spanning_tree(g: &Graph, keys: &[f64]) -> Vec<bool> {
     assert_eq!(keys.len(), m);
     let mut order: Vec<u32> = (0..m as u32).collect();
     // Descending by key; stable so equal-key edges keep id order (matches
-    // the serial feGRASS implementation's deterministic tie-break).
+    // the serial feGRASS implementation's deterministic tie-break). The
+    // sort moves the u32 ids through its scratch buffer — no clones.
     par::sort::par_sort_by(&mut order, par::num_threads(), &|&a, &b| {
         keys[b as usize]
             .partial_cmp(&keys[a as usize])

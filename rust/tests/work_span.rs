@@ -6,9 +6,11 @@
 //! bounds numerically on suite-family inputs (constant factors included).
 
 use pdgrass::coordinator::schedsim::{simulate, SimParams};
+use pdgrass::par;
 use pdgrass::recovery::{self, Params, Strategy};
 use pdgrass::tree::build_spanning;
 use pdgrass::util::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 fn traced(g: &pdgrass::graph::Graph, alpha: f64) -> recovery::Recovery {
     let sp = build_spanning(g);
@@ -87,6 +89,69 @@ fn simulated_time_monotone_in_threads() {
         assert!(t <= last, "p={p}: {t} > previous {last}");
         last = t;
     }
+}
+
+/// Pool-contention regression (ISSUE 2): the Mixed-strategy shape nests
+/// a reduction *inside* a dynamically scheduled outer loop. Every outer
+/// task recruits pool workers that are themselves busy with outer tasks,
+/// so this deadlocks unless scope claiming lets callers participate
+/// (`par::pool`'s execution model) — and the nested reductions must
+/// still produce the deterministic fixed-tree value.
+#[test]
+fn nested_par_reduce_inside_par_for_completes() {
+    let expect: u64 = (0..10_000u64).sum();
+    let outer = 24usize;
+    let sums: Vec<AtomicU64> = (0..outer).map(|_| AtomicU64::new(0)).collect();
+    par::par_for(outer, 4, 1, |i| {
+        let s = par::par_reduce(
+            10_000,
+            4,
+            64,
+            |r: std::ops::Range<usize>| r.map(|x| x as u64).sum::<u64>(),
+            |a, b| a + b,
+        );
+        sums[i].store(s, Ordering::Relaxed);
+    });
+    for s in &sums {
+        assert_eq!(s.load(Ordering::Relaxed), expect);
+    }
+}
+
+/// A panic inside the *inner* reduction must unwind through both nesting
+/// levels to the caller — and leave the pool serviceable.
+#[test]
+fn nested_par_reduce_panic_propagates_through_par_for() {
+    let result = std::panic::catch_unwind(|| {
+        par::par_for(8, 4, 1, |i| {
+            let _ = par::par_reduce(
+                1000,
+                4,
+                16,
+                |r: std::ops::Range<usize>| {
+                    if i == 3 && r.contains(&500) {
+                        panic!("inner reduce boom");
+                    }
+                    r.len() as u64
+                },
+                |a, b| a + b,
+            );
+        });
+    });
+    assert!(result.is_err(), "inner panic must reach the outer caller");
+    // The pool survives: both a reduction and an outer loop still run.
+    let s = par::par_reduce(
+        5000,
+        4,
+        32,
+        |r: std::ops::Range<usize>| r.len() as u64,
+        |a, b| a + b,
+    );
+    assert_eq!(s, 5000);
+    let hits: Vec<AtomicU64> = (0..64).map(|_| AtomicU64::new(0)).collect();
+    par::par_for(64, 4, 1, |i| {
+        hits[i].fetch_add(1, Ordering::Relaxed);
+    });
+    assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
 }
 
 /// The quadratic worst case is real: a subtask where nothing is similar
