@@ -1,4 +1,4 @@
-//! Ablation benches for the design choices DESIGN.md calls out:
+//! Ablation benches for the repo's load-bearing design choices:
 //!
 //! 1. strict vs loose similarity — pass count + quality at equal budgets;
 //! 2. β cap `c` sweep — recovery behaviour vs the neighborhood radius;

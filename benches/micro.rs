@@ -5,7 +5,7 @@
 //! Measures, with min-of-N timing: LCA queries, resistance annotation,
 //! β-hop neighborhood BFS, tag-store probes, CSR vs XLA SpMV, LDLᵀ
 //! factor+solve, and the recovery phases. These numbers drive the
-//! before/after entries in EXPERIMENTS.md §Perf.
+//! before/after comparisons recorded in CHANGES.md.
 
 use pdgrass::graph::grounded_laplacian;
 use pdgrass::recovery::strict::{neighborhoods, TagStore};
@@ -279,7 +279,47 @@ fn bench_sort() {
     );
 }
 
+/// α-sweep cost: recompute steps 1–4 per α (what the experiment drivers
+/// did before the session API) vs one shared `Prepared` that pays steps
+/// 1–3 once and re-runs only step 4 per α. Documents the sweep speedup
+/// the prepare-once/recover-many split buys.
+fn bench_alpha_sweep() {
+    use pdgrass::{RecoverOpts, Sparsify};
+    let (name, scale, seed) = ("07-com-DBLP", 0.3, 42u64);
+    let alphas = [0.02, 0.05, 0.10];
+    let (_, ms_fresh) = min_of(3, || {
+        let mut total = 0usize;
+        for &alpha in &alphas {
+            let g = pdgrass::gen::suite::build(name, scale, seed);
+            let sp = build_spanning(&g);
+            total += recovery::pdgrass(&g, &sp, &Params::new(alpha, 4)).edges.len();
+        }
+        total
+    });
+    report("alpha_sweep_recompute_per_alpha", 3, ms_fresh, alphas.len() as u64, "alpha");
+    let (_, ms_shared) = min_of(3, || {
+        let prepared = Sparsify::suite(name, scale, seed).unwrap().prepare().unwrap();
+        let mut total = 0usize;
+        for &alpha in &alphas {
+            total += prepared
+                .recover(&RecoverOpts::with_threads(alpha, 4))
+                .unwrap()
+                .edges()
+                .len();
+        }
+        total
+    });
+    report("alpha_sweep_shared_prepared", 3, ms_shared, alphas.len() as u64, "alpha");
+    println!(
+        "{:<38} shared Prepared {:.2}x vs recompute-per-alpha",
+        "",
+        ms_fresh / ms_shared.max(1e-9)
+    );
+}
+
 fn main() {
+    println!("# micro bench: alpha-sweep with shared Prepared vs recompute (session API)");
+    bench_alpha_sweep();
     println!("# micro bench: parallel-substrate dispatch cost (spawn vs persistent pool)");
     bench_dispatch();
     println!("# micro bench: BLAS-1 serial vs pooled (PCG inner-loop ops)");

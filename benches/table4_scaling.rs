@@ -1,6 +1,6 @@
 //! Regenerates **Table IV**: feGRASS vs pdGRASS runtimes at 1/8/32
 //! threads, α = 0.02 (T₁ measured; T₈/T₃₂ from the calibrated scheduling
-//! simulator — see DESIGN.md §Substitutions).
+//! simulator, `coordinator::schedsim`).
 //!
 //! `cargo bench --bench table4_scaling`
 

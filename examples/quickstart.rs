@@ -5,16 +5,16 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Walks the whole public API surface: generator → spanning tree →
-//! pdGRASS recovery → sparsifier assembly → PCG quality comparison
-//! against the feGRASS baseline, the tree-only preconditioner, and
-//! Jacobi.
+//! Walks the primary (session) API surface — `Sparsify → Prepared →
+//! recover → Sparsifier → pcg` — plus the low-level building blocks for
+//! the tree-only and Jacobi baselines. Steps 1–3 of Algorithm 1 run once
+//! in `prepare()`; both the pdGRASS and feGRASS recoveries reuse them.
 
 use pdgrass::graph::grounded_laplacian;
-use pdgrass::recovery::{self, Params, Strategy};
+use pdgrass::recovery;
 use pdgrass::solver::{pcg, Jacobi, SparsifierPrecond};
-use pdgrass::tree::build_spanning;
 use pdgrass::util::{Rng, Timer};
+use pdgrass::{RecoverOpts, Sparsify};
 
 fn main() -> anyhow::Result<()> {
     // 1. A graph. Any `graph::Graph` works (MatrixMarket via
@@ -23,54 +23,60 @@ fn main() -> anyhow::Result<()> {
     let g = pdgrass::gen::grid(120, 120, 0.4, &mut Rng::new(1));
     println!("graph: |V|={} |E|={}", g.num_vertices(), g.num_edges());
 
-    // 2. Spanning tree on effective weights (shared by both algorithms).
-    let sp = build_spanning(&g);
+    // 2. Prepare once: spanning tree on effective weights, resistance
+    //    scoring, criticality sort (steps 1–3, shared by every recovery).
+    let prepared = Sparsify::graph(g).named("census-grid").prepare()?;
 
     // 3. Recover α|V| off-tree edges with pdGRASS (mixed parallel
-    //    strategy) and with the feGRASS baseline.
-    let params = Params { strategy: Strategy::Mixed, ..Params::new(0.05, 4) };
+    //    strategy) and with the feGRASS baseline — both from the same
+    //    prepared session, paying only step 4 each.
+    let opts = RecoverOpts::new(0.05);
     let t = Timer::start();
-    let pd = recovery::pdgrass(&g, &sp, &params);
+    let pd = prepared.recover(&opts)?;
     let t_pd = t.ms();
     let t = Timer::start();
-    let fe = recovery::fegrass(&g, &sp, &params);
+    let fe = prepared.fegrass(&opts)?;
     let t_fe = t.ms();
     println!(
         "pdGRASS: {} edges in {} pass(es), {:.1} ms   |   feGRASS: {} edges in {} pass(es), {:.1} ms",
-        pd.edges.len(),
-        pd.passes,
+        pd.edges().len(),
+        pd.passes(),
         t_pd,
-        fe.edges.len(),
-        fe.passes,
+        fe.edges().len(),
+        fe.passes(),
         t_fe
     );
 
-    // 4. Assemble sparsifiers: tree + recovered edges.
-    let p_pd = recovery::sparsifier(&g, &sp, &pd.edges);
-    let p_fe = recovery::sparsifier(&g, &sp, &fe.edges);
-    let p_tree = recovery::sparsifier(&g, &sp, &[]);
+    // 4. Sparsifier handles: tree + recovered edges.
+    let p_pd = pd.sparsifier();
+    let p_fe = fe.sparsifier();
 
     // 5. PCG on the grounded Laplacian system L_G x = b with each
-    //    preconditioner — lower iteration count = better sparsifier.
-    let lg = grounded_laplacian(&g, 0);
+    //    preconditioner — lower iteration count = better sparsifier. The
+    //    session handles evaluate themselves; the tree-only and Jacobi
+    //    baselines use the low-level solver API with the same RHS.
+    let tol = 1e-3;
+    let r_pd = p_pd.pcg(2, tol, 50_000)?;
+    let r_fe = p_fe.pcg(2, tol, 50_000)?;
+    let p_tree = recovery::sparsifier(prepared.graph(), prepared.spanning(), &[]);
+    let lg = grounded_laplacian(prepared.graph(), 0);
     let mut rng = Rng::new(2);
     let b: Vec<f64> = (0..lg.n).map(|_| rng.normal()).collect();
-    let tol = 1e-3;
-    let runs = [
-        ("pdGRASS sparsifier", pcg(&lg, &b, &SparsifierPrecond::new(&p_pd)?, tol, 50_000)),
-        ("feGRASS sparsifier", pcg(&lg, &b, &SparsifierPrecond::new(&p_fe)?, tol, 50_000)),
-        ("spanning tree only", pcg(&lg, &b, &SparsifierPrecond::new(&p_tree)?, tol, 50_000)),
-        ("Jacobi (diagonal)", pcg(&lg, &b, &Jacobi::new(&lg), tol, 50_000)),
-    ];
+    let r_tree = pcg(&lg, &b, &SparsifierPrecond::new(&p_tree)?, tol, 50_000);
+    let r_jac = pcg(&lg, &b, &Jacobi::new(&lg), tol, 50_000);
     println!("\nPCG to ‖r‖ ≤ 1e-3‖b‖:");
-    for (name, res) in &runs {
-        println!(
-            "  {name:22} {:5} iterations (converged={})",
-            res.iterations, res.converged
-        );
+    for (name, iters, converged) in [
+        ("pdGRASS sparsifier", r_pd.iterations, r_pd.converged),
+        ("feGRASS sparsifier", r_fe.iterations, r_fe.converged),
+        ("spanning tree only", r_tree.iterations, r_tree.converged),
+        ("Jacobi (diagonal)", r_jac.iterations, r_jac.converged),
+    ] {
+        println!("  {name:22} {iters:5} iterations (converged={converged})");
     }
-    let (pd_it, tree_it) = (runs[0].1.iterations, runs[2].1.iterations);
-    anyhow::ensure!(pd_it < tree_it, "recovered edges must improve on the bare tree");
+    anyhow::ensure!(
+        r_pd.iterations < r_tree.iterations,
+        "recovered edges must improve on the bare tree"
+    );
     println!("\nquickstart OK");
     Ok(())
 }

@@ -13,7 +13,7 @@
 //!
 //! Reports the paper's headline metric (PCG iteration count) measured on
 //! the XLA path, cross-checked against the pure-Rust path, plus dispatch
-//! timing. Recorded in EXPERIMENTS.md §End-to-end.
+//! timing.
 
 use pdgrass::graph::grounded_laplacian;
 use pdgrass::recovery::{self, Params};

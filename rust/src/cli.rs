@@ -2,7 +2,10 @@
 //! set).
 //!
 //! Subcommands map one-to-one onto the experiment drivers plus a few
-//! utility verbs:
+//! utility verbs. The `sparsify`/`evaluate` verbs are thin wrappers over
+//! the session API (`Sparsify → Prepared → recover → Sparsifier`); all
+//! library failures arrive as the typed `error::Error` and convert to
+//! `anyhow` only here, at the binary boundary.
 //!
 //! ```text
 //! pdgrass sparsify --graph 15-M6 --alpha 0.05 [--out P.mtx]
@@ -14,8 +17,7 @@
 
 use crate::config::{Doc, RunConfig};
 use crate::coordinator::{experiments, PipelineConfig};
-use crate::recovery::{self, Strategy};
-use crate::tree::build_spanning;
+use crate::session::Sparsify;
 use crate::util::{sci, Timer};
 
 /// Parsed command line.
@@ -84,6 +86,12 @@ fn pipeline_cfg(cli: &Cli) -> anyhow::Result<(PipelineConfig, RunConfig)> {
     if let Some(s) = cli.str("seed") {
         run.seed = s.parse()?;
     }
+    if let Some(s) = cli.str("threads") {
+        run.threads = s.parse()?;
+    }
+    if let Some(s) = cli.str("strategy") {
+        run.strategy = s.parse()?;
+    }
     let mut p = run.pipeline();
     p.alpha = cli.f64("alpha", p.alpha)?;
     Ok((p, run))
@@ -114,42 +122,41 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         "sparsify" => {
-            let (cfg, _) = pipeline_cfg(&cli)?;
+            let (cfg, run) = pipeline_cfg(&cli)?;
             let name = cli.str("graph").unwrap_or("15-M6");
-            let g = crate::gen::suite::build(name, cfg.scale, cfg.seed);
+            // build the graph before the timer: report sparsification
+            // time, not generator time
+            let session = Sparsify::suite(name, cfg.scale, cfg.seed)?;
             let t = Timer::start();
-            let sp = build_spanning(&g);
-            let params = crate::coordinator::pipeline::recovery_params(&cfg, 1, Strategy::Mixed);
-            let r = recovery::pdgrass(&g, &sp, &params);
-            let p = recovery::sparsifier(&g, &sp, &r.edges);
+            let prepared = session.prepare()?;
+            let r = prepared.recover(&run.recover_opts(cfg.alpha))?;
+            let p = r.sparsifier();
             println!(
                 "{name}: |V|={} |E|={} -> sparsifier |E|={} ({} tree + {} recovered) in {:.1} ms, {} pass(es)",
-                g.num_vertices(),
-                g.num_edges(),
+                prepared.graph().num_vertices(),
+                prepared.graph().num_edges(),
                 p.num_edges(),
-                g.num_vertices() - 1,
-                r.edges.len(),
+                prepared.graph().num_vertices() - 1,
+                r.edges().len(),
                 t.ms(),
-                r.passes
+                r.passes()
             );
             if let Some(out) = cli.str("out") {
-                crate::graph::write_mtx(&p, std::path::Path::new(out))?;
+                p.write_mtx(std::path::Path::new(out))?;
                 println!("wrote {out}");
             }
             Ok(())
         }
         "evaluate" => {
-            let (cfg, _) = pipeline_cfg(&cli)?;
+            let (cfg, run) = pipeline_cfg(&cli)?;
             let name = cli.str("graph").unwrap_or("15-M6");
-            let g = crate::gen::suite::build(name, cfg.scale, cfg.seed);
-            let sp = build_spanning(&g);
-            let params = crate::coordinator::pipeline::recovery_params(&cfg, 1, Strategy::Mixed);
-            let r = recovery::pdgrass(&g, &sp, &params);
-            let p = recovery::sparsifier(&g, &sp, &r.edges);
+            let prepared = Sparsify::suite(name, cfg.scale, cfg.seed)?.prepare()?;
+            let r = prepared.recover(&run.recover_opts(cfg.alpha))?;
+            let p = r.sparsifier();
             if cli.has("xla") {
                 let rt = crate::runtime::Runtime::open_default()?;
-                let lg = crate::graph::grounded_laplacian(&g, 0);
-                let m = crate::solver::SparsifierPrecond::new(&p)
+                let lg = crate::graph::grounded_laplacian(prepared.graph(), 0);
+                let m = crate::solver::SparsifierPrecond::new(p.graph())
                     .map_err(|e| anyhow::anyhow!("factorization: {e}"))?;
                 let mut rng = crate::util::Rng::new(cfg.seed ^ 0xb);
                 let b: Vec<f64> = (0..lg.n).map(|_| rng.normal()).collect();
@@ -159,9 +166,11 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
                     res.iterations, res.relres, res.converged
                 );
             } else {
-                let (iters, conv) =
-                    crate::solver::pcg_iterations(&g, &p, cfg.seed ^ 0xb, cfg.tol, cfg.maxit)?;
-                println!("{name}: {iters} PCG iterations (converged={conv})");
+                let out = p.pcg(cfg.seed ^ 0xb, cfg.tol, cfg.maxit)?;
+                println!(
+                    "{name}: {} PCG iterations (converged={})",
+                    out.iterations, out.converged
+                );
             }
             Ok(())
         }
@@ -216,6 +225,8 @@ OPTIONS
   --scale S      suite scale factor (default 1.0)
   --seed N       generator/RHS seed
   --alpha A      recovery ratio (default 0.02)
+  --threads N    recovery threads (0 = auto)
+  --strategy S   serial|outer|inner|mixed (default mixed)
   --config F     TOML run config ([run] section)
   --quick        tiny scale + 1 trial (smoke)
 ";
@@ -245,6 +256,14 @@ mod tests {
     #[test]
     fn unknown_verb_is_error() {
         assert!(run(&s(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn bad_strategy_is_a_clean_error() {
+        let err = run(&s(&["sparsify", "--graph", "15-M6", "--scale", "0.02", "--strategy", "warp"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("strategy"), "{err}");
     }
 
     #[test]

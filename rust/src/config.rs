@@ -4,9 +4,15 @@
 //! the subset the launcher needs: `[sections]`, `key = value` with
 //! strings, integers, floats, booleans, and flat arrays. Unknown keys are
 //! reported as errors (catching config typos), matching what a production
-//! launcher would do.
+//! launcher would do. All failures are the typed [`crate::error::Error`]
+//! ([`Error::Config`] for malformed files, [`Error::BadParam`] for values
+//! that parse but fail validation).
 
 use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::recovery::Strategy;
+use crate::session::RecoverOpts;
 
 /// A parsed TOML-subset value.
 #[derive(Clone, Debug, PartialEq)]
@@ -66,7 +72,7 @@ pub struct Doc {
 
 impl Doc {
     /// Parse a TOML-subset string.
-    pub fn parse(text: &str) -> anyhow::Result<Doc> {
+    pub fn parse(text: &str) -> Result<Doc> {
         let mut entries = HashMap::new();
         let mut section = String::new();
         for (lineno, raw) in text.lines().enumerate() {
@@ -75,27 +81,29 @@ impl Doc {
                 continue;
             }
             if line.starts_with('[') {
-                anyhow::ensure!(line.ends_with(']'), "line {}: bad section header", lineno + 1);
+                if !line.ends_with(']') {
+                    return Err(Error::Config(format!("line {}: bad section header", lineno + 1)));
+                }
                 section = line[1..line.len() - 1].trim().to_string();
                 continue;
             }
-            let (k, v) = line
-                .split_once('=')
-                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
             let key = if section.is_empty() {
                 k.trim().to_string()
             } else {
                 format!("{section}.{}", k.trim())
             };
             let value = parse_value(v.trim())
-                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+                .map_err(|e| Error::Config(format!("line {}: {e}", lineno + 1)))?;
             entries.insert(key, value);
         }
         Ok(Doc { entries })
     }
 
     /// Load from a file.
-    pub fn load(path: &std::path::Path) -> anyhow::Result<Doc> {
+    pub fn load(path: &std::path::Path) -> Result<Doc> {
         Doc::parse(&std::fs::read_to_string(path)?)
     }
 
@@ -112,15 +120,21 @@ impl Doc {
     }
 }
 
+/// Cut a trailing `# comment` off a line, ignoring `#` characters inside
+/// quoted strings (`graphs = ["a#b"]  # real comment`).
 fn strip_comment(line: &str) -> &str {
-    // naive: no # inside strings in our configs
-    match line.find('#') {
-        Some(i) => &line[..i],
-        None => line,
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
     }
+    line
 }
 
-fn parse_value(s: &str) -> anyhow::Result<Value> {
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
     if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
         return Ok(Value::Str(s[1..s.len() - 1].to_string()));
     }
@@ -147,7 +161,7 @@ fn parse_value(s: &str) -> anyhow::Result<Value> {
     if let Ok(f) = s.parse::<f64>() {
         return Ok(Value::Float(f));
     }
-    anyhow::bail!("cannot parse value: {s:?}")
+    Err(format!("cannot parse value: {s:?}"))
 }
 
 fn split_top_level(s: &str) -> Vec<String> {
@@ -182,7 +196,8 @@ fn split_top_level(s: &str) -> Vec<String> {
 }
 
 /// Typed experiment configuration (maps onto
-/// [`crate::coordinator::PipelineConfig`] plus run selection).
+/// [`crate::coordinator::PipelineConfig`] plus run selection, and onto
+/// [`RecoverOpts`] via [`RunConfig::recover_opts`]).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     /// α values to sweep.
@@ -201,6 +216,12 @@ pub struct RunConfig {
     pub trials: usize,
     /// Evaluate PCG quality.
     pub quality: bool,
+    /// Recovery threads (0 = auto: `par::num_threads()`).
+    pub threads: usize,
+    /// Step-4 parallel strategy.
+    pub strategy: Strategy,
+    /// BFS step-size constant `c` (Def. 3).
+    pub beta_cap: u32,
 }
 
 impl Default for RunConfig {
@@ -214,56 +235,126 @@ impl Default for RunConfig {
             maxit: 50_000,
             trials: 3,
             quality: true,
+            threads: 0,
+            strategy: Strategy::Mixed,
+            beta_cap: 8,
         }
     }
 }
 
 impl RunConfig {
-    /// Build from a parsed document (`[run]` section), validating keys.
-    pub fn from_doc(doc: &Doc) -> anyhow::Result<RunConfig> {
+    /// Build from a parsed document (`[run]` section), validating keys
+    /// and values.
+    pub fn from_doc(doc: &Doc) -> Result<RunConfig> {
         let mut cfg = RunConfig::default();
         let known = [
             "run.alphas", "run.graphs", "run.scale", "run.seed", "run.tol", "run.maxit",
-            "run.trials", "run.quality",
+            "run.trials", "run.quality", "run.threads", "run.strategy", "run.beta_cap",
         ];
         for key in doc.keys() {
-            anyhow::ensure!(known.contains(&key), "unknown config key: {key}");
+            if !known.contains(&key) {
+                return Err(Error::Config(format!("unknown config key: {key}")));
+            }
         }
-        if let Some(v) = doc.get("run.alphas") {
-            if let Value::Array(items) = v {
-                cfg.alphas = items
-                    .iter()
-                    .map(|i| i.as_f64().ok_or_else(|| anyhow::anyhow!("alphas: not a number")))
-                    .collect::<anyhow::Result<_>>()?;
+        if let Some(Value::Array(items)) = doc.get("run.alphas") {
+            cfg.alphas = items
+                .iter()
+                .map(|i| {
+                    i.as_f64().ok_or_else(|| Error::BadParam {
+                        name: "run.alphas",
+                        why: "not a number".into(),
+                    })
+                })
+                .collect::<Result<_>>()?;
+            if let Some(&bad) = cfg.alphas.iter().find(|a| !a.is_finite() || **a <= 0.0) {
+                return Err(Error::BadParam {
+                    name: "run.alphas",
+                    why: format!("alphas must be positive, got {bad}"),
+                });
             }
         }
         if let Some(Value::Array(items)) = doc.get("run.graphs") {
             cfg.graphs = items
                 .iter()
                 .map(|i| {
-                    i.as_str()
-                        .map(|s| s.to_string())
-                        .ok_or_else(|| anyhow::anyhow!("graphs: not a string"))
+                    i.as_str().map(|s| s.to_string()).ok_or_else(|| Error::BadParam {
+                        name: "run.graphs",
+                        why: "not a string".into(),
+                    })
                 })
-                .collect::<anyhow::Result<_>>()?;
+                .collect::<Result<_>>()?;
         }
         if let Some(v) = doc.get("run.scale") {
-            cfg.scale = v.as_f64().ok_or_else(|| anyhow::anyhow!("scale: not a number"))?;
+            cfg.scale = v
+                .as_f64()
+                .ok_or_else(|| Error::BadParam { name: "run.scale", why: "not a number".into() })?;
+            if !cfg.scale.is_finite() || cfg.scale <= 0.0 {
+                return Err(Error::BadParam {
+                    name: "run.scale",
+                    why: format!("must be positive, got {}", cfg.scale),
+                });
+            }
         }
         if let Some(v) = doc.get("run.seed") {
-            cfg.seed = v.as_usize().ok_or_else(|| anyhow::anyhow!("seed: not an int"))? as u64;
+            cfg.seed = v
+                .as_usize()
+                .ok_or_else(|| Error::BadParam { name: "run.seed", why: "not an int".into() })?
+                as u64;
         }
         if let Some(v) = doc.get("run.tol") {
-            cfg.tol = v.as_f64().ok_or_else(|| anyhow::anyhow!("tol: not a number"))?;
+            cfg.tol = v
+                .as_f64()
+                .ok_or_else(|| Error::BadParam { name: "run.tol", why: "not a number".into() })?;
+            if !cfg.tol.is_finite() || cfg.tol <= 0.0 {
+                return Err(Error::BadParam {
+                    name: "run.tol",
+                    why: format!("must be positive, got {}", cfg.tol),
+                });
+            }
         }
         if let Some(v) = doc.get("run.maxit") {
-            cfg.maxit = v.as_usize().ok_or_else(|| anyhow::anyhow!("maxit: not an int"))?;
+            cfg.maxit = v
+                .as_usize()
+                .ok_or_else(|| Error::BadParam { name: "run.maxit", why: "not an int".into() })?;
         }
         if let Some(v) = doc.get("run.trials") {
-            cfg.trials = v.as_usize().ok_or_else(|| anyhow::anyhow!("trials: not an int"))?;
+            cfg.trials = v
+                .as_usize()
+                .ok_or_else(|| Error::BadParam { name: "run.trials", why: "not an int".into() })?;
+            if cfg.trials == 0 {
+                return Err(Error::BadParam {
+                    name: "run.trials",
+                    why: "must be at least 1".into(),
+                });
+            }
         }
         if let Some(v) = doc.get("run.quality") {
-            cfg.quality = v.as_bool().ok_or_else(|| anyhow::anyhow!("quality: not a bool"))?;
+            cfg.quality = v
+                .as_bool()
+                .ok_or_else(|| Error::BadParam { name: "run.quality", why: "not a bool".into() })?;
+        }
+        if let Some(v) = doc.get("run.threads") {
+            cfg.threads = v.as_usize().ok_or_else(|| Error::BadParam {
+                name: "run.threads",
+                why: "not a non-negative int".into(),
+            })?;
+        }
+        if let Some(v) = doc.get("run.strategy") {
+            let s = v.as_str().ok_or_else(|| Error::BadParam {
+                name: "run.strategy",
+                why: "not a string".into(),
+            })?;
+            cfg.strategy = s.parse()?;
+        }
+        if let Some(v) = doc.get("run.beta_cap") {
+            let b = v.as_usize().ok_or_else(|| Error::BadParam {
+                name: "run.beta_cap",
+                why: "not a non-negative int".into(),
+            })?;
+            cfg.beta_cap = u32::try_from(b).map_err(|_| Error::BadParam {
+                name: "run.beta_cap",
+                why: format!("{b} exceeds u32 range"),
+            })?;
         }
         Ok(cfg)
     }
@@ -272,6 +363,7 @@ impl RunConfig {
     pub fn pipeline(&self) -> crate::coordinator::PipelineConfig {
         crate::coordinator::PipelineConfig {
             alpha: self.alphas.first().copied().unwrap_or(0.02),
+            beta_cap: self.beta_cap,
             tol: self.tol,
             maxit: self.maxit,
             scale: self.scale,
@@ -279,6 +371,21 @@ impl RunConfig {
             trials: self.trials,
             evaluate_quality: self.quality,
             ..Default::default()
+        }
+    }
+
+    /// Recovery options at `alpha` per this config: `threads`/`strategy`/
+    /// `beta_cap` map straight onto [`RecoverOpts`] (`threads == 0`
+    /// resolves to the environment's thread count). Range validation
+    /// happens when the options are used against a graph
+    /// ([`RecoverOpts::validate`]).
+    pub fn recover_opts(&self, alpha: f64) -> RecoverOpts {
+        let threads = if self.threads == 0 { crate::par::num_threads() } else { self.threads };
+        RecoverOpts {
+            alpha,
+            beta_cap: self.beta_cap,
+            strategy: self.strategy,
+            ..RecoverOpts::with_threads(alpha, threads)
         }
     }
 }
@@ -307,7 +414,8 @@ mod tests {
     fn run_config_roundtrip() {
         let doc = Doc::parse(
             "[run]\nalphas = [0.1]\nscale = 0.25\nseed = 7\ntol = 0.001\nmaxit = 100\n\
-             trials = 1\nquality = false\ngraphs = [\"15-M6\"]\n",
+             trials = 1\nquality = false\ngraphs = [\"15-M6\"]\nthreads = 4\n\
+             strategy = \"outer\"\nbeta_cap = 6\n",
         )
         .unwrap();
         let cfg = RunConfig::from_doc(&doc).unwrap();
@@ -316,20 +424,74 @@ mod tests {
         assert_eq!(cfg.seed, 7);
         assert!(!cfg.quality);
         assert_eq!(cfg.graphs, vec!["15-M6"]);
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.strategy, Strategy::Outer);
+        assert_eq!(cfg.beta_cap, 6);
         let p = cfg.pipeline();
         assert_eq!(p.alpha, 0.1);
         assert_eq!(p.trials, 1);
+        assert_eq!(p.beta_cap, 6);
+        let opts = cfg.recover_opts(0.1);
+        assert_eq!(opts.threads, 4);
+        assert_eq!(opts.block, 4);
+        assert_eq!(opts.strategy, Strategy::Outer);
+        assert_eq!(opts.beta_cap, 6);
+    }
+
+    #[test]
+    fn threads_zero_resolves_to_auto() {
+        let cfg = RunConfig::default();
+        let opts = cfg.recover_opts(0.05);
+        assert!(opts.threads >= 1);
+        assert_eq!(opts.block, opts.threads);
     }
 
     #[test]
     fn unknown_key_rejected() {
         let doc = Doc::parse("[run]\nspeeling_mistake = 1\n").unwrap();
-        assert!(RunConfig::from_doc(&doc).is_err());
+        let err = RunConfig::from_doc(&doc).unwrap_err();
+        assert!(err.to_string().contains("unknown config key"), "{err}");
+    }
+
+    #[test]
+    fn bad_strategy_rejected_with_typed_error() {
+        let doc = Doc::parse("[run]\nstrategy = \"warp\"\n").unwrap();
+        match RunConfig::from_doc(&doc) {
+            Err(Error::BadParam { name, .. }) => assert_eq!(name, "strategy"),
+            other => panic!("expected BadParam, got {other:?}"),
+        }
     }
 
     #[test]
     fn bad_value_errors() {
         assert!(Doc::parse("x = @nope\n").is_err());
         assert!(Doc::parse("[broken\nx = 1\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_quoted_string_is_not_a_comment() {
+        // regression: the old strip_comment truncated at any '#'
+        let doc = Doc::parse(
+            "[run]\ngraphs = [\"a#b\", \"c\"]  # trailing comment\nscale = 0.5 # another\n",
+        )
+        .unwrap();
+        match doc.get("run.graphs") {
+            Some(Value::Array(items)) => {
+                assert_eq!(items.len(), 2);
+                assert_eq!(items[0].as_str(), Some("a#b"));
+                assert_eq!(items[1].as_str(), Some("c"));
+            }
+            other => panic!("bad graphs: {other:?}"),
+        }
+        assert_eq!(doc.get("run.scale"), Some(&Value::Float(0.5)));
+    }
+
+    #[test]
+    fn strip_comment_is_string_aware() {
+        assert_eq!(strip_comment("x = 1 # c"), "x = 1 ");
+        assert_eq!(strip_comment("s = \"a#b\""), "s = \"a#b\"");
+        assert_eq!(strip_comment("s = \"a#b\" # c"), "s = \"a#b\" ");
+        assert_eq!(strip_comment("# whole line"), "");
+        assert_eq!(strip_comment("plain"), "plain");
     }
 }

@@ -1,10 +1,10 @@
 //! Coordinator: pipeline orchestration, experiment drivers, and the
 //! work–span scheduling simulator (the substitute for the paper's 64-core
-//! testbed; see DESIGN.md §Substitutions).
+//! testbed).
 
 pub mod experiments;
 pub mod pipeline;
 pub mod schedsim;
 
-pub use pipeline::{run_graph, GraphReport, PipelineConfig};
+pub use pipeline::{run_graph, run_prepared, GraphReport, PipelineConfig};
 pub use schedsim::{simulate, SimParams, SimResult};

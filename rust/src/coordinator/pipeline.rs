@@ -1,16 +1,17 @@
-//! End-to-end pipeline: graph → spanning tree → recovery (feGRASS &
+//! End-to-end pipeline: one prepared session → recovery (feGRASS &
 //! pdGRASS) → PCG quality evaluation → simulated multi-thread timing.
 //!
 //! This is the measurement engine behind every experiment driver
-//! (`coordinator::experiments`) and the CLI.
+//! (`coordinator::experiments`) and the CLI. All sparsifier construction
+//! goes through the session API ([`crate::session`]): [`run_prepared`]
+//! is a thin orchestration over one [`Prepared`], so α-sweep drivers can
+//! pay steps 1–3 once per graph and call it once per α.
 
 use super::schedsim::{simulate, SimParams};
+use crate::error::Error;
 use crate::gen;
-use crate::graph::Graph;
-use crate::recovery::{self, Params, Strategy};
-use crate::solver;
-use crate::tree::{build_spanning, Spanning};
-
+use crate::recovery::{self, Strategy};
+use crate::session::{Prepared, RecoverOpts, Sparsify};
 
 /// Pipeline configuration (defaults follow §V of the paper).
 #[derive(Clone, Copy, Debug)]
@@ -60,13 +61,14 @@ pub struct GraphReport {
     pub v: usize,
     /// Edges.
     pub e: usize,
-    /// feGRASS recovery time, ms (min over trials).
+    /// feGRASS recovery time, ms (shared steps 1–2 + min-over-trials core).
     pub t_fe_ms: f64,
     /// feGRASS passes.
     pub fe_passes: usize,
     /// PCG iterations with the feGRASS sparsifier.
     pub iter_fe: usize,
-    /// pdGRASS single-thread recovery time, ms (min over trials).
+    /// pdGRASS single-thread recovery time, ms (steps 1–3 + min-over-trials
+    /// step 4).
     pub t_pd1_ms: f64,
     /// pdGRASS passes (expected 1).
     pub pd_passes: usize,
@@ -78,59 +80,61 @@ pub struct GraphReport {
     pub sim_speedup: [f64; 2],
     /// Recovery stats from the pdGRASS run.
     pub stats: recovery::Stats,
-    /// pdGRASS per-step times (serial run), ms.
+    /// pdGRASS per-step times (serial run), ms. The first three entries
+    /// come from the shared [`Prepared`] — reports produced from the same
+    /// session carry identical values there.
     pub step_ms: [f64; 4],
+    /// Id of the [`Prepared`] session this report was measured against.
+    /// Equal ids across an α-sweep prove steps 1–3 were paid once.
+    pub prepared_id: u64,
 }
 
-/// Build a suite graph per config.
-pub fn build_graph(name: &str, cfg: &PipelineConfig) -> Graph {
-    gen::suite::build(name, cfg.scale, cfg.seed)
-}
-
-/// Recovery params for pdGRASS at `threads` under this config.
-pub fn recovery_params(cfg: &PipelineConfig, threads: usize, strategy: Strategy) -> Params {
-    Params {
+/// Recovery options for this config at `threads` / `strategy`.
+pub fn recover_opts(cfg: &PipelineConfig, threads: usize, strategy: Strategy) -> RecoverOpts {
+    RecoverOpts {
         alpha: cfg.alpha,
         beta_cap: cfg.beta_cap,
         strategy,
-        threads,
-        block: threads.max(1),
-        cutoff_edges: 100_000,
-        cutoff_frac: 0.10,
-        jbp: true,
+        ..RecoverOpts::with_threads(cfg.alpha, threads)
     }
 }
 
-/// Run both algorithms + evaluation on one suite graph.
-pub fn run_graph(name: &str, cfg: &PipelineConfig) -> anyhow::Result<GraphReport> {
-    let g = build_graph(name, cfg);
-    let sp = build_spanning(&g);
-    run_prepared(name, &g, &sp, cfg)
+/// Prepare a suite row under this config. The step-3 sort runs at one
+/// thread, matching what the pre-session pipeline timed for its serial
+/// calibration run (the other prepare stages have no per-call thread
+/// knob and behave as before).
+pub fn prepare_graph(name: &str, cfg: &PipelineConfig) -> Result<Prepared, Error> {
+    Sparsify::suite(name, cfg.scale, cfg.seed)?.threads(1).prepare()
 }
 
-/// As [`run_graph`] but with a prebuilt graph + spanning tree.
-pub fn run_prepared(
-    name: &str,
-    g: &Graph,
-    sp: &Spanning,
-    cfg: &PipelineConfig,
-) -> anyhow::Result<GraphReport> {
-    let params_serial = recovery_params(cfg, 1, Strategy::Serial);
+/// Run both algorithms + evaluation on one suite graph.
+pub fn run_graph(name: &str, cfg: &PipelineConfig) -> Result<GraphReport, Error> {
+    let prepared = prepare_graph(name, cfg)?;
+    run_prepared(&prepared, cfg)
+}
 
-    // --- feGRASS baseline (serial, multi-pass) ---
-    let (fe, t_fe_ms) =
-        crate::util::min_of(cfg.trials, || recovery::fegrass(g, sp, &params_serial));
+/// As [`run_graph`] but against an existing [`Prepared`] session — the
+/// α-sweep entry point: steps 1–3 are read from the session; only step 4
+/// and the PCG evaluation run here.
+pub fn run_prepared(prepared: &Prepared, cfg: &PipelineConfig) -> Result<GraphReport, Error> {
+    let opts = recover_opts(cfg, 1, Strategy::Serial);
+    let prep = prepared.prep_ms();
 
-    // --- pdGRASS serial run with trace (simulator input) ---
-    let (pd, t_pd1_ms) = crate::util::min_of(cfg.trials, || {
-        recovery::pdgrass::pdgrass_traced(g, sp, &params_serial, true)
-    });
-    let trace = pd.trace.as_ref().expect("trace requested");
+    // --- feGRASS baseline (serial, multi-pass; shares steps 1–2) ---
+    let (fe, t_fe_core) = crate::util::min_of(cfg.trials, || prepared.fegrass(&opts));
+    let fe = fe?;
+    let t_fe_ms = prep[0] + prep[1] + t_fe_core;
+
+    // --- pdGRASS serial step 4 with trace (simulator input) ---
+    let (pd, t4_ms) = crate::util::min_of(cfg.trials, || prepared.recover_traced(&opts));
+    let pd = pd?;
+    let trace = pd.trace().expect("trace requested");
+    let step_ms = [prep[0], prep[1], prep[2], t4_ms];
 
     // --- simulated multi-thread timing, calibrated on the serial run ---
-    let steps123: f64 = pd.step_ms[0] + pd.step_ms[1] + pd.step_ms[2];
+    let steps123: f64 = prep.iter().sum();
     let serial_units = simulate(trace, &SimParams::new(1)).time().max(1);
-    let ms_per_unit = pd.step_ms[3] / serial_units as f64;
+    let ms_per_unit = t4_ms / serial_units as f64;
     let mut t_pd_sim_ms = [0f64; 2];
     let mut sim_speedup = [0f64; 2];
     for (i, &p) in cfg.sim_threads.iter().enumerate() {
@@ -139,38 +143,34 @@ pub fn run_prepared(
         // steps 1–3 are standard parallel primitives (O(lg²) span): model
         // them as ideally scaled; they are a small fraction of the total.
         t_pd_sim_ms[i] = steps123 / p as f64 + t4;
-        let t1 = steps123 + pd.step_ms[3];
+        let t1 = steps123 + t4_ms;
         sim_speedup[i] = t1 / t_pd_sim_ms[i].max(1e-9);
     }
 
     // --- PCG quality evaluation (same RHS seed for both sparsifiers) ---
     let (mut iter_fe, mut iter_pd) = (0usize, 0usize);
     if cfg.evaluate_quality {
-        let p_fe = recovery::sparsifier(g, sp, &fe.edges);
-        let p_pd = recovery::sparsifier(g, sp, &pd.edges);
-        let (ife, conv_fe) =
-            solver::pcg_iterations(g, &p_fe, cfg.seed ^ 0xb, cfg.tol, cfg.maxit)?;
-        let (ipd, conv_pd) =
-            solver::pcg_iterations(g, &p_pd, cfg.seed ^ 0xb, cfg.tol, cfg.maxit)?;
-        anyhow::ensure!(conv_fe && conv_pd, "PCG did not converge on {name}");
-        iter_fe = ife;
-        iter_pd = ipd;
+        let o_fe = fe.sparsifier().pcg(cfg.seed ^ 0xb, cfg.tol, cfg.maxit)?.require_converged()?;
+        let o_pd = pd.sparsifier().pcg(cfg.seed ^ 0xb, cfg.tol, cfg.maxit)?.require_converged()?;
+        iter_fe = o_fe.iterations;
+        iter_pd = o_pd.iterations;
     }
 
     Ok(GraphReport {
-        name: name.to_string(),
-        v: g.num_vertices(),
-        e: g.num_edges(),
+        name: prepared.name().unwrap_or("graph").to_string(),
+        v: prepared.graph().num_vertices(),
+        e: prepared.graph().num_edges(),
         t_fe_ms,
-        fe_passes: fe.passes,
+        fe_passes: fe.passes(),
         iter_fe,
-        t_pd1_ms,
-        pd_passes: pd.passes,
+        t_pd1_ms: steps123 + t4_ms,
+        pd_passes: pd.passes(),
         iter_pd,
         t_pd_sim_ms,
         sim_speedup,
-        stats: pd.stats.clone(),
-        step_ms: pd.step_ms,
+        stats: pd.stats().clone(),
+        step_ms,
+        prepared_id: prepared.id(),
     })
 }
 
@@ -213,5 +213,26 @@ mod tests {
             r.sim_speedup[1],
             r.sim_speedup[0]
         );
+    }
+
+    #[test]
+    fn run_prepared_reuses_the_session_across_alphas() {
+        let prepared = prepare_graph("15-M6", &quick_cfg()).unwrap();
+        let mut cfg = quick_cfg();
+        cfg.alpha = 0.02;
+        let a = run_prepared(&prepared, &cfg).unwrap();
+        cfg.alpha = 0.10;
+        let b = run_prepared(&prepared, &cfg).unwrap();
+        assert_eq!(a.prepared_id, b.prepared_id);
+        assert_eq!(a.step_ms[..3], b.step_ms[..3], "shared steps 1–3 timings");
+        assert!(b.iter_pd <= a.iter_pd + 2, "more recovered edges must not hurt quality much");
+    }
+
+    #[test]
+    fn typed_error_for_unknown_graph() {
+        match run_graph("no-such-row", &quick_cfg()) {
+            Err(Error::UnknownGraph { name }) => assert_eq!(name, "no-such-row"),
+            other => panic!("expected UnknownGraph, got {other:?}"),
+        }
     }
 }

@@ -1,0 +1,138 @@
+//! Structured errors for the library boundary.
+//!
+//! Every fallible operation in the session API ([`crate::session`]), the
+//! pipeline ([`crate::coordinator::pipeline`]), and the config layer
+//! ([`crate::config`]) returns this [`Error`] enum instead of a stringly
+//! `anyhow::Error`, so callers can match on failure modes (bad parameter
+//! vs. disconnected input vs. solver breakdown) instead of parsing
+//! messages. The binaries keep `anyhow` at the very top: [`Error`]
+//! implements [`std::error::Error`], so `?` converts it via `anyhow`'s
+//! blanket `From` impl.
+
+use std::fmt;
+
+/// `Result` specialized to the library's typed [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Typed failure modes of the sparsification library.
+#[derive(Debug)]
+pub enum Error {
+    /// The input graph is not connected (spectral sparsification is
+    /// defined per component; run `graph::largest_component` first).
+    Disconnected {
+        /// Number of connected components found.
+        components: usize,
+    },
+    /// A parameter failed validation.
+    BadParam {
+        /// Parameter name (e.g. `"alpha"`, `"run.scale"`).
+        name: &'static str,
+        /// What was wrong with it.
+        why: String,
+    },
+    /// A graph name that is not a row of the evaluation suite.
+    UnknownGraph {
+        /// The offending name.
+        name: String,
+    },
+    /// PCG exhausted its iteration budget above tolerance.
+    NoConvergence {
+        /// Iterations performed.
+        iters: usize,
+        /// Final relative residual.
+        residual: f64,
+    },
+    /// Preconditioner factorization broke down: the sparsifier's grounded
+    /// Laplacian is not positive definite.
+    NotPositiveDefinite {
+        /// Pivot index where the LDLᵀ factorization failed.
+        at: usize,
+        /// The offending pivot value.
+        pivot: f64,
+    },
+    /// Config file is malformed (parse error or unknown key).
+    Config(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Disconnected { components } => {
+                write!(f, "graph is not connected ({components} components)")
+            }
+            Error::BadParam { name, why } => write!(f, "invalid parameter `{name}`: {why}"),
+            Error::UnknownGraph { name } => write!(f, "unknown suite graph: {name}"),
+            Error::NoConvergence { iters, residual } => {
+                write!(f, "PCG did not converge: relres {residual:.3e} after {iters} iterations")
+            }
+            Error::NotPositiveDefinite { at, pivot } => {
+                write!(
+                    f,
+                    "preconditioner factorization failed: non-positive pivot {pivot} at index {at}"
+                )
+            }
+            Error::Config(msg) => write!(f, "config: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::solver::chol::NotPositiveDefinite> for Error {
+    fn from(e: crate::solver::chol::NotPositiveDefinite) -> Error {
+        Error::NotPositiveDefinite { at: e.at, pivot: e.pivot }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = Error::BadParam { name: "alpha", why: "must be positive".into() };
+        assert!(e.to_string().contains("alpha"));
+        assert!(e.to_string().contains("must be positive"));
+        let e = Error::Disconnected { components: 3 };
+        assert!(e.to_string().contains("3 components"));
+        let e = Error::NoConvergence { iters: 10, residual: 0.5 };
+        assert!(e.to_string().contains("10 iterations"));
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn converts_into_anyhow_at_the_binary_boundary() {
+        fn lib() -> Result<()> {
+            Err(Error::UnknownGraph { name: "nope".into() })
+        }
+        fn bin() -> anyhow::Result<()> {
+            lib()?;
+            Ok(())
+        }
+        let err = bin().unwrap_err().to_string();
+        assert!(err.contains("unknown suite graph"), "{err}");
+    }
+}

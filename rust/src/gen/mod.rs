@@ -1,5 +1,6 @@
 //! Synthetic graph generators and the 18-row evaluation suite
-//! (substitutes for the paper's SuiteSparse datasets; see DESIGN.md).
+//! (substitutes for the paper's SuiteSparse datasets; see `gen::suite`
+//! for the per-row substitution rationale).
 
 pub mod community;
 pub mod grid;

@@ -4,7 +4,7 @@
 //! SuiteSparse matrices (census/redistricting, SNAP social, coauthor /
 //! citation, DIMACS10 FE meshes); this box is offline, so each row is a
 //! synthetic graph from the same structural family at a scale that fits a
-//! single-core container (≈20–80× smaller; see DESIGN.md §Substitutions).
+//! single-core container (≈20–80× smaller).
 //! Family → regime correspondences that matter for the algorithms:
 //!
 //! * census grids → uniform small subtasks, feGRASS needs 1–6 passes;

@@ -124,8 +124,10 @@ fn dedup_general(raw: Vec<(u32, u32, f64)>) -> Vec<(u32, u32, f64)> {
     out
 }
 
-/// Write a graph as `coordinate real symmetric` MatrixMarket.
-pub fn write_mtx(g: &Graph, path: &Path) -> anyhow::Result<()> {
+/// Write a graph as `coordinate real symmetric` MatrixMarket. The only
+/// failure mode is I/O, so the error type says exactly that (the session
+/// layer maps it into `error::Error::Io`).
+pub fn write_mtx(g: &Graph, path: &Path) -> std::io::Result<()> {
     let f = std::fs::File::create(path)?;
     let mut w = BufWriter::new(f);
     writeln!(w, "%%MatrixMarket matrix coordinate real symmetric")?;

@@ -1,25 +1,74 @@
 //! # pdGRASS — parallel density-aware graph spectral sparsification
 //!
 //! Reproduction of *pdGRASS: A Fast Parallel Density-Aware Algorithm for
-//! Graph Spectral Sparsification* (CS.DC 2025) as a three-layer
-//! Rust + JAX + Pallas system. See `DESIGN.md` for the system inventory and
-//! the per-experiment index, and `EXPERIMENTS.md` for paper-vs-measured.
+//! Graph Spectral Sparsification* (CS.DC 2025) as a pure-Rust system with
+//! an optional XLA-compiled kernel path.
 //!
-//! Pipeline: build/load a graph → spanning tree on *effective weights*
-//! (Def. 1) → score off-tree edges by weighted *resistance distance*
-//! (Def. 2) → recover `α|V|` off-tree edges (feGRASS loose condition, or
-//! pdGRASS strict condition over LCA-grouped subtasks) → evaluate the
-//! sparsifier as a PCG preconditioner (pure-Rust path, or the XLA path
-//! executing the AOT-compiled Pallas SpMV kernel).
+//! ## Architecture
+//!
+//! The crate is layered bottom-up:
+//!
+//! * [`graph`] — CSR graphs, MatrixMarket I/O, connectivity, Laplacians.
+//! * [`tree`] — spanning-tree substrate: effective weights (Def. 1),
+//!   maximum spanning tree, binary-lifting LCA, resistance distances
+//!   (Def. 2).
+//! * [`recovery`] — off-tree edge recovery: the feGRASS baseline (loose
+//!   similarity) and pdGRASS (strict similarity over LCA subtasks, the
+//!   paper's core contribution).
+//! * [`par`] — the parallel substrate: a persistent work-stealing thread
+//!   pool with deterministic reductions and a move-based parallel sort.
+//! * [`solver`] — CSR SpMV, RCM ordering, sparse LDLᵀ, and the PCG
+//!   evaluation harness (the paper's sparsifier-quality metric).
+//! * [`session`] — **the primary API**: staged
+//!   `Sparsify → Prepared → Recovered → Sparsifier` sessions that compute
+//!   the invariant state (steps 1–3 of Algorithm 1) once and recover any
+//!   number of (α, strategy, threads) variants from it.
+//! * [`error`] — the typed [`Error`] enum every library-boundary
+//!   function returns.
+//! * [`coordinator`] / [`cli`] / [`config`] — experiment drivers
+//!   reproducing the paper's tables and figures, all wired through the
+//!   session API; plus the launcher surface.
+//! * [`gen`], [`runtime`], [`util`] — the synthetic evaluation suite, the
+//!   XLA/Pallas kernel runtime, and shared utilities.
+//!
+//! ## Quick start: prepare once, recover many
+//!
+//! Steps 1–3 (spanning tree on effective weights, resistance scoring,
+//! criticality sort) do not depend on the recovery parameters, so they
+//! are computed once per [`Prepared`] session; each
+//! [`Prepared::recover`] call pays only step 4:
+//!
+//! ```
+//! use pdgrass::{RecoverOpts, Sparsify};
+//!
+//! # fn main() -> pdgrass::Result<()> {
+//! let g = pdgrass::gen::grid(20, 20, 0.5, &mut pdgrass::util::Rng::new(1));
+//! let prepared = Sparsify::graph(g).named("demo").prepare()?;
+//!
+//! // Any number of recoveries reuse the prepared state (step 4 only):
+//! let sparse = prepared.recover(&RecoverOpts::new(0.05))?;
+//! let dense = prepared.recover(&RecoverOpts::new(0.10))?;
+//! assert!(dense.edges().len() > sparse.edges().len());
+//!
+//! // Evaluate a sparsifier as a PCG preconditioner (the paper's metric):
+//! let outcome = sparse.sparsifier().pcg(42, 1e-3, 10_000)?.require_converged()?;
+//! assert!(outcome.iterations > 0);
+//! # Ok(()) }
+//! ```
 
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod gen;
 pub mod graph;
 pub mod par;
 pub mod recovery;
 pub mod runtime;
+pub mod session;
 pub mod solver;
 pub mod tree;
 pub mod util;
+
+pub use error::{Error, Result};
+pub use session::{PcgOutcome, Prepared, RecoverOpts, Recovered, Sparsifier, Sparsify};

@@ -12,7 +12,7 @@
 use super::score::sort_by_score;
 use super::{Params, Recovery, Stats};
 use crate::graph::Graph;
-use crate::tree::{off_tree_edges, Spanning};
+use crate::tree::{off_tree_edges, OffTreeEdge, Spanning};
 use crate::util::EpochMarks;
 
 /// Run feGRASS off-tree edge recovery. Pure sequential reference
@@ -20,8 +20,21 @@ use crate::util::EpochMarks;
 pub fn fegrass(g: &Graph, sp: &Spanning, params: &Params) -> Recovery {
     let mut off = off_tree_edges(g, sp);
     sort_by_score(&mut off, 1);
-    let target = params.target(g.num_vertices()).min(off.len());
-    let mut covered = EpochMarks::new(g.num_vertices());
+    fegrass_sorted(g.num_vertices(), &off, sp, params)
+}
+
+/// The core loose-similarity loop over an already scored, score-sorted
+/// off-tree edge list — the primitive behind
+/// [`crate::session::Prepared::fegrass`], which shares the scoring + sort
+/// with the pdGRASS recoveries from the same session.
+pub fn fegrass_sorted(
+    n_vertices: usize,
+    off: &[OffTreeEdge],
+    sp: &Spanning,
+    params: &Params,
+) -> Recovery {
+    let target = params.target(n_vertices).min(off.len());
+    let mut covered = EpochMarks::new(n_vertices);
     let mut recovered: Vec<u32> = Vec::with_capacity(target);
     let mut remaining: Vec<u32> = (0..off.len() as u32).collect();
     let mut stats = Stats::default();

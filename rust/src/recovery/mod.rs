@@ -43,6 +43,25 @@ pub enum Strategy {
     Mixed,
 }
 
+impl std::str::FromStr for Strategy {
+    type Err = crate::error::Error;
+
+    /// Parse a strategy name (case-insensitive): `serial`, `outer`,
+    /// `inner`, or `mixed` — the config-file / CLI spelling.
+    fn from_str(s: &str) -> Result<Strategy, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "serial" => Ok(Strategy::Serial),
+            "outer" => Ok(Strategy::Outer),
+            "inner" => Ok(Strategy::Inner),
+            "mixed" => Ok(Strategy::Mixed),
+            _ => Err(crate::error::Error::BadParam {
+                name: "strategy",
+                why: format!("unknown strategy {s:?} (expected serial|outer|inner|mixed)"),
+            }),
+        }
+    }
+}
+
 /// Recovery parameters (paper defaults).
 #[derive(Clone, Copy, Debug)]
 pub struct Params {

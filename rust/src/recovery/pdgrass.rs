@@ -30,48 +30,71 @@ pub fn pdgrass(g: &Graph, sp: &Spanning, params: &Params) -> Recovery {
 /// As [`pdgrass`], optionally capturing the per-edge cost trace consumed
 /// by the scheduling simulator (`coordinator::schedsim`).
 pub fn pdgrass_traced(g: &Graph, sp: &Spanning, params: &Params, trace: bool) -> Recovery {
-    let mut step_ms = [0f64; 4];
     // Step 1: resistance distance for each off-tree edge (parallel).
     let t = crate::util::Timer::start();
     let mut off = off_tree_edges(g, sp);
-    step_ms[0] = t.ms();
+    let resistance_ms = t.ms();
     // Step 2: parallel stable sort by criticality, descending (moves
     // payloads via the sort's scratch buffer; clone-free since the
     // par::sort rewrite).
     let t = crate::util::Timer::start();
     sort_by_score(&mut off, params.threads);
-    step_ms[1] = t.ms();
+    let sort_ms = t.ms();
     // Step 3: subtasks by LCA, sorted by size.
     let t = crate::util::Timer::start();
     let subtasks = make_subtasks(&off);
-    step_ms[2] = t.ms();
+    let subtask_ms = t.ms();
 
-    let target = params.target(g.num_vertices()).min(off.len());
+    let mut rec = recover_sorted(g.num_vertices(), &off, &subtasks, sp, params, trace);
+    rec.step_ms[0] = resistance_ms;
+    rec.step_ms[1] = sort_ms;
+    rec.step_ms[2] = subtask_ms;
+    rec
+}
+
+/// Step 4 only, over precomputed steps 1–3: a score-sorted off-tree edge
+/// list and its LCA subtasks. This is the primitive behind
+/// [`crate::session::Prepared::recover`] — the prepare-once/recover-many
+/// split that lets α-sweeps amortize steps 1–3. `step_ms[0..3]` of the
+/// result are zero (the caller owns those timings); `step_ms[3]` is this
+/// call's wall-clock.
+pub fn recover_sorted(
+    n_vertices: usize,
+    off: &[OffTreeEdge],
+    subtasks: &[Subtask],
+    sp: &Spanning,
+    params: &Params,
+    trace: bool,
+) -> Recovery {
+    let target = params.target(n_vertices).min(off.len());
     let mut stats = Stats::default();
     stats.subtasks = subtasks.len();
     stats.biggest_subtask = subtasks.first().map(|s| s.len()).unwrap_or(0);
 
-    // Step 4: process subtasks under the chosen strategy.
-    let t = crate::util::Timer::start();
     let mut passes = 0usize;
     let mut recovered_global: Vec<u32> = Vec::new();
-    let mut active: Vec<Subtask> = subtasks;
     let mut cost_trace = CostTrace::default();
+    let t = crate::util::Timer::start();
 
-    while recovered_global.len() < target && active.iter().any(|s| !s.is_empty()) {
-        passes += 1;
-        let outcomes = run_pass(&off, sp, &active, params, &mut stats);
-        let mut leftovers: Vec<Subtask> = Vec::new();
-        for (st, oc) in active.iter().zip(&outcomes) {
-            recovered_global.extend_from_slice(&oc.recovered);
-            if !oc.leftover.is_empty() {
-                leftovers.push(Subtask { lca: st.lca, idxs: oc.leftover.clone() });
-            }
-            if trace && passes == 1 {
+    // Pass 1 runs over the *borrowed* subtask list — the strict condition
+    // recovers the target in a single pass on every suite graph, so the
+    // common case copies nothing. Only leftovers (rare fallback passes)
+    // are materialized.
+    let mut active: Vec<Subtask> = Vec::new();
+    if target > 0 && subtasks.iter().any(|s| !s.is_empty()) {
+        passes = 1;
+        let outcomes = run_pass(off, sp, subtasks, params, &mut stats);
+        if trace {
+            for oc in &outcomes {
                 cost_trace.subtask_costs.push(oc.costs.clone());
             }
         }
-        active = leftovers;
+        active = absorb(subtasks, &outcomes, &mut recovered_global);
+    }
+    while recovered_global.len() < target && active.iter().any(|s| !s.is_empty()) {
+        passes += 1;
+        let outcomes = run_pass(off, sp, &active, params, &mut stats);
+        active = absorb(&active, &outcomes, &mut recovered_global);
         if passes > 64 {
             break; // safety net; never hit in practice (single pass suffices)
         }
@@ -80,12 +103,30 @@ pub fn pdgrass_traced(g: &Graph, sp: &Spanning, params: &Params, trace: bool) ->
     // Global selection: best-scored `target` among recovered.
     // `recovered_global` holds indices into the score-sorted array, so
     // ascending index order IS descending score order.
+    let mut step_ms = [0f64; 4];
     step_ms[3] = t.ms();
     recovered_global.sort_unstable();
     recovered_global.truncate(target);
     let edges: Vec<u32> = recovered_global.iter().map(|&i| off[i as usize].eid).collect();
 
     Recovery { edges, passes, stats, trace: trace.then_some(cost_trace), step_ms }
+}
+
+/// Collect a pass's recovered edges and materialize the leftover
+/// subtasks for the (rare) next pass.
+fn absorb(
+    active: &[Subtask],
+    outcomes: &[SubtaskOutcome],
+    recovered_global: &mut Vec<u32>,
+) -> Vec<Subtask> {
+    let mut leftovers: Vec<Subtask> = Vec::new();
+    for (st, oc) in active.iter().zip(outcomes) {
+        recovered_global.extend_from_slice(&oc.recovered);
+        if !oc.leftover.is_empty() {
+            leftovers.push(Subtask { lca: st.lca, idxs: oc.leftover.clone() });
+        }
+    }
+    leftovers
 }
 
 /// One full pass over the active subtasks under the configured strategy.

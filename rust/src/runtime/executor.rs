@@ -153,7 +153,7 @@ fn default_dir() -> String {
 /// buffers once** at construction and every `apply` uses `execute_b`, so
 /// the per-dispatch traffic is just the `x` vector — uploading the 2·n·k
 /// matrix literals per call dominated the dispatch cost before this
-/// (see EXPERIMENTS.md §Perf).
+/// (measured by `benches/micro.rs`).
 pub struct XlaSpmv {
     exe: Rc<xla::PjRtLoadedExecutable>,
     vals_buf: xla::PjRtBuffer,

@@ -1,0 +1,588 @@
+//! Staged sparsification sessions — the crate's primary entry point.
+//!
+//! The paper's Algorithm 1 is explicitly staged: spanning tree (step 1),
+//! resistance scoring (step 2), sort (step 3), and subtask recovery
+//! (step 4). Only step 4 depends on the recovery parameters (α, strategy,
+//! thread count), so this module splits the pipeline at exactly that
+//! boundary:
+//!
+//! ```text
+//! Sparsify::graph(g) ─┐
+//! Sparsify::suite(..) ─┴─ prepare() ──► Prepared        (steps 1–3, once)
+//!                                          │ recover(&RecoverOpts)   (step 4, many)
+//!                                          ▼
+//!                                       Recovered ── sparsifier() ──► Sparsifier
+//!                                                                        │ pcg(..)
+//!                                                                        │ write_mtx(..)
+//! ```
+//!
+//! A [`Prepared`] owns the graph, its spanning tree, and the scored +
+//! score-sorted off-tree edge list with its LCA subtasks. It is `Sync`:
+//! any number of [`Prepared::recover`] calls — different α, strategy, or
+//! thread count — can run repeatedly and concurrently against the same
+//! prepared state, each paying only step 4. The α-sweep experiment
+//! drivers (`coordinator::experiments`) lean on this to pay steps 1–3
+//! once per graph instead of once per (graph, α) pair.
+//!
+//! All fallibility is the typed [`enum@Error`]: bad parameters are
+//! [`Error::BadParam`], disconnected inputs are [`Error::Disconnected`],
+//! solver breakdowns are [`Error::NotPositiveDefinite`] /
+//! [`Error::NoConvergence`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+use crate::graph::{self, Graph};
+use crate::recovery::score::sort_by_score;
+use crate::recovery::subtask::{make_subtasks, Subtask};
+use crate::recovery::{self, CostTrace, Params, Stats, Strategy};
+use crate::tree::{build_spanning, off_tree_edges, OffTreeEdge, Spanning};
+use crate::util::Timer;
+
+/// Monotone id source for [`Prepared`] instances (instrumentation: lets
+/// tests assert that a driver reused one `Prepared` across a sweep).
+static NEXT_PREPARED_ID: AtomicU64 = AtomicU64::new(1);
+/// Process-wide count of [`Sparsify::prepare`] calls (steps 1–3 paid).
+static PREPARE_COUNT: AtomicU64 = AtomicU64::new(0);
+/// Process-wide count of [`Prepared::recover`] calls (step 4 paid).
+static RECOVER_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// Total [`Sparsify::prepare`] calls in this process so far.
+pub fn prepare_count() -> u64 {
+    PREPARE_COUNT.load(Ordering::Relaxed)
+}
+
+/// Total [`Prepared::recover`] / [`Prepared::recover_traced`] calls in
+/// this process so far.
+pub fn recover_count() -> u64 {
+    RECOVER_COUNT.load(Ordering::Relaxed)
+}
+
+/// Session builder: pick the input graph, then [`Sparsify::prepare`].
+#[derive(Debug)]
+pub struct Sparsify {
+    graph: Graph,
+    name: Option<String>,
+    threads: usize,
+}
+
+impl Sparsify {
+    /// Start a session from an arbitrary graph (e.g. `graph::read_mtx`
+    /// output or a generator).
+    pub fn graph(g: Graph) -> Sparsify {
+        Sparsify { graph: g, name: None, threads: crate::par::num_threads() }
+    }
+
+    /// Start a session from an evaluation-suite row (built at `scale`
+    /// with `seed`). Fails with [`Error::UnknownGraph`] for names outside
+    /// the 18-row suite and [`Error::BadParam`] for a non-positive scale.
+    pub fn suite(name: &str, scale: f64, seed: u64) -> Result<Sparsify> {
+        if !crate::gen::SUITE.iter().any(|e| e.name == name) {
+            return Err(Error::UnknownGraph { name: name.to_string() });
+        }
+        if !scale.is_finite() || scale <= 0.0 {
+            return Err(Error::BadParam {
+                name: "scale",
+                why: format!("must be positive and finite, got {scale}"),
+            });
+        }
+        let g = crate::gen::suite::build(name, scale, seed);
+        Ok(Sparsify { name: Some(name.to_string()), ..Sparsify::graph(g) })
+    }
+
+    /// Label the session (reports fall back to `"graph"` otherwise).
+    pub fn named(mut self, name: &str) -> Sparsify {
+        self.name = Some(name.to_string());
+        self
+    }
+
+    /// Thread count for the preparation sort (step 3's criticality sort,
+    /// the only prepare stage with a per-call thread knob; the spanning
+    /// tree and resistance annotation use the environment's thread count,
+    /// exactly as the pre-session pipeline did). The sorted order is
+    /// thread-count independent, so this only affects timing.
+    pub fn threads(mut self, threads: usize) -> Sparsify {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Run steps 1–3 once: spanning tree on effective weights, resistance
+    /// scoring of every off-tree edge, score sort, LCA subtask grouping.
+    /// The worker pool is warmed before any timed stage.
+    pub fn prepare(self) -> Result<Prepared> {
+        if self.graph.num_vertices() == 0 || self.graph.num_edges() == 0 {
+            return Err(Error::BadParam {
+                name: "graph",
+                why: "graph has no vertices or no edges".into(),
+            });
+        }
+        let (_, components) = graph::components(&self.graph);
+        if components != 1 {
+            return Err(Error::Disconnected { components });
+        }
+        // Warm the persistent pool outside the timed stages.
+        crate::par::ThreadPool::global();
+
+        let t = Timer::start();
+        let spanning = build_spanning(&self.graph);
+        let spanning_ms = t.ms();
+
+        let t = Timer::start();
+        let mut off = off_tree_edges(&self.graph, &spanning);
+        let resistance_ms = t.ms();
+
+        let t = Timer::start();
+        sort_by_score(&mut off, self.threads);
+        let sort_ms = t.ms();
+
+        let t = Timer::start();
+        let subtasks = make_subtasks(&off);
+        let subtask_ms = t.ms();
+
+        PREPARE_COUNT.fetch_add(1, Ordering::Relaxed);
+        Ok(Prepared {
+            id: NEXT_PREPARED_ID.fetch_add(1, Ordering::Relaxed),
+            name: self.name,
+            graph: self.graph,
+            spanning,
+            off,
+            subtasks,
+            spanning_ms,
+            prep_ms: [resistance_ms, sort_ms, subtask_ms],
+        })
+    }
+}
+
+/// Recovery options for one [`Prepared::recover`] call — everything
+/// step 4 depends on. Validated against the graph size when used.
+#[derive(Clone, Copy, Debug)]
+pub struct RecoverOpts {
+    /// Edge-recovery ratio α: recover `⌈α|V|⌉` off-tree edges.
+    pub alpha: f64,
+    /// BFS step-size constant `c` (Def. 3; paper default 8).
+    pub beta_cap: u32,
+    /// Parallel strategy for step 4 (paper default: Mixed).
+    pub strategy: Strategy,
+    /// Worker threads `p`.
+    pub threads: usize,
+    /// Inner-parallel block size (paper sets it to `p`).
+    pub block: usize,
+    /// A subtask is "large" if it has ≥ this many edges (paper: 1e5)...
+    pub cutoff_edges: usize,
+    /// ...or covers ≥ this fraction of all off-tree edges (paper: 0.10).
+    pub cutoff_frac: f64,
+    /// Judge-before-Parallel optimization (Appendix C) enabled?
+    pub jbp: bool,
+}
+
+impl Default for RecoverOpts {
+    fn default() -> RecoverOpts {
+        RecoverOpts::with_threads(0.02, crate::par::num_threads())
+    }
+}
+
+impl RecoverOpts {
+    /// Paper-default options at `alpha`, threads from the environment.
+    pub fn new(alpha: f64) -> RecoverOpts {
+        RecoverOpts { alpha, ..RecoverOpts::default() }
+    }
+
+    /// Paper-default options at `alpha` with an explicit thread count.
+    pub fn with_threads(alpha: f64, threads: usize) -> RecoverOpts {
+        let threads = threads.max(1);
+        RecoverOpts {
+            alpha,
+            beta_cap: 8,
+            strategy: Strategy::Mixed,
+            threads,
+            block: threads,
+            cutoff_edges: 100_000,
+            cutoff_frac: 0.10,
+            jbp: true,
+        }
+    }
+
+    /// Validate against a graph with `n_vertices` vertices. Returns
+    /// [`Error::BadParam`] naming the offending field.
+    pub fn validate(&self, n_vertices: usize) -> Result<()> {
+        if !self.alpha.is_finite() || self.alpha <= 0.0 {
+            return Err(Error::BadParam {
+                name: "alpha",
+                why: format!("must be positive and finite, got {}", self.alpha),
+            });
+        }
+        if self.alpha * n_vertices as f64 < 1.0 {
+            return Err(Error::BadParam {
+                name: "alpha",
+                why: format!(
+                    "alpha * |V| = {:.3} < 1: the recovery budget is below one edge \
+                     (|V| = {n_vertices}); raise alpha or use a larger graph",
+                    self.alpha * n_vertices as f64
+                ),
+            });
+        }
+        if !self.cutoff_frac.is_finite() || self.cutoff_frac <= 0.0 || self.cutoff_frac > 1.0 {
+            return Err(Error::BadParam {
+                name: "cutoff_frac",
+                why: format!("must lie in (0, 1], got {}", self.cutoff_frac),
+            });
+        }
+        if self.block == 0 {
+            return Err(Error::BadParam { name: "block", why: "must be at least 1".into() });
+        }
+        if self.threads == 0 {
+            return Err(Error::BadParam { name: "threads", why: "must be at least 1".into() });
+        }
+        Ok(())
+    }
+
+    /// The equivalent low-level [`recovery::Params`].
+    pub fn params(&self) -> Params {
+        Params {
+            alpha: self.alpha,
+            beta_cap: self.beta_cap,
+            strategy: self.strategy,
+            threads: self.threads,
+            block: self.block,
+            cutoff_edges: self.cutoff_edges,
+            cutoff_frac: self.cutoff_frac,
+            jbp: self.jbp,
+        }
+    }
+}
+
+/// Steps 1–3 of Algorithm 1, computed once: the graph, its spanning tree,
+/// and the scored, score-sorted off-tree edge list grouped into LCA
+/// subtasks. `Sync` — recover from as many threads as you like.
+#[derive(Debug)]
+pub struct Prepared {
+    id: u64,
+    name: Option<String>,
+    graph: Graph,
+    spanning: Spanning,
+    /// Off-tree edges, score-sorted descending (step 2's output).
+    off: Vec<OffTreeEdge>,
+    /// LCA subtasks over `off`, size-sorted descending (step 3's output).
+    subtasks: Vec<Subtask>,
+    spanning_ms: f64,
+    /// Wall-clock of [resistance annotation, sort, subtask grouping], ms.
+    prep_ms: [f64; 3],
+}
+
+impl Prepared {
+    /// Unique id of this prepared state (instrumentation: sweeps sharing
+    /// one `Prepared` produce reports with equal ids).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Session label, if any.
+    pub fn name(&self) -> Option<&str> {
+        self.name.as_deref()
+    }
+
+    /// The owned input graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// The spanning tree (shared by every recovery from this session).
+    pub fn spanning(&self) -> &Spanning {
+        &self.spanning
+    }
+
+    /// Number of off-tree edges available for recovery.
+    pub fn num_off_tree(&self) -> usize {
+        self.off.len()
+    }
+
+    /// Wall-clock of the spanning-tree build, ms.
+    pub fn spanning_ms(&self) -> f64 {
+        self.spanning_ms
+    }
+
+    /// Wall-clock of [resistance annotation, sort, subtask grouping], ms
+    /// — the steps every recovery from this session amortizes.
+    pub fn prep_ms(&self) -> [f64; 3] {
+        self.prep_ms
+    }
+
+    /// Step 4 only: pdGRASS strict-similarity recovery over the cached
+    /// subtasks. Callable repeatedly (and concurrently) with any options.
+    pub fn recover(&self, opts: &RecoverOpts) -> Result<Recovered<'_>> {
+        self.recover_impl(opts, false)
+    }
+
+    /// As [`Prepared::recover`], additionally capturing the per-edge cost
+    /// trace consumed by the scheduling simulator.
+    pub fn recover_traced(&self, opts: &RecoverOpts) -> Result<Recovered<'_>> {
+        self.recover_impl(opts, true)
+    }
+
+    fn recover_impl(&self, opts: &RecoverOpts, trace: bool) -> Result<Recovered<'_>> {
+        opts.validate(self.graph.num_vertices())?;
+        let params = opts.params();
+        let mut rec = recovery::pdgrass::recover_sorted(
+            self.graph.num_vertices(),
+            &self.off,
+            &self.subtasks,
+            &self.spanning,
+            &params,
+            trace,
+        );
+        rec.step_ms = [self.prep_ms[0], self.prep_ms[1], self.prep_ms[2], rec.step_ms[3]];
+        RECOVER_COUNT.fetch_add(1, Ordering::Relaxed);
+        Ok(Recovered { prepared: self, rec })
+    }
+
+    /// feGRASS baseline (loose similarity, serial, multi-pass) over the
+    /// same cached scored edge list — so quality comparisons are
+    /// apples-to-apples with [`Prepared::recover`].
+    pub fn fegrass(&self, opts: &RecoverOpts) -> Result<Recovered<'_>> {
+        opts.validate(self.graph.num_vertices())?;
+        let params = opts.params();
+        let rec = recovery::fegrass::fegrass_sorted(
+            self.graph.num_vertices(),
+            &self.off,
+            &self.spanning,
+            &params,
+        );
+        Ok(Recovered { prepared: self, rec })
+    }
+}
+
+/// The outcome of one recovery (step 4) against a [`Prepared`] session.
+#[derive(Debug)]
+pub struct Recovered<'p> {
+    prepared: &'p Prepared,
+    rec: recovery::Recovery,
+}
+
+impl<'p> Recovered<'p> {
+    /// Recovered off-tree edge ids (graph edge ids), best-score-first.
+    pub fn edges(&self) -> &[u32] {
+        &self.rec.edges
+    }
+
+    /// Passes over the off-tree edge list (pdGRASS: expected 1).
+    pub fn passes(&self) -> usize {
+        self.rec.passes
+    }
+
+    /// Instrumentation counters.
+    pub fn stats(&self) -> &Stats {
+        &self.rec.stats
+    }
+
+    /// Per-edge cost trace (present after [`Prepared::recover_traced`]).
+    pub fn trace(&self) -> Option<&CostTrace> {
+        self.rec.trace.as_ref()
+    }
+
+    /// Per-step wall-clock, ms: `[resistance, sort, subtasks, recovery]`.
+    /// The first three are the shared preparation timings; only the
+    /// fourth was paid by this call. (All zero for the feGRASS baseline,
+    /// which has no step structure.)
+    pub fn step_ms(&self) -> [f64; 4] {
+        self.rec.step_ms
+    }
+
+    /// The underlying low-level [`recovery::Recovery`].
+    pub fn recovery(&self) -> &recovery::Recovery {
+        &self.rec
+    }
+
+    /// Assemble the sparsifier handle: spanning tree + recovered edges,
+    /// `|V| − 1 + ⌈α|V|⌉` edges as in §II.B.
+    pub fn sparsifier(&self) -> Sparsifier<'p> {
+        let p = recovery::sparsifier(&self.prepared.graph, &self.prepared.spanning, &self.rec.edges);
+        Sparsifier { prepared: self.prepared, sparsifier: p }
+    }
+}
+
+/// A sparsifier `P` of the session graph `G`, ready for evaluation or
+/// export.
+#[derive(Debug)]
+pub struct Sparsifier<'p> {
+    prepared: &'p Prepared,
+    sparsifier: Graph,
+}
+
+impl Sparsifier<'_> {
+    /// The sparsifier graph itself.
+    pub fn graph(&self) -> &Graph {
+        &self.sparsifier
+    }
+
+    /// Edge count of the sparsifier.
+    pub fn num_edges(&self) -> usize {
+        self.sparsifier.num_edges()
+    }
+
+    /// The paper's quality metric: solve `L_G x = b` by PCG with this
+    /// sparsifier as the preconditioner, `b` drawn deterministically from
+    /// `rhs_seed`. Non-convergence is reported in the outcome (use
+    /// [`PcgOutcome::require_converged`] to turn it into a typed error);
+    /// a factorization breakdown is [`Error::NotPositiveDefinite`].
+    pub fn pcg(&self, rhs_seed: u64, tol: f64, maxit: usize) -> Result<PcgOutcome> {
+        if !tol.is_finite() || tol <= 0.0 {
+            return Err(Error::BadParam {
+                name: "tol",
+                why: format!("must be positive and finite, got {tol}"),
+            });
+        }
+        if maxit == 0 {
+            return Err(Error::BadParam { name: "maxit", why: "must be at least 1".into() });
+        }
+        let res =
+            crate::solver::pcg_eval(&self.prepared.graph, &self.sparsifier, rhs_seed, tol, maxit)?;
+        Ok(PcgOutcome {
+            iterations: res.iterations,
+            relres: res.relres,
+            converged: res.converged,
+            history: res.history,
+        })
+    }
+
+    /// Write the sparsifier as `coordinate real symmetric` MatrixMarket.
+    pub fn write_mtx(&self, path: &std::path::Path) -> Result<()> {
+        graph::write_mtx(&self.sparsifier, path)?;
+        Ok(())
+    }
+}
+
+/// Result of a [`Sparsifier::pcg`] evaluation.
+#[derive(Clone, Debug)]
+pub struct PcgOutcome {
+    /// Iterations performed.
+    pub iterations: usize,
+    /// Final relative residual `‖r‖/‖b‖`.
+    pub relres: f64,
+    /// True iff the tolerance was met within the iteration cap.
+    pub converged: bool,
+    /// Relative residual after each iteration (for convergence plots).
+    pub history: Vec<f64>,
+}
+
+impl PcgOutcome {
+    /// Promote non-convergence to the typed [`Error::NoConvergence`].
+    pub fn require_converged(self) -> Result<PcgOutcome> {
+        if self.converged {
+            Ok(self)
+        } else {
+            Err(Error::NoConvergence { iters: self.iterations, residual: self.relres })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn prepared_is_sync_and_send() {
+        fn assert_bounds<T: Sync + Send>() {}
+        assert_bounds::<Prepared>();
+    }
+
+    fn badparam_name(err: Error) -> &'static str {
+        match err {
+            Error::BadParam { name, .. } => name,
+            other => panic!("expected BadParam, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_nonpositive_alpha() {
+        for alpha in [0.0, -0.5, f64::NAN, f64::INFINITY] {
+            let err = RecoverOpts::new(alpha).validate(1000).unwrap_err();
+            assert_eq!(badparam_name(err), "alpha", "alpha={alpha}");
+        }
+    }
+
+    #[test]
+    fn rejects_alpha_below_one_recovered_edge() {
+        // α·|V| = 0.5 < 1 → nothing would be recovered.
+        let err = RecoverOpts::new(0.005).validate(100).unwrap_err();
+        assert_eq!(badparam_name(err), "alpha");
+        // …but exactly one edge is fine.
+        RecoverOpts::new(0.01).validate(100).unwrap();
+    }
+
+    #[test]
+    fn rejects_cutoff_frac_outside_unit_interval() {
+        for frac in [0.0, -0.1, 1.5, f64::NAN] {
+            let opts = RecoverOpts { cutoff_frac: frac, ..RecoverOpts::new(0.05) };
+            let err = opts.validate(1000).unwrap_err();
+            assert_eq!(badparam_name(err), "cutoff_frac", "frac={frac}");
+        }
+        // The boundary 1.0 is inclusive.
+        RecoverOpts { cutoff_frac: 1.0, ..RecoverOpts::new(0.05) }.validate(1000).unwrap();
+    }
+
+    #[test]
+    fn rejects_zero_block() {
+        let opts = RecoverOpts { block: 0, ..RecoverOpts::new(0.05) };
+        assert_eq!(badparam_name(opts.validate(1000).unwrap_err()), "block");
+    }
+
+    #[test]
+    fn rejects_zero_threads() {
+        let opts = RecoverOpts { threads: 0, ..RecoverOpts::new(0.05) };
+        assert_eq!(badparam_name(opts.validate(1000).unwrap_err()), "threads");
+    }
+
+    #[test]
+    fn recover_rejects_before_doing_work() {
+        let g = crate::gen::grid(10, 10, 0.5, &mut Rng::new(1));
+        let prepared = Sparsify::graph(g).prepare().unwrap();
+        let err = prepared.recover(&RecoverOpts::new(-1.0)).unwrap_err();
+        assert_eq!(badparam_name(err), "alpha");
+    }
+
+    #[test]
+    fn unknown_suite_graph_is_typed() {
+        match Sparsify::suite("not-a-row", 1.0, 1) {
+            Err(Error::UnknownGraph { name }) => assert_eq!(name, "not-a-row"),
+            other => panic!("expected UnknownGraph, got {other:?}"),
+        }
+        match Sparsify::suite("15-M6", -1.0, 1) {
+            Err(Error::BadParam { name, .. }) => assert_eq!(name, "scale"),
+            other => panic!("expected BadParam, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn disconnected_graph_is_typed() {
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (2, 3, 1.0)]);
+        match Sparsify::graph(g).prepare() {
+            Err(Error::Disconnected { components }) => assert_eq!(components, 2),
+            other => panic!("expected Disconnected, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pcg_outcome_promotes_nonconvergence() {
+        let ok = PcgOutcome { iterations: 3, relres: 1e-5, converged: true, history: vec![] };
+        assert_eq!(ok.require_converged().unwrap().iterations, 3);
+        let bad = PcgOutcome { iterations: 7, relres: 0.2, converged: false, history: vec![] };
+        match bad.require_converged() {
+            Err(Error::NoConvergence { iters, residual }) => {
+                assert_eq!(iters, 7);
+                assert!((residual - 0.2).abs() < 1e-12);
+            }
+            other => panic!("expected NoConvergence, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pcg_rejects_bad_tol_and_maxit() {
+        let g = crate::gen::grid(8, 8, 0.5, &mut Rng::new(2));
+        let prepared = Sparsify::graph(g).prepare().unwrap();
+        let r = prepared.recover(&RecoverOpts::new(0.05)).unwrap();
+        let p = r.sparsifier();
+        assert_eq!(badparam_name(p.pcg(1, 0.0, 100).unwrap_err()), "tol");
+        assert_eq!(badparam_name(p.pcg(1, 1e-3, 0).unwrap_err()), "maxit");
+    }
+}

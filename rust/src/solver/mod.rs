@@ -9,7 +9,8 @@ pub mod spmv;
 pub use chol::{LdlFactor, NotPositiveDefinite};
 pub use order::{bandwidth, permute_sym, rcm};
 pub use pcg::{
-    pcg, pcg_iterations, pcg_par, Identity, Jacobi, PcgResult, Preconditioner, SparsifierPrecond,
+    pcg, pcg_eval, pcg_iterations, pcg_par, Identity, Jacobi, PcgResult, Preconditioner,
+    SparsifierPrecond,
 };
 pub use spmv::{
     axpy, axpy_par, dot, dot_par, norm2, norm2_par, spmv, spmv_par, xpay, xpay_par,

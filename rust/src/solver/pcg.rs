@@ -150,9 +150,11 @@ pub fn pcg_par<M: Preconditioner>(
     let mut p = z.clone();
     let mut rz = dot_par(&r, &z, threads);
     let mut ap = vec![0.0; n];
-    // Pre-size so `push` never reallocates: the loop below is
-    // allocation-free end to end.
-    let mut history = Vec::with_capacity(maxit);
+    // Pre-size so `push` never reallocates for any realistic cap: the
+    // loop below is allocation-free end to end. Bounded so an
+    // astronomically large `maxit` cannot demand gigabytes up front —
+    // beyond the bound the history simply grows amortized.
+    let mut history = Vec::with_capacity(maxit.min(1 << 20));
     let mut relres = norm2_par(&r, threads) / bnorm;
     if relres <= tol {
         return PcgResult { x, iterations: 0, relres, converged: true, history };
@@ -181,6 +183,24 @@ pub fn pcg_par<M: Preconditioner>(
     PcgResult { x, iterations: maxit, relres, converged: false, history }
 }
 
+/// The paper's quality measurement, one place: solve `L_G x = b` (ground
+/// vertex 0) with the sparsifier preconditioner and a deterministic
+/// seeded-normal RHS. Shared by [`pcg_iterations`] and the session API's
+/// `Sparsifier::pcg`, so both evaluate exactly the same system.
+pub fn pcg_eval(
+    g: &Graph,
+    sparsifier: &Graph,
+    rhs_seed: u64,
+    tol: f64,
+    maxit: usize,
+) -> Result<PcgResult, NotPositiveDefinite> {
+    let lg = grounded_laplacian(g, 0);
+    let m = SparsifierPrecond::new(sparsifier)?;
+    let mut rng = crate::util::Rng::new(rhs_seed);
+    let b: Vec<f64> = (0..lg.n).map(|_| rng.normal()).collect();
+    Ok(pcg(&lg, &b, &m, tol, maxit))
+}
+
 /// Convenience: PCG iteration count for solving `L_G x = b` with the
 /// sparsifier preconditioner — the paper's quality measurement. The RHS is
 /// deterministic per `seed`; tolerance and cap follow §V (1e-3; cap high
@@ -192,12 +212,8 @@ pub fn pcg_iterations(
     tol: f64,
     maxit: usize,
 ) -> anyhow::Result<(usize, bool)> {
-    let lg = grounded_laplacian(g, 0);
-    let m = SparsifierPrecond::new(sparsifier)
+    let res = pcg_eval(g, sparsifier, seed, tol, maxit)
         .map_err(|e| anyhow::anyhow!("preconditioner factorization failed: {e}"))?;
-    let mut rng = crate::util::Rng::new(seed);
-    let b: Vec<f64> = (0..lg.n).map(|_| rng.normal()).collect();
-    let res = pcg(&lg, &b, &m, tol, maxit);
     Ok((res.iterations, res.converged))
 }
 

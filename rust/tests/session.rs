@@ -1,0 +1,141 @@
+//! Session-API integration: prepare-once/recover-many equivalence with
+//! fresh end-to-end runs, concurrent recovery from a shared `Prepared`,
+//! and typed errors at the library boundary.
+
+use pdgrass::recovery::{self, Params, Strategy};
+use pdgrass::tree::build_spanning;
+use pdgrass::{Error, RecoverOpts, Sparsify};
+
+/// Recovering at α = 0.02 and then α = 0.10 from ONE `Prepared` yields
+/// bitwise-identical edge sets to two fresh end-to-end runs that rebuild
+/// steps 1–3 from scratch with the pre-session wiring.
+#[test]
+fn shared_prepared_matches_fresh_end_to_end_runs() {
+    let (name, scale, seed) = ("07-com-DBLP", 0.05, 11);
+    let prepared = Sparsify::suite(name, scale, seed).unwrap().prepare().unwrap();
+    for alpha in [0.02, 0.10] {
+        let shared = prepared.recover(&RecoverOpts::with_threads(alpha, 2)).unwrap();
+        // fresh run: new graph, new spanning tree, steps 1–4 end to end
+        let g = pdgrass::gen::suite::build(name, scale, seed);
+        let sp = build_spanning(&g);
+        let fresh = recovery::pdgrass(&g, &sp, &Params::new(alpha, 2));
+        assert_eq!(shared.edges(), fresh.edges.as_slice(), "alpha={alpha}");
+        assert_eq!(shared.passes(), fresh.passes, "alpha={alpha}");
+    }
+}
+
+/// The same holds for the feGRASS baseline recovered through the session.
+#[test]
+fn shared_prepared_fegrass_matches_fresh_run() {
+    let (name, scale, seed) = ("01-mi2010", 0.05, 3);
+    let prepared = Sparsify::suite(name, scale, seed).unwrap().prepare().unwrap();
+    let shared = prepared.fegrass(&RecoverOpts::with_threads(0.05, 1)).unwrap();
+    let g = pdgrass::gen::suite::build(name, scale, seed);
+    let sp = build_spanning(&g);
+    let fresh = recovery::fegrass(&g, &sp, &Params::new(0.05, 1));
+    assert_eq!(shared.edges(), fresh.edges.as_slice());
+    assert_eq!(shared.passes(), fresh.passes);
+}
+
+/// `Prepared` is `Sync`: two threads recover from the same session
+/// concurrently and reproduce the single-thread result exactly.
+#[test]
+fn prepared_recovers_concurrently_from_two_threads() {
+    let prepared = Sparsify::suite("15-M6", 0.03, 5).unwrap().prepare().unwrap();
+    let opts = RecoverOpts {
+        strategy: Strategy::Serial,
+        threads: 1,
+        block: 1,
+        ..RecoverOpts::new(0.05)
+    };
+    let baseline = prepared.recover(&opts).unwrap().edges().to_vec();
+    let p = &prepared;
+    std::thread::scope(|s| {
+        let h1 = s.spawn(move || p.recover(&opts).unwrap().edges().to_vec());
+        let h2 = s.spawn(move || p.recover(&opts).unwrap().edges().to_vec());
+        assert_eq!(h1.join().unwrap(), baseline);
+        assert_eq!(h2.join().unwrap(), baseline);
+    });
+}
+
+/// Any (strategy, threads) combination recovered from one `Prepared`
+/// agrees with the serial result — scheduling independence survives the
+/// prepare/recover split.
+#[test]
+fn strategies_agree_on_shared_prepared() {
+    let prepared = Sparsify::suite("11-citationCiteseer", 0.03, 9).unwrap().prepare().unwrap();
+    let serial = prepared
+        .recover(&RecoverOpts {
+            strategy: Strategy::Serial,
+            ..RecoverOpts::with_threads(0.05, 1)
+        })
+        .unwrap()
+        .edges()
+        .to_vec();
+    for strategy in [Strategy::Outer, Strategy::Inner, Strategy::Mixed] {
+        let opts = RecoverOpts {
+            strategy,
+            // small cutoff so Mixed/Inner exercise the blocked path
+            cutoff_edges: 200,
+            ..RecoverOpts::with_threads(0.05, 4)
+        };
+        let r = prepared.recover(&opts).unwrap();
+        assert_eq!(r.edges(), serial.as_slice(), "strategy {strategy:?} diverged");
+    }
+}
+
+/// The full session flow: recover → sparsifier → pcg → write_mtx, with
+/// the sparsifier size law holding per α.
+#[test]
+fn session_flow_end_to_end() {
+    let prepared = Sparsify::suite("14-NACA0015", 0.05, 7).unwrap().prepare().unwrap();
+    let n = prepared.graph().num_vertices();
+    for alpha in [0.02, 0.10] {
+        let r = prepared.recover(&RecoverOpts::new(alpha)).unwrap();
+        let p = r.sparsifier();
+        let expect = n - 1 + (alpha * n as f64).ceil() as usize;
+        assert_eq!(p.num_edges(), expect, "alpha={alpha}");
+        let outcome = p.pcg(42, 1e-3, 50_000).unwrap().require_converged().unwrap();
+        assert!(outcome.iterations > 0);
+        assert_eq!(outcome.history.len(), outcome.iterations);
+    }
+    // export + re-read round trip
+    let r = prepared.recover(&RecoverOpts::new(0.05)).unwrap();
+    let p = r.sparsifier();
+    let dir = std::env::temp_dir().join("pdgrass_session");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sparsifier.mtx");
+    p.write_mtx(&path).unwrap();
+    let back = pdgrass::graph::read_mtx(&path).unwrap();
+    assert_eq!(back.num_edges(), p.num_edges());
+    std::fs::remove_file(&path).ok();
+}
+
+/// Io failures surface as the typed `Error::Io`.
+#[test]
+fn write_mtx_failure_is_typed_io_error() {
+    let prepared = Sparsify::suite("01-mi2010", 0.02, 1).unwrap().prepare().unwrap();
+    let r = prepared.recover(&RecoverOpts::new(0.05)).unwrap();
+    let p = r.sparsifier();
+    let bogus = std::path::Path::new("/no/such/dir/ever/sparsifier.mtx");
+    match p.write_mtx(bogus) {
+        Err(Error::Io(_)) => {}
+        other => panic!("expected Io error, got {other:?}"),
+    }
+}
+
+/// Prepare-side instrumentation: a recover-many sweep pays prepare once.
+#[test]
+fn prepare_and_recover_counters_track_the_split() {
+    let prepares_before = pdgrass::session::prepare_count();
+    let recovers_before = pdgrass::session::recover_count();
+    let prepared = Sparsify::suite("08-com-Amazon", 0.03, 2).unwrap().prepare().unwrap();
+    for alpha in [0.02, 0.05, 0.10] {
+        prepared.recover(&RecoverOpts::new(alpha)).unwrap();
+    }
+    // Other tests may run concurrently in this process, so the deltas are
+    // lower bounds — but a sweep of 3 recoveries from one session must
+    // add at least (1 prepare, 3 recoveries).
+    assert!(pdgrass::session::prepare_count() >= prepares_before + 1);
+    assert!(pdgrass::session::recover_count() >= recovers_before + 3);
+}
