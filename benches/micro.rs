@@ -317,7 +317,62 @@ fn bench_alpha_sweep() {
     );
 }
 
+/// Giant-subtask worst case (the feGRASS pathology, §V): a star-like hub
+/// concentrates off-tree edges in one dominant LCA subtask, so Outer
+/// degrades to a single worker grinding the subtask serially. Sharded
+/// splits it into shards that speculate concurrently. Wall-clock numbers
+/// are informational on a 1-core container; the structural comparison —
+/// the same work–span replay the scaling figures use — is the
+/// per-strategy makespan at 8 simulated threads, where Sharded must beat
+/// Outer (which by definition sits at 1x on a single giant subtask).
+fn bench_giant_subtask() {
+    use pdgrass::coordinator::schedsim;
+    let g = pdgrass::gen::hub_graph(30_000, 1, 20_000, &mut Rng::new(21));
+    let sp = build_spanning(&g);
+    let base = Params { cutoff_edges: 1000, shard_min: 512, ..Params::new(0.10, 8) };
+    let outer = Params { strategy: Strategy::Outer, ..base };
+    let sharded = Params { strategy: Strategy::Sharded, ..base };
+    let off_n = pdgrass::tree::off_tree_edges(&g, &sp).len() as u64;
+    let (_, ms_outer) = min_of(3, || recovery::pdgrass(&g, &sp, &outer).edges.len());
+    report("giant_subtask_outer", 3, ms_outer, off_n, "edge");
+    let (_, ms_sharded) = min_of(3, || recovery::pdgrass(&g, &sp, &sharded).edges.len());
+    report("giant_subtask_sharded", 3, ms_sharded, off_n, "edge");
+    // Structural makespan at 8 threads, each strategy replayed from its
+    // own measured cost trace (a Sharded trace charges wasted speculative
+    // explores that Outer never pays, so Outer gets its own trace).
+    let biggest = |r: &recovery::Recovery| -> Vec<(u32, u32)> {
+        r.trace
+            .as_ref()
+            .expect("trace requested")
+            .subtask_costs
+            .iter()
+            .max_by_key(|c| c.len())
+            .expect("hub graph must yield subtasks")
+            .clone()
+    };
+    let outer_costs = biggest(&recovery::pdgrass::pdgrass_traced(&g, &sp, &outer, true));
+    let costs = biggest(&recovery::pdgrass::pdgrass_traced(&g, &sp, &sharded, true));
+    // Outer hands the whole subtask to one worker: makespan == its
+    // serial units, at any thread count.
+    let outer_units: u64 = outer_costs.iter().map(|&(c, e)| c as u64 + e as u64).sum();
+    let (s, par) = schedsim::simulate_sharded(&costs, &schedsim::SimParams::sharded(8, 512));
+    let sharded_units = s + par;
+    println!(
+        "{:<38} makespan(8t) outer {} units vs sharded {} units — sharded {:.2}x",
+        "",
+        outer_units,
+        sharded_units,
+        outer_units as f64 / sharded_units.max(1) as f64
+    );
+    assert!(
+        sharded_units < outer_units,
+        "sharded must beat outer on the giant subtask at 8 threads"
+    );
+}
+
 fn main() {
+    println!("# micro bench: giant-subtask recovery, Outer vs Sharded (star-graph worst case)");
+    bench_giant_subtask();
     println!("# micro bench: alpha-sweep with shared Prepared vs recompute (session API)");
     bench_alpha_sweep();
     println!("# micro bench: parallel-substrate dispatch cost (spawn vs persistent pool)");

@@ -92,6 +92,12 @@ fn pipeline_cfg(cli: &Cli) -> anyhow::Result<(PipelineConfig, RunConfig)> {
     if let Some(s) = cli.str("strategy") {
         run.strategy = s.parse()?;
     }
+    if let Some(s) = cli.str("shard-min") {
+        run.shard_min = s.parse()?;
+        if run.shard_min == 0 {
+            anyhow::bail!("--shard-min: must be at least 1");
+        }
+    }
     let mut p = run.pipeline();
     p.alpha = cli.f64("alpha", p.alpha)?;
     Ok((p, run))
@@ -226,7 +232,8 @@ OPTIONS
   --seed N       generator/RHS seed
   --alpha A      recovery ratio (default 0.02)
   --threads N    recovery threads (0 = auto)
-  --strategy S   serial|outer|inner|mixed (default mixed)
+  --strategy S   serial|outer|inner|mixed|sharded (default mixed)
+  --shard-min N  sharded-strategy target shard size (default 4096)
   --config F     TOML run config ([run] section)
   --quick        tiny scale + 1 trial (smoke)
 ";
@@ -264,6 +271,26 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("strategy"), "{err}");
+    }
+
+    #[test]
+    fn sharded_strategy_runs_end_to_end() {
+        // Tiny scale smoke: the sharded path through the whole CLI stack.
+        run(&s(&[
+            "sparsify", "--graph", "09-com-Youtube", "--scale", "0.02", "--alpha", "0.05",
+            "--strategy", "sharded", "--shard-min", "32",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn zero_shard_min_is_a_clean_error() {
+        let err = run(&s(&[
+            "sparsify", "--graph", "15-M6", "--scale", "0.02", "--shard-min", "0",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("shard-min"), "{err}");
     }
 
     #[test]

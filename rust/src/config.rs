@@ -222,6 +222,8 @@ pub struct RunConfig {
     pub strategy: Strategy,
     /// BFS step-size constant `c` (Def. 3).
     pub beta_cap: u32,
+    /// Shard size for `strategy = "sharded"` (must be ≥ 1).
+    pub shard_min: usize,
 }
 
 impl Default for RunConfig {
@@ -238,6 +240,7 @@ impl Default for RunConfig {
             threads: 0,
             strategy: Strategy::Mixed,
             beta_cap: 8,
+            shard_min: 4096,
         }
     }
 }
@@ -250,6 +253,7 @@ impl RunConfig {
         let known = [
             "run.alphas", "run.graphs", "run.scale", "run.seed", "run.tol", "run.maxit",
             "run.trials", "run.quality", "run.threads", "run.strategy", "run.beta_cap",
+            "run.shard_min",
         ];
         for key in doc.keys() {
             if !known.contains(&key) {
@@ -356,6 +360,18 @@ impl RunConfig {
                 why: format!("{b} exceeds u32 range"),
             })?;
         }
+        if let Some(v) = doc.get("run.shard_min") {
+            cfg.shard_min = v.as_usize().ok_or_else(|| Error::BadParam {
+                name: "run.shard_min",
+                why: "not a non-negative int".into(),
+            })?;
+            if cfg.shard_min == 0 {
+                return Err(Error::BadParam {
+                    name: "run.shard_min",
+                    why: "must be at least 1".into(),
+                });
+            }
+        }
         Ok(cfg)
     }
 
@@ -375,9 +391,9 @@ impl RunConfig {
     }
 
     /// Recovery options at `alpha` per this config: `threads`/`strategy`/
-    /// `beta_cap` map straight onto [`RecoverOpts`] (`threads == 0`
-    /// resolves to the environment's thread count). Range validation
-    /// happens when the options are used against a graph
+    /// `beta_cap`/`shard_min` map straight onto [`RecoverOpts`]
+    /// (`threads == 0` resolves to the environment's thread count). Range
+    /// validation happens when the options are used against a graph
     /// ([`RecoverOpts::validate`]).
     pub fn recover_opts(&self, alpha: f64) -> RecoverOpts {
         let threads = if self.threads == 0 { crate::par::num_threads() } else { self.threads };
@@ -385,6 +401,7 @@ impl RunConfig {
             alpha,
             beta_cap: self.beta_cap,
             strategy: self.strategy,
+            shard_min: self.shard_min,
             ..RecoverOpts::with_threads(alpha, threads)
         }
     }
@@ -415,7 +432,7 @@ mod tests {
         let doc = Doc::parse(
             "[run]\nalphas = [0.1]\nscale = 0.25\nseed = 7\ntol = 0.001\nmaxit = 100\n\
              trials = 1\nquality = false\ngraphs = [\"15-M6\"]\nthreads = 4\n\
-             strategy = \"outer\"\nbeta_cap = 6\n",
+             strategy = \"sharded\"\nbeta_cap = 6\nshard_min = 512\n",
         )
         .unwrap();
         let cfg = RunConfig::from_doc(&doc).unwrap();
@@ -425,8 +442,9 @@ mod tests {
         assert!(!cfg.quality);
         assert_eq!(cfg.graphs, vec!["15-M6"]);
         assert_eq!(cfg.threads, 4);
-        assert_eq!(cfg.strategy, Strategy::Outer);
+        assert_eq!(cfg.strategy, Strategy::Sharded);
         assert_eq!(cfg.beta_cap, 6);
+        assert_eq!(cfg.shard_min, 512);
         let p = cfg.pipeline();
         assert_eq!(p.alpha, 0.1);
         assert_eq!(p.trials, 1);
@@ -434,8 +452,22 @@ mod tests {
         let opts = cfg.recover_opts(0.1);
         assert_eq!(opts.threads, 4);
         assert_eq!(opts.block, 4);
-        assert_eq!(opts.strategy, Strategy::Outer);
+        assert_eq!(opts.strategy, Strategy::Sharded);
         assert_eq!(opts.beta_cap, 6);
+        assert_eq!(opts.shard_min, 512);
+    }
+
+    #[test]
+    fn shard_min_zero_rejected() {
+        let doc = Doc::parse("[run]\nshard_min = 0\n").unwrap();
+        match RunConfig::from_doc(&doc) {
+            Err(Error::BadParam { name, .. }) => assert_eq!(name, "run.shard_min"),
+            other => panic!("expected BadParam, got {other:?}"),
+        }
+        // default survives when the key is absent
+        let cfg = RunConfig::from_doc(&Doc::parse("[run]\n").unwrap()).unwrap();
+        assert_eq!(cfg.shard_min, 4096);
+        assert_eq!(cfg.recover_opts(0.05).shard_min, 4096);
     }
 
     #[test]

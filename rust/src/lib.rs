@@ -14,7 +14,15 @@
 //!   (Def. 2).
 //! * [`recovery`] — off-tree edge recovery: the feGRASS baseline (loose
 //!   similarity) and pdGRASS (strict similarity over LCA subtasks, the
-//!   paper's core contribution).
+//!   paper's core contribution). Step 4 runs under one of five
+//!   strategies; beyond the paper's serial/outer/inner/mixed, the
+//!   `sharded` strategy splits a giant subtask into contiguous
+//!   score-order shards that speculate concurrently on the pool
+//!   (exploration is a pure function of the edge, so speculative results
+//!   are a memo-cache), then commits serially in fixed shard order —
+//!   bitwise identical to the serial pass at any thread count, which is
+//!   what lets the skewed worst cases (one dominant LCA subtask) scale
+//!   past one block at a time.
 //! * [`par`] — the parallel substrate: a persistent work-stealing thread
 //!   pool with deterministic reductions and a move-based parallel sort.
 //! * [`solver`] — CSR SpMV, RCM ordering, sparse LDLᵀ, and the PCG

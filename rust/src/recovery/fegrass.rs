@@ -119,6 +119,7 @@ mod tests {
             cutoff_edges: 100_000,
             cutoff_frac: 0.10,
             jbp: true,
+            shard_min: 4096,
         }
     }
 

@@ -23,8 +23,30 @@
 //! the Mixed strategy it runs *nested inside* an outer pooled task; one
 //! block is dispatched per explore phase, so pooled dispatch (queue push
 //! instead of thread spawn/join per block) matters for throughput.
+//!
+//! # Sharded speculation ([`process_sharded`])
+//!
+//! The blocked scheme still serializes a giant subtask at block
+//! granularity: one commit barrier per `p` explores. On the feGRASS worst
+//! cases (one dominant LCA subtask) that leaves the pool idle between
+//! blocks. [`process_sharded`] removes the barrier: the subtask is cut
+//! into contiguous score-order shards ([`super::subtask::shard_ranges`]),
+//! each shard runs the *whole* strict pass speculatively against its own
+//! local mark buffer (a pooled [`super::subctx::ShardScratch`]), and a
+//! serial commit then replays the exact serial algorithm in fixed shard
+//! order. The commit is sound because [`SubtaskCtx::explore`] is a *pure*
+//! function of the position — the mark state only decides *whether* an
+//! edge explores, never what its exploration returns — so speculative
+//! explore results are a memo-cache the commit can consult: a position
+//! the commit finds marked discards its speculative explore (a false
+//! positive, wasted parallel work), and a position the commit finds
+//! unmarked but that speculation skipped is explored inline (a *commit
+//! miss*, rare because cross-shard marks are the only way speculation
+//! diverges). The recovered set is therefore bitwise identical to
+//! [`process_serial`] at every thread count, by construction.
 
-use super::subctx::SubtaskCtx;
+use super::subctx::{ScratchPool, SubtaskCtx};
+use super::subtask::shard_ranges;
 use super::{Params, Stats};
 use crate::par;
 use crate::tree::{OffTreeEdge, Spanning};
@@ -166,6 +188,113 @@ pub fn process_inner(
     out
 }
 
+/// Per-shard speculation result: for each position in the shard's range
+/// (in order), `None` if the shard's own speculation had already marked
+/// it, else the pure exploration result `(marks, cost)`.
+struct ShardSpec {
+    explored: Vec<Option<(Vec<u32>, u32)>>,
+}
+
+/// Sharded speculative processing of one subtask (see the module docs
+/// for the execution model and the correctness argument).
+///
+/// The shard layout depends only on `(idxs.len(), params.shard_min)`, so
+/// the outcome — recovered set, leftovers, *and every counter in
+/// [`Stats`]* — is identical at every `params.threads`; threads only
+/// change how many shards speculate concurrently. Subtasks that fit in a
+/// single shard skip speculation entirely and run [`process_serial`].
+pub fn process_sharded(
+    off: &[OffTreeEdge],
+    sp: &Spanning,
+    idxs: &[u32],
+    params: &Params,
+) -> SubtaskOutcome {
+    let m = idxs.len();
+    let ranges = shard_ranges(m, params.shard_min);
+    if ranges.len() <= 1 {
+        // One shard's speculation is exact — just run the serial pass.
+        return process_serial(off, sp, idxs, params);
+    }
+    let ctx = SubtaskCtx::new(off, idxs);
+    let scratch = ScratchPool::new();
+
+    // ---- speculative phase: shards fan out across the pool ----
+    // Each shard runs the strict pass as if it started the subtask:
+    // local marks only, but the full mark lists (which may point into
+    // later shards) are kept for the commit.
+    let specs: Vec<ShardSpec> = par::par_map(&ranges, params.threads, |r| {
+        let mut s = scratch.take(r.len());
+        let mut explored: Vec<Option<(Vec<u32>, u32)>> = Vec::with_capacity(r.len());
+        for pos in r.clone() {
+            if s.marked[pos - r.start] {
+                explored.push(None);
+                continue;
+            }
+            let (marks, cost) = ctx.explore(sp, pos, params.beta_cap);
+            for &p2 in &marks {
+                if (p2 as usize) < r.end {
+                    s.marked[p2 as usize - r.start] = true;
+                }
+            }
+            explored.push(Some((marks, cost)));
+        }
+        scratch.put(s);
+        ShardSpec { explored }
+    });
+
+    // ---- deterministic commit: the serial strict pass in fixed shard
+    // order, with speculative explores as a memo-cache ----
+    let mut out = SubtaskOutcome::default();
+    out.costs.reserve(m);
+    out.stats.sharded_subtasks = 1;
+    out.stats.shards = ranges.len() as u64;
+    let mut marked = vec![false; m];
+    for (r, spec) in ranges.iter().zip(&specs) {
+        for pos in r.clone() {
+            let gidx = idxs[pos];
+            let spec_entry = &spec.explored[pos - r.start];
+            out.stats.check_units += 1;
+            if spec_entry.is_some() {
+                out.stats.explored_in_parallel += 1;
+            }
+            if marked[pos] {
+                // Serial would skip this edge. A speculative explore for
+                // it was wasted parallel work; its cost stays visible to
+                // the scheduling simulator (as in the blocked scheme).
+                match spec_entry {
+                    Some((_, cost)) => {
+                        out.stats.false_positives += 1;
+                        out.costs.push((1, *cost));
+                    }
+                    None => out.costs.push((1, 0)),
+                }
+                out.leftover.push(gidx);
+                continue;
+            }
+            // Serial would recover and explore this edge. Explore results
+            // are pure, so the speculative one (if any) is exact; a miss
+            // (speculation skipped it, but its in-shard marker turned out
+            // to be a false positive) is explored inline.
+            let computed;
+            let (marks, cost): (&[u32], u32) = match spec_entry {
+                Some((marks, cost)) => (marks, *cost),
+                None => {
+                    out.stats.commit_misses += 1;
+                    computed = ctx.explore(sp, pos, params.beta_cap);
+                    (&computed.0, computed.1)
+                }
+            };
+            for &p2 in marks {
+                marked[p2 as usize] = true;
+            }
+            out.recovered.push(gidx);
+            out.costs.push((1, cost));
+            out.stats.bfs_units += cost as u64;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,6 +315,7 @@ mod tests {
             cutoff_edges: 100_000,
             cutoff_frac: 0.10,
             jbp,
+            shard_min: 32,
         }
     }
 
@@ -285,6 +415,89 @@ mod tests {
         assert_eq!(with.stats.edges_in_blocks, with.stats.explored_in_parallel);
         // Same recovery either way.
         assert_eq!(with.recovered, without.recovered);
+    }
+
+    #[test]
+    fn sharded_matches_serial_oracle() {
+        // Every shard size — including degenerate and boundary ones —
+        // must reproduce the serial recovered/leftover sets exactly, at
+        // every thread count.
+        for seed in [1u64, 2, 3] {
+            let g = gen::community(
+                gen::CommunityParams {
+                    n: 600,
+                    mean_size: 12.0,
+                    tail: 1.7,
+                    intra_p: 0.5,
+                    bridges: 2,
+                    max_size: 80,
+                },
+                &mut Rng::new(seed),
+            );
+            let sp = build_spanning(&g);
+            let mut off = off_tree_edges(&g, &sp);
+            sort_by_score(&mut off, 1);
+            let subtasks = crate::recovery::subtask::make_subtasks(&off);
+            let big = &subtasks[0];
+            let serial = process_serial(&off, &sp, &big.idxs, &params(8, true));
+            for shard_min in [1usize, 2, 7, big.len() / 3 + 1, big.len(), big.len() + 100] {
+                for threads in [1usize, 2, 8] {
+                    let mut p = params(8, true);
+                    p.shard_min = shard_min;
+                    p.threads = threads;
+                    let sharded = process_sharded(&off, &sp, &big.idxs, &p);
+                    assert_eq!(
+                        serial.recovered,
+                        sharded.recovered,
+                        "seed={seed} shard_min={shard_min} threads={threads}"
+                    );
+                    assert_eq!(
+                        serial.leftover,
+                        sharded.leftover,
+                        "seed={seed} shard_min={shard_min} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_accounting_counts_each_edge_once() {
+        let g = gen::hub_graph(1500, 2, 700, &mut Rng::new(9));
+        let sp = build_spanning(&g);
+        let mut off = off_tree_edges(&g, &sp);
+        sort_by_score(&mut off, 1);
+        let subtasks = crate::recovery::subtask::make_subtasks(&off);
+        let big = &subtasks[0];
+        let m = big.len();
+        assert!(m > 50, "need a real subtask, got {m}");
+        let serial = process_serial(&off, &sp, &big.idxs, &params(8, true));
+        let mut p = params(8, true);
+        p.shard_min = 16;
+        let sharded = process_sharded(&off, &sp, &big.idxs, &p);
+        // Exactly one cost entry and one check per judged edge, and the
+        // recovered/leftover split partitions the subtask.
+        assert_eq!(sharded.costs.len(), m);
+        assert_eq!(sharded.stats.check_units, m as u64);
+        assert_eq!(sharded.recovered.len() + sharded.leftover.len(), m);
+        assert_eq!(sharded.stats.shards, m.div_ceil(16) as u64);
+        // Committed BFS work matches serial bitwise (explore is pure, so
+        // committed recoveries charge identical unit costs).
+        assert_eq!(sharded.stats.bfs_units, serial.stats.bfs_units);
+        assert_eq!(sharded.recovered, serial.recovered);
+        // Thread count changes nothing — not even the wasted-work stats.
+        for threads in [1usize, 2, 8] {
+            let mut pt = p;
+            pt.threads = threads;
+            let r = process_sharded(&off, &sp, &big.idxs, &pt);
+            assert_eq!(r.recovered, sharded.recovered, "threads={threads}");
+            assert_eq!(r.costs, sharded.costs, "threads={threads}");
+            assert_eq!(
+                format!("{:?}", r.stats),
+                format!("{:?}", sharded.stats),
+                "threads={threads}"
+            );
+        }
     }
 
     #[test]

@@ -13,7 +13,9 @@
 //!   neighborhoods, with `β* = min(dist(u,lca), dist(v,lca), c)` (Eq. 8).
 //!   Strictly-similar edges provably share their LCA (Lemma 6), so edges
 //!   are grouped by LCA into **independent subtasks** (Lemma 7), processed
-//!   with serial / outer / inner / mixed parallel strategies (§IV).
+//!   with serial / outer / inner / mixed / sharded parallel strategies
+//!   (§IV; sharded is this repo's extension for skewed inputs whose one
+//!   giant subtask would otherwise serialize the inner-parallel phase).
 
 pub mod fegrass;
 pub mod inner;
@@ -41,22 +43,30 @@ pub enum Strategy {
     /// Paper default: large subtasks inner-parallel one-by-one first, then
     /// the small ones outer-parallel.
     Mixed,
+    /// Like [`Strategy::Mixed`], but each large subtask is split into
+    /// contiguous shards of ~`shard_min` edges that speculate concurrently
+    /// on the pool; a serial commit in fixed shard order then reproduces
+    /// the strict-condition pass exactly (see [`inner::process_sharded`]).
+    Sharded,
 }
 
 impl std::str::FromStr for Strategy {
     type Err = crate::error::Error;
 
     /// Parse a strategy name (case-insensitive): `serial`, `outer`,
-    /// `inner`, or `mixed` — the config-file / CLI spelling.
+    /// `inner`, `mixed`, or `sharded` — the config-file / CLI spelling.
     fn from_str(s: &str) -> Result<Strategy, Self::Err> {
         match s.to_ascii_lowercase().as_str() {
             "serial" => Ok(Strategy::Serial),
             "outer" => Ok(Strategy::Outer),
             "inner" => Ok(Strategy::Inner),
             "mixed" => Ok(Strategy::Mixed),
+            "sharded" => Ok(Strategy::Sharded),
             _ => Err(crate::error::Error::BadParam {
                 name: "strategy",
-                why: format!("unknown strategy {s:?} (expected serial|outer|inner|mixed)"),
+                why: format!(
+                    "unknown strategy {s:?} (expected serial|outer|inner|mixed|sharded)"
+                ),
             }),
         }
     }
@@ -81,6 +91,12 @@ pub struct Params {
     pub cutoff_frac: f64,
     /// Judge-before-Parallel optimization (Appendix C) enabled?
     pub jbp: bool,
+    /// Target shard size for [`Strategy::Sharded`]: a large subtask is
+    /// split into `ceil(len / shard_min)` near-equal contiguous shards
+    /// (so a subtask needs more than `shard_min` edges to actually shard).
+    /// Shard shapes depend only on the subtask size, never on the thread
+    /// count, keeping sharded stats and traces thread-count independent.
+    pub shard_min: usize,
 }
 
 impl Params {
@@ -95,6 +111,7 @@ impl Params {
             cutoff_edges: 100_000,
             cutoff_frac: 0.10,
             jbp: true,
+            shard_min: 4096,
         }
     }
 
@@ -134,6 +151,13 @@ pub struct Stats {
     pub subtasks: usize,
     /// Subtasks processed with inner parallelism.
     pub inner_subtasks: usize,
+    /// Subtasks processed with sharded speculation ([`Strategy::Sharded`]).
+    pub sharded_subtasks: usize,
+    /// Shard speculation tasks run by the Sharded strategy.
+    pub shards: u64,
+    /// Sharded commits that had to explore serially because the position
+    /// was speculatively skipped but no earlier commit actually marked it.
+    pub commit_misses: u64,
 }
 
 impl Stats {
@@ -149,6 +173,9 @@ impl Stats {
         self.biggest_subtask = self.biggest_subtask.max(o.biggest_subtask);
         self.subtasks += o.subtasks;
         self.inner_subtasks += o.inner_subtasks;
+        self.sharded_subtasks += o.sharded_subtasks;
+        self.shards += o.shards;
+        self.commit_misses += o.commit_misses;
     }
 }
 
@@ -227,11 +254,37 @@ mod tests {
 
     #[test]
     fn stats_merge_adds() {
-        let mut a = Stats { check_units: 1, biggest_subtask: 5, ..Default::default() };
-        let b = Stats { check_units: 2, biggest_subtask: 9, subtasks: 3, ..Default::default() };
+        let mut a = Stats { check_units: 1, biggest_subtask: 5, shards: 2, ..Default::default() };
+        let b = Stats {
+            check_units: 2,
+            biggest_subtask: 9,
+            subtasks: 3,
+            shards: 4,
+            commit_misses: 5,
+            sharded_subtasks: 1,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.check_units, 3);
         assert_eq!(a.biggest_subtask, 9);
         assert_eq!(a.subtasks, 3);
+        assert_eq!(a.shards, 6);
+        assert_eq!(a.commit_misses, 5);
+        assert_eq!(a.sharded_subtasks, 1);
+    }
+
+    #[test]
+    fn strategy_parses_all_spellings() {
+        for (s, want) in [
+            ("serial", Strategy::Serial),
+            ("OUTER", Strategy::Outer),
+            ("Inner", Strategy::Inner),
+            ("mixed", Strategy::Mixed),
+            ("sharded", Strategy::Sharded),
+            ("ShArDeD", Strategy::Sharded),
+        ] {
+            assert_eq!(s.parse::<Strategy>().unwrap(), want, "{s}");
+        }
+        assert!("warp".parse::<Strategy>().is_err());
     }
 }

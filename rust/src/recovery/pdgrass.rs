@@ -1,11 +1,23 @@
 //! pdGRASS (Algorithm 1): strict-similarity recovery over LCA subtasks
-//! with serial / outer / inner / mixed parallel strategies.
+//! with serial / outer / inner / mixed / sharded parallel strategies.
 //!
 //! All parallel strategies dispatch onto the persistent pool
 //! (`par::pool`): Outer fans subtasks out with `par_map`, Mixed
 //! additionally runs inner-parallel blocks *from inside* pooled tasks —
 //! the nested-submission shape the pool's scoped execution model exists
 //! for. Outputs are scheduling-independent (`all_strategies_agree`).
+//!
+//! Sharded is the repo's answer to the skewed worst cases (§V): where
+//! Mixed walks a giant subtask one block of `p` edges at a time —
+//! explore-barrier-commit, over and over — Sharded cuts the subtask into
+//! contiguous score-order shards that each speculate the *entire* strict
+//! pass concurrently on the pool, then a serial commit in fixed shard
+//! order replays the serial algorithm using the speculative explorations
+//! as a memo-cache (exploration is a pure function of the position, so
+//! cached results are exact; see `inner::process_sharded`). The recovered
+//! edge set is bitwise identical to the serial pass at every thread
+//! count, and the stats/trace are thread-count independent because shard
+//! shapes depend only on the subtask size and `shard_min`.
 //!
 //! Steps: 1) resistance distances per off-tree edge (one LCA query each),
 //! 2) parallel stable sort by criticality, 3) subtask creation by shared
@@ -14,7 +26,7 @@
 //! pass** on every suite graph; a fallback pass loop keeps the target
 //! guarantee airtight anyway.
 
-use super::inner::{process_inner, process_serial, SubtaskOutcome};
+use super::inner::{process_inner, process_serial, process_sharded, SubtaskOutcome};
 use super::score::sort_by_score;
 use super::subtask::{make_subtasks, split_large, Subtask};
 use super::{CostTrace, Params, Recovery, Stats, Strategy};
@@ -164,28 +176,49 @@ fn run_pass(
                 oc
             })
             .collect(),
-        Strategy::Mixed => {
-            // Large subtasks first, one by one, with inner parallelism;
-            // then the small ones across threads (paper §IV.A).
-            let (large, small) =
-                split_large(active, total_off, params.cutoff_edges, params.cutoff_frac);
-            let mut slots: Vec<Option<SubtaskOutcome>> = vec![None; active.len()];
-            for &li in &large {
-                let oc = process_inner(off, sp, &active[li].idxs, params);
-                stats.inner_subtasks += 1;
-                stats.merge(&oc.stats);
-                slots[li] = Some(oc);
-            }
-            let small_outcomes = par::par_map(&small, params.threads, |&si| {
-                process_serial(off, sp, &active[si].idxs, params)
-            });
-            for (&si, oc) in small.iter().zip(small_outcomes) {
-                stats.merge(&oc.stats);
-                slots[si] = Some(oc);
-            }
-            slots.into_iter().map(|s| s.expect("subtask slot unfilled")).collect()
-        }
+        // Large subtasks first, one by one (blocked inner parallelism for
+        // Mixed, concurrent shard speculation for Sharded — see
+        // `inner::process_sharded`); then the small ones across threads
+        // (paper §IV.A).
+        Strategy::Mixed => run_split_pass(off, sp, active, params, stats, total_off, false),
+        Strategy::Sharded => run_split_pass(off, sp, active, params, stats, total_off, true),
     }
+}
+
+/// Shared Mixed/Sharded pass body: process the large subtasks one by one
+/// with the strategy's large-subtask processor, then the small ones
+/// outer-parallel, keeping outcomes in the original subtask order.
+fn run_split_pass(
+    off: &[OffTreeEdge],
+    sp: &Spanning,
+    active: &[Subtask],
+    params: &Params,
+    stats: &mut Stats,
+    total_off: usize,
+    sharded: bool,
+) -> Vec<SubtaskOutcome> {
+    let (large, small) = split_large(active, total_off, params.cutoff_edges, params.cutoff_frac);
+    let mut slots: Vec<Option<SubtaskOutcome>> = vec![None; active.len()];
+    for &li in &large {
+        let oc = if sharded {
+            // counts itself in `stats.sharded_subtasks` only when it
+            // actually speculates (a single-shard subtask runs serially)
+            process_sharded(off, sp, &active[li].idxs, params)
+        } else {
+            stats.inner_subtasks += 1;
+            process_inner(off, sp, &active[li].idxs, params)
+        };
+        stats.merge(&oc.stats);
+        slots[li] = Some(oc);
+    }
+    let small_outcomes = par::par_map(&small, params.threads, |&si| {
+        process_serial(off, sp, &active[si].idxs, params)
+    });
+    for (&si, oc) in small.iter().zip(small_outcomes) {
+        stats.merge(&oc.stats);
+        slots[si] = Some(oc);
+    }
+    slots.into_iter().map(|s| s.expect("subtask slot unfilled")).collect()
 }
 
 #[cfg(test)]
@@ -205,6 +238,7 @@ mod tests {
             cutoff_edges: 200, // small graphs in tests → exercise inner path
             cutoff_frac: 0.10,
             jbp: true,
+            shard_min: 64, // small graphs in tests → exercise sharding
         }
     }
 
@@ -230,7 +264,7 @@ mod tests {
         let g = test_graph(2);
         let sp = build_spanning(&g);
         let base = pdgrass(&g, &sp, &params(0.05, Strategy::Serial));
-        for strat in [Strategy::Outer, Strategy::Inner, Strategy::Mixed] {
+        for strat in [Strategy::Outer, Strategy::Inner, Strategy::Mixed, Strategy::Sharded] {
             let r = pdgrass(&g, &sp, &params(0.05, strat));
             assert_eq!(r.edges, base.edges, "strategy {strat:?} diverged");
         }

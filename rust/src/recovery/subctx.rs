@@ -86,6 +86,55 @@ impl<'a> SubtaskCtx<'a> {
     }
 }
 
+/// Reusable per-shard speculation scratch: the shard-local mark bits
+/// (`marked[pos - shard_start]`) used by
+/// [`super::inner::process_sharded`]'s speculative phase.
+///
+/// Shards far outnumber workers, so scratches are pooled
+/// ([`ScratchPool`]) and reused across shards instead of being allocated
+/// per shard: a worker takes one, speculates a shard, and returns it.
+#[derive(Default)]
+pub struct ShardScratch {
+    /// Shard-local speculative mark bits.
+    pub marked: Vec<bool>,
+}
+
+impl ShardScratch {
+    /// Clear and resize for a shard of `len` edges.
+    fn reset(&mut self, len: usize) {
+        self.marked.clear();
+        self.marked.resize(len, false);
+    }
+}
+
+/// A pool of [`ShardScratch`] buffers shared by the workers speculating
+/// one subtask's shards. `take`/`put` use a mutex, but each lock guards a
+/// single `Vec` pop/push — negligible next to a shard's BFS work — and
+/// reuse keeps the steady state at one allocation per *worker*, not one
+/// per shard.
+pub struct ScratchPool {
+    free: std::sync::Mutex<Vec<ShardScratch>>,
+}
+
+impl ScratchPool {
+    /// An empty pool; scratches are created on first [`ScratchPool::take`].
+    pub fn new() -> ScratchPool {
+        ScratchPool { free: std::sync::Mutex::new(Vec::new()) }
+    }
+
+    /// Take a scratch sized (and cleared) for a shard of `len` edges.
+    pub fn take(&self, len: usize) -> ShardScratch {
+        let mut s = self.free.lock().unwrap().pop().unwrap_or_default();
+        s.reset(len);
+        s
+    }
+
+    /// Return a scratch for reuse by the next shard.
+    pub fn put(&self, s: ShardScratch) {
+        self.free.lock().unwrap().push(s);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +187,20 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn scratch_pool_reuses_and_resets() {
+        let pool = ScratchPool::new();
+        let mut s = pool.take(4);
+        assert_eq!(s.marked, vec![false; 4]);
+        s.marked[2] = true;
+        pool.put(s);
+        // Reused scratch comes back cleared and resized.
+        let s2 = pool.take(2);
+        assert_eq!(s2.marked, vec![false; 2]);
+        let s3 = pool.take(6);
+        assert_eq!(s3.marked, vec![false; 6]);
     }
 
     #[test]

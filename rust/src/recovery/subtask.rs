@@ -47,6 +47,33 @@ pub fn make_subtasks(off_sorted: &[OffTreeEdge]) -> Vec<Subtask> {
     subtasks
 }
 
+/// Split `0..m` into near-equal contiguous shard ranges with target size
+/// `shard_size` (the `shard_min` knob of [`crate::recovery::Params`]):
+/// `k = ceil(m / shard_size)` shards whose lengths differ by at most one,
+/// the remainder spread over the leading shards. Deterministic in
+/// `(m, shard_size)` alone — the thread count never changes shard shapes,
+/// which keeps sharded stats and cost traces thread-count independent.
+/// `m == 0` yields no shards; `0 < m <= shard_size` yields exactly one
+/// (the threshold-exactly-met case degenerates to the serial pass).
+pub fn shard_ranges(m: usize, shard_size: usize) -> Vec<std::ops::Range<usize>> {
+    if m == 0 {
+        return Vec::new();
+    }
+    let size = shard_size.max(1);
+    let k = m.div_ceil(size);
+    let base = m / k;
+    let rem = m % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, m, "shards must cover 0..m exactly");
+    out
+}
+
 /// Split subtasks into (large, small) index lists per the paper's cutoff:
 /// a subtask is large if it has ≥ `cutoff_edges` edges or covers ≥
 /// `cutoff_frac` of all off-tree edges.
@@ -111,5 +138,60 @@ mod tests {
         let (large, small) = split_large(&st, 60, 10, 1.1);
         assert_eq!(large, vec![0]);
         assert_eq!(small, vec![1, 2]);
+    }
+
+    #[test]
+    fn split_large_boundaries() {
+        let st = vec![
+            Subtask { lca: 0, idxs: (0..10).collect() },
+            Subtask { lca: 1, idxs: (10..19).collect() },
+        ];
+        // edge-count threshold exactly met is large (>=, not >)
+        let (large, small) = split_large(&st, 19, 10, 1.1);
+        assert_eq!(large, vec![0]);
+        assert_eq!(small, vec![1]);
+        // fraction threshold exactly met is large: frac_cut = ceil(0.5*19) = 10
+        let (large, _) = split_large(&st, 19, 100_000, 0.5);
+        assert_eq!(large, vec![0]);
+        // empty subtask list
+        let (large, small) = split_large(&[], 0, 10, 0.1);
+        assert!(large.is_empty() && small.is_empty());
+    }
+
+    #[test]
+    fn shard_ranges_threshold_exactly_met_is_one_shard() {
+        assert_eq!(shard_ranges(8, 8), vec![0..8]);
+        assert_eq!(shard_ranges(7, 8), vec![0..7]);
+        // one past the threshold splits near-equally
+        assert_eq!(shard_ranges(9, 8), vec![0..5, 5..9]);
+    }
+
+    #[test]
+    fn shard_ranges_empty_and_degenerate() {
+        assert!(shard_ranges(0, 8).is_empty());
+        // shard size clamps to 1: one shard per element
+        assert_eq!(shard_ranges(3, 0), vec![0..1, 1..2, 2..3]);
+        assert_eq!(shard_ranges(1, 1), vec![0..1]);
+    }
+
+    #[test]
+    fn shard_ranges_cover_and_balance() {
+        for m in [1usize, 2, 7, 63, 64, 65, 100, 1000, 1001] {
+            for size in [1usize, 2, 7, 64, 1000, 4096] {
+                let ranges = shard_ranges(m, size);
+                // contiguous cover of 0..m
+                assert_eq!(ranges.first().unwrap().start, 0, "m={m} size={size}");
+                assert_eq!(ranges.last().unwrap().end, m, "m={m} size={size}");
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].end, w[1].start, "m={m} size={size}");
+                }
+                // near-equal: lengths differ by at most one, none empty
+                let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(*lo >= 1 && hi - lo <= 1, "m={m} size={size} lens={lens:?}");
+                // shard count is the ceil-division contract
+                assert_eq!(ranges.len(), m.div_ceil(size.max(1)), "m={m} size={size}");
+            }
+        }
     }
 }

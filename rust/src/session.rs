@@ -173,6 +173,10 @@ pub struct RecoverOpts {
     pub cutoff_frac: f64,
     /// Judge-before-Parallel optimization (Appendix C) enabled?
     pub jbp: bool,
+    /// Target shard size for [`Strategy::Sharded`]: large subtasks split
+    /// into `ceil(len / shard_min)` near-equal shards that speculate
+    /// concurrently (default 4096; must be ≥ 1).
+    pub shard_min: usize,
 }
 
 impl Default for RecoverOpts {
@@ -199,6 +203,7 @@ impl RecoverOpts {
             cutoff_edges: 100_000,
             cutoff_frac: 0.10,
             jbp: true,
+            shard_min: 4096,
         }
     }
 
@@ -233,6 +238,9 @@ impl RecoverOpts {
         if self.threads == 0 {
             return Err(Error::BadParam { name: "threads", why: "must be at least 1".into() });
         }
+        if self.shard_min == 0 {
+            return Err(Error::BadParam { name: "shard_min", why: "must be at least 1".into() });
+        }
         Ok(())
     }
 
@@ -247,6 +255,7 @@ impl RecoverOpts {
             cutoff_edges: self.cutoff_edges,
             cutoff_frac: self.cutoff_frac,
             jbp: self.jbp,
+            shard_min: self.shard_min,
         }
     }
 }
@@ -531,6 +540,20 @@ mod tests {
     fn rejects_zero_threads() {
         let opts = RecoverOpts { threads: 0, ..RecoverOpts::new(0.05) };
         assert_eq!(badparam_name(opts.validate(1000).unwrap_err()), "threads");
+    }
+
+    #[test]
+    fn rejects_zero_shard_min() {
+        let opts = RecoverOpts { shard_min: 0, ..RecoverOpts::new(0.05) };
+        assert_eq!(badparam_name(opts.validate(1000).unwrap_err()), "shard_min");
+        // …and the boundary 1 (one shard per edge) is valid.
+        RecoverOpts { shard_min: 1, ..RecoverOpts::new(0.05) }.validate(1000).unwrap();
+    }
+
+    #[test]
+    fn shard_min_reaches_recovery_params() {
+        let opts = RecoverOpts { shard_min: 7, ..RecoverOpts::new(0.05) };
+        assert_eq!(opts.params().shard_min, 7);
     }
 
     #[test]

@@ -164,11 +164,12 @@ fn strategies_equivalent_on_random_graphs() {
         let sp = build_spanning(&g);
         let mk = |strategy| Params {
             strategy,
-            cutoff_edges: 50, // force the inner path to actually run
+            cutoff_edges: 50, // force the inner/sharded paths to actually run
+            shard_min: 16,    // small shards so Sharded splits at test scale
             ..Params::new(0.1, 4)
         };
         let base = recovery::pdgrass(&g, &sp, &mk(Strategy::Serial));
-        for s in [Strategy::Outer, Strategy::Inner, Strategy::Mixed] {
+        for s in [Strategy::Outer, Strategy::Inner, Strategy::Mixed, Strategy::Sharded] {
             let r = recovery::pdgrass(&g, &sp, &mk(s));
             if r.edges != base.edges {
                 return Err(format!("{s:?} diverged from serial"));

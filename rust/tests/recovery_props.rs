@@ -1,0 +1,218 @@
+//! Recovery property/golden suite: every parallel strategy — Serial,
+//! Outer, Inner, Mixed, and the sharded giant-subtask path — must
+//! recover the *bitwise identical* edge set at every thread count, on
+//! randomized suite-family graphs and on the adversarial shapes the
+//! paper's §V worst cases are built from (one giant LCA subtask,
+//! all-singleton subtasks, zero off-tree edges).
+//!
+//! The recovery core is where correctness is subtlest (Lemma 8 forces
+//! in-order commits; the sharded strategy reorders *work* but must never
+//! reorder *decisions*), so these tests are deliberately exhaustive
+//! across the strategy × thread-count grid.
+
+use pdgrass::graph::Graph;
+use pdgrass::recovery::{self, Params, Strategy};
+use pdgrass::tree::build_spanning;
+use pdgrass::util::proptest::{check, Config};
+use pdgrass::util::Rng;
+
+const ALL_STRATEGIES: [Strategy; 5] = [
+    Strategy::Serial,
+    Strategy::Outer,
+    Strategy::Inner,
+    Strategy::Mixed,
+    Strategy::Sharded,
+];
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+/// Test params: small cutoffs and shards so the inner-parallel and
+/// sharded paths actually run on test-scale graphs (community-graph
+/// subtasks of a few dozen edges must reach the large-subtask path and
+/// split into several shards, or the grid would only exercise the
+/// trivial small-subtask route).
+fn params(alpha: f64, strategy: Strategy, threads: usize) -> Params {
+    Params { strategy, cutoff_edges: 40, shard_min: 16, ..Params::new(alpha, threads) }
+}
+
+/// Assert that every (strategy, threads) combination reproduces the
+/// serial single-thread recovery bitwise.
+fn assert_all_agree(g: &Graph, alpha: f64, label: &str) {
+    let sp = build_spanning(g);
+    let base = recovery::pdgrass(g, &sp, &params(alpha, Strategy::Serial, 1));
+    for strategy in ALL_STRATEGIES {
+        for threads in THREAD_COUNTS {
+            let r = recovery::pdgrass(g, &sp, &params(alpha, strategy, threads));
+            assert_eq!(
+                r.edges,
+                base.edges,
+                "{label}: {strategy:?} at {threads} threads diverged from serial"
+            );
+            assert_eq!(r.passes, base.passes, "{label}: {strategy:?} pass count diverged");
+        }
+    }
+}
+
+#[test]
+fn all_strategies_bitwise_identical_on_random_graphs() {
+    check(Config { cases: 6, base_seed: 0x5A }, "strategies_threads", |rng| {
+        let g = pdgrass::gen::community(
+            pdgrass::gen::CommunityParams {
+                n: 400 + rng.below(400),
+                mean_size: 10.0,
+                tail: 1.7,
+                intra_p: 0.5,
+                bridges: 2,
+                max_size: 80,
+            },
+            rng,
+        );
+        let sp = build_spanning(&g);
+        let base = recovery::pdgrass(&g, &sp, &params(0.1, Strategy::Serial, 1));
+        for strategy in ALL_STRATEGIES {
+            for threads in THREAD_COUNTS {
+                let r = recovery::pdgrass(&g, &sp, &params(0.1, strategy, threads));
+                if r.edges != base.edges {
+                    return Err(format!("{strategy:?} at {threads} threads diverged"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The feGRASS worst case: a star-like hub concentrates off-tree edge
+/// LCAs in one giant subtask, the shape where Outer/Mixed degrade to a
+/// single worker and Sharded must both split the work *and* stay exact.
+#[test]
+fn star_graph_forces_one_giant_subtask() {
+    let g = pdgrass::gen::hub_graph(3000, 1, 2500, &mut Rng::new(7));
+    let sp = build_spanning(&g);
+    let base = recovery::pdgrass(&g, &sp, &params(0.2, Strategy::Serial, 1));
+    assert!(
+        base.stats.biggest_subtask > 64,
+        "hub graph should yield a dominant subtask, got {}",
+        base.stats.biggest_subtask
+    );
+    assert_all_agree(&g, 0.2, "star");
+    // …and the giant subtask really was sharded, not serialized.
+    let r = recovery::pdgrass(&g, &sp, &params(0.2, Strategy::Sharded, 8));
+    assert!(r.stats.sharded_subtasks >= 1, "no subtask took the sharded path");
+    assert!(r.stats.shards > 1, "giant subtask must split into multiple shards");
+}
+
+/// The opposite extreme: a complete binary tree of heavy edges plus one
+/// light chord between each sibling pair. Every chord's LCA is its
+/// parent, so every subtask is a singleton — no similarity, no marks,
+/// and nothing for speculation to get wrong.
+#[test]
+fn all_singleton_subtasks() {
+    let n = 511usize; // full binary tree: internal vertices 0..=254
+    let mut edges: Vec<(u32, u32, f64)> = Vec::new();
+    for i in 0..n {
+        for c in [2 * i + 1, 2 * i + 2] {
+            if c < n {
+                edges.push((i as u32, c as u32, 100.0));
+            }
+        }
+    }
+    let mut chords = 0usize;
+    for i in 0..n {
+        let (l, r) = (2 * i + 1, 2 * i + 2);
+        if r < n {
+            // vary weights so scores aren't all tied
+            edges.push((l as u32, r as u32, 0.5 + (i % 7) as f64 * 0.08));
+            chords += 1;
+        }
+    }
+    let g = Graph::from_edges(n, &edges);
+    let sp = build_spanning(&g);
+    // The heavy tree dominates every chord under the effective-weight
+    // MST, so exactly the chords are off-tree…
+    assert_eq!(sp.num_off_tree(), chords);
+    // …and each has a distinct LCA (its sibling pair's parent).
+    let base = recovery::pdgrass(&g, &sp, &params(0.2, Strategy::Serial, 1));
+    assert_eq!(base.stats.biggest_subtask, 1);
+    assert_eq!(base.stats.subtasks, chords);
+    assert_all_agree(&g, 0.2, "singletons");
+}
+
+/// A pure tree has zero off-tree edges: recovery must return empty on
+/// every strategy without touching a single pass.
+#[test]
+fn zero_off_tree_edges() {
+    let n = 100usize;
+    let edges: Vec<(u32, u32, f64)> =
+        (0..n - 1).map(|i| (i as u32, i as u32 + 1, 1.0 + (i % 3) as f64)).collect();
+    let g = Graph::from_edges(n, &edges);
+    let sp = build_spanning(&g);
+    assert_eq!(sp.num_off_tree(), 0);
+    for strategy in ALL_STRATEGIES {
+        for threads in THREAD_COUNTS {
+            let r = recovery::pdgrass(&g, &sp, &params(0.5, strategy, threads));
+            assert!(r.edges.is_empty(), "{strategy:?} recovered from a tree");
+            assert_eq!(r.passes, 0, "{strategy:?} ran a pass over nothing");
+        }
+    }
+}
+
+/// Shard-merge accounting (regression): a sharded recovery counts each
+/// judged edge exactly once in `Stats` and `CostTrace` — the commit is
+/// the single authoritative pass — and none of the accounting depends on
+/// the thread count, because shard shapes depend only on the subtask
+/// size and `shard_min`.
+#[test]
+fn sharded_stats_and_trace_count_each_edge_once() {
+    // Community graphs have real intra-subtask similarity (unlike a pure
+    // hub star, whose LCA sits on an endpoint ⇒ β* = 0 ⇒ no marks), so
+    // this exercises cross-shard marks, false positives, and commit
+    // misses — the cases where double counting could creep in.
+    let g = pdgrass::gen::community(
+        pdgrass::gen::CommunityParams {
+            n: 1500,
+            mean_size: 10.0,
+            tail: 1.7,
+            intra_p: 0.5,
+            bridges: 2,
+            max_size: 80,
+        },
+        &mut Rng::new(11),
+    );
+    let sp = build_spanning(&g);
+    let serial =
+        recovery::pdgrass::pdgrass_traced(&g, &sp, &params(0.1, Strategy::Serial, 1), true);
+    let sharded: Vec<recovery::Recovery> = THREAD_COUNTS
+        .iter()
+        .map(|&t| {
+            recovery::pdgrass::pdgrass_traced(&g, &sp, &params(0.1, Strategy::Sharded, t), true)
+        })
+        .collect();
+    for (r, &t) in sharded.iter().zip(&THREAD_COUNTS) {
+        assert_eq!(r.edges, serial.edges, "threads={t}");
+        // One trace entry per off-tree edge: shard merges never double- or
+        // under-count a judged edge.
+        let traced: usize = r.trace.as_ref().unwrap().subtask_costs.iter().map(|c| c.len()).sum();
+        assert_eq!(traced, sp.num_off_tree(), "threads={t}");
+        // The commit spine judges each edge exactly once (== serial), and
+        // committed BFS work is bitwise the serial work (explore is pure).
+        assert_eq!(r.stats.check_units, serial.stats.check_units, "threads={t}");
+        assert_eq!(r.stats.bfs_units, serial.stats.bfs_units, "threads={t}");
+        // Recovered edge ids are unique.
+        let mut seen = std::collections::HashSet::new();
+        assert!(r.edges.iter().all(|e| seen.insert(*e)), "threads={t}: duplicate edge");
+    }
+    // Full accounting — including wasted-speculation counters — is
+    // thread-count invariant.
+    for r in &sharded[1..] {
+        assert_eq!(
+            format!("{:?}", r.stats),
+            format!("{:?}", sharded[0].stats),
+            "sharded stats must not depend on thread count"
+        );
+        assert_eq!(
+            r.trace.as_ref().unwrap().subtask_costs,
+            sharded[0].trace.as_ref().unwrap().subtask_costs,
+            "sharded cost trace must not depend on thread count"
+        );
+    }
+}

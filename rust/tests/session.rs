@@ -72,11 +72,13 @@ fn strategies_agree_on_shared_prepared() {
         .unwrap()
         .edges()
         .to_vec();
-    for strategy in [Strategy::Outer, Strategy::Inner, Strategy::Mixed] {
+    for strategy in [Strategy::Outer, Strategy::Inner, Strategy::Mixed, Strategy::Sharded] {
         let opts = RecoverOpts {
             strategy,
-            // small cutoff so Mixed/Inner exercise the blocked path
+            // small cutoff so Mixed/Inner/Sharded exercise the large-subtask path
             cutoff_edges: 200,
+            // small shards so Sharded actually splits on a test-scale graph
+            shard_min: 64,
             ..RecoverOpts::with_threads(0.05, 4)
         };
         let r = prepared.recover(&opts).unwrap();
