@@ -317,6 +317,54 @@ fn bench_alpha_sweep() {
     );
 }
 
+/// Prepare pipeline: barrier stage-sum vs the streamed overlap, on a
+/// suite graph. Wall-clock on this 1-core container is informational;
+/// the structural assertion replays `schedsim`'s overlap model on the
+/// measured off-tree size: serially the streamed makespan must equal the
+/// barrier stage-sum exactly (streaming costs nothing at one thread),
+/// and at 8 simulated threads the overlap must win once chunks
+/// outnumber workers.
+fn bench_prepare_pipeline() {
+    use pdgrass::coordinator::schedsim::{prep_barrier_makespan, prep_streamed_makespan, PrepSim};
+    use pdgrass::Sparsify;
+    let (name, scale, seed) = ("07-com-DBLP", 0.3, 42u64);
+    let (off_n, ms_barrier) = min_of(3, || {
+        Sparsify::suite(name, scale, seed).unwrap().threads(4).prepare().unwrap().num_off_tree()
+    });
+    report("prepare_barrier", 3, ms_barrier, off_n as u64, "edge");
+    let (_, ms_streamed) = min_of(3, || {
+        Sparsify::suite(name, scale, seed)
+            .unwrap()
+            .threads(4)
+            .prepare_streamed()
+            .unwrap()
+            .num_off_tree()
+    });
+    report("prepare_streamed", 3, ms_streamed, off_n as u64, "edge");
+    println!(
+        "{:<38} streamed prepare {:.2}x vs barrier (wall, 1-core box)",
+        "",
+        ms_barrier / ms_streamed.max(1e-9)
+    );
+    let sim = PrepSim::uniform(off_n, pdgrass::recovery::score::SCORE_CHUNK);
+    let (b1, s1) = (prep_barrier_makespan(&sim, 1), prep_streamed_makespan(&sim, 1));
+    assert!(s1 <= b1, "streamed must be no worse serially: {s1} > {b1}");
+    let (b8, s8) = (prep_barrier_makespan(&sim, 8), prep_streamed_makespan(&sim, 8));
+    println!(
+        "{:<38} makespan model: 1t {} vs {} units, 8t barrier {} vs streamed {} ({:.2}x)",
+        "",
+        b1,
+        s1,
+        b8,
+        s8,
+        b8 as f64 / s8.max(1) as f64
+    );
+    assert!(s8 <= b8, "streamed makespan must never exceed the barrier sum");
+    if sim.chunk_units.len() > 8 {
+        assert!(s8 < b8, "overlap must win at 8 threads: streamed {s8} !< barrier {b8}");
+    }
+}
+
 /// Giant-subtask worst case (the feGRASS pathology, §V): a star-like hub
 /// concentrates off-tree edges in one dominant LCA subtask, so Outer
 /// degrades to a single worker grinding the subtask serially. Sharded
@@ -371,6 +419,8 @@ fn bench_giant_subtask() {
 }
 
 fn main() {
+    println!("# micro bench: prepare pipeline, barrier stage-sum vs streamed overlap");
+    bench_prepare_pipeline();
     println!("# micro bench: giant-subtask recovery, Outer vs Sharded (star-graph worst case)");
     bench_giant_subtask();
     println!("# micro bench: alpha-sweep with shared Prepared vs recompute (session API)");

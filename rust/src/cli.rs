@@ -98,6 +98,9 @@ fn pipeline_cfg(cli: &Cli) -> anyhow::Result<(PipelineConfig, RunConfig)> {
             anyhow::bail!("--shard-min: must be at least 1");
         }
     }
+    if let Some(s) = cli.str("pipeline") {
+        run.pipeline = s.parse()?;
+    }
     let mut p = run.pipeline();
     p.alpha = cli.f64("alpha", p.alpha)?;
     Ok((p, run))
@@ -132,7 +135,7 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
             let name = cli.str("graph").unwrap_or("15-M6");
             // build the graph before the timer: report sparsification
             // time, not generator time
-            let session = Sparsify::suite(name, cfg.scale, cfg.seed)?;
+            let session = Sparsify::suite(name, cfg.scale, cfg.seed)?.pipeline(run.pipeline);
             let t = Timer::start();
             let prepared = session.prepare()?;
             let r = prepared.recover(&run.recover_opts(cfg.alpha))?;
@@ -156,7 +159,8 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
         "evaluate" => {
             let (cfg, run) = pipeline_cfg(&cli)?;
             let name = cli.str("graph").unwrap_or("15-M6");
-            let prepared = Sparsify::suite(name, cfg.scale, cfg.seed)?.prepare()?;
+            let prepared =
+                Sparsify::suite(name, cfg.scale, cfg.seed)?.pipeline(run.pipeline).prepare()?;
             let r = prepared.recover(&run.recover_opts(cfg.alpha))?;
             let p = r.sparsifier();
             if cli.has("xla") {
@@ -205,6 +209,11 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
             experiments::fig6_7_8(&cfg);
             Ok(())
         }
+        "pipeline" => {
+            let (cfg, run) = pipeline_cfg(&cli)?;
+            experiments::pipeline_overlap(&graph_names(&run), &cfg);
+            Ok(())
+        }
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -226,6 +235,7 @@ VERBS
   table4                    Table IV  (1/8/32-thread runtimes)
   fig1                      Fig. 1 scatter (CSV)
   fig6-8                    Figs. 6-8 strong-scaling curves (CSV)
+  pipeline                  barrier vs streamed prepare timings + overlap model
 
 OPTIONS
   --scale S      suite scale factor (default 1.0)
@@ -234,6 +244,7 @@ OPTIONS
   --threads N    recovery threads (0 = auto)
   --strategy S   serial|outer|inner|mixed|sharded (default mixed)
   --shard-min N  sharded-strategy target shard size (default 4096)
+  --pipeline P   barrier|streamed stage handoff (default barrier)
   --config F     TOML run config ([run] section)
   --quick        tiny scale + 1 trial (smoke)
 ";
@@ -271,6 +282,27 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("strategy"), "{err}");
+    }
+
+    #[test]
+    fn streamed_pipeline_runs_end_to_end() {
+        // Tiny scale smoke: the streamed prepare/recover path through the
+        // whole CLI stack.
+        run(&s(&[
+            "sparsify", "--graph", "07-com-DBLP", "--scale", "0.02", "--alpha", "0.05",
+            "--pipeline", "streamed",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn bad_pipeline_is_a_clean_error() {
+        let err = run(&s(&[
+            "sparsify", "--graph", "15-M6", "--scale", "0.02", "--pipeline", "warp",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("pipeline"), "{err}");
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
-use crate::recovery::Strategy;
+use crate::recovery::{Pipeline, Strategy};
 use crate::session::RecoverOpts;
 
 /// A parsed TOML-subset value.
@@ -224,6 +224,9 @@ pub struct RunConfig {
     pub beta_cap: u32,
     /// Shard size for `strategy = "sharded"` (must be ≥ 1).
     pub shard_min: usize,
+    /// Stage-handoff discipline (`"barrier"` or `"streamed"`) applied to
+    /// both preparation and recovery.
+    pub pipeline: Pipeline,
 }
 
 impl Default for RunConfig {
@@ -241,6 +244,7 @@ impl Default for RunConfig {
             strategy: Strategy::Mixed,
             beta_cap: 8,
             shard_min: 4096,
+            pipeline: Pipeline::Barrier,
         }
     }
 }
@@ -253,7 +257,7 @@ impl RunConfig {
         let known = [
             "run.alphas", "run.graphs", "run.scale", "run.seed", "run.tol", "run.maxit",
             "run.trials", "run.quality", "run.threads", "run.strategy", "run.beta_cap",
-            "run.shard_min",
+            "run.shard_min", "run.pipeline",
         ];
         for key in doc.keys() {
             if !known.contains(&key) {
@@ -372,6 +376,13 @@ impl RunConfig {
                 });
             }
         }
+        if let Some(v) = doc.get("run.pipeline") {
+            let s = v.as_str().ok_or_else(|| Error::BadParam {
+                name: "run.pipeline",
+                why: "not a string".into(),
+            })?;
+            cfg.pipeline = s.parse()?;
+        }
         Ok(cfg)
     }
 
@@ -386,15 +397,16 @@ impl RunConfig {
             seed: self.seed,
             trials: self.trials,
             evaluate_quality: self.quality,
+            pipeline: self.pipeline,
             ..Default::default()
         }
     }
 
     /// Recovery options at `alpha` per this config: `threads`/`strategy`/
-    /// `beta_cap`/`shard_min` map straight onto [`RecoverOpts`]
-    /// (`threads == 0` resolves to the environment's thread count). Range
-    /// validation happens when the options are used against a graph
-    /// ([`RecoverOpts::validate`]).
+    /// `beta_cap`/`shard_min`/`pipeline` map straight onto
+    /// [`RecoverOpts`] (`threads == 0` resolves to the environment's
+    /// thread count). Range validation happens when the options are used
+    /// against a graph ([`RecoverOpts::validate`]).
     pub fn recover_opts(&self, alpha: f64) -> RecoverOpts {
         let threads = if self.threads == 0 { crate::par::num_threads() } else { self.threads };
         RecoverOpts {
@@ -402,6 +414,7 @@ impl RunConfig {
             beta_cap: self.beta_cap,
             strategy: self.strategy,
             shard_min: self.shard_min,
+            pipeline: self.pipeline,
             ..RecoverOpts::with_threads(alpha, threads)
         }
     }
@@ -455,6 +468,30 @@ mod tests {
         assert_eq!(opts.strategy, Strategy::Sharded);
         assert_eq!(opts.beta_cap, 6);
         assert_eq!(opts.shard_min, 512);
+    }
+
+    #[test]
+    fn pipeline_key_round_trips_and_rejects_garbage() {
+        let doc = Doc::parse("[run]\npipeline = \"streamed\"\n").unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.pipeline, Pipeline::Streamed);
+        assert_eq!(cfg.recover_opts(0.05).pipeline, Pipeline::Streamed);
+        // default is barrier
+        let cfg = RunConfig::from_doc(&Doc::parse("[run]\n").unwrap()).unwrap();
+        assert_eq!(cfg.pipeline, Pipeline::Barrier);
+        assert_eq!(cfg.recover_opts(0.05).pipeline, Pipeline::Barrier);
+        // unknown spellings are typed errors naming the field
+        let doc = Doc::parse("[run]\npipeline = \"overlap\"\n").unwrap();
+        match RunConfig::from_doc(&doc) {
+            Err(Error::BadParam { name, .. }) => assert_eq!(name, "pipeline"),
+            other => panic!("expected BadParam, got {other:?}"),
+        }
+        // non-string values are rejected
+        let doc = Doc::parse("[run]\npipeline = 3\n").unwrap();
+        match RunConfig::from_doc(&doc) {
+            Err(Error::BadParam { name, .. }) => assert_eq!(name, "run.pipeline"),
+            other => panic!("expected BadParam, got {other:?}"),
+        }
     }
 
     #[test]

@@ -7,4 +7,6 @@ pub mod pipeline;
 pub mod schedsim;
 
 pub use pipeline::{run_graph, run_prepared, GraphReport, PipelineConfig};
-pub use schedsim::{simulate, SimParams, SimResult};
+pub use schedsim::{
+    prep_barrier_makespan, prep_streamed_makespan, simulate, PrepSim, SimParams, SimResult,
+};

@@ -10,7 +10,7 @@
 use super::schedsim::{simulate, SimParams};
 use crate::error::Error;
 use crate::gen;
-use crate::recovery::{self, Strategy};
+use crate::recovery::{self, Pipeline, Strategy};
 use crate::session::{Prepared, RecoverOpts, Sparsify};
 
 /// Pipeline configuration (defaults follow §V of the paper).
@@ -34,6 +34,8 @@ pub struct PipelineConfig {
     pub evaluate_quality: bool,
     /// Thread counts to simulate for T_p (e.g. [8, 32]).
     pub sim_threads: [usize; 2],
+    /// Stage-handoff discipline for preparation and recovery.
+    pub pipeline: Pipeline,
 }
 
 impl Default for PipelineConfig {
@@ -48,6 +50,7 @@ impl Default for PipelineConfig {
             trials: 3,
             evaluate_quality: true,
             sim_threads: [8, 32],
+            pipeline: Pipeline::Barrier,
         }
     }
 }
@@ -87,6 +90,11 @@ pub struct GraphReport {
     /// Id of the [`Prepared`] session this report was measured against.
     /// Equal ids across an α-sweep prove steps 1–3 were paid once.
     pub prepared_id: u64,
+    /// Stage-handoff discipline the preparation ran under. Under
+    /// [`Pipeline::Streamed`], `step_ms[0]` holds the fused
+    /// annotate+sort stage and `step_ms[1]` is zero (no separate sort
+    /// stage exists — the overlap removed the boundary).
+    pub pipeline: Pipeline,
 }
 
 /// Recovery options for this config at `threads` / `strategy`.
@@ -95,16 +103,17 @@ pub fn recover_opts(cfg: &PipelineConfig, threads: usize, strategy: Strategy) ->
         alpha: cfg.alpha,
         beta_cap: cfg.beta_cap,
         strategy,
+        pipeline: cfg.pipeline,
         ..RecoverOpts::with_threads(cfg.alpha, threads)
     }
 }
 
-/// Prepare a suite row under this config. The step-3 sort runs at one
-/// thread, matching what the pre-session pipeline timed for its serial
-/// calibration run (the other prepare stages have no per-call thread
-/// knob and behave as before).
+/// Prepare a suite row under this config (honoring `cfg.pipeline`). The
+/// step-3 sort runs at one thread, matching what the pre-session pipeline
+/// timed for its serial calibration run (the other prepare stages have no
+/// per-call thread knob and behave as before).
 pub fn prepare_graph(name: &str, cfg: &PipelineConfig) -> Result<Prepared, Error> {
-    Sparsify::suite(name, cfg.scale, cfg.seed)?.threads(1).prepare()
+    Sparsify::suite(name, cfg.scale, cfg.seed)?.threads(1).pipeline(cfg.pipeline).prepare()
 }
 
 /// Run both algorithms + evaluation on one suite graph.
@@ -171,6 +180,7 @@ pub fn run_prepared(prepared: &Prepared, cfg: &PipelineConfig) -> Result<GraphRe
         stats: pd.stats().clone(),
         step_ms,
         prepared_id: prepared.id(),
+        pipeline: prepared.pipeline(),
     })
 }
 
@@ -226,6 +236,26 @@ mod tests {
         assert_eq!(a.prepared_id, b.prepared_id);
         assert_eq!(a.step_ms[..3], b.step_ms[..3], "shared steps 1–3 timings");
         assert!(b.iter_pd <= a.iter_pd + 2, "more recovered edges must not hurt quality much");
+    }
+
+    #[test]
+    fn streamed_config_reports_same_results_as_barrier() {
+        let barrier = run_graph("15-M6", &quick_cfg()).unwrap();
+        let mut cfg = quick_cfg();
+        cfg.pipeline = Pipeline::Streamed;
+        let streamed = run_graph("15-M6", &cfg).unwrap();
+        assert_eq!(barrier.pipeline, Pipeline::Barrier);
+        assert_eq!(streamed.pipeline, Pipeline::Streamed);
+        // Identical graphs, recoveries, and quality — only timings and
+        // stage attribution may differ.
+        assert_eq!(streamed.v, barrier.v);
+        assert_eq!(streamed.e, barrier.e);
+        assert_eq!(streamed.iter_pd, barrier.iter_pd);
+        assert_eq!(streamed.iter_fe, barrier.iter_fe);
+        assert_eq!(streamed.pd_passes, barrier.pd_passes);
+        assert_eq!(format!("{:?}", streamed.stats), format!("{:?}", barrier.stats));
+        // Streamed stage attribution: no separate sort stage.
+        assert_eq!(streamed.step_ms[1], 0.0);
     }
 
     #[test]

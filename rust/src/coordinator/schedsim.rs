@@ -24,6 +24,14 @@
 //!   checks. This attributes shard work to workers, where the blocked
 //!   model charges one `max(explore)` barrier per block.
 //!
+//! * **prepare pipeline** — [`PrepSim`] models Algorithm-1 steps 1–3 as
+//!   the implementation runs them: scoring chunks on workers, run merges
+//!   on the consumer, grouping fused into the final pass.
+//!   [`prep_barrier_makespan`] charges the stage-sum (produce, join,
+//!   merge, group); [`prep_streamed_makespan`] lets production overlap
+//!   merging as `par::produce_stream` does — the quantified payoff of
+//!   the streamed pipeline knob (`pipeline = streamed`).
+//!
 //! Calibration: simulated unit counts are converted to milliseconds with
 //! the measured single-thread unit rate, so `T_1(sim) == T_1(measured)`
 //! by construction and `T_p` inherits the shape.
@@ -219,6 +227,110 @@ pub fn sharded_part_speedup(trace: &CostTrace, threads: usize, shard_min: usize)
     serial as f64 / (s + par).max(1) as f64
 }
 
+/// Structural model of the **prepare pipeline** (Algorithm-1 steps 1–3):
+/// scoring chunks produced on workers, runs merged on the consumer, and
+/// the grouping spine — mirroring the implementation's
+/// `par::produce_stream` + `RunMerger` + `SubtaskBuilder` shape, in
+/// abstract work units.
+///
+/// `chunk_units[i]` is the worker-side cost of scoring + locally sorting
+/// chunk `i`; `merge_units[i]` is the consumer-side merge work triggered
+/// by consuming chunk `i` (binary-counter merges); `final_units` is the
+/// final merge + grouping spine (consumer-side, after the last chunk).
+#[derive(Clone, Debug)]
+pub struct PrepSim {
+    /// Worker-side cost per chunk (scoring + leaf sort).
+    pub chunk_units: Vec<u64>,
+    /// Consumer-side merge cost charged when chunk `i` is consumed.
+    pub merge_units: Vec<u64>,
+    /// Consumer-side tail: final merge pass + fused subtask grouping.
+    pub final_units: u64,
+}
+
+impl PrepSim {
+    /// Build the model for `n` edges in fixed `chunk`-sized chunks with
+    /// unit per-edge scoring cost — the exact chunk layout and
+    /// binary-counter merge schedule the implementation uses, so the
+    /// modeled merge work equals the real element moves.
+    pub fn uniform(n: usize, chunk: usize) -> PrepSim {
+        let chunk = chunk.max(1);
+        let n_chunks = n.div_ceil(chunk);
+        let mut chunk_units = Vec::with_capacity(n_chunks);
+        let mut merge_units = Vec::with_capacity(n_chunks);
+        // Replay the RunMerger binary counter on run *sizes*.
+        let mut stack: Vec<(u32, u64)> = Vec::new();
+        for i in 0..n_chunks {
+            let len = chunk.min(n - i * chunk) as u64;
+            chunk_units.push(len);
+            let mut level = 0u32;
+            let mut cur = len;
+            let mut merged = 0u64;
+            while let Some(&(top_level, top_len)) = stack.last() {
+                if top_level != level {
+                    break;
+                }
+                stack.pop();
+                cur += top_len;
+                merged += cur;
+                level += 1;
+            }
+            stack.push((level, cur));
+            merge_units.push(merged);
+        }
+        // finish_with: collapse the stack; the last merge doubles as the
+        // grouping pass (one emit per element).
+        let mut final_units = 0u64;
+        while stack.len() > 1 {
+            let (_, a) = stack.pop().expect("len checked");
+            let (lvl, b) = stack.pop().expect("len checked");
+            let m = a + b;
+            final_units += m;
+            stack.push((lvl, m));
+        }
+        final_units += n as u64; // grouping spine fused into the emit pass
+        PrepSim { chunk_units, merge_units, final_units }
+    }
+
+    /// Total serial units (every cost paid by one thread).
+    pub fn serial_total(&self) -> u64 {
+        self.chunk_units.iter().sum::<u64>()
+            + self.merge_units.iter().sum::<u64>()
+            + self.final_units
+    }
+}
+
+/// Barrier-pipeline makespan: the scoring stage list-schedules its chunks
+/// across `threads` workers and **joins**, then the consumer performs all
+/// merge work, then the grouping tail — the stage-sum the streamed
+/// pipeline is measured against.
+pub fn prep_barrier_makespan(sim: &PrepSim, threads: usize) -> u64 {
+    simulate_outer(&sim.chunk_units, threads)
+        + sim.merge_units.iter().sum::<u64>()
+        + sim.final_units
+}
+
+/// Streamed-pipeline makespan: chunks are produced greedily on
+/// `threads - 1` workers (the consumer owns the merge timeline, as in
+/// `par::produce_stream` where the caller consumes); the consumer picks
+/// up chunk `i` at `max(ready_i, its own clock)` and immediately pays the
+/// chunk's merge work — production of later chunks overlaps merging of
+/// earlier ones. At one thread the model degenerates to the serial
+/// stage-sum exactly (streaming costs nothing serially).
+pub fn prep_streamed_makespan(sim: &PrepSim, threads: usize) -> u64 {
+    if threads <= 1 {
+        return prep_barrier_makespan(sim, 1);
+    }
+    let workers = threads - 1;
+    let mut load = vec![0u64; workers];
+    let mut clock = 0u64;
+    for (i, &c) in sim.chunk_units.iter().enumerate() {
+        let w = (0..workers).min_by_key(|&w| load[w]).expect("workers >= 1");
+        load[w] += c;
+        clock = clock.max(load[w]) + sim.merge_units[i];
+    }
+    clock + sim.final_units
+}
+
 /// Simulate only the outer part (Figs. 6, 8): every subtask except those
 /// above the cutoff, list-scheduled.
 pub fn outer_part_speedup(trace: &CostTrace, threads: usize, p: &SimParams) -> f64 {
@@ -322,6 +434,58 @@ mod tests {
         let s4 = inner_part_speedup(&t, 4);
         let s16 = inner_part_speedup(&t, 16);
         assert!(s16 > s4, "{s16} !> {s4}");
+    }
+
+    #[test]
+    fn prep_model_serial_equivalence_and_coverage() {
+        for (n, chunk) in [(0usize, 4096usize), (100, 4096), (10_000, 512), (100_000, 4096)] {
+            let sim = PrepSim::uniform(n, chunk);
+            assert_eq!(sim.chunk_units.len(), n.div_ceil(chunk.max(1)));
+            assert_eq!(sim.chunk_units.iter().sum::<u64>(), n as u64, "n={n}");
+            // Serially, streaming is free: both disciplines pay the exact
+            // stage-sum.
+            assert_eq!(
+                prep_streamed_makespan(&sim, 1),
+                prep_barrier_makespan(&sim, 1),
+                "n={n} chunk={chunk}"
+            );
+            assert_eq!(prep_barrier_makespan(&sim, 1), sim.serial_total(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn prep_streamed_beats_barrier_sum_when_chunks_outnumber_workers() {
+        // Many chunks, merge-bound consumer: streaming hides production
+        // behind merging; the barrier pays the production phase up front.
+        let sim = PrepSim::uniform(200_000, 4096);
+        assert!(sim.chunk_units.len() > 16, "model needs chunks > workers");
+        for threads in [2usize, 4, 8, 16] {
+            let b = prep_barrier_makespan(&sim, threads);
+            let s = prep_streamed_makespan(&sim, threads);
+            assert!(s < b, "threads={threads}: streamed {s} !< barrier {b}");
+        }
+        // More threads never hurt the streamed makespan.
+        let mut last = u64::MAX;
+        for threads in [1usize, 2, 4, 8, 16] {
+            let s = prep_streamed_makespan(&sim, threads);
+            assert!(s <= last, "threads={threads}: {s} > {last}");
+            last = s;
+        }
+    }
+
+    #[test]
+    fn prep_model_single_chunk_degenerates() {
+        // One chunk: nothing to overlap; both disciplines agree at every
+        // thread count.
+        let sim = PrepSim::uniform(1000, 4096);
+        assert_eq!(sim.chunk_units.len(), 1);
+        for threads in [1usize, 2, 8] {
+            assert_eq!(
+                prep_streamed_makespan(&sim, threads),
+                prep_barrier_makespan(&sim, threads),
+                "threads={threads}"
+            );
+        }
     }
 
     #[test]

@@ -24,13 +24,44 @@
 //!   what lets the skewed worst cases (one dominant LCA subtask) scale
 //!   past one block at a time.
 //! * [`par`] — the parallel substrate: a persistent work-stealing thread
-//!   pool with deterministic reductions and a move-based parallel sort.
+//!   pool with deterministic reductions, a move-based parallel sort, and
+//!   the `produce_stream` cross-stage handoff (chunks produced on the
+//!   pool, consumed in deterministic order with a bounded in-flight
+//!   window) that the streamed pipeline is built on.
 //! * [`solver`] — CSR SpMV, RCM ordering, sparse LDLᵀ, and the PCG
 //!   evaluation harness (the paper's sparsifier-quality metric).
 //! * [`session`] — **the primary API**: staged
 //!   `Sparsify → Prepared → Recovered → Sparsifier` sessions that compute
 //!   the invariant state (steps 1–3 of Algorithm 1) once and recover any
 //!   number of (α, strategy, threads) variants from it.
+//!
+//! ## Pipeline disciplines: barrier vs streamed
+//!
+//! Every stage handoff runs under one of two disciplines
+//! ([`Pipeline`], selectable per session via [`Sparsify::pipeline`] /
+//! `prepare_streamed`, per recovery via `RecoverOpts::pipeline`, and via
+//! the `pipeline = "streamed"` config key or `--pipeline` CLI flag). The
+//! **barrier** timeline joins every Algorithm-1 stage; the **streamed**
+//! timeline overlaps them on the pool — workers score chunk `i+1` while
+//! the consumer merges chunk `i`, the subtask grouping rides the final
+//! merge pass, and recovery outcomes are absorbed as they complete:
+//!
+//! ```text
+//! barrier   workers ▕ score score score ▏▁▁idle▁▁▕ recover recover
+//!           caller  ▕▁▁▁▁▁▁▁idle▁▁▁▁▁▁▁▏ sort+group ▕▁▁▁▁absorb▁▁▁▁
+//!                                       ^ join      ^ join     ^ join
+//!
+//! streamed  workers ▕ score score score ▏ recover recover recover
+//!           caller  ▕▁▁▏ merge ▏ merge+group ▏ absorb absorb
+//!                        (overlapped — no stage joins)
+//! ```
+//!
+//! Both disciplines produce **bitwise-identical** results at every
+//! thread count: per-edge computations are pure, every sort key is a
+//! strict total order (ties broken by edge id), and outcome absorption
+//! is order-insensitive. `coordinator::schedsim`'s `PrepSim` models the
+//! two timelines and quantifies the overlap win (`pdgrass pipeline`
+//! prints it per suite graph).
 //! * [`error`] — the typed [`Error`] enum every library-boundary
 //!   function returns.
 //! * [`coordinator`] / [`cli`] / [`config`] — experiment drivers
@@ -79,4 +110,5 @@ pub mod tree;
 pub mod util;
 
 pub use error::{Error, Result};
+pub use recovery::{Pipeline, Strategy};
 pub use session::{PcgOutcome, Prepared, RecoverOpts, Recovered, Sparsifier, Sparsify};

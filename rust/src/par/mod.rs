@@ -22,7 +22,12 @@
 //! - [`sort::par_sort_by`] — parallel stable merge sort (steps 2–3 of
 //!   pdGRASS sort off-tree edges and subtasks): out-of-place ping-pong
 //!   merges over one scratch buffer, splitter-parallel merge forked via
-//!   [`pool::ThreadPool::join`], no `T: Clone` bound.
+//!   [`pool::ThreadPool::join`], no `T: Clone` bound,
+//! - [`stream::produce_stream`] — the cross-stage streaming handoff:
+//!   chunks produced on the pool, consumed on the caller in ascending
+//!   order with a bounded in-flight window, so adjacent pipeline stages
+//!   overlap instead of barrier-syncing (the streamed
+//!   prepare/recover pipeline is built on this; see `session`).
 //!
 //! Every primitive keeps a serial fast path for `threads == 1` (or
 //! trivially small inputs), takes a per-call `threads` override, and
@@ -53,9 +58,11 @@
 pub mod pool;
 pub mod reduce;
 pub mod sort;
+pub mod stream;
 
 pub use pool::ThreadPool;
 pub use reduce::par_reduce;
+pub use stream::produce_stream;
 
 /// Fork depth for binary fork–join trees: `ceil(log2(threads))` levels,
 /// so a tree forked this deep exposes at least `threads` leaves.

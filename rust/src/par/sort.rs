@@ -418,6 +418,177 @@ where
     drop(g);
 }
 
+/// Stable merge of two sorted runs by **moving** elements (`T` needs no
+/// `Clone`). Ties keep `a` before `b`, so merging locally-sorted chunk
+/// runs with the earlier chunk on the `a` side reproduces exactly what a
+/// global stable sort would produce.
+///
+/// This is the safe, caller-side counterpart of the ping-pong merges
+/// above: the streamed pipeline merges completed runs on the consumer
+/// thread while producers are still scoring later chunks, so it wants a
+/// simple allocation-per-merge move merge rather than scratch-buffer
+/// machinery.
+pub fn merge_runs<T, F>(a: Vec<T>, b: Vec<T>, cmp: &F) -> Vec<T>
+where
+    F: Fn(&T, &T) -> Ordering,
+{
+    merge_runs_with(a, b, cmp, |_| {})
+}
+
+/// The one move-merge loop behind both [`merge_runs`] and
+/// [`RunMerger::finish_with`]: merge `a` and `b` stably (ties keep `a`
+/// first), invoking `emit` on every element in output order as it lands.
+/// Keeping a single implementation is load-bearing — the streamed
+/// pipeline's bitwise-parity guarantee rests on every merge agreeing on
+/// the tie-handling.
+fn merge_runs_with<T, F, E>(a: Vec<T>, b: Vec<T>, cmp: &F, mut emit: E) -> Vec<T>
+where
+    F: Fn(&T, &T) -> Ordering,
+    E: FnMut(&T),
+{
+    if a.is_empty() {
+        for x in &b {
+            emit(x);
+        }
+        return b;
+    }
+    if b.is_empty() {
+        for x in &a {
+            emit(x);
+        }
+        return a;
+    }
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let mut ia = a.into_iter();
+    let mut ib = b.into_iter();
+    let mut xa = ia.next();
+    let mut xb = ib.next();
+    loop {
+        match (xa.take(), xb.take()) {
+            (Some(va), Some(vb)) => {
+                // `<=` keeps `a` first on ties → stability.
+                if cmp(&va, &vb) != Ordering::Greater {
+                    emit(&va);
+                    out.push(va);
+                    xa = ia.next();
+                    xb = Some(vb);
+                } else {
+                    emit(&vb);
+                    out.push(vb);
+                    xb = ib.next();
+                    xa = Some(va);
+                }
+            }
+            (Some(va), None) => {
+                emit(&va);
+                out.push(va);
+                for x in ia {
+                    emit(&x);
+                    out.push(x);
+                }
+                return out;
+            }
+            (None, Some(vb)) => {
+                emit(&vb);
+                out.push(vb);
+                for x in ib {
+                    emit(&x);
+                    out.push(x);
+                }
+                return out;
+            }
+            (None, None) => return out,
+        }
+    }
+}
+
+/// Incremental merger of sorted runs arriving in stream order — the
+/// consumer half of the streamed sort: push each locally-sorted chunk as
+/// it is produced; the merger maintains a binary-counter stack (runs of
+/// equal level merge immediately, like a bottom-up merge sort), so the
+/// total merge work is `O(n lg k)` for `k` chunks and the merge
+/// *structure* depends only on the number of pushes — never on timing —
+/// keeping the output deterministic.
+///
+/// Stability: pushes must arrive in ascending chunk order; every merge
+/// keeps the earlier run on the left, so ties preserve chunk order and
+/// the result equals a global stable sort of the concatenated runs. (The
+/// pipeline's comparators are strict total orders — ties broken by edge
+/// id — so the result is the unique sorted sequence either way.)
+pub struct RunMerger<'f, T, F> {
+    /// `(level, run)` stack; levels strictly decrease bottom-to-top
+    /// between merges, exactly one run per binary-counter bit.
+    runs: Vec<(u32, Vec<T>)>,
+    cmp: &'f F,
+}
+
+impl<'f, T, F> RunMerger<'f, T, F>
+where
+    F: Fn(&T, &T) -> Ordering,
+{
+    /// Empty merger over `cmp`.
+    pub fn new(cmp: &'f F) -> RunMerger<'f, T, F> {
+        RunMerger { runs: Vec::new(), cmp }
+    }
+
+    /// Push the next sorted run (ascending chunk order), merging
+    /// equal-level runs eagerly.
+    pub fn push(&mut self, run: Vec<T>) {
+        let mut level = 0u32;
+        let mut cur = run;
+        while let Some(&(top_level, _)) = self.runs.last() {
+            if top_level != level {
+                break;
+            }
+            let (_, older) = self.runs.pop().expect("top run just observed");
+            cur = merge_runs(older, cur, self.cmp);
+            level += 1;
+        }
+        self.runs.push((level, cur));
+    }
+
+    /// Total elements currently held.
+    pub fn len(&self) -> usize {
+        self.runs.iter().map(|(_, r)| r.len()).sum()
+    }
+
+    /// True if no elements were pushed.
+    pub fn is_empty(&self) -> bool {
+        self.runs.iter().all(|(_, r)| r.is_empty())
+    }
+
+    /// Merge the remaining stack down to the final sorted vector.
+    pub fn finish(self) -> Vec<T> {
+        self.finish_with(|_| {})
+    }
+
+    /// As [`RunMerger::finish`], additionally invoking `emit` on each
+    /// element of the **final** merge in output order, as it lands — the
+    /// hook the streamed pipeline uses to fuse the next stage (LCA
+    /// subtask grouping) into the last merge pass instead of re-walking
+    /// the finished array behind another barrier.
+    pub fn finish_with(mut self, mut emit: impl FnMut(&T)) -> Vec<T> {
+        // Collapse to at most two runs with ordinary merges…
+        while self.runs.len() > 2 {
+            let (_, newer) = self.runs.pop().expect("len checked");
+            let (lvl, older) = self.runs.pop().expect("len checked");
+            self.runs.push((lvl, merge_runs(older, newer, self.cmp)));
+        }
+        // …then run the last merge through `emit` (same merge loop as
+        // every other level — see `merge_runs_with`).
+        match (self.runs.pop(), self.runs.pop()) {
+            (None, _) => Vec::new(),
+            (Some((_, only)), None) => {
+                for x in &only {
+                    emit(x);
+                }
+                only
+            }
+            (Some((_, newer)), Some((_, older))) => merge_runs_with(older, newer, self.cmp, emit),
+        }
+    }
+}
+
 /// Count of elements in sorted `run[0..len]` strictly less than `pivot`.
 unsafe fn lower_bound<T, F>(run: *const T, len: usize, pivot: &T, cmp: &F) -> usize
 where
@@ -557,6 +728,87 @@ mod tests {
             par_sort_by(&mut v, 8, &|a: &u64, b: &u64| a.cmp(b));
             assert_eq!(v, expect);
         }
+    }
+
+    #[test]
+    fn merge_runs_is_stable_and_complete() {
+        // (key, origin) pairs: ties must keep the `a` run first.
+        let a: Vec<(u32, u8)> = vec![(1, 0), (3, 0), (3, 0), (7, 0)];
+        let b: Vec<(u32, u8)> = vec![(0, 1), (3, 1), (8, 1)];
+        let cmp = |x: &(u32, u8), y: &(u32, u8)| x.0.cmp(&y.0);
+        let m = merge_runs(a, b, &cmp);
+        assert_eq!(m, vec![(0, 1), (1, 0), (3, 0), (3, 0), (3, 1), (7, 0), (8, 1)]);
+        // Empty sides pass through.
+        assert_eq!(merge_runs(Vec::new(), vec![(2u32, 1u8)], &cmp), vec![(2, 1)]);
+        assert_eq!(merge_runs(vec![(2u32, 0u8)], Vec::new(), &cmp), vec![(2, 0)]);
+    }
+
+    #[test]
+    fn run_merger_matches_global_stable_sort() {
+        let mut rng = Rng::new(12);
+        for chunks in [1usize, 2, 3, 7, 16, 33] {
+            let cmp = |x: &(u32, u32), y: &(u32, u32)| x.0.cmp(&y.0);
+            let mut merger = RunMerger::new(&cmp);
+            let mut all: Vec<(u32, u32)> = Vec::new();
+            let mut idx = 0u32;
+            for c in 0..chunks {
+                let len = 1 + (rng.next_u32() as usize % 50);
+                let mut run: Vec<(u32, u32)> = (0..len)
+                    .map(|_| {
+                        let v = (rng.next_u32() % 8, idx);
+                        idx += 1;
+                        v
+                    })
+                    .collect();
+                run.sort_by(cmp);
+                all.extend(run.iter().copied());
+                merger.push(run);
+                assert!(!merger.is_empty(), "chunk {c} pushed");
+            }
+            assert_eq!(merger.len(), all.len());
+            let merged = merger.finish();
+            // Ties on key must keep chunk-concatenation (= push) order,
+            // which is what a global stable sort of `all` produces.
+            all.sort_by(cmp);
+            assert_eq!(merged, all, "chunks={chunks}");
+        }
+    }
+
+    #[test]
+    fn run_merger_finish_with_emits_final_order_exactly_once() {
+        let cmp = |x: &u64, y: &u64| x.cmp(y);
+        for chunks in [0usize, 1, 2, 5, 9] {
+            let mut rng = Rng::new(40 + chunks as u64);
+            let mut merger = RunMerger::new(&cmp);
+            for _ in 0..chunks {
+                let mut run: Vec<u64> = (0..20).map(|_| rng.next_u64() % 100).collect();
+                run.sort();
+                merger.push(run);
+            }
+            let mut emitted: Vec<u64> = Vec::new();
+            let out = merger.finish_with(|&x| emitted.push(x));
+            assert_eq!(emitted, out, "chunks={chunks}: emit order must be output order");
+            assert!(out.windows(2).all(|w| w[0] <= w[1]), "chunks={chunks}");
+            assert_eq!(out.len(), chunks * 20);
+        }
+    }
+
+    #[test]
+    fn run_merger_moves_non_clone_payloads() {
+        let cmp = |x: &NoClone, y: &NoClone| x.key.cmp(&y.key);
+        let mut merger = RunMerger::new(&cmp);
+        for c in 0..4u32 {
+            let mut run: Vec<NoClone> = (0..100)
+                .map(|k| NoClone { key: ((k * 37 + c) % 50) as u64, idx: c * 100 + k })
+                .collect();
+            run.sort_by(cmp);
+            merger.push(run);
+        }
+        let out = merger.finish();
+        assert_eq!(out.len(), 400);
+        let mut seen: Vec<u32> = out.iter().map(|e| e.idx).collect();
+        seen.sort_unstable();
+        assert!(seen.iter().enumerate().all(|(i, &x)| x == i as u32));
     }
 
     /// Comparator panics mid-sort on a `Drop` payload: afterwards every

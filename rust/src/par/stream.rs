@@ -1,0 +1,455 @@
+//! Cross-stage streaming handoff: produce chunks on the pool, consume
+//! them on the caller in deterministic ascending order.
+//!
+//! The Algorithm-1 pipeline used to barrier-sync every stage: resistance
+//! annotation finished before the score sort started, the sort finished
+//! before subtasks were grouped, and every recovery pass joined a full
+//! `par_map` before a single outcome was absorbed. [`produce_stream`] is
+//! the primitive that removes those barriers: a fixed index space of `n`
+//! chunks is claimed by pool workers (and, when useful, by the consumer
+//! itself), each claimed chunk is produced exactly once, and the consumer
+//! receives the chunks **in ascending index order** as they become
+//! available — chunk `i+1` can be produced while chunk `i` is being
+//! consumed.
+//!
+//! # Determinism
+//!
+//! `consume(i, value)` is always invoked for `i = 0, 1, …, n-1` in that
+//! order, on a single thread, and `produce(i)` is required to be a pure
+//! function of `i`. Scheduling therefore affects only timing, never the
+//! consumed sequence — the same contract the rest of the `par` substrate
+//! keeps (fixed reduce trees, scheduling-independent sorts).
+//!
+//! # Deadlock freedom inside the claim loop
+//!
+//! The consumer never waits on an *unclaimed* chunk: when the chunk it
+//! needs is not ready it first claims and produces pending chunks itself
+//! (the same caller-participation trick [`ThreadPool::run_scope`] uses),
+//! and only blocks once every chunk is claimed — at which point the
+//! awaited chunk is being actively produced by some thread and the wait
+//! is finite. Producers that claim far ahead of the consumer park on a
+//! **bounded window** (`consumed + window` chunks in flight), and the
+//! consumer is exempt from the window, so the producer of the very chunk
+//! the consumer awaits is never parked: the wait-for graph has no cycle.
+//!
+//! # Panics
+//!
+//! A panic in `produce` (on any thread) aborts the stream: remaining
+//! producers drain without running, the consumer stops, and the first
+//! payload is re-thrown on the calling thread. A panic in `consume`
+//! propagates through the pool join after in-flight producers finish.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::ThreadPool;
+
+/// Shared state of one stream; lives on the [`produce_stream`] frame.
+struct Stream<T> {
+    /// One slot per chunk, filled exactly once by its producer.
+    slots: Vec<Mutex<Option<T>>>,
+    /// Claim cursor over `0..slots.len()`.
+    next: AtomicUsize,
+    /// Consumer watermark: chunks `< consumed` have been consumed.
+    consumed: AtomicUsize,
+    /// Producers park while their claim is `>= consumed + window`.
+    window: usize,
+    /// Set when any `produce` call panicked; aborts the stream.
+    failed: AtomicBool,
+    /// First panic payload, re-thrown on the calling thread.
+    payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    /// Wake protocol for slot fills, watermark bumps, and failure.
+    signal: Mutex<()>,
+    cv: Condvar,
+}
+
+impl<T> Stream<T> {
+    fn notify_all(&self) {
+        let _g = self.signal.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    /// Produce chunk `j` into its slot, recording a panic instead of
+    /// unwinding (workers must survive to serve the next scope).
+    fn fill<P>(&self, j: usize, produce: &P)
+    where
+        P: Fn(usize) -> T + Sync,
+    {
+        if self.failed.load(Ordering::Acquire) {
+            return;
+        }
+        match catch_unwind(AssertUnwindSafe(|| produce(j))) {
+            Ok(v) => {
+                *self.slots[j].lock().unwrap() = Some(v);
+            }
+            Err(p) => {
+                let mut slot = self.payload.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+                self.failed.store(true, Ordering::Release);
+            }
+        }
+        self.notify_all();
+    }
+
+    /// Worker-side loop: claim chunks and produce them, parking while the
+    /// claim is outside the in-flight window.
+    fn producer_loop<P>(&self, produce: &P)
+    where
+        P: Fn(usize) -> T + Sync,
+    {
+        let n = self.slots.len();
+        loop {
+            if self.failed.load(Ordering::Acquire) {
+                return;
+            }
+            let j = self.next.fetch_add(1, Ordering::Relaxed);
+            if j >= n {
+                return;
+            }
+            // Bounded handoff: park until the consumer is within `window`
+            // chunks of this claim. The consumer bypasses the window and
+            // its awaited chunk `i` always satisfies `i < consumed +
+            // window`, so the park cannot be part of a wait cycle. The
+            // timeout mirrors the pool's belt-and-braces wakeup.
+            while j >= self.consumed.load(Ordering::Acquire) + self.window
+                && !self.failed.load(Ordering::Acquire)
+            {
+                let guard = self.signal.lock().unwrap();
+                if j < self.consumed.load(Ordering::Acquire) + self.window
+                    || self.failed.load(Ordering::Acquire)
+                {
+                    break;
+                }
+                drop(self.cv.wait_timeout(guard, Duration::from_millis(10)).unwrap());
+            }
+            self.fill(j, produce);
+        }
+    }
+
+    /// Consumer-side wait for chunk `i`: take it if ready, otherwise help
+    /// produce pending chunks, and only then block. Returns `None` when
+    /// the stream failed (the payload is re-thrown by the caller).
+    fn await_chunk<P>(&self, i: usize, produce: &P) -> Option<T>
+    where
+        P: Fn(usize) -> T + Sync,
+    {
+        let n = self.slots.len();
+        loop {
+            if let Some(v) = self.slots[i].lock().unwrap().take() {
+                return Some(v);
+            }
+            if self.failed.load(Ordering::Acquire) {
+                return None;
+            }
+            let j = self.next.fetch_add(1, Ordering::Relaxed);
+            if j < n {
+                // Caller-participation: produce a pending chunk (possibly
+                // `i` itself) instead of blocking. Exempt from the window
+                // — the consumer can never overtake itself.
+                self.fill(j, produce);
+                continue;
+            }
+            // Every chunk is claimed; `i` is in flight on some thread.
+            let guard = self.signal.lock().unwrap();
+            if self.slots[i].lock().unwrap().is_some() || self.failed.load(Ordering::Acquire) {
+                continue;
+            }
+            drop(self.cv.wait_timeout(guard, Duration::from_millis(10)).unwrap());
+        }
+    }
+}
+
+/// Streamed producer/consumer pipeline over `n` chunks: `produce(i)` runs
+/// exactly once per chunk on the pool (plus the consumer when it would
+/// otherwise block), and `consume(i, value)` runs in ascending `i` order
+/// as chunks become available — stage `i+1`'s production overlaps stage
+/// `i`'s consumption. See the module docs for the determinism, bounding,
+/// and deadlock-freedom contracts.
+///
+/// `threads <= 1` (or `n <= 1`) is the serial fast path: produce and
+/// consume strictly alternate on the caller, which is exactly the barrier
+/// semantics chunk by chunk.
+pub fn produce_stream<T, P, C>(n: usize, threads: usize, produce: P, mut consume: C)
+where
+    T: Send,
+    P: Fn(usize) -> T + Sync,
+    C: FnMut(usize, T) + Send,
+{
+    let threads = threads.max(1);
+    if threads == 1 || n <= 1 {
+        for i in 0..n {
+            consume(i, produce(i));
+        }
+        return;
+    }
+    let stream: Stream<T> = Stream {
+        slots: (0..n).map(|_| Mutex::new(None)).collect(),
+        next: AtomicUsize::new(0),
+        consumed: AtomicUsize::new(0),
+        window: (2 * threads).max(4),
+        failed: AtomicBool::new(false),
+        payload: Mutex::new(None),
+        signal: Mutex::new(()),
+        cv: Condvar::new(),
+    };
+    let helpers = (threads - 1).min(n);
+    let st = &stream;
+    let producer = &produce;
+    ThreadPool::global().join(
+        move || {
+            // Each helper task runs a full claim loop; extra helpers
+            // beyond the pending chunks drain as no-ops.
+            ThreadPool::global().run_scope(helpers, helpers, 1, |_| st.producer_loop(producer));
+        },
+        move || {
+            // If `consume` unwinds, window-parked producers would wait
+            // forever on a frozen watermark and the join would never
+            // drain: this guard marks the stream failed (producers bail
+            // out of both the park loop and the claim loop) and wakes
+            // them before the panic leaves the closure. Disarmed on the
+            // normal exit path below.
+            struct Abort<'a, T>(&'a Stream<T>);
+            impl<T> Drop for Abort<'_, T> {
+                fn drop(&mut self) {
+                    self.0.failed.store(true, Ordering::Release);
+                    self.0.notify_all();
+                }
+            }
+            let guard = Abort(st);
+            for i in 0..n {
+                st.consumed.store(i, Ordering::Release);
+                st.notify_all();
+                match st.await_chunk(i, producer) {
+                    Some(v) => consume(i, v),
+                    None => break, // producer panicked; re-thrown below
+                }
+            }
+            st.consumed.store(n, Ordering::Release);
+            std::mem::forget(guard);
+            st.notify_all();
+        },
+    );
+    if stream.failed.load(Ordering::Acquire) {
+        match stream.payload.lock().unwrap().take() {
+            Some(p) => resume_unwind(p),
+            None => panic!("pdgrass stream: producer panicked"),
+        }
+    }
+}
+
+/// Chunked scoring producer shared by the streamed pipeline stages:
+/// split `0..n` into fixed `chunk`-sized ranges (the layout depends only
+/// on `(n, chunk)` — never on the thread count, which is what keeps
+/// streamed outputs thread-count independent), produce each chunk on the
+/// pool by mapping the pure `item` function over its range and locally
+/// sorting with `cmp`, and hand the sorted runs to `consume` in
+/// ascending chunk order. `cmp` is expected to be a strict total order
+/// so the downstream run merge yields the unique sorted sequence.
+pub fn produce_sorted_runs<T, I, F, C>(
+    n: usize,
+    chunk: usize,
+    threads: usize,
+    item: I,
+    cmp: &F,
+    consume: C,
+) where
+    T: Send,
+    I: Fn(usize) -> T + Sync,
+    F: Fn(&T, &T) -> std::cmp::Ordering + Sync,
+    C: FnMut(usize, Vec<T>) + Send,
+{
+    let chunk = chunk.max(1);
+    let n_chunks = n.div_ceil(chunk);
+    produce_stream(
+        n_chunks,
+        threads,
+        |ci| {
+            let lo = ci * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut run: Vec<T> = (lo..hi).map(&item).collect();
+            run.sort_by(cmp);
+            run
+        },
+        consume,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn consumes_every_chunk_in_order() {
+        for threads in [1usize, 2, 4, 8] {
+            let mut seen: Vec<(usize, u64)> = Vec::new();
+            produce_stream(100, threads, |i| (i as u64) * 3 + 1, |i, v| seen.push((i, v)));
+            assert_eq!(seen.len(), 100, "threads={threads}");
+            for (k, &(i, v)) in seen.iter().enumerate() {
+                assert_eq!(i, k, "threads={threads}: out-of-order consume");
+                assert_eq!(v, (i as u64) * 3 + 1, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_and_single_chunk() {
+        produce_stream::<u32, _, _>(0, 8, |_| panic!("must not produce"), |_, _| {
+            panic!("must not consume")
+        });
+        let mut got = Vec::new();
+        produce_stream(1, 8, |i| i + 10, |_, v| got.push(v));
+        assert_eq!(got, vec![10]);
+    }
+
+    #[test]
+    fn slow_consumer_still_sees_everything() {
+        // Producers race far ahead of a deliberately slow consumer; the
+        // bounded window parks them but every chunk still arrives once.
+        let mut total = 0u64;
+        produce_stream(
+            64,
+            4,
+            |i| i as u64,
+            |_, v| {
+                std::thread::sleep(Duration::from_micros(200));
+                total += v;
+            },
+        );
+        assert_eq!(total, (0..64u64).sum());
+    }
+
+    #[test]
+    fn producer_panic_propagates() {
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            produce_stream(
+                50,
+                4,
+                |i| {
+                    if i == 23 {
+                        panic!("stream-boom-23");
+                    }
+                    i
+                },
+                |_, _| {},
+            );
+        }));
+        let payload = result.expect_err("producer panic must reach the caller");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(str::to_string)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("stream-boom-23"), "payload lost: {msg:?}");
+        // The pool survives a failed stream.
+        let hits = AtomicU64::new(0);
+        produce_stream(
+            10,
+            4,
+            |i| i,
+            |_, _| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn consumer_panic_propagates() {
+        // n far beyond the in-flight window with a panic early in the
+        // consume order: window-parked producers must be released (the
+        // abort guard), not left waiting on a frozen watermark.
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            produce_stream(
+                50,
+                4,
+                |i| i,
+                |i, _| {
+                    if i == 7 {
+                        panic!("consume-boom");
+                    }
+                },
+            );
+        }));
+        assert!(result.is_err(), "consumer panic must reach the caller");
+        // The pool (and fresh streams) survive an aborted stream.
+        let hits = AtomicU64::new(0);
+        produce_stream(
+            10,
+            4,
+            |i| i,
+            |_, _| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn nested_parallelism_inside_produce() {
+        // The recovery shape: a streamed chunk whose producer itself runs
+        // a pooled parallel map (Mixed-strategy nesting) must not deadlock.
+        let mut sums = Vec::new();
+        produce_stream(
+            8,
+            4,
+            |i| {
+                let xs: Vec<u64> = (0..200).collect();
+                let ys = crate::par::par_map(&xs, 4, |&x| x + i as u64);
+                ys.iter().sum::<u64>()
+            },
+            |_, s| sums.push(s),
+        );
+        for (i, s) in sums.iter().enumerate() {
+            let expect: u64 = (0..200u64).map(|x| x + i as u64).sum();
+            assert_eq!(*s, expect);
+        }
+    }
+
+    #[test]
+    fn produce_sorted_runs_covers_and_sorts_every_chunk() {
+        let cmp = |a: &u64, b: &u64| a.cmp(b);
+        for (n, chunk) in [(0usize, 8usize), (5, 8), (64, 8), (65, 8), (100, 1)] {
+            let mut runs: Vec<(usize, Vec<u64>)> = Vec::new();
+            produce_sorted_runs(
+                n,
+                chunk,
+                4,
+                |k| (k as u64).wrapping_mul(0x9E37_79B9) % 97,
+                &cmp,
+                |ci, run| runs.push((ci, run)),
+            );
+            assert_eq!(runs.len(), n.div_ceil(chunk.max(1)), "n={n} chunk={chunk}");
+            let mut total = 0usize;
+            for (k, (ci, run)) in runs.iter().enumerate() {
+                assert_eq!(*ci, k, "n={n}: runs must arrive in order");
+                assert!(run.windows(2).all(|w| w[0] <= w[1]), "n={n}: run not sorted");
+                total += run.len();
+            }
+            assert_eq!(total, n, "n={n}: every index exactly once");
+        }
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        let run = |threads: usize| -> Vec<u64> {
+            let mut out = Vec::new();
+            produce_stream(
+                37,
+                threads,
+                |i| (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                |_, v| out.push(v),
+            );
+            out
+        };
+        let base = run(1);
+        for threads in [2usize, 3, 8] {
+            assert_eq!(run(threads), base, "threads={threads}");
+        }
+    }
+}

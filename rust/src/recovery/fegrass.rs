@@ -111,15 +111,10 @@ mod tests {
 
     fn params(alpha: f64, beta: u32) -> Params {
         Params {
-            alpha,
             beta_cap: beta,
             strategy: Strategy::Serial,
-            threads: 1,
             block: 1,
-            cutoff_edges: 100_000,
-            cutoff_frac: 0.10,
-            jbp: true,
-            shard_min: 4096,
+            ..Params::new(alpha, 1)
         }
     }
 

@@ -307,15 +307,11 @@ mod tests {
 
     fn params(block: usize, jbp: bool) -> Params {
         Params {
-            alpha: 1.0,
-            beta_cap: 8,
             strategy: Strategy::Inner,
-            threads: 4,
             block,
-            cutoff_edges: 100_000,
-            cutoff_frac: 0.10,
             jbp,
             shard_min: 32,
+            ..Params::new(1.0, 4)
         }
     }
 

@@ -72,6 +72,45 @@ impl std::str::FromStr for Strategy {
     }
 }
 
+/// Stage-handoff discipline of the Algorithm-1 pipeline.
+///
+/// Outputs are **bitwise identical** under both disciplines at every
+/// thread count (annotation is pure, every sort key is a strict total
+/// order, and outcome absorption is order-insensitive where the streamed
+/// order differs) — the knob only changes *when* stages run relative to
+/// each other, which is exactly what the overlap-makespan model in
+/// `coordinator::schedsim` quantifies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Pipeline {
+    /// Each Algorithm-1 stage joins completely before the next starts —
+    /// the paper's presentation, and the conservative default.
+    #[default]
+    Barrier,
+    /// Adjacent stages overlap on the pool via `par::produce_stream`:
+    /// scoring chunks merge into the sort while later chunks are in
+    /// flight, subtask grouping is fused into the final merge pass, and
+    /// recovery outcomes are absorbed while later subtasks are still
+    /// being processed.
+    Streamed,
+}
+
+impl std::str::FromStr for Pipeline {
+    type Err = crate::error::Error;
+
+    /// Parse a pipeline name (case-insensitive): `barrier` or `streamed`
+    /// — the config-file / CLI spelling.
+    fn from_str(s: &str) -> Result<Pipeline, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "barrier" => Ok(Pipeline::Barrier),
+            "streamed" => Ok(Pipeline::Streamed),
+            _ => Err(crate::error::Error::BadParam {
+                name: "pipeline",
+                why: format!("unknown pipeline {s:?} (expected barrier|streamed)"),
+            }),
+        }
+    }
+}
+
 /// Recovery parameters (paper defaults).
 #[derive(Clone, Copy, Debug)]
 pub struct Params {
@@ -97,6 +136,10 @@ pub struct Params {
     /// Shard shapes depend only on the subtask size, never on the thread
     /// count, keeping sharded stats and traces thread-count independent.
     pub shard_min: usize,
+    /// Stage-handoff discipline: barrier-synced stages (default) or the
+    /// streamed overlap pipeline. Outputs are bitwise identical either
+    /// way; see [`Pipeline`].
+    pub pipeline: Pipeline,
 }
 
 impl Params {
@@ -112,6 +155,7 @@ impl Params {
             cutoff_frac: 0.10,
             jbp: true,
             shard_min: 4096,
+            pipeline: Pipeline::Barrier,
         }
     }
 
@@ -271,6 +315,16 @@ mod tests {
         assert_eq!(a.shards, 6);
         assert_eq!(a.commit_misses, 5);
         assert_eq!(a.sharded_subtasks, 1);
+    }
+
+    #[test]
+    fn pipeline_parses_and_defaults_to_barrier() {
+        assert_eq!("barrier".parse::<Pipeline>().unwrap(), Pipeline::Barrier);
+        assert_eq!("Streamed".parse::<Pipeline>().unwrap(), Pipeline::Streamed);
+        assert_eq!("STREAMED".parse::<Pipeline>().unwrap(), Pipeline::Streamed);
+        assert!("overlapped".parse::<Pipeline>().is_err());
+        assert_eq!(Pipeline::default(), Pipeline::Barrier);
+        assert_eq!(Params::new(0.05, 2).pipeline, Pipeline::Barrier);
     }
 
     #[test]

@@ -27,9 +27,9 @@
 //! guarantee airtight anyway.
 
 use super::inner::{process_inner, process_serial, process_sharded, SubtaskOutcome};
-use super::score::sort_by_score;
-use super::subtask::{make_subtasks, split_large, Subtask};
-use super::{CostTrace, Params, Recovery, Stats, Strategy};
+use super::score::{scored_sorted_streamed, sort_by_score};
+use super::subtask::{make_subtasks, split_large, Subtask, SubtaskBuilder};
+use super::{CostTrace, Params, Pipeline, Recovery, Stats, Strategy};
 use crate::graph::Graph;
 use crate::par;
 use crate::tree::{off_tree_edges, OffTreeEdge, Spanning};
@@ -41,7 +41,32 @@ pub fn pdgrass(g: &Graph, sp: &Spanning, params: &Params) -> Recovery {
 
 /// As [`pdgrass`], optionally capturing the per-edge cost trace consumed
 /// by the scheduling simulator (`coordinator::schedsim`).
+///
+/// Under [`Pipeline::Streamed`] the stage barriers disappear: steps 1+2
+/// are fused (annotation chunks merge into the score sort while later
+/// chunks are in flight), step 3 grouping is fused into the final merge
+/// pass, and step 4 absorbs outcomes as they stream off the pool — see
+/// [`recover_sorted`]. The recovery output is bitwise identical either
+/// way; only `step_ms` attribution changes (streamed reports the fused
+/// steps 1+2 in `step_ms[0]` and leaves `step_ms[1]` at zero).
 pub fn pdgrass_traced(g: &Graph, sp: &Spanning, params: &Params, trace: bool) -> Recovery {
+    if params.pipeline == Pipeline::Streamed {
+        // Steps 1–3 streamed: scoring chunks → run merge → grouping, all
+        // overlapped; the builder consumes the final merge's output as it
+        // is emitted, so no stage re-walks a finished array.
+        let t = crate::util::Timer::start();
+        let mut builder = SubtaskBuilder::new();
+        let off = scored_sorted_streamed(g, sp, params.threads, |e| builder.push(e));
+        let fused_ms = t.ms();
+        let t = crate::util::Timer::start();
+        let subtasks = builder.finish();
+        let subtask_ms = t.ms();
+        let mut rec = recover_sorted(g.num_vertices(), &off, &subtasks, sp, params, trace);
+        rec.step_ms[0] = fused_ms;
+        rec.step_ms[1] = 0.0;
+        rec.step_ms[2] = subtask_ms;
+        return rec;
+    }
     // Step 1: resistance distance for each off-tree edge (parallel).
     let t = crate::util::Timer::start();
     let mut off = off_tree_edges(g, sp);
@@ -70,6 +95,11 @@ pub fn pdgrass_traced(g: &Graph, sp: &Spanning, params: &Params, trace: bool) ->
 /// split that lets α-sweeps amortize steps 1–3. `step_ms[0..3]` of the
 /// result are zero (the caller owns those timings); `step_ms[3]` is this
 /// call's wall-clock.
+///
+/// `params.pipeline` selects the pass discipline: barrier (fan out, join,
+/// then absorb every outcome) or streamed ([`run_pass_streamed`]:
+/// outcomes absorbed as they complete, payloads moved instead of cloned).
+/// The recovery is bitwise identical either way.
 pub fn recover_sorted(
     n_vertices: usize,
     off: &[OffTreeEdge],
@@ -88,27 +118,66 @@ pub fn recover_sorted(
     let mut cost_trace = CostTrace::default();
     let t = crate::util::Timer::start();
 
-    // Pass 1 runs over the *borrowed* subtask list — the strict condition
-    // recovers the target in a single pass on every suite graph, so the
-    // common case copies nothing. Only leftovers (rare fallback passes)
-    // are materialized.
-    let mut active: Vec<Subtask> = Vec::new();
-    if target > 0 && subtasks.iter().any(|s| !s.is_empty()) {
-        passes = 1;
-        let outcomes = run_pass(off, sp, subtasks, params, &mut stats);
-        if trace {
-            for oc in &outcomes {
-                cost_trace.subtask_costs.push(oc.costs.clone());
+    if params.pipeline == Pipeline::Streamed {
+        // Streamed step 4: each pass hands completed outcomes to the
+        // caller while later subtasks are still being processed — no
+        // barrier between the processing fan-out and absorption, and
+        // outcome payloads are moved, not cloned. Bitwise identical to
+        // the barrier flow: the pass-1 consume order equals the slot
+        // order (the large subtasks are a prefix of the size-sorted
+        // list), stats merging is commutative, and the final selection
+        // sorts `recovered_global` anyway.
+        if target > 0 && subtasks.iter().any(|s| !s.is_empty()) {
+            passes = 1;
+            let mut leftovers: Vec<Subtask> = Vec::new();
+            run_pass_streamed(off, sp, subtasks, params, &mut stats, |st, oc| {
+                if trace {
+                    cost_trace.subtask_costs.push(oc.costs);
+                }
+                recovered_global.extend_from_slice(&oc.recovered);
+                if !oc.leftover.is_empty() {
+                    leftovers.push(Subtask { lca: st.lca, idxs: oc.leftover });
+                }
+            });
+            let mut active = leftovers;
+            while recovered_global.len() < target && active.iter().any(|s| !s.is_empty()) {
+                passes += 1;
+                let mut next: Vec<Subtask> = Vec::new();
+                run_pass_streamed(off, sp, &active, params, &mut stats, |st, oc| {
+                    recovered_global.extend_from_slice(&oc.recovered);
+                    if !oc.leftover.is_empty() {
+                        next.push(Subtask { lca: st.lca, idxs: oc.leftover });
+                    }
+                });
+                active = next;
+                if passes > 64 {
+                    break; // safety net; never hit in practice
+                }
             }
         }
-        active = absorb(subtasks, &outcomes, &mut recovered_global);
-    }
-    while recovered_global.len() < target && active.iter().any(|s| !s.is_empty()) {
-        passes += 1;
-        let outcomes = run_pass(off, sp, &active, params, &mut stats);
-        active = absorb(&active, &outcomes, &mut recovered_global);
-        if passes > 64 {
-            break; // safety net; never hit in practice (single pass suffices)
+    } else {
+        // Pass 1 runs over the *borrowed* subtask list — the strict
+        // condition recovers the target in a single pass on every suite
+        // graph, so the common case copies nothing. Only leftovers (rare
+        // fallback passes) are materialized.
+        let mut active: Vec<Subtask> = Vec::new();
+        if target > 0 && subtasks.iter().any(|s| !s.is_empty()) {
+            passes = 1;
+            let outcomes = run_pass(off, sp, subtasks, params, &mut stats);
+            if trace {
+                for oc in &outcomes {
+                    cost_trace.subtask_costs.push(oc.costs.clone());
+                }
+            }
+            active = absorb(subtasks, &outcomes, &mut recovered_global);
+        }
+        while recovered_global.len() < target && active.iter().any(|s| !s.is_empty()) {
+            passes += 1;
+            let outcomes = run_pass(off, sp, &active, params, &mut stats);
+            active = absorb(&active, &outcomes, &mut recovered_global);
+            if passes > 64 {
+                break; // safety net; never hit in practice (single pass suffices)
+            }
         }
     }
 
@@ -221,6 +290,91 @@ fn run_split_pass(
     slots.into_iter().map(|s| s.expect("subtask slot unfilled")).collect()
 }
 
+/// One full pass under [`Pipeline::Streamed`]: subtasks are dispatched to
+/// pool workers through [`par::produce_stream`] and completed outcomes
+/// are handed to `sink` in dispatch order while later subtasks are still
+/// being processed — the processing fan-out and the absorption overlap.
+///
+/// Dispatch order is the large subtasks (in `split_large` order, each
+/// nesting its own strategy-specific inner parallelism inside the stream
+/// task) followed by the small ones; on the first pass the large group is
+/// a prefix of the size-sorted list, so the sink order coincides with the
+/// barrier path's slot order and traces pin bitwise. Unlike the barrier
+/// split pass, large subtasks here overlap both each other and the small
+/// subtasks — sound because LCA subtasks are independent (Lemma 7) and
+/// exploration is pure.
+///
+/// [`Strategy::Serial`] and [`Strategy::Inner`] keep their inherently
+/// ordered one-by-one shape (their definition, not a barrier artifact).
+fn run_pass_streamed<S>(
+    off: &[OffTreeEdge],
+    sp: &Spanning,
+    active: &[Subtask],
+    params: &Params,
+    stats: &mut Stats,
+    mut sink: S,
+) where
+    S: FnMut(&Subtask, SubtaskOutcome) + Send,
+{
+    let total_off: usize = active.iter().map(|s| s.len()).sum();
+    match params.strategy {
+        Strategy::Serial => {
+            for st in active {
+                let oc = process_serial(off, sp, &st.idxs, params);
+                stats.merge(&oc.stats);
+                sink(st, oc);
+            }
+        }
+        Strategy::Inner => {
+            for st in active {
+                let oc = process_inner(off, sp, &st.idxs, params);
+                stats.inner_subtasks += 1;
+                stats.merge(&oc.stats);
+                sink(st, oc);
+            }
+        }
+        Strategy::Outer => {
+            par::produce_stream(
+                active.len(),
+                params.threads,
+                |i| process_serial(off, sp, &active[i].idxs, params),
+                |i, oc| {
+                    stats.merge(&oc.stats);
+                    sink(&active[i], oc);
+                },
+            );
+        }
+        Strategy::Mixed | Strategy::Sharded => {
+            let sharded = params.strategy == Strategy::Sharded;
+            let (large, small) =
+                split_large(active, total_off, params.cutoff_edges, params.cutoff_frac);
+            let n_large = large.len();
+            let order: Vec<usize> = large.into_iter().chain(small).collect();
+            par::produce_stream(
+                order.len(),
+                params.threads,
+                |k| {
+                    let st = &active[order[k]];
+                    if k >= n_large {
+                        process_serial(off, sp, &st.idxs, params)
+                    } else if sharded {
+                        process_sharded(off, sp, &st.idxs, params)
+                    } else {
+                        process_inner(off, sp, &st.idxs, params)
+                    }
+                },
+                |k, oc| {
+                    if k < n_large && !sharded {
+                        stats.inner_subtasks += 1;
+                    }
+                    stats.merge(&oc.stats);
+                    sink(&active[order[k]], oc);
+                },
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,15 +384,10 @@ mod tests {
 
     fn params(alpha: f64, strategy: Strategy) -> Params {
         Params {
-            alpha,
-            beta_cap: 8,
             strategy,
-            threads: 4,
-            block: 4,
             cutoff_edges: 200, // small graphs in tests → exercise inner path
-            cutoff_frac: 0.10,
-            jbp: true,
-            shard_min: 64, // small graphs in tests → exercise sharding
+            shard_min: 64,     // small graphs in tests → exercise sharding
+            ..Params::new(alpha, 4)
         }
     }
 
@@ -267,6 +416,42 @@ mod tests {
         for strat in [Strategy::Outer, Strategy::Inner, Strategy::Mixed, Strategy::Sharded] {
             let r = pdgrass(&g, &sp, &params(0.05, strat));
             assert_eq!(r.edges, base.edges, "strategy {strat:?} diverged");
+        }
+    }
+
+    #[test]
+    fn streamed_pipeline_is_bitwise_identical_to_barrier() {
+        let g = test_graph(7);
+        let sp = build_spanning(&g);
+        let strategies = [
+            Strategy::Serial,
+            Strategy::Outer,
+            Strategy::Inner,
+            Strategy::Mixed,
+            Strategy::Sharded,
+        ];
+        for strat in strategies {
+            let barrier = pdgrass_traced(&g, &sp, &params(0.05, strat), true);
+            for threads in [1usize, 2, 8] {
+                let p = Params {
+                    pipeline: crate::recovery::Pipeline::Streamed,
+                    threads,
+                    ..params(0.05, strat)
+                };
+                let streamed = pdgrass_traced(&g, &sp, &p, true);
+                assert_eq!(streamed.edges, barrier.edges, "{strat:?} t={threads}");
+                assert_eq!(streamed.passes, barrier.passes, "{strat:?} t={threads}");
+                assert_eq!(
+                    format!("{:?}", streamed.stats),
+                    format!("{:?}", barrier.stats),
+                    "{strat:?} t={threads}: stats diverged"
+                );
+                assert_eq!(
+                    streamed.trace.as_ref().unwrap().subtask_costs,
+                    barrier.trace.as_ref().unwrap().subtask_costs,
+                    "{strat:?} t={threads}: trace diverged"
+                );
+            }
         }
     }
 

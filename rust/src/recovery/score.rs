@@ -6,18 +6,70 @@
 //! rewrite the sort *moves* the 48-byte `OffTreeEdge` payloads through a
 //! single ping-pong scratch buffer instead of cloning whole sub-buffers
 //! at every merge level — this call site no longer clones any edge.
+//!
+//! # Streamed steps 1+2 ([`scored_sorted_streamed`])
+//!
+//! The barrier pipeline annotates *every* off-tree edge (step 1 joins),
+//! then sorts the finished array (step 2 joins). The streamed pipeline
+//! fuses them: fixed 4096-edge chunks are annotated **and locally
+//! sorted** on pool workers, and the caller merges completed runs
+//! ([`crate::par::sort::RunMerger`]) while later chunks are still being
+//! scored — no barrier between resistance annotation and the score sort.
+//! The comparator is a strict total order (score desc, ties by edge id),
+//! so the merged output is the bitwise-identical sequence the barrier
+//! sort produces, at every thread count.
 
 use crate::par;
-use crate::tree::OffTreeEdge;
+use crate::tree::{annotate_off_tree_edge, OffTreeEdge, Spanning};
+
+/// Fixed chunk size of the streamed scoring producer (the chunk layout
+/// depends only on the off-tree edge count, never on the thread count).
+pub const SCORE_CHUNK: usize = 4096;
+
+/// The recovery priority order: criticality score descending, ties broken
+/// by edge id ascending — a strict total order over off-tree edges.
+#[inline]
+pub fn score_cmp(a: &OffTreeEdge, b: &OffTreeEdge) -> std::cmp::Ordering {
+    b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal).then(a.eid.cmp(&b.eid))
+}
 
 /// Sort off-tree edges descending by score (stable), in parallel.
 pub fn sort_by_score(off: &mut [OffTreeEdge], threads: usize) {
-    par::sort::par_sort_by(off, threads, &|a: &OffTreeEdge, b: &OffTreeEdge| {
-        b.score
-            .partial_cmp(&a.score)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.eid.cmp(&b.eid))
-    });
+    par::sort::par_sort_by(off, threads, &score_cmp);
+}
+
+/// Streamed steps 1+2 fused: annotate off-tree edges chunk-by-chunk on
+/// the pool (each chunk locally sorted by [`score_cmp`]), merge completed
+/// runs on the caller while scoring is still producing, and return the
+/// fully score-sorted list. `emit` is invoked once per edge **in final
+/// sorted order during the last merge pass** — the hook the session layer
+/// uses to fuse step 3 (LCA subtask grouping) into the merge tail instead
+/// of re-walking the array behind another barrier.
+///
+/// Output is bitwise identical to `off_tree_edges` + [`sort_by_score`]
+/// at every thread count: annotation is a pure per-edge function and the
+/// comparator is a strict total order.
+pub fn scored_sorted_streamed<E>(
+    g: &crate::graph::Graph,
+    sp: &Spanning,
+    threads: usize,
+    emit: E,
+) -> Vec<OffTreeEdge>
+where
+    E: FnMut(&OffTreeEdge),
+{
+    let ids: Vec<u32> =
+        (0..g.num_edges() as u32).filter(|&i| !sp.is_tree_edge[i as usize]).collect();
+    let mut merger = par::sort::RunMerger::new(&score_cmp);
+    par::stream::produce_sorted_runs(
+        ids.len(),
+        SCORE_CHUNK,
+        threads,
+        |k| annotate_off_tree_edge(g, sp, ids[k]),
+        &score_cmp,
+        |_, run| merger.push(run),
+    );
+    merger.finish_with(emit)
 }
 
 #[cfg(test)]
@@ -39,6 +91,27 @@ mod tests {
             assert!(w[0].score >= w[1].score);
             if w[0].score == w[1].score {
                 assert!(w[0].eid < w[1].eid);
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_scoring_matches_barrier_bitwise() {
+        let g = crate::gen::grid(60, 60, 0.6, &mut Rng::new(3));
+        let sp = crate::tree::build_spanning(&g);
+        let mut barrier = crate::tree::off_tree_edges(&g, &sp);
+        sort_by_score(&mut barrier, 2);
+        assert!(barrier.len() > SCORE_CHUNK, "test graph must span multiple chunks");
+        for threads in [1usize, 2, 8] {
+            let mut emitted = 0usize;
+            let streamed = scored_sorted_streamed(&g, &sp, threads, |_| emitted += 1);
+            assert_eq!(emitted, barrier.len(), "threads={threads}");
+            assert_eq!(streamed.len(), barrier.len(), "threads={threads}");
+            for (s, b) in streamed.iter().zip(&barrier) {
+                assert_eq!(s.eid, b.eid, "threads={threads}");
+                assert_eq!(s.lca, b.lca, "threads={threads}");
+                assert_eq!(s.score.to_bits(), b.score.to_bits(), "threads={threads}");
+                assert_eq!(s.resistance.to_bits(), b.resistance.to_bits(), "threads={threads}");
             }
         }
     }

@@ -32,19 +32,61 @@ impl Subtask {
     }
 }
 
+/// Incremental LCA grouper — step 3 consumed one edge at a time, in
+/// score-sorted position order. The streamed pipeline pushes edges into
+/// this builder **from inside the final sort-merge pass**
+/// (`par::sort::RunMerger::finish_with`), fusing subtask grouping into
+/// the merge tail instead of re-walking the finished array behind a
+/// barrier; the barrier [`make_subtasks`] is the same builder fed by a
+/// plain loop, so both pipelines produce identical subtask lists.
+#[derive(Debug, Default)]
+pub struct SubtaskBuilder {
+    by_lca: FxHashMap<u32, Vec<u32>>,
+    next_pos: u32,
+}
+
+impl SubtaskBuilder {
+    /// Empty builder.
+    pub fn new() -> SubtaskBuilder {
+        SubtaskBuilder::default()
+    }
+
+    /// Consume the next edge in sorted-position order.
+    pub fn push(&mut self, e: &OffTreeEdge) {
+        self.by_lca.entry(e.lca).or_default().push(self.next_pos);
+        self.next_pos += 1;
+    }
+
+    /// Number of edges consumed so far.
+    pub fn len(&self) -> usize {
+        self.next_pos as usize
+    }
+
+    /// True if no edges were consumed.
+    pub fn is_empty(&self) -> bool {
+        self.next_pos == 0
+    }
+
+    /// Finalize into the canonical subtask list: size descending, ties by
+    /// LCA ascending — a strict total order (LCAs are unique per group),
+    /// so the list is independent of hash-map iteration order.
+    pub fn finish(self) -> Vec<Subtask> {
+        let mut subtasks: Vec<Subtask> =
+            self.by_lca.into_iter().map(|(lca, idxs)| Subtask { lca, idxs }).collect();
+        subtasks.sort_by(|a, b| b.len().cmp(&a.len()).then(a.lca.cmp(&b.lca)));
+        subtasks
+    }
+}
+
 /// Group score-sorted off-tree edges into subtasks keyed by LCA, then sort
 /// subtasks by size descending (stable: equal sizes keep first-seen
 /// order). One serial pass + sort, `O(|E| lg |E|)` work as in Table I.
 pub fn make_subtasks(off_sorted: &[OffTreeEdge]) -> Vec<Subtask> {
-    let mut by_lca: FxHashMap<u32, Vec<u32>> = FxHashMap::default();
-    for (i, e) in off_sorted.iter().enumerate() {
-        by_lca.entry(e.lca).or_default().push(i as u32);
+    let mut b = SubtaskBuilder::new();
+    for e in off_sorted {
+        b.push(e);
     }
-    let mut subtasks: Vec<Subtask> =
-        by_lca.into_iter().map(|(lca, idxs)| Subtask { lca, idxs }).collect();
-    // Deterministic: sort by (size desc, lca asc).
-    subtasks.sort_by(|a, b| b.len().cmp(&a.len()).then(a.lca.cmp(&b.lca)));
-    subtasks
+    b.finish()
 }
 
 /// Split `0..m` into near-equal contiguous shard ranges with target size
@@ -113,6 +155,26 @@ mod tests {
         assert_eq!(st[0].lca, 5); // bigger first
         assert_eq!(st[0].idxs, vec![0, 2, 4]); // ascending = score order
         assert_eq!(st[1].idxs, vec![1, 3]);
+    }
+
+    #[test]
+    fn incremental_builder_matches_batch_grouping() {
+        let mut rng = crate::util::Rng::new(5);
+        let off: Vec<OffTreeEdge> =
+            (0..500).map(|i| mk(rng.next_u32() % 23, 500.0 - i as f64, i)).collect();
+        let batch = make_subtasks(&off);
+        let mut b = SubtaskBuilder::new();
+        assert!(b.is_empty());
+        for e in &off {
+            b.push(e);
+        }
+        assert_eq!(b.len(), off.len());
+        let incremental = b.finish();
+        assert_eq!(incremental.len(), batch.len());
+        for (a, c) in incremental.iter().zip(&batch) {
+            assert_eq!(a.lca, c.lca);
+            assert_eq!(a.idxs, c.idxs);
+        }
     }
 
     #[test]

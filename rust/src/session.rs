@@ -24,6 +24,20 @@
 //! drivers (`coordinator::experiments`) lean on this to pay steps 1–3
 //! once per graph instead of once per (graph, α) pair.
 //!
+//! Preparation (and recovery) can run under either stage-handoff
+//! discipline ([`enum@Pipeline`]): the default **barrier** pipeline joins
+//! each Algorithm-1 stage before the next starts, while the **streamed**
+//! pipeline ([`Sparsify::prepare_streamed`] / [`RecoverOpts::pipeline`])
+//! overlaps adjacent stages on the persistent pool via
+//! `par::produce_stream` — scoring chunks merge into the sort while
+//! later chunks are in flight, subtask grouping is fused into the final
+//! merge pass, and recovery outcomes are absorbed while later subtasks
+//! are still being processed. Both disciplines produce bitwise-identical
+//! state and results; the streamed one just keeps the pool busy across
+//! stage boundaries (see `coordinator::schedsim`'s overlap-makespan
+//! model, and the `lib.rs` architecture overview for the timeline
+//! diagram).
+//!
 //! All fallibility is the typed [`enum@Error`]: bad parameters are
 //! [`Error::BadParam`], disconnected inputs are [`Error::Disconnected`],
 //! solver breakdowns are [`Error::NotPositiveDefinite`] /
@@ -33,10 +47,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::{Error, Result};
 use crate::graph::{self, Graph};
-use crate::recovery::score::sort_by_score;
-use crate::recovery::subtask::{make_subtasks, Subtask};
-use crate::recovery::{self, CostTrace, Params, Stats, Strategy};
-use crate::tree::{build_spanning, off_tree_edges, OffTreeEdge, Spanning};
+use crate::recovery::score::{scored_sorted_streamed, sort_by_score};
+use crate::recovery::subtask::{make_subtasks, Subtask, SubtaskBuilder};
+use crate::recovery::{self, CostTrace, Params, Pipeline, Stats, Strategy};
+use crate::tree::{build_spanning, build_spanning_streamed, off_tree_edges, OffTreeEdge, Spanning};
 use crate::util::Timer;
 
 /// Monotone id source for [`Prepared`] instances (instrumentation: lets
@@ -64,13 +78,19 @@ pub struct Sparsify {
     graph: Graph,
     name: Option<String>,
     threads: usize,
+    pipeline: Pipeline,
 }
 
 impl Sparsify {
     /// Start a session from an arbitrary graph (e.g. `graph::read_mtx`
     /// output or a generator).
     pub fn graph(g: Graph) -> Sparsify {
-        Sparsify { graph: g, name: None, threads: crate::par::num_threads() }
+        Sparsify {
+            graph: g,
+            name: None,
+            threads: crate::par::num_threads(),
+            pipeline: Pipeline::Barrier,
+        }
     }
 
     /// Start a session from an evaluation-suite row (built at `scale`
@@ -96,19 +116,43 @@ impl Sparsify {
         self
     }
 
-    /// Thread count for the preparation sort (step 3's criticality sort,
-    /// the only prepare stage with a per-call thread knob; the spanning
-    /// tree and resistance annotation use the environment's thread count,
-    /// exactly as the pre-session pipeline did). The sorted order is
-    /// thread-count independent, so this only affects timing.
+    /// Thread count for the preparation. Under the barrier pipeline this
+    /// drives only step 2's criticality sort (the spanning tree and
+    /// resistance annotation use the environment's thread count, exactly
+    /// as the pre-session pipeline did); under the streamed pipeline it
+    /// sizes every `produce_stream` stage. Prepared state is thread-count
+    /// independent either way, so this only affects timing.
     pub fn threads(mut self, threads: usize) -> Sparsify {
         self.threads = threads.max(1);
         self
     }
 
+    /// Stage-handoff discipline for [`Sparsify::prepare`]:
+    /// [`Pipeline::Barrier`] (default) joins each Algorithm-1 stage before
+    /// the next starts; [`Pipeline::Streamed`] overlaps them on the pool
+    /// (scoring chunks merge into the sort while later chunks are in
+    /// flight; subtask grouping is fused into the final merge pass). The
+    /// resulting [`Prepared`] state is bitwise identical either way.
+    pub fn pipeline(mut self, pipeline: Pipeline) -> Sparsify {
+        self.pipeline = pipeline;
+        self
+    }
+
+    /// Convenience for [`Sparsify::pipeline`]`(Pipeline::Streamed)` +
+    /// [`Sparsify::prepare`]: run steps 1–3 as the streamed overlap
+    /// pipeline.
+    pub fn prepare_streamed(self) -> Result<Prepared> {
+        self.pipeline(Pipeline::Streamed).prepare()
+    }
+
     /// Run steps 1–3 once: spanning tree on effective weights, resistance
     /// scoring of every off-tree edge, score sort, LCA subtask grouping.
     /// The worker pool is warmed before any timed stage.
+    ///
+    /// Under [`Pipeline::Streamed`] the stages overlap instead of
+    /// barrier-syncing (see [`Sparsify::pipeline`]); `prep_ms` then
+    /// reports the fused annotate+sort stage in its first entry and zero
+    /// for the sort entry, since no separate sort stage exists.
     pub fn prepare(self) -> Result<Prepared> {
         if self.graph.num_vertices() == 0 || self.graph.num_edges() == 0 {
             return Err(Error::BadParam {
@@ -123,6 +167,9 @@ impl Sparsify {
         // Warm the persistent pool outside the timed stages.
         crate::par::ThreadPool::global();
 
+        if self.pipeline == Pipeline::Streamed {
+            return Ok(self.prepare_streamed_impl());
+        }
         let t = Timer::start();
         let spanning = build_spanning(&self.graph);
         let spanning_ms = t.ms();
@@ -147,9 +194,53 @@ impl Sparsify {
             spanning,
             off,
             subtasks,
+            pipeline: Pipeline::Barrier,
             spanning_ms,
             prep_ms: [resistance_ms, sort_ms, subtask_ms],
         })
+    }
+
+    /// The streamed prepare body (graph already validated): every stage
+    /// boundary is a [`crate::par::produce_stream`] handoff instead of a
+    /// join —
+    ///
+    /// * effective-weight chunks merge into the Kruskal order while later
+    ///   chunks are still being scored ([`build_spanning_streamed`]);
+    /// * off-tree annotation chunks merge into the score sort the same
+    ///   way, and the LCA subtask grouping consumes the final merge's
+    ///   output as it is emitted ([`scored_sorted_streamed`] +
+    ///   [`SubtaskBuilder`]);
+    ///
+    /// so the pool never idles at a stage boundary. Every sort key is a
+    /// strict total order and every per-edge computation is pure, hence
+    /// the returned state is bitwise identical to the barrier path.
+    fn prepare_streamed_impl(self) -> Prepared {
+        let t = Timer::start();
+        let spanning = build_spanning_streamed(&self.graph, self.threads);
+        let spanning_ms = t.ms();
+
+        let t = Timer::start();
+        let mut builder = SubtaskBuilder::new();
+        let emit = |e: &OffTreeEdge| builder.push(e);
+        let off = scored_sorted_streamed(&self.graph, &spanning, self.threads, emit);
+        let fused_ms = t.ms();
+
+        let t = Timer::start();
+        let subtasks = builder.finish();
+        let subtask_ms = t.ms();
+
+        PREPARE_COUNT.fetch_add(1, Ordering::Relaxed);
+        Prepared {
+            id: NEXT_PREPARED_ID.fetch_add(1, Ordering::Relaxed),
+            name: self.name,
+            graph: self.graph,
+            spanning,
+            off,
+            subtasks,
+            pipeline: Pipeline::Streamed,
+            spanning_ms,
+            prep_ms: [fused_ms, 0.0, subtask_ms],
+        }
     }
 }
 
@@ -177,6 +268,11 @@ pub struct RecoverOpts {
     /// into `ceil(len / shard_min)` near-equal shards that speculate
     /// concurrently (default 4096; must be ≥ 1).
     pub shard_min: usize,
+    /// Stage-handoff discipline for step 4: barrier-synced pass phases
+    /// (default) or streamed outcome absorption. Recovered edges, stats,
+    /// and traces are bitwise identical either way; see
+    /// [`enum@Pipeline`].
+    pub pipeline: Pipeline,
 }
 
 impl Default for RecoverOpts {
@@ -204,6 +300,7 @@ impl RecoverOpts {
             cutoff_frac: 0.10,
             jbp: true,
             shard_min: 4096,
+            pipeline: Pipeline::Barrier,
         }
     }
 
@@ -256,6 +353,7 @@ impl RecoverOpts {
             cutoff_frac: self.cutoff_frac,
             jbp: self.jbp,
             shard_min: self.shard_min,
+            pipeline: self.pipeline,
         }
     }
 }
@@ -273,8 +371,14 @@ pub struct Prepared {
     off: Vec<OffTreeEdge>,
     /// LCA subtasks over `off`, size-sorted descending (step 3's output).
     subtasks: Vec<Subtask>,
+    /// Discipline the preparation ran under (the state itself is bitwise
+    /// identical either way; step 4's discipline is chosen per recovery
+    /// via [`RecoverOpts::pipeline`]).
+    pipeline: Pipeline,
     spanning_ms: f64,
     /// Wall-clock of [resistance annotation, sort, subtask grouping], ms.
+    /// Under the streamed pipeline the first entry is the fused
+    /// annotate+sort stage and the second is zero.
     prep_ms: [f64; 3],
 }
 
@@ -303,6 +407,24 @@ impl Prepared {
     /// Number of off-tree edges available for recovery.
     pub fn num_off_tree(&self) -> usize {
         self.off.len()
+    }
+
+    /// The score-sorted off-tree edge list (step 2's output) — exposed so
+    /// equivalence tests and diagnostics can compare prepared state
+    /// bitwise across pipelines.
+    pub fn off_tree(&self) -> &[OffTreeEdge] {
+        &self.off
+    }
+
+    /// The LCA subtasks over [`Prepared::off_tree`] (step 3's output),
+    /// size-sorted descending.
+    pub fn subtasks(&self) -> &[Subtask] {
+        &self.subtasks
+    }
+
+    /// The stage-handoff discipline this state was prepared under.
+    pub fn pipeline(&self) -> Pipeline {
+        self.pipeline
     }
 
     /// Wall-clock of the spanning-tree build, ms.
@@ -554,6 +676,30 @@ mod tests {
     fn shard_min_reaches_recovery_params() {
         let opts = RecoverOpts { shard_min: 7, ..RecoverOpts::new(0.05) };
         assert_eq!(opts.params().shard_min, 7);
+    }
+
+    #[test]
+    fn pipeline_reaches_recovery_params() {
+        let opts = RecoverOpts::new(0.05);
+        assert_eq!(opts.pipeline, Pipeline::Barrier);
+        assert_eq!(opts.params().pipeline, Pipeline::Barrier);
+        let opts = RecoverOpts { pipeline: Pipeline::Streamed, ..RecoverOpts::new(0.05) };
+        assert_eq!(opts.params().pipeline, Pipeline::Streamed);
+    }
+
+    #[test]
+    fn prepare_streamed_smoke_and_tagging() {
+        let g = crate::gen::grid(12, 12, 0.5, &mut Rng::new(3));
+        let barrier = Sparsify::graph(g.clone()).prepare().unwrap();
+        assert_eq!(barrier.pipeline(), Pipeline::Barrier);
+        let streamed = Sparsify::graph(g).prepare_streamed().unwrap();
+        assert_eq!(streamed.pipeline(), Pipeline::Streamed);
+        assert_eq!(streamed.num_off_tree(), barrier.num_off_tree());
+        assert_eq!(streamed.subtasks().len(), barrier.subtasks().len());
+        // Streamed prep_ms convention: no separate sort stage.
+        assert_eq!(streamed.prep_ms()[1], 0.0);
+        let r = streamed.recover(&RecoverOpts::new(0.05)).unwrap();
+        assert!(!r.edges().is_empty());
     }
 
     #[test]

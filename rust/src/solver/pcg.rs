@@ -16,6 +16,16 @@ use crate::graph::{grounded_laplacian, CsrMatrix, Graph};
 pub trait Preconditioner {
     /// Apply the preconditioner.
     fn apply(&self, r: &[f64], z: &mut [f64]);
+
+    /// Apply across `threads` pool workers. The default falls back to the
+    /// serial [`Preconditioner::apply`]; implementations that override it
+    /// (the elementwise [`Jacobi`] path) must be **bitwise identical** to
+    /// the serial apply at every thread count — `pcg_par`'s exact-parity
+    /// guarantee depends on it.
+    fn apply_par(&self, r: &[f64], z: &mut [f64], threads: usize) {
+        let _ = threads;
+        self.apply(r, z);
+    }
 }
 
 /// Identity (no preconditioning) — the plain-CG baseline.
@@ -45,6 +55,15 @@ impl Preconditioner for Jacobi {
         for i in 0..r.len() {
             z[i] = r[i] * self.inv_diag[i];
         }
+    }
+
+    /// Pooled diagonal apply: each slot is written from the same
+    /// expression as the serial loop (`z[i] = r[i] · d⁻¹[i]`, disjoint
+    /// indices, no reduction), so the result is bitwise identical at
+    /// every thread count.
+    fn apply_par(&self, r: &[f64], z: &mut [f64], threads: usize) {
+        let inv = &self.inv_diag;
+        crate::par::par_update(z, threads, 4096, |i, zi| *zi = r[i] * inv[i]);
     }
 }
 
@@ -120,10 +139,11 @@ pub fn pcg<M: Preconditioner>(
 /// The iteration loop performs **zero heap allocations** (all vectors
 /// and the residual history are sized up front), and none of its BLAS-1
 /// tail remains serial: `x`/`r` updates go through `axpy_par`, the
-/// direction update through `xpay_par`, and the reductions through
-/// `dot_par`/`norm2_par`. The one remaining serial O(n) step is the
-/// preconditioner `m.apply` itself (see CHANGES.md: parallel triangular
-/// solve is an open follow-up).
+/// direction update through `xpay_par`, the reductions through
+/// `dot_par`/`norm2_par`, and the preconditioner through
+/// [`Preconditioner::apply_par`] (pooled for the elementwise [`Jacobi`]
+/// path; [`SparsifierPrecond`]'s triangular solves still take the serial
+/// fallback — a parallel triangular solve remains the open follow-up).
 ///
 /// Results are bitwise identical at every thread count, not merely
 /// close: the row-parallel SpMV performs the same per-row folds, the
@@ -146,7 +166,7 @@ pub fn pcg_par<M: Preconditioner>(
     let mut x = vec![0.0; n];
     let mut r = b.to_vec();
     let mut z = vec![0.0; n];
-    m.apply(&r, &mut z);
+    m.apply_par(&r, &mut z, threads);
     let mut p = z.clone();
     let mut rz = dot_par(&r, &z, threads);
     let mut ap = vec![0.0; n];
@@ -174,7 +194,7 @@ pub fn pcg_par<M: Preconditioner>(
         if relres <= tol {
             return PcgResult { x, iterations: it, relres, converged: true, history };
         }
-        m.apply(&r, &mut z);
+        m.apply_par(&r, &mut z, threads);
         let rz_new = dot_par(&r, &z, threads);
         let beta = rz_new / rz;
         rz = rz_new;
@@ -289,6 +309,49 @@ mod tests {
         let res = pcg(&a, &b, &Jacobi::new(&a), 1e-6, 5000);
         assert_eq!(res.history.len(), res.iterations);
         assert!(res.history.last().unwrap() <= &1e-6);
+    }
+
+    #[test]
+    fn jacobi_apply_par_is_bitwise_identical_to_serial() {
+        let (a, _, _) = laplacian_system(8);
+        let m = Jacobi::new(&a);
+        let mut rng = Rng::new(17);
+        // Pad well past the pooled kernel's grain so several chunks run.
+        let n = 20_000usize.max(a.n);
+        let r: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let inv: Vec<f64> = (0..n).map(|_| 1.0 + rng.normal().abs()).collect();
+        let m_big = Jacobi { inv_diag: inv };
+        let mut serial = vec![0.0; n];
+        m_big.apply(&r, &mut serial);
+        for threads in [1usize, 2, 8] {
+            let mut par = vec![f64::NAN; n];
+            m_big.apply_par(&r, &mut par, threads);
+            for i in 0..n {
+                assert_eq!(par[i].to_bits(), serial[i].to_bits(), "threads={threads} i={i}");
+            }
+        }
+        // The small real-matrix preconditioner agrees too.
+        let rb: Vec<f64> = (0..a.n).map(|i| (i as f64).sin()).collect();
+        let mut s = vec![0.0; a.n];
+        m.apply(&rb, &mut s);
+        let mut p = vec![0.0; a.n];
+        m.apply_par(&rb, &mut p, 4);
+        assert!(s.iter().zip(&p).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn default_apply_par_falls_back_to_serial_apply() {
+        // SparsifierPrecond keeps the default (serial) apply_par: both
+        // entry points must produce identical output.
+        let (a, b, _) = laplacian_system(9);
+        let m = SparsifierPrecond::from_matrix(&a).unwrap();
+        let mut serial = vec![0.0; a.n];
+        m.apply(&b, &mut serial);
+        for threads in [1usize, 8] {
+            let mut par = vec![0.0; a.n];
+            m.apply_par(&b, &mut par, threads);
+            assert!(serial.iter().zip(&par).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
     }
 
     #[test]

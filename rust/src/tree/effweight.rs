@@ -8,10 +8,50 @@
 //! edges between high-degree vertices close to the root — feGRASS's
 //! low-stretch-ish tree heuristic, kept identical here so the recovery
 //! comparison is apples-to-apples (the paper reuses feGRASS's tree).
+//!
+//! Two evaluation shapes share the same [`effective_weight_at`] formula:
+//!
+//! * [`effective_weights`] — the barrier path: one `par_fill` over all
+//!   edges, the full weight array returned at once.
+//! * [`scored_order_chunks`] — the streamed path: fixed 4096-edge chunks
+//!   are weighted **and locally sorted into the MST's (weight desc, id
+//!   asc) order** on pool workers, and handed to the consumer in
+//!   ascending chunk order via [`crate::par::produce_stream`] — so the
+//!   spanning-tree build can merge completed runs while later chunks are
+//!   still being scored, instead of barrier-syncing weight computation
+//!   and sort. The chunk layout depends only on `|E|`, and the sort key
+//!   is a strict total order (ties broken by edge id), so both paths
+//!   yield the identical Kruskal edge order.
 
 use super::bfs::bfs_distances;
 use crate::graph::Graph;
 use crate::par;
+
+/// Fixed chunk size for the streamed scoring producer (shape depends
+/// only on `|E|`, never on the thread count).
+pub const EFF_CHUNK: usize = 4096;
+
+/// Definition-1 effective weight of edge `eid`, given the BFS hop
+/// distances from the chosen root.
+#[inline]
+pub fn effective_weight_at(g: &Graph, dist: &[u32], eid: usize) -> f64 {
+    let e = g.edges()[eid];
+    let du = dist[e.u as usize];
+    let dv = dist[e.v as usize];
+    debug_assert!(du != u32::MAX && dv != u32::MAX, "graph must be connected");
+    let maxdeg = g.degree(e.u).max(g.degree(e.v)) as f64;
+    // root-root never happens (no self loops); du + dv >= 1.
+    let denom = (du + dv) as f64;
+    e.w * maxdeg.ln().max(f64::MIN_POSITIVE) / denom
+}
+
+/// MST ordering over `(W_eff, edge id)` pairs: weight descending, ties by
+/// edge id ascending — a strict total order (edge ids are unique), so any
+/// correct sort produces the one canonical Kruskal order.
+#[inline]
+pub fn mst_key_cmp(a: &(f64, u32), b: &(f64, u32)) -> std::cmp::Ordering {
+    b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+}
 
 /// Effective weights for all edges, in edge-id order, plus the chosen root.
 ///
@@ -22,24 +62,37 @@ pub fn effective_weights(g: &Graph) -> (Vec<f64>, u32) {
     let root = g.max_degree_vertex();
     let dist = bfs_distances(g, root);
     let mut w = vec![0f64; g.num_edges()];
-    let edges = g.edges();
     let threads = par::num_threads();
-    par::par_fill(&mut w, threads, 4096, |i| {
-        let e = edges[i];
-        let du = dist[e.u as usize];
-        let dv = dist[e.v as usize];
-        debug_assert!(du != u32::MAX && dv != u32::MAX, "graph must be connected");
-        let maxdeg = g.degree(e.u).max(g.degree(e.v)) as f64;
-        // root-root never happens (no self loops); du + dv >= 1.
-        let denom = (du + dv) as f64;
-        e.w * maxdeg.ln().max(f64::MIN_POSITIVE) / denom
-    });
+    par::par_fill(&mut w, threads, EFF_CHUNK, |i| effective_weight_at(g, &dist, i));
     (w, root)
+}
+
+/// Streamed stage-1 scoring: weight every edge chunk-by-chunk on the
+/// pool, locally sorted by [`mst_key_cmp`], feeding `consume` with each
+/// `(W_eff, edge id)` run in ascending chunk order while later chunks are
+/// still in flight. Returns the chosen root.
+pub fn scored_order_chunks<C>(g: &Graph, threads: usize, consume: C) -> u32
+where
+    C: FnMut(usize, Vec<(f64, u32)>) + Send,
+{
+    let root = g.max_degree_vertex();
+    let dist = bfs_distances(g, root);
+    let m = g.num_edges();
+    par::stream::produce_sorted_runs(
+        m,
+        EFF_CHUNK,
+        threads,
+        |eid| (effective_weight_at(g, &dist, eid), eid as u32),
+        &mst_key_cmp,
+        consume,
+    );
+    root
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::par::sort::RunMerger;
 
     #[test]
     fn effective_weight_formula() {
@@ -62,5 +115,30 @@ mod tests {
         let light = g.edges().iter().position(|e| (e.u, e.v) == (0, 1)).unwrap();
         let heavy = g.edges().iter().position(|e| (e.u, e.v) == (0, 2)).unwrap();
         assert!(w[heavy] > w[light]);
+    }
+
+    #[test]
+    fn streamed_chunks_reproduce_the_barrier_order() {
+        // Large enough that the stream spans several 4096-edge chunks.
+        let g = crate::gen::grid(60, 60, 0.5, &mut crate::util::Rng::new(9));
+        assert!(g.num_edges() > 2 * EFF_CHUNK, "test graph must span multiple chunks");
+        // Barrier order: full weight array, one global sort.
+        let (w, root_b) = effective_weights(&g);
+        let mut barrier: Vec<u32> = (0..g.num_edges() as u32).collect();
+        barrier.sort_by(|&a, &b| mst_key_cmp(&(w[a as usize], a), &(w[b as usize], b)));
+        // Streamed order: chunk runs merged as they arrive.
+        for threads in [1usize, 2, 8] {
+            let mut merger = RunMerger::new(&mst_key_cmp);
+            let root_s = scored_order_chunks(&g, threads, |_, run| merger.push(run));
+            assert_eq!(root_s, root_b);
+            let streamed: Vec<u32> = merger.finish().into_iter().map(|(_, id)| id).collect();
+            assert_eq!(streamed, barrier, "threads={threads}");
+            // …and the weights agree bitwise with the formula array.
+            let mut merger = RunMerger::new(&mst_key_cmp);
+            scored_order_chunks(&g, threads, |_, run| merger.push(run));
+            for (wt, id) in merger.finish() {
+                assert_eq!(wt.to_bits(), w[id as usize].to_bits(), "threads={threads}");
+            }
+        }
     }
 }

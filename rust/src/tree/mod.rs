@@ -13,7 +13,7 @@ pub mod spanning;
 pub use bfs::bfs_distances;
 pub use effweight::effective_weights;
 pub use lca::SkipTable;
-pub use mst::{max_spanning_tree, UnionFind};
-pub use resistance::{off_tree_edges, OffTreeEdge};
+pub use mst::{kruskal_from_order, max_spanning_tree, UnionFind};
+pub use resistance::{annotate_off_tree_edge, off_tree_edges, OffTreeEdge};
 pub use rooted::RootedTree;
-pub use spanning::{build_spanning, Spanning};
+pub use spanning::{build_spanning, build_spanning_streamed, Spanning};

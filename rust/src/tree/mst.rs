@@ -67,11 +67,22 @@ pub fn max_spanning_tree(g: &Graph, keys: &[f64]) -> Vec<bool> {
             .unwrap_or(std::cmp::Ordering::Equal)
             .then(a.cmp(&b))
     });
+    kruskal_from_order(g, &order)
+}
+
+/// The Kruskal union-find sweep over an already-sorted edge order
+/// (best-first). Split out of [`max_spanning_tree`] so the streamed
+/// spanning-tree build — which merges (weight, id) runs while weights are
+/// still being scored — can feed its merged order straight in without
+/// materializing a key array.
+///
+/// Panics if the graph is disconnected.
+pub fn kruskal_from_order(g: &Graph, order: &[u32]) -> Vec<bool> {
     let mut uf = UnionFind::new(g.num_vertices());
-    let mut in_tree = vec![false; m];
+    let mut in_tree = vec![false; g.num_edges()];
     let mut picked = 0usize;
     let need = g.num_vertices() - 1;
-    for &id in &order {
+    for &id in order {
         let e = g.edge(id);
         if uf.union(e.u, e.v) {
             in_tree[id as usize] = true;

@@ -34,6 +34,19 @@ pub struct OffTreeEdge {
     pub score: f64,
 }
 
+/// Annotate one off-tree edge: LCA query, resistance distance, and the
+/// criticality score. A pure function of `(g, sp, eid)` — the barrier
+/// `par_map` and the streamed chunk producer share it, so both pipelines
+/// compute bitwise-identical annotations.
+#[inline]
+pub fn annotate_off_tree_edge(g: &Graph, sp: &Spanning, eid: u32) -> OffTreeEdge {
+    let e = g.edge(eid);
+    let lca = sp.skip.lca(e.u, e.v);
+    let resistance = sp.tree.rdepth[e.u as usize] + sp.tree.rdepth[e.v as usize]
+        - 2.0 * sp.tree.rdepth[lca as usize];
+    OffTreeEdge { eid, u: e.u, v: e.v, w: e.w, lca, resistance, score: e.w * resistance }
+}
+
 /// Annotate every off-tree edge with LCA, resistance and score.
 /// Order matches the graph edge-list order (filtered to off-tree).
 pub fn off_tree_edges(g: &Graph, sp: &Spanning) -> Vec<OffTreeEdge> {
@@ -41,13 +54,7 @@ pub fn off_tree_edges(g: &Graph, sp: &Spanning) -> Vec<OffTreeEdge> {
         .filter(|&i| !sp.is_tree_edge[i as usize])
         .collect();
     let threads = par::num_threads();
-    par::par_map(&ids, threads, |&eid| {
-        let e = g.edge(eid);
-        let lca = sp.skip.lca(e.u, e.v);
-        let resistance = sp.tree.rdepth[e.u as usize] + sp.tree.rdepth[e.v as usize]
-            - 2.0 * sp.tree.rdepth[lca as usize];
-        OffTreeEdge { eid, u: e.u, v: e.v, w: e.w, lca, resistance, score: e.w * resistance }
-    })
+    par::par_map(&ids, threads, |&eid| annotate_off_tree_edge(g, sp, eid))
 }
 
 #[cfg(test)]

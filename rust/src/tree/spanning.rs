@@ -3,11 +3,12 @@
 //! (the paper reuses feGRASS's tree so the recovery comparison is fair;
 //! so do we).
 
-use super::effweight::effective_weights;
+use super::effweight::{effective_weights, mst_key_cmp, scored_order_chunks};
 use super::lca::SkipTable;
-use super::mst::max_spanning_tree;
+use super::mst::{kruskal_from_order, max_spanning_tree};
 use super::rooted::RootedTree;
 use crate::graph::Graph;
+use crate::par::sort::RunMerger;
 
 /// Everything downstream recovery needs about the spanning tree.
 #[derive(Clone, Debug)]
@@ -27,6 +28,24 @@ pub struct Spanning {
 pub fn build_spanning(g: &Graph) -> Spanning {
     let (eff, root) = effective_weights(g);
     let is_tree_edge = max_spanning_tree(g, &eff);
+    let tree = RootedTree::build(g, &is_tree_edge, root);
+    let skip = SkipTable::build(&tree);
+    Spanning { tree, skip, is_tree_edge, root }
+}
+
+/// Streamed spanning-tree build: effective-weight scoring chunks are
+/// produced on the pool and **merged into the Kruskal order while later
+/// chunks are still being scored** — the weight stage and the sort stage
+/// overlap instead of barrier-syncing (`tree::effweight::
+/// scored_order_chunks` + `par::sort::RunMerger`). The MST key is a
+/// strict total order (weight desc, edge id asc), so the merged order —
+/// and therefore `is_tree_edge` and everything downstream — is bitwise
+/// identical to [`build_spanning`] at every thread count.
+pub fn build_spanning_streamed(g: &Graph, threads: usize) -> Spanning {
+    let mut merger = RunMerger::new(&mst_key_cmp);
+    let root = scored_order_chunks(g, threads, |_, run| merger.push(run));
+    let order: Vec<u32> = merger.finish().into_iter().map(|(_, id)| id).collect();
+    let is_tree_edge = kruskal_from_order(g, &order);
     let tree = RootedTree::build(g, &is_tree_edge, root);
     let skip = SkipTable::build(&tree);
     Spanning { tree, skip, is_tree_edge, root }
@@ -53,6 +72,25 @@ mod tests {
         assert_eq!(sp.root, g.max_degree_vertex());
         assert_eq!(sp.tree.root, sp.root);
         assert_eq!(sp.num_off_tree(), g.num_edges() - (g.num_vertices() - 1));
+    }
+
+    #[test]
+    fn streamed_build_matches_barrier_bitwise() {
+        let g = gen::grid(50, 50, 0.4, &mut Rng::new(7));
+        let barrier = build_spanning(&g);
+        for threads in [1usize, 2, 8] {
+            let streamed = build_spanning_streamed(&g, threads);
+            assert_eq!(streamed.root, barrier.root, "threads={threads}");
+            assert_eq!(streamed.is_tree_edge, barrier.is_tree_edge, "threads={threads}");
+            for v in 0..g.num_vertices() {
+                assert_eq!(streamed.tree.parent[v], barrier.tree.parent[v], "threads={threads}");
+                assert_eq!(
+                    streamed.tree.rdepth[v].to_bits(),
+                    barrier.tree.rdepth[v].to_bits(),
+                    "threads={threads}"
+                );
+            }
+        }
     }
 
     #[test]

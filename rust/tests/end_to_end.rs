@@ -5,7 +5,7 @@
 use pdgrass::coordinator::{run_graph, PipelineConfig};
 use pdgrass::recovery::{self, Params, Strategy};
 use pdgrass::tree::build_spanning;
-use pdgrass::{RecoverOpts, Sparsify};
+use pdgrass::{Pipeline, RecoverOpts, Sparsify};
 
 fn cfg(scale: f64) -> PipelineConfig {
     PipelineConfig { scale, trials: 1, ..Default::default() }
@@ -117,8 +117,11 @@ fn equal_edge_budgets() {
 /// Both quantities are deterministic across strategies *and* thread
 /// counts (recovery is scheduling-independent; PCG reduces over a fixed
 /// chunk tree), so the pins hold under every `PDGRASS_THREADS` in the CI
-/// matrix. The recovery runs `strategy=sharded`, so the snapshot also
-/// exercises the sharded path end to end in tier-1.
+/// matrix. The recovery runs `strategy=sharded`, and every row is also
+/// cross-checked against the streamed pipeline (`prepare_streamed` +
+/// `pipeline=streamed` recovery) before pinning, so the snapshot
+/// exercises both the sharded path and the stage-overlap path end to end
+/// in tier-1.
 ///
 /// Bootstrap/regeneration: writing the computed rows (and passing) is
 /// allowed only when the checked-in file carries the explicit
@@ -134,6 +137,8 @@ fn golden_recovery_snapshot() {
     for name in ["01-mi2010", "09-com-Youtube", "15-M6"] {
         let scale = 0.05;
         let prepared = Sparsify::suite(name, scale, seed).unwrap().threads(1).prepare().unwrap();
+        let streamed =
+            Sparsify::suite(name, scale, seed).unwrap().threads(2).prepare_streamed().unwrap();
         for alpha in [0.02, 0.10] {
             let opts = RecoverOpts {
                 strategy: Strategy::Sharded,
@@ -144,6 +149,13 @@ fn golden_recovery_snapshot() {
             let r = prepared.recover(&opts).unwrap();
             let pcg = r.sparsifier().pcg(seed ^ 0xb, 1e-3, 50_000).unwrap();
             assert!(pcg.converged, "{name} alpha={alpha}: PCG must converge");
+            // The streamed pipeline must agree bitwise before any row is
+            // pinned or compared — the snapshot covers both disciplines.
+            let s_opts = RecoverOpts { pipeline: Pipeline::Streamed, ..opts };
+            let sr = streamed.recover(&s_opts).unwrap();
+            assert_eq!(sr.edges(), r.edges(), "{name} alpha={alpha}: streamed diverged");
+            let s_pcg = sr.sparsifier().pcg(seed ^ 0xb, 1e-3, 50_000).unwrap();
+            assert_eq!(s_pcg.iterations, pcg.iterations, "{name} alpha={alpha}: streamed PCG");
             rows.push(format!(
                 "{name} scale={scale} alpha={alpha} off={} recovered={} iters={}",
                 prepared.num_off_tree(),

@@ -2,9 +2,10 @@
 //! fresh end-to-end runs, concurrent recovery from a shared `Prepared`,
 //! and typed errors at the library boundary.
 
+use pdgrass::graph::Graph;
 use pdgrass::recovery::{self, Params, Strategy};
 use pdgrass::tree::build_spanning;
-use pdgrass::{Error, RecoverOpts, Sparsify};
+use pdgrass::{Error, Pipeline, Prepared, RecoverOpts, Sparsify};
 
 /// Recovering at α = 0.02 and then α = 0.10 from ONE `Prepared` yields
 /// bitwise-identical edge sets to two fresh end-to-end runs that rebuild
@@ -123,6 +124,108 @@ fn write_mtx_failure_is_typed_io_error() {
     match p.write_mtx(bogus) {
         Err(Error::Io(_)) => {}
         other => panic!("expected Io error, got {other:?}"),
+    }
+}
+
+/// Assert two `Prepared` states are bitwise identical: spanning tree,
+/// score-sorted off-tree list (f64 fields compared by bits), and the
+/// subtask decomposition.
+fn assert_prepared_bitwise_equal(a: &Prepared, b: &Prepared, label: &str) {
+    assert_eq!(a.spanning().root, b.spanning().root, "{label}: root");
+    assert_eq!(a.spanning().is_tree_edge, b.spanning().is_tree_edge, "{label}: tree edges");
+    assert_eq!(a.num_off_tree(), b.num_off_tree(), "{label}: off-tree count");
+    for (x, y) in a.off_tree().iter().zip(b.off_tree()) {
+        assert_eq!(x.eid, y.eid, "{label}: off order");
+        assert_eq!(x.lca, y.lca, "{label}: lca");
+        assert_eq!(x.score.to_bits(), y.score.to_bits(), "{label}: score bits");
+        assert_eq!(x.resistance.to_bits(), y.resistance.to_bits(), "{label}: resistance bits");
+    }
+    assert_eq!(a.subtasks().len(), b.subtasks().len(), "{label}: subtask count");
+    for (x, y) in a.subtasks().iter().zip(b.subtasks()) {
+        assert_eq!(x.lca, y.lca, "{label}: subtask lca");
+        assert_eq!(x.idxs, y.idxs, "{label}: subtask members");
+    }
+}
+
+/// The adversarial graph shapes from the recovery property suite: a
+/// hub-star (one giant LCA subtask) and a pure tree (zero off-tree
+/// edges), plus a random community graph.
+fn equivalence_graphs() -> Vec<(&'static str, Graph)> {
+    let community = pdgrass::gen::community(
+        pdgrass::gen::CommunityParams {
+            n: 1200,
+            mean_size: 10.0,
+            tail: 1.7,
+            intra_p: 0.5,
+            bridges: 2,
+            max_size: 80,
+        },
+        &mut pdgrass::util::Rng::new(23),
+    );
+    let hub = pdgrass::gen::hub_graph(3000, 1, 2500, &mut pdgrass::util::Rng::new(7));
+    let n = 400usize;
+    let tree_edges: Vec<(u32, u32, f64)> =
+        (0..n - 1).map(|i| (i as u32, i as u32 + 1, 1.0 + (i % 3) as f64)).collect();
+    let tree = Graph::from_edges(n, &tree_edges);
+    vec![("community", community), ("hub-star", hub), ("pure-tree", tree)]
+}
+
+/// Satellite property: `prepare_streamed()` yields bitwise-identical
+/// `Prepared` state, recovered-edge sets, `Stats`, and PCG iterates to
+/// the barrier path across threads {1, 2, 8}, on random + adversarial
+/// (hub-star, pure-tree) graphs.
+#[test]
+fn streamed_prepare_and_recover_match_barrier_bitwise() {
+    for (label, g) in equivalence_graphs() {
+        let barrier = Sparsify::graph(g.clone()).prepare().unwrap();
+        for threads in [1usize, 2, 8] {
+            let streamed = Sparsify::graph(g.clone()).threads(threads).prepare_streamed().unwrap();
+            assert_eq!(streamed.pipeline(), Pipeline::Streamed);
+            assert_prepared_bitwise_equal(&streamed, &barrier, &format!("{label} t={threads}"));
+
+            // Pure trees have no off-tree edges: α validation aside, the
+            // interesting recovery comparisons need recoverable edges.
+            if streamed.num_off_tree() == 0 {
+                continue;
+            }
+            // Streamed recovery from the streamed session vs barrier
+            // recovery from the barrier session: same edges, stats, trace.
+            // Block/shard/cutoff pinned (stats depend on them); only the
+            // thread count and the pipeline discipline vary.
+            let b_opts = RecoverOpts {
+                strategy: Strategy::Sharded,
+                cutoff_edges: 200,
+                shard_min: 64,
+                block: 4,
+                ..RecoverOpts::with_threads(0.10, threads)
+            };
+            let s_opts = RecoverOpts { pipeline: Pipeline::Streamed, ..b_opts };
+            let br = barrier.recover_traced(&b_opts).unwrap();
+            let sr = streamed.recover_traced(&s_opts).unwrap();
+            assert_eq!(sr.edges(), br.edges(), "{label} t={threads}: recovered set");
+            assert_eq!(sr.passes(), br.passes(), "{label} t={threads}: passes");
+            assert_eq!(
+                format!("{:?}", sr.stats()),
+                format!("{:?}", br.stats()),
+                "{label} t={threads}: stats"
+            );
+            assert_eq!(
+                sr.trace().unwrap().subtask_costs,
+                br.trace().unwrap().subtask_costs,
+                "{label} t={threads}: trace"
+            );
+
+            // PCG iterates are bitwise identical too: same sparsifier,
+            // same fixed-tree reductions.
+            let bo = br.sparsifier().pcg(42, 1e-3, 50_000).unwrap();
+            let so = sr.sparsifier().pcg(42, 1e-3, 50_000).unwrap();
+            assert_eq!(so.iterations, bo.iterations, "{label} t={threads}: pcg iterations");
+            assert_eq!(so.converged, bo.converged, "{label} t={threads}");
+            assert_eq!(so.history.len(), bo.history.len(), "{label} t={threads}");
+            for (x, y) in so.history.iter().zip(&bo.history) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{label} t={threads}: pcg history bits");
+            }
+        }
     }
 }
 
