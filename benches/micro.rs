@@ -65,6 +65,8 @@ fn bench_dispatch() {
         let (_, ms_spawn) = min_of(5, || {
             for _ in 0..calls {
                 let ptr = SendCell(out.as_mut_ptr());
+                // SAFETY: each index `i` is visited exactly once, so the
+                // writes land on disjoint elements of the live buffer.
                 spawn_per_call_for(n, threads, grain, |i| unsafe {
                     *ptr.p().add(i) = (i as f64).sqrt();
                 });
@@ -73,6 +75,7 @@ fn bench_dispatch() {
         let (_, ms_pool) = min_of(5, || {
             for _ in 0..calls {
                 let ptr = SendCell(out.as_mut_ptr());
+                // SAFETY: same disjoint-index write pattern as above.
                 pdgrass::par::par_for(n, threads, grain, |i| unsafe {
                     *ptr.p().add(i) = (i as f64).sqrt();
                 });
@@ -92,7 +95,10 @@ fn bench_dispatch() {
 /// Accessed via the method so closures capture the whole cell (edition
 /// 2021 disjoint capture would grab the `!Sync` raw pointer field).
 struct SendCell(*mut f64);
+// SAFETY: the cell wraps a pointer into a buffer that outlives every
+// closure, and the bench only performs disjoint-index writes through it.
 unsafe impl Send for SendCell {}
+// SAFETY: shared use is the same disjoint-index write pattern.
 unsafe impl Sync for SendCell {}
 impl SendCell {
     fn p(&self) -> *mut f64 {

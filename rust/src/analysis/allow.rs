@@ -1,0 +1,157 @@
+//! The atomics allowlist: `rust/analysis/atomics.allow`.
+//!
+//! Every atomic `Ordering::*` use in non-test code must be covered by an
+//! entry keyed `(file, enclosing item, ordering variant)` and carrying a
+//! non-empty justification, so each ordering decision in the tree is a
+//! reviewed artifact rather than an accident. Format, one entry per
+//! line, `#` comments and blank lines ignored:
+//!
+//! ```text
+//! par/pool.rs | Scope::run | AcqRel | publishes chunk writes to is_done readers
+//! ```
+//!
+//! Paths are relative to the audited root with `/` separators. Entries
+//! never matched by a scan are reported as warnings (not violations):
+//! the audit stays actionable when code moves, while the diff to this
+//! file still surfaces every new ordering in review.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// The five `std::sync::atomic::Ordering` variants.
+pub const ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// One parsed allowlist entry.
+#[derive(Clone, Debug)]
+pub struct AllowEntry {
+    /// Path relative to the audit root, `/`-separated.
+    pub file: String,
+    /// Enclosing-item key as computed by [`super::context`].
+    pub item: String,
+    /// Ordering variant name (`Relaxed`, …, `SeqCst`).
+    pub ordering: String,
+    /// Human rationale; must be non-empty.
+    pub justification: String,
+    /// 1-based line in the allowlist file.
+    pub line: u32,
+}
+
+impl AllowEntry {
+    fn key(&self) -> (String, String, String) {
+        (self.file.clone(), self.item.clone(), self.ordering.clone())
+    }
+}
+
+/// Parsed allowlist with O(1) lookup by `(file, item, ordering)`.
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    entries: Vec<AllowEntry>,
+    index: HashMap<(String, String, String), usize>,
+}
+
+impl Allowlist {
+    /// Parse allowlist text. `origin` labels parse errors.
+    pub fn parse(text: &str, origin: &str) -> Result<Allowlist> {
+        let mut entries = Vec::new();
+        let mut index = HashMap::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = i as u32 + 1;
+            let trimmed = raw.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = trimmed.split('|').map(str::trim).collect();
+            if fields.len() != 4 {
+                return Err(Error::Config(format!(
+                    "{origin}:{line}: expected `file | item | ordering | justification`, \
+                     got {} field(s)",
+                    fields.len()
+                )));
+            }
+            let entry = AllowEntry {
+                file: fields[0].to_string(),
+                item: fields[1].to_string(),
+                ordering: fields[2].to_string(),
+                justification: fields[3].to_string(),
+                line,
+            };
+            if !ORDERINGS.contains(&entry.ordering.as_str()) {
+                return Err(Error::Config(format!(
+                    "{origin}:{line}: unknown ordering {:?} (expected one of {:?})",
+                    entry.ordering, ORDERINGS
+                )));
+            }
+            if entry.file.is_empty() || entry.item.is_empty() {
+                return Err(Error::Config(format!(
+                    "{origin}:{line}: file and item fields must be non-empty"
+                )));
+            }
+            if entry.justification.is_empty() {
+                return Err(Error::Config(format!(
+                    "{origin}:{line}: every allowlist entry needs a justification"
+                )));
+            }
+            if let Some(prev) = index.insert(entry.key(), entries.len()) {
+                let prev: &AllowEntry = &entries[prev];
+                return Err(Error::Config(format!(
+                    "{origin}:{line}: duplicate entry for ({}, {}, {}) — first at line {}",
+                    entry.file, entry.item, entry.ordering, prev.line
+                )));
+            }
+            entries.push(entry);
+        }
+        Ok(Allowlist { entries, index })
+    }
+
+    /// Load and parse an allowlist file.
+    pub fn load(path: &Path) -> Result<Allowlist> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Config(format!("cannot read allowlist {}: {e}", path.display()))
+        })?;
+        Self::parse(&text, &path.display().to_string())
+    }
+
+    /// Look up `(file, item, ordering)`; returns the entry index.
+    pub fn lookup(&self, file: &str, item: &str, ordering: &str) -> Option<usize> {
+        self.index
+            .get(&(file.to_string(), item.to_string(), ordering.to_string()))
+            .copied()
+    }
+
+    /// All parsed entries, in file order.
+    pub fn entries(&self) -> &[AllowEntry] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_entries_and_skips_comments() {
+        let text = "# header\n\
+                    \n\
+                    par/pool.rs | Scope::run | Relaxed | chunk counter\n\
+                    par/pool.rs | Scope::run | AcqRel | completion edge\n";
+        let a = Allowlist::parse(text, "t").unwrap();
+        assert_eq!(a.entries().len(), 2);
+        assert!(a.lookup("par/pool.rs", "Scope::run", "Relaxed").is_some());
+        assert!(a.lookup("par/pool.rs", "Scope::run", "SeqCst").is_none());
+        assert!(a.lookup("par/pool.rs", "Scope::is_done", "Relaxed").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        for bad in [
+            "just | three | fields",
+            "f.rs | item | NotAnOrdering | why",
+            "f.rs | item | Relaxed |",
+            " | item | Relaxed | why",
+            "f.rs | item | Relaxed | a\nf.rs | item | Relaxed | b",
+        ] {
+            assert!(Allowlist::parse(bad, "t").is_err(), "accepted: {bad:?}");
+        }
+    }
+}

@@ -1,0 +1,393 @@
+//! Structural context over the token stream: which item encloses each
+//! token, and which token ranges sit under `#[cfg(test)]`.
+//!
+//! The atomics allowlist is keyed by `file | enclosing item | ordering`,
+//! so the audit needs a "what item am I in" answer per token. A full
+//! parse is overkill; a brace-matching pass that remembers the names
+//! introduced by `fn`/`impl`/`mod`/`struct`/`enum`/`trait`/`union`
+//! headers is enough for this codebase, with four deliberate guards:
+//!
+//! * `fn` only opens a pending item when followed by an identifier —
+//!   `fn(usize)` pointer *types* in signatures do not;
+//! * a pending item is cancelled by `;` before its `{` — tuple structs
+//!   (`struct Abort<'a, T>(&'a Stream<T>);`) and trait method
+//!   signatures never get a body;
+//! * `impl` only opens an impl header when no item is pending —
+//!   `-> impl Fn(…)` return types inside a signature do not;
+//! * impl-header name collection stops at `where` — bounds like
+//!   `where F: Fn(&T, &T) -> Ordering` would otherwise corrupt the
+//!   angle-bracket depth (the `->`'s `>`) and steal the name.
+
+use super::lexer::{TokKind, Token};
+
+/// Scope kinds that matter for key construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ItemKind {
+    Fn,
+    Impl,
+    Mod,
+    /// struct / enum / trait / union bodies.
+    Other,
+}
+
+#[derive(Clone, Debug)]
+struct Named {
+    kind: ItemKind,
+    name: String,
+}
+
+/// Per-token enclosing-item keys plus `#[cfg(test)]` region spans.
+pub struct Context {
+    /// For each token index, the enclosing-item key: `"Type::fn_name"`
+    /// inside an impl'd fn, `"fn_name"` inside a free fn, the type /
+    /// module name inside other items, `"-"` at the top level.
+    pub item_keys: Vec<String>,
+    /// Token-index ranges (inclusive) covered by a `#[cfg(test)]` item.
+    test_ranges: Vec<(usize, usize)>,
+}
+
+impl Context {
+    /// True when token `idx` lies inside a `#[cfg(test)]` item.
+    pub fn in_test(&self, idx: usize) -> bool {
+        self.test_ranges.iter().any(|&(lo, hi)| lo <= idx && idx <= hi)
+    }
+}
+
+/// Build the context for one file's token stream.
+pub fn build(tokens: &[Token]) -> Context {
+    Context { item_keys: item_keys(tokens), test_ranges: test_ranges(tokens) }
+}
+
+/// Index of the next non-comment token at or after `i`.
+fn next_code(tokens: &[Token], mut i: usize) -> Option<usize> {
+    while i < tokens.len() {
+        if !tokens[i].is_comment() {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+fn is_item_keyword(text: &str) -> Option<ItemKind> {
+    match text {
+        "fn" => Some(ItemKind::Fn),
+        "mod" => Some(ItemKind::Mod),
+        "struct" | "enum" | "trait" | "union" => Some(ItemKind::Other),
+        _ => None,
+    }
+}
+
+fn key_for(stack: &[Option<Named>]) -> String {
+    // Innermost named scope decides; an fn gets qualified by the nearest
+    // impl/type scope beneath it (`Unmove::drop` for a Drop impl nested
+    // inside `sort_inplace`).
+    for (depth, named) in stack.iter().enumerate().rev() {
+        let Some(named) = named else { continue };
+        if named.kind != ItemKind::Fn {
+            return named.name.clone();
+        }
+        for below in stack[..depth].iter().rev() {
+            if let Some(q) = below {
+                if matches!(q.kind, ItemKind::Impl | ItemKind::Other) {
+                    return format!("{}::{}", q.name, named.name);
+                }
+                break;
+            }
+        }
+        return named.name.clone();
+    }
+    "-".to_string()
+}
+
+fn item_keys(tokens: &[Token]) -> Vec<String> {
+    let mut keys = Vec::with_capacity(tokens.len());
+    let mut stack: Vec<Option<Named>> = Vec::new();
+    let mut pending: Option<Named> = None;
+    // impl-header state
+    let mut in_impl_header = false;
+    let mut impl_candidate: Option<String> = None;
+    let mut impl_angle = 0i32;
+    let mut impl_seen_where = false;
+    let mut current = key_for(&stack);
+
+    let mut i = 0;
+    while i < tokens.len() {
+        keys.push(current.clone());
+        let t = &tokens[i];
+        if t.is_comment() {
+            i += 1;
+            continue;
+        }
+        if in_impl_header {
+            match t.kind {
+                TokKind::Ident if !impl_seen_where => match t.text.as_str() {
+                    "for" => impl_candidate = None,
+                    "where" => impl_seen_where = true,
+                    "dyn" | "unsafe" | "pub" | "crate" | "self" | "super" => {}
+                    name if impl_angle == 0 => impl_candidate = Some(name.to_string()),
+                    _ => {}
+                },
+                TokKind::Punct if !impl_seen_where => match t.text.as_str() {
+                    "<" => impl_angle += 1,
+                    // `->` in a bound is not a generic close; plain `>` is.
+                    ">" if i > 0 && tokens[i - 1].text == "-" => {}
+                    ">" => impl_angle = (impl_angle - 1).max(0),
+                    _ => {}
+                },
+                _ => {}
+            }
+            if t.kind == TokKind::Punct && t.text == "{" {
+                let name = impl_candidate.take().unwrap_or_else(|| "impl".to_string());
+                stack.push(Some(Named { kind: ItemKind::Impl, name }));
+                in_impl_header = false;
+                current = key_for(&stack);
+            } else if t.kind == TokKind::Punct && t.text == ";" {
+                in_impl_header = false;
+                impl_candidate = None;
+            }
+            i += 1;
+            continue;
+        }
+        match t.kind {
+            TokKind::Ident => {
+                if let Some(kind) = is_item_keyword(&t.text) {
+                    if pending.is_none() {
+                        if let Some(j) = next_code(tokens, i + 1) {
+                            if tokens[j].kind == TokKind::Ident {
+                                pending =
+                                    Some(Named { kind, name: tokens[j].text.clone() });
+                            }
+                        }
+                    }
+                } else if t.text == "impl" && pending.is_none() {
+                    in_impl_header = true;
+                    impl_candidate = None;
+                    impl_angle = 0;
+                    impl_seen_where = false;
+                }
+            }
+            TokKind::Punct => match t.text.as_str() {
+                "{" => {
+                    stack.push(pending.take());
+                    current = key_for(&stack);
+                }
+                "}" => {
+                    stack.pop();
+                    current = key_for(&stack);
+                }
+                ";" => pending = None,
+                _ => {}
+            },
+            _ => {}
+        }
+        i += 1;
+    }
+    keys
+}
+
+/// Find `#[cfg(test)]` attributes and the token span of the item each
+/// one gates (to the matching `}` of the item's first `{`, or to `;`
+/// for body-less items).
+fn test_ranges(tokens: &[Token]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut i = 0;
+    while i < tokens.len() {
+        if let Some(end) = match_cfg_test(tokens, i) {
+            let close = item_end(tokens, end + 1).unwrap_or(tokens.len() - 1);
+            ranges.push((i, close));
+            i = end + 1;
+            continue;
+        }
+        i += 1;
+    }
+    ranges
+}
+
+/// If tokens starting at `i` spell `#[cfg(…test…)]`, return the index of
+/// the closing `]`.
+fn match_cfg_test(tokens: &[Token], i: usize) -> Option<usize> {
+    let code = |k: usize| -> Option<&Token> {
+        let idx = next_code(tokens, k)?;
+        tokens.get(idx)
+    };
+    if tokens[i].text != "#" || tokens[i].is_comment() {
+        return None;
+    }
+    let mut j = next_code(tokens, i + 1)?;
+    if tokens[j].text != "[" {
+        return None;
+    }
+    j = next_code(tokens, j + 1)?;
+    if tokens[j].kind != TokKind::Ident || tokens[j].text != "cfg" {
+        return None;
+    }
+    j = next_code(tokens, j + 1)?;
+    if tokens[j].text != "(" {
+        return None;
+    }
+    // Scan the cfg predicate for a bare `test` ident.
+    let mut depth = 1i32;
+    let mut saw_test = false;
+    let mut k = j + 1;
+    while k < tokens.len() && depth > 0 {
+        let t = code(k)?;
+        match t.text.as_str() {
+            "(" => depth += 1,
+            ")" => depth -= 1,
+            "test" if t.kind == TokKind::Ident => saw_test = true,
+            _ => {}
+        }
+        k = next_code(tokens, k)? + 1;
+    }
+    if !saw_test {
+        return None;
+    }
+    let close = next_code(tokens, k)?;
+    if tokens[close].text != "]" {
+        return None;
+    }
+    Some(close)
+}
+
+/// Token index where the item starting at `i` ends: the matching `}` of
+/// its first `{`, or the first `;` met before any `{`.
+fn item_end(tokens: &[Token], i: usize) -> Option<usize> {
+    let mut j = i;
+    loop {
+        j = next_code(tokens, j)?;
+        match tokens[j].text.as_str() {
+            "{" => break,
+            ";" => return Some(j),
+            _ => j += 1,
+        }
+    }
+    let mut depth = 0i32;
+    while j < tokens.len() {
+        if !tokens[j].is_comment() {
+            match tokens[j].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(j);
+                    }
+                }
+                _ => {}
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn key_at(src: &str, needle: &str) -> String {
+        let toks = lex(src);
+        let ctx = build(&toks);
+        let idx = toks
+            .iter()
+            .position(|t| t.text == needle && !t.is_comment())
+            .unwrap_or_else(|| panic!("token {needle:?} not found"));
+        ctx.item_keys[idx].clone()
+    }
+
+    #[test]
+    fn free_fn_and_impl_method_keys() {
+        let src = "fn alpha() { MARK1; }\n\
+                   struct S;\n\
+                   impl S { fn beta(&self) { MARK2; } }\n\
+                   MARK3";
+        assert_eq!(key_at(src, "MARK1"), "alpha");
+        assert_eq!(key_at(src, "MARK2"), "S::beta");
+        assert_eq!(key_at(src, "MARK3"), "-");
+    }
+
+    #[test]
+    fn trait_impl_names_the_self_type() {
+        let src = "impl<T: Send> Drop for Unmove<T> { fn drop(&mut self) { MARK; } }";
+        assert_eq!(key_at(src, "MARK"), "Unmove::drop");
+    }
+
+    #[test]
+    fn where_clause_with_fn_bound_does_not_steal_the_name() {
+        let src = "impl<'f, T, F> RunMerger<'f, T, F>\n\
+                   where\n    F: Fn(&T, &T) -> Ordering + Sync,\n\
+                   { fn go(&self) { MARK; } }";
+        assert_eq!(key_at(src, "MARK"), "RunMerger::go");
+    }
+
+    #[test]
+    fn tuple_struct_semicolon_cancels_pending() {
+        let src = "struct Abort<'a, T>(&'a Stream<T>);\nfn after() { MARK; }";
+        assert_eq!(key_at(src, "MARK"), "after");
+    }
+
+    #[test]
+    fn impl_in_return_position_is_not_a_header() {
+        let src = "fn mk() -> impl Fn(usize) -> usize { MARK; }";
+        assert_eq!(key_at(src, "MARK"), "mk");
+    }
+
+    #[test]
+    fn fn_pointer_type_does_not_open_an_item() {
+        let src = "fn take(cb: fn(usize) -> usize) { MARK; }";
+        assert_eq!(key_at(src, "MARK"), "take");
+    }
+
+    #[test]
+    fn drop_guard_nested_inside_fn_qualifies_by_impl() {
+        let src = "unsafe fn sort_inplace() {\n\
+                   struct Unmove<T> { p: T }\n\
+                   impl<T> Drop for Unmove<T> { fn drop(&mut self) { MARK; } }\n\
+                   OUTER;\n}";
+        assert_eq!(key_at(src, "MARK"), "Unmove::drop");
+        assert_eq!(key_at(src, "OUTER"), "sort_inplace");
+    }
+
+    #[test]
+    fn cfg_test_regions_cover_the_gated_item() {
+        let src = "fn live() { A; }\n\
+                   #[cfg(test)]\nmod tests {\n    fn t() { B; }\n}\n\
+                   fn live2() { C; }";
+        let toks = lex(src);
+        let ctx = build(&toks);
+        let idx = |needle: &str| toks.iter().position(|t| t.text == needle).unwrap();
+        assert!(!ctx.in_test(idx("A")));
+        assert!(ctx.in_test(idx("B")));
+        assert!(!ctx.in_test(idx("C")));
+    }
+
+    #[test]
+    fn cfg_feature_is_not_a_test_region() {
+        let src = "#[cfg(feature = \"x\")]\nfn gated() { A; }";
+        let toks = lex(src);
+        let ctx = build(&toks);
+        let idx = toks.iter().position(|t| t.text == "A").unwrap();
+        assert!(!ctx.in_test(idx));
+    }
+
+    #[test]
+    fn cfg_all_test_counts() {
+        let src = "#[cfg(all(test, unix))]\nfn helper() { A; }";
+        let toks = lex(src);
+        let ctx = build(&toks);
+        let idx = toks.iter().position(|t| t.text == "A").unwrap();
+        assert!(ctx.in_test(idx));
+    }
+
+    #[test]
+    fn closure_unsafe_and_anon_braces_stay_balanced() {
+        let src = "fn outer() {\n\
+                   let f = move || unsafe { MARK1 };\n\
+                   if let Some(x) = opt { MARK2; }\n\
+                   AFTER;\n}";
+        assert_eq!(key_at(src, "MARK1"), "outer");
+        assert_eq!(key_at(src, "MARK2"), "outer");
+        assert_eq!(key_at(src, "AFTER"), "outer");
+    }
+}

@@ -1,0 +1,437 @@
+//! A small hand-rolled Rust lexer — just enough token structure for the
+//! audit rules, with no `syn` (the offline `vendor/` set has none).
+//!
+//! The rules need three things a plain regex scan cannot deliver:
+//!
+//! * **comments vs code**: the word `unsafe` inside a doc comment or a
+//!   string literal must not look like an unsafe block;
+//! * **line attribution**: the SAFETY-comment rule reasons about "the
+//!   contiguous comment block directly above line L";
+//! * **path shape**: `Ordering::Relaxed` is two idents joined by `::`
+//!   whatever the import alias (`AtOrd::Relaxed`, `AtomOrd::Relaxed`),
+//!   while `Ordering::Less` (the `cmp` enum) must not match.
+//!
+//! The lexer is intentionally forgiving: it never fails, and unknown
+//! bytes become single-character [`TokKind::Punct`] tokens. It handles
+//! the token classes that matter for correctness of the rules — line and
+//! nested block comments, plain/raw/byte strings, char literals vs
+//! lifetimes, identifiers, and numbers (including `1e-3` exponents so a
+//! float literal is never split into a spurious ident).
+
+/// Lexical class of one token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// Single punctuation character.
+    Punct,
+    /// Numeric literal (integers, floats, any suffix).
+    Num,
+    /// String literal (plain, raw, or byte; may span lines).
+    Str,
+    /// Character or byte-character literal.
+    Char,
+    /// Lifetime (`'a`, `'static`, `'_`).
+    Lifetime,
+    /// `// …` comment (incl. `///` and `//!` doc comments).
+    LineComment,
+    /// `/* … */` comment (nesting honored; may span lines).
+    BlockComment,
+}
+
+/// One token with its starting line (1-based) and raw text.
+#[derive(Clone, Debug)]
+pub struct Token {
+    /// Lexical class.
+    pub kind: TokKind,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+    /// Raw source text of the token.
+    pub text: String,
+}
+
+impl Token {
+    /// True for comment tokens (line or block).
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokKind::LineComment | TokKind::BlockComment)
+    }
+
+    /// 1-based line of the token's last character (comments and strings
+    /// may span several lines).
+    pub fn end_line(&self) -> u32 {
+        self.line + self.text.bytes().filter(|&b| b == b'\n').count() as u32
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Never fails; see the module docs for the guarantees.
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer { chars: src.chars().collect(), pos: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+    out: Vec<Token>,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    /// Consume one char, tracking newlines.
+    fn bump(&mut self, buf: &mut String) {
+        let c = self.chars[self.pos];
+        if c == '\n' {
+            self.line += 1;
+        }
+        buf.push(c);
+        self.pos += 1;
+    }
+
+    fn emit(&mut self, kind: TokKind, line: u32, text: String) {
+        self.out.push(Token { kind, line, text });
+    }
+
+    fn run(mut self) -> Vec<Token> {
+        while self.pos < self.chars.len() {
+            let c = self.chars[self.pos];
+            let line = self.line;
+            if c.is_whitespace() {
+                let mut sink = String::new();
+                self.bump(&mut sink);
+                continue;
+            }
+            if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment(line);
+                continue;
+            }
+            if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment(line);
+                continue;
+            }
+            if c == '"' {
+                self.string(line);
+                continue;
+            }
+            if c == '\'' {
+                self.char_or_lifetime(line);
+                continue;
+            }
+            if is_ident_start(c) {
+                if self.try_raw_or_byte_string(line) {
+                    continue;
+                }
+                self.ident(line);
+                continue;
+            }
+            if c.is_ascii_digit() {
+                self.number(line);
+                continue;
+            }
+            let mut text = String::new();
+            self.bump(&mut text);
+            self.emit(TokKind::Punct, line, text);
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self, line: u32) {
+        let mut text = String::new();
+        while self.pos < self.chars.len() && self.chars[self.pos] != '\n' {
+            self.bump(&mut text);
+        }
+        self.emit(TokKind::LineComment, line, text);
+    }
+
+    fn block_comment(&mut self, line: u32) {
+        let mut text = String::new();
+        self.bump(&mut text); // '/'
+        self.bump(&mut text); // '*'
+        let mut depth = 1usize;
+        while self.pos < self.chars.len() && depth > 0 {
+            if self.chars[self.pos] == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                self.bump(&mut text);
+                self.bump(&mut text);
+            } else if self.chars[self.pos] == '*' && self.peek(1) == Some('/') {
+                depth -= 1;
+                self.bump(&mut text);
+                self.bump(&mut text);
+            } else {
+                self.bump(&mut text);
+            }
+        }
+        self.emit(TokKind::BlockComment, line, text);
+    }
+
+    /// Plain `"…"` string with backslash escapes; may span lines.
+    fn string(&mut self, line: u32) {
+        let mut text = String::new();
+        self.bump(&mut text); // opening quote
+        while self.pos < self.chars.len() {
+            let c = self.chars[self.pos];
+            if c == '\\' {
+                self.bump(&mut text);
+                if self.pos < self.chars.len() {
+                    self.bump(&mut text);
+                }
+                continue;
+            }
+            self.bump(&mut text);
+            if c == '"' {
+                break;
+            }
+        }
+        self.emit(TokKind::Str, line, text);
+    }
+
+    /// `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`, `b'…'` — raw and byte forms.
+    /// Returns false if the upcoming ident is not actually a literal
+    /// prefix, leaving the position untouched.
+    fn try_raw_or_byte_string(&mut self, line: u32) -> bool {
+        let c = self.chars[self.pos];
+        if c != 'r' && c != 'b' {
+            return false;
+        }
+        let mut j = self.pos + 1;
+        if c == 'b' && self.chars.get(j) == Some(&'r') {
+            j += 1;
+        }
+        let raw = c == 'r' || j > self.pos + 1;
+        let mut hashes = 0usize;
+        while self.chars.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        // Byte char literal: b'…'
+        if c == 'b' && hashes == 0 && j == self.pos + 1 && self.chars.get(j) == Some(&'\'') {
+            let mut text = String::new();
+            self.bump(&mut text); // 'b'
+            self.char_body(&mut text);
+            self.emit(TokKind::Char, line, text);
+            return true;
+        }
+        if self.chars.get(j) != Some(&'"') {
+            return false;
+        }
+        if !raw && hashes > 0 {
+            return false;
+        }
+        let mut text = String::new();
+        while self.pos <= j {
+            self.bump(&mut text); // prefix, hashes, opening quote
+        }
+        if raw {
+            // Scan for `"` followed by `hashes` '#' characters.
+            'outer: while self.pos < self.chars.len() {
+                if self.chars[self.pos] == '"' {
+                    for k in 0..hashes {
+                        if self.peek(1 + k) != Some('#') {
+                            self.bump(&mut text);
+                            continue 'outer;
+                        }
+                    }
+                    for _ in 0..=hashes {
+                        self.bump(&mut text);
+                    }
+                    break;
+                }
+                self.bump(&mut text);
+            }
+        } else {
+            // b"…" with escapes.
+            while self.pos < self.chars.len() {
+                let ch = self.chars[self.pos];
+                if ch == '\\' {
+                    self.bump(&mut text);
+                    if self.pos < self.chars.len() {
+                        self.bump(&mut text);
+                    }
+                    continue;
+                }
+                self.bump(&mut text);
+                if ch == '"' {
+                    break;
+                }
+            }
+        }
+        self.emit(TokKind::Str, line, text);
+        true
+    }
+
+    /// Consume a `'…'` char body (opening quote, contents, closing
+    /// quote) into `text`. Assumes the current char is `'`.
+    fn char_body(&mut self, text: &mut String) {
+        self.bump(text); // opening quote
+        if self.pos < self.chars.len() && self.chars[self.pos] == '\\' {
+            self.bump(text);
+            if self.pos < self.chars.len() {
+                self.bump(text);
+            }
+        } else if self.pos < self.chars.len() {
+            self.bump(text);
+        }
+        // Consume up to the closing quote (covers `'\u{…}'`).
+        while self.pos < self.chars.len() && self.chars[self.pos] != '\'' {
+            self.bump(text);
+        }
+        if self.pos < self.chars.len() {
+            self.bump(text); // closing quote
+        }
+    }
+
+    fn char_or_lifetime(&mut self, line: u32) {
+        // Lifetime: `'ident` NOT followed by a closing quote.
+        let is_lifetime = match self.peek(1) {
+            Some(c) if is_ident_start(c) => {
+                let mut k = 2;
+                while self.peek(k).map(is_ident_continue).unwrap_or(false) {
+                    k += 1;
+                }
+                self.peek(k) != Some('\'')
+            }
+            _ => false,
+        };
+        let mut text = String::new();
+        if is_lifetime {
+            self.bump(&mut text); // quote
+            while self.pos < self.chars.len() && is_ident_continue(self.chars[self.pos]) {
+                self.bump(&mut text);
+            }
+            self.emit(TokKind::Lifetime, line, text);
+        } else {
+            self.char_body(&mut text);
+            self.emit(TokKind::Char, line, text);
+        }
+    }
+
+    fn ident(&mut self, line: u32) {
+        let mut text = String::new();
+        while self.pos < self.chars.len() && is_ident_continue(self.chars[self.pos]) {
+            self.bump(&mut text);
+        }
+        self.emit(TokKind::Ident, line, text);
+    }
+
+    fn number(&mut self, line: u32) {
+        let mut text = String::new();
+        loop {
+            let Some(c) = self.peek(0) else { break };
+            if c.is_alphanumeric() || c == '_' {
+                self.bump(&mut text);
+                continue;
+            }
+            // `1.5` continues the number; `0..n` and `x.0.abs()` stop it.
+            if c == '.' && self.peek(1).map(|d| d.is_ascii_digit()).unwrap_or(false) {
+                self.bump(&mut text);
+                continue;
+            }
+            // Exponent sign: `1e-3`, `2.5E+7`.
+            if (c == '+' || c == '-')
+                && text.ends_with(['e', 'E'])
+                && self.peek(1).map(|d| d.is_ascii_digit()).unwrap_or(false)
+            {
+                self.bump(&mut text);
+                continue;
+            }
+            break;
+        }
+        self.emit(TokKind::Num, line, text);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_strings_and_idents_are_distinguished() {
+        let toks = kinds("let s = \"unsafe // not code\"; // unsafe trailing\nunsafe {}");
+        assert_eq!(toks[0], (TokKind::Ident, "let".into()));
+        assert_eq!(toks[3].0, TokKind::Str);
+        assert!(toks[3].1.contains("unsafe"));
+        assert_eq!(toks[5].0, TokKind::LineComment);
+        assert_eq!(toks[6], (TokKind::Ident, "unsafe".into()));
+    }
+
+    #[test]
+    fn nested_block_comments_and_lines() {
+        let toks = lex("/* a /* b */ c */ x\ny");
+        assert_eq!(toks[0].kind, TokKind::BlockComment);
+        assert_eq!(toks[1].text, "x");
+        assert_eq!(toks[1].line, 1);
+        assert_eq!(toks[2].text, "y");
+        assert_eq!(toks[2].line, 2);
+    }
+
+    #[test]
+    fn multiline_block_comment_end_line() {
+        let toks = lex("/* one\ntwo\nthree */ after");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[0].end_line(), 3);
+        assert_eq!(toks[1].line, 3);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = kinds("&'static str; let c = 'x'; let q = '\\''; let u = '\\u{1F600}'; '_");
+        let lifes: Vec<_> = toks.iter().filter(|t| t.0 == TokKind::Lifetime).collect();
+        let chars: Vec<_> = toks.iter().filter(|t| t.0 == TokKind::Char).collect();
+        assert_eq!(lifes.len(), 2, "{toks:?}"); // 'static and '_
+        assert_eq!(chars.len(), 3, "{toks:?}"); // 'x', '\'', '\u{1F600}'
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let toks = kinds("r\"raw\" r#\"ra\"w\"# b\"bytes\" br#\"b\"# b'x' rx b2");
+        assert_eq!(toks[0].0, TokKind::Str);
+        assert_eq!(toks[1].0, TokKind::Str);
+        assert_eq!(toks[1].1, "r#\"ra\"w\"#");
+        assert_eq!(toks[2].0, TokKind::Str);
+        assert_eq!(toks[3].0, TokKind::Str);
+        assert_eq!(toks[4].0, TokKind::Char);
+        // Plain idents that merely start with r/b stay idents.
+        assert_eq!(toks[5], (TokKind::Ident, "rx".into()));
+        assert_eq!(toks[6], (TokKind::Ident, "b2".into()));
+    }
+
+    #[test]
+    fn numbers_ranges_and_exponents() {
+        let toks = kinds("0..n 1.5 1e-3 0x9E37_79B9 x.0");
+        assert_eq!(toks[0], (TokKind::Num, "0".into()));
+        assert_eq!(toks[1], (TokKind::Punct, ".".into()));
+        assert_eq!(toks[2], (TokKind::Punct, ".".into()));
+        assert_eq!(toks[3], (TokKind::Ident, "n".into()));
+        assert_eq!(toks[4], (TokKind::Num, "1.5".into()));
+        assert_eq!(toks[5], (TokKind::Num, "1e-3".into()));
+        assert_eq!(toks[6], (TokKind::Num, "0x9E37_79B9".into()));
+        assert_eq!(toks[7], (TokKind::Ident, "x".into()));
+        assert_eq!(toks[8], (TokKind::Punct, ".".into()));
+        assert_eq!(toks[9], (TokKind::Num, "0".into()));
+    }
+
+    #[test]
+    fn path_tokens_survive_for_rule_matching() {
+        let toks = kinds("m.load(AtOrd::Relaxed)");
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.0 == TokKind::Ident)
+            .map(|t| t.1.as_str())
+            .collect();
+        assert_eq!(idents, vec!["m", "load", "AtOrd", "Relaxed"]);
+    }
+}

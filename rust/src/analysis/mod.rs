@@ -1,0 +1,242 @@
+//! `pdgrass audit` — a self-contained static-analysis pass over the
+//! crate's own sources.
+//!
+//! The repo's core claim is bitwise-identical sparsifiers and PCG
+//! histories across strategies, pipelines, and thread counts. That
+//! property rests on a handful of structural invariants in the parallel
+//! substrate (fixed reduction trees, pool-only threading, reviewed
+//! atomic orderings, no randomized iteration in the algorithm modules).
+//! Example-based tests can only sample those invariants; this module
+//! checks them on every build, with zero dependencies beyond std (a
+//! hand-rolled lexer, consistent with the offline `vendor/` policy —
+//! see [`lexer`]).
+//!
+//! Submodules: [`lexer`] (tokens), [`context`] (enclosing items +
+//! `#[cfg(test)]` regions), [`rules`] (the checks), [`allow`] (the
+//! atomics allowlist). Entry points: [`run_audit`] for a directory
+//! tree, [`audit_sources`] for in-memory sources (fixtures, tests).
+//!
+//! The dynamic counterpart is [`crate::par::chaos`]: the audit proves
+//! the invariants are *stated*, the chaos harness perturbs schedules to
+//! check the determinism they *imply*.
+
+pub mod allow;
+pub mod context;
+pub mod lexer;
+pub mod rules;
+
+pub use allow::{AllowEntry, Allowlist};
+pub use rules::{AuditConfig, Violation};
+
+use crate::config::Doc;
+use crate::error::{Error, Result};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Outcome of one audit run.
+#[derive(Debug)]
+pub struct AuditReport {
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// All violations, ordered by (file, line).
+    pub violations: Vec<Violation>,
+    /// Allowlist entries never matched by the scan (warnings: stale
+    /// entries rot the review record but don't fail the build).
+    pub unused_allow: Vec<String>,
+    /// Total allowlist entries consulted.
+    pub allow_entries: usize,
+}
+
+impl AuditReport {
+    /// True when the audit found no violations.
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Human-readable report: one line per violation, warnings for
+    /// stale allowlist entries, and a one-line summary.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for v in &self.violations {
+            let _ = writeln!(s, "{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+        }
+        for u in &self.unused_allow {
+            let _ = writeln!(s, "warning: unused allowlist entry: {u}");
+        }
+        let _ = writeln!(
+            s,
+            "audit: {} file(s) scanned, {} violation(s), {} allowlist entr{} ({} unused)",
+            self.files,
+            self.violations.len(),
+            self.allow_entries,
+            if self.allow_entries == 1 { "y" } else { "ies" },
+            self.unused_allow.len()
+        );
+        s
+    }
+}
+
+/// Audit in-memory sources: `(relative path, contents)` pairs. This is
+/// the pure core — [`run_audit`] is a thin filesystem wrapper, and the
+/// fixture tests call this directly.
+pub fn audit_sources(
+    sources: &[(String, String)],
+    allow: &Allowlist,
+    cfg: &AuditConfig,
+) -> AuditReport {
+    let mut violations = Vec::new();
+    let mut used = vec![false; allow.entries().len()];
+    for (rel, text) in sources {
+        let tokens = lexer::lex(text);
+        rules::audit_tokens(rel, &tokens, cfg, allow, &mut used, &mut violations);
+    }
+    violations.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+    let unused_allow = allow
+        .entries()
+        .iter()
+        .zip(&used)
+        .filter(|(_, &u)| !u)
+        .map(|(e, _)| {
+            format!("{} | {} | {} (allowlist line {})", e.file, e.item, e.ordering, e.line)
+        })
+        .collect();
+    AuditReport {
+        files: sources.len(),
+        violations,
+        unused_allow,
+        allow_entries: allow.entries().len(),
+    }
+}
+
+/// Collect `.rs` files under `root` (sorted for deterministic reports),
+/// load the allowlist, and audit the tree with `cfg`.
+pub fn run_audit_with(root: &Path, allow_path: &Path, cfg: &AuditConfig) -> Result<AuditReport> {
+    let allow = Allowlist::load(allow_path)?;
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut sources = Vec::with_capacity(files.len());
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.display())))?;
+        sources.push((rel, text));
+    }
+    Ok(audit_sources(&sources, &allow, cfg))
+}
+
+/// [`run_audit_with`] under the repo's default [`AuditConfig`].
+pub fn run_audit(root: &Path, allow_path: &Path) -> Result<AuditReport> {
+    run_audit_with(root, allow_path, &AuditConfig::default())
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| Error::Config(format!("cannot read dir {}: {e}", dir.display())))?;
+    for entry in entries {
+        let entry = entry.map_err(Error::Io)?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Paths for an audit run, resolvable from a config file's `[audit]`
+/// section (`audit.root`, `audit.allowlist`) with CLI flags taking
+/// precedence. Defaults match the repository layout.
+#[derive(Clone, Debug)]
+pub struct AuditOptions {
+    /// Directory tree to scan.
+    pub root: String,
+    /// Allowlist file.
+    pub allowlist: String,
+}
+
+impl Default for AuditOptions {
+    fn default() -> Self {
+        AuditOptions { root: "rust/src".into(), allowlist: "rust/analysis/atomics.allow".into() }
+    }
+}
+
+impl AuditOptions {
+    /// Read `audit.*` keys from a parsed config [`Doc`], rejecting
+    /// unknown ones (same typo-catching policy as `RunConfig`).
+    pub fn from_doc(doc: &Doc) -> Result<AuditOptions> {
+        let known = ["audit.root", "audit.allowlist"];
+        for key in doc.keys() {
+            if key.starts_with("audit.") && !known.contains(&key) {
+                return Err(Error::Config(format!("unknown config key: {key}")));
+            }
+        }
+        let mut opts = AuditOptions::default();
+        if let Some(v) = doc.get("audit.root") {
+            opts.root = v
+                .as_str()
+                .ok_or_else(|| Error::Config("audit.root must be a string".into()))?
+                .to_string();
+        }
+        if let Some(v) = doc.get("audit.allowlist") {
+            opts.allowlist = v
+                .as_str()
+                .ok_or_else(|| Error::Config("audit.allowlist must be a string".into()))?
+                .to_string();
+        }
+        Ok(opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_and_sorts() {
+        let allow = Allowlist::parse("b.rs | f | Relaxed | why\n", "t").unwrap();
+        let sources = vec![
+            ("b.rs".to_string(), "fn g() { unsafe { x() } }".to_string()),
+            ("a.rs".to_string(), "fn h() { unsafe { y() } }".to_string()),
+        ];
+        let cfg = AuditConfig::default();
+        let report = audit_sources(&sources, &allow, &cfg);
+        assert!(!report.ok());
+        assert_eq!(report.violations.len(), 2);
+        // sorted by file despite input order
+        assert_eq!(report.violations[0].file, "a.rs");
+        assert_eq!(report.unused_allow.len(), 1);
+        let text = report.render();
+        assert!(text.contains("a.rs:1: [safety-comment]"), "{text}");
+        assert!(text.contains("unused allowlist entry"), "{text}");
+        assert!(text.contains("2 violation(s)"), "{text}");
+    }
+
+    #[test]
+    fn unused_allowlist_entries_warn_but_do_not_fail() {
+        let allow = Allowlist::parse("gone.rs | old | SeqCst | obsolete\n", "t").unwrap();
+        let report = audit_sources(&[], &allow, &AuditConfig::default());
+        assert!(report.ok());
+        assert_eq!(report.unused_allow.len(), 1);
+    }
+
+    #[test]
+    fn audit_options_from_doc() {
+        let doc = Doc::parse("[audit]\nroot = \"src\"\nallowlist = \"a.allow\"\n").unwrap();
+        let opts = AuditOptions::from_doc(&doc).unwrap();
+        assert_eq!(opts.root, "src");
+        assert_eq!(opts.allowlist, "a.allow");
+        let bad = Doc::parse("[audit]\nroots = \"src\"\n").unwrap();
+        assert!(AuditOptions::from_doc(&bad).is_err());
+        let empty = Doc::parse("[run]\nname = \"x\"\n").unwrap();
+        let d = AuditOptions::from_doc(&empty).unwrap();
+        assert_eq!(d.root, "rust/src");
+    }
+}

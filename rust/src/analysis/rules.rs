@@ -1,0 +1,477 @@
+//! The audit rules.
+//!
+//! Four rule families, each independently testable against fixture
+//! sources (`rust/tests/analysis_fixtures/`):
+//!
+//! * **safety-comment** — every `unsafe` block, `unsafe fn`, and
+//!   `unsafe impl` is documented by a `// SAFETY:` comment on the same
+//!   line or in the contiguous comment block directly above (`# Safety`
+//!   doc sections count for `unsafe fn`). Applies to test code too: a
+//!   test's unsafe is as capable of UB as anyone's.
+//! * **thread-outside-pool** — `thread::{spawn, scope, Builder}` are
+//!   banned outside `par/pool.rs`; every worker must come from the
+//!   shared pool or determinism/span accounting silently break. Test
+//!   regions are exempt (tests legitimately probe concurrent use).
+//! * **atomic-allowlist** — every atomic `Ordering::*` variant used in
+//!   non-test code must match an entry in the checked-in allowlist
+//!   (alias-insensitive: `AtOrd::Relaxed` is still `Relaxed`; the
+//!   `cmp::Ordering` variants `Less`/`Equal`/`Greater` never match).
+//! * **det-collections / det-timing / det-float-fold** — determinism
+//!   lints for the scoped modules (`recovery/`, `tree/`, `solver/`):
+//!   no std `HashMap`/`HashSet` (iteration order is randomized; use
+//!   `util`'s Fx variants), no `Instant::now`/`SystemTime::now`
+//!   (route timing through `util::Timer`), and no iterator `.sum()` /
+//!   `.fold()` unless the turbofish proves an integer accumulator —
+//!   float accumulation must go through `par_reduce`'s fixed chunk
+//!   tree or an explicit fixed-order loop. `// audit-ok: <reason>`
+//!   on or directly above the line acknowledges a reviewed exception.
+
+use super::allow::{Allowlist, ORDERINGS};
+use super::context::{self, Context};
+use super::lexer::{TokKind, Token};
+
+/// Tunable audit scope; [`Default`] matches this repository's layout.
+#[derive(Clone, Debug)]
+pub struct AuditConfig {
+    /// Path prefixes (relative to the audit root) subject to the
+    /// determinism lints.
+    pub det_scopes: Vec<String>,
+    /// Files (relative to the audit root) allowed to create threads.
+    pub thread_exempt: Vec<String>,
+}
+
+impl Default for AuditConfig {
+    fn default() -> Self {
+        AuditConfig {
+            det_scopes: vec!["recovery/".into(), "tree/".into(), "solver/".into()],
+            thread_exempt: vec!["par/pool.rs".into()],
+        }
+    }
+}
+
+/// One rule violation at a source location.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Path relative to the audit root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Stable rule identifier (e.g. `safety-comment`).
+    pub rule: &'static str,
+    /// Human-readable description with the copy-pasteable fix key.
+    pub msg: String,
+}
+
+/// Integer accumulator types that make `.sum::<T>()` deterministic.
+const INT_TYPES: [&str; 12] = [
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+];
+
+/// Per-line facts used by the comment-proximity checks.
+struct Lines {
+    has_code: Vec<bool>,
+    has_comment: Vec<bool>,
+    has_safety: Vec<bool>,
+    has_audit_ok: Vec<bool>,
+}
+
+impl Lines {
+    fn build(tokens: &[Token], attr: &[bool]) -> Lines {
+        let max = tokens.iter().map(|t| t.end_line() as usize).max().unwrap_or(0);
+        let mut l = Lines {
+            has_code: vec![false; max + 1],
+            has_comment: vec![false; max + 1],
+            has_safety: vec![false; max + 1],
+            has_audit_ok: vec![false; max + 1],
+        };
+        for (i, t) in tokens.iter().enumerate() {
+            let span = t.line as usize..=t.end_line() as usize;
+            if t.is_comment() {
+                let safety = t.text.contains("SAFETY:") || t.text.contains("# Safety");
+                let audit_ok = t.text.contains("audit-ok");
+                for ln in span {
+                    l.has_comment[ln] = true;
+                    l.has_safety[ln] |= safety;
+                    l.has_audit_ok[ln] |= audit_ok;
+                }
+            } else if !attr[i] {
+                // Attribute tokens (`#[inline]`, doc markers) are neutral:
+                // they neither document unsafe nor break a comment block.
+                for ln in span {
+                    l.has_code[ln] = true;
+                }
+            }
+        }
+        l
+    }
+
+    /// Is `marker` present on `line` or in the contiguous run of
+    /// comment/attribute-only lines directly above it?
+    fn marker_near(&self, line: u32, marker: impl Fn(&Lines, usize) -> bool) -> bool {
+        let line = line as usize;
+        if line < self.has_code.len() && marker(self, line) {
+            return true;
+        }
+        for ln in (1..line).rev() {
+            if self.has_code[ln] {
+                return false;
+            }
+            if marker(self, ln) {
+                return true;
+            }
+            if !self.has_comment[ln] {
+                // Blank (or attribute-only) line: attributes continue the
+                // run, a truly blank line would too — both are harmless,
+                // so only code terminates the walk. Cap the walk at the
+                // file top via the range.
+                continue;
+            }
+        }
+        false
+    }
+
+    fn safety_near(&self, line: u32) -> bool {
+        self.marker_near(line, |l, ln| l.has_safety[ln])
+    }
+
+    fn audit_ok_near(&self, line: u32) -> bool {
+        self.marker_near(line, |l, ln| l.has_audit_ok[ln])
+    }
+}
+
+/// Mark tokens belonging to outer/inner attributes (`#[…]`, `#![…]`).
+fn attr_mask(tokens: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; tokens.len()];
+    let mut i = 0;
+    while i < tokens.len() {
+        if !tokens[i].is_comment() && tokens[i].text == "#" {
+            let mut j = i + 1;
+            while j < tokens.len() && tokens[j].is_comment() {
+                j += 1;
+            }
+            if j < tokens.len() && tokens[j].text == "!" {
+                j += 1;
+                while j < tokens.len() && tokens[j].is_comment() {
+                    j += 1;
+                }
+            }
+            if j < tokens.len() && tokens[j].text == "[" {
+                let mut depth = 0i32;
+                let mut k = j;
+                while k < tokens.len() {
+                    if !tokens[k].is_comment() {
+                        match tokens[k].text.as_str() {
+                            "[" => depth += 1,
+                            "]" => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                    k += 1;
+                }
+                for m in mask.iter_mut().take((k + 1).min(tokens.len())).skip(i) {
+                    *m = true;
+                }
+                i = k + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// Scan one file's tokens against every rule, appending violations and
+/// flagging which allowlist entries were exercised.
+pub fn audit_tokens(
+    rel: &str,
+    tokens: &[Token],
+    cfg: &AuditConfig,
+    allow: &Allowlist,
+    allow_used: &mut [bool],
+    out: &mut Vec<Violation>,
+) {
+    let ctx = context::build(tokens);
+    let attr = attr_mask(tokens);
+    let lines = Lines::build(tokens, &attr);
+    let code: Vec<usize> = (0..tokens.len()).filter(|&i| !tokens[i].is_comment()).collect();
+    let in_det_scope = cfg.det_scopes.iter().any(|p| rel.starts_with(p.as_str()));
+    let thread_exempt = cfg.thread_exempt.iter().any(|f| f == rel);
+
+    let tok = |p: usize| -> Option<&Token> { code.get(p).map(|&i| &tokens[i]) };
+    let text = |p: usize| -> &str { tok(p).map(|t| t.text.as_str()).unwrap_or("") };
+
+    for (p, &idx) in code.iter().enumerate() {
+        let t = &tokens[idx];
+        let in_test = ctx.in_test(idx);
+
+        // Rule: safety-comment (applies in test regions too).
+        if t.kind == TokKind::Ident && t.text == "unsafe" {
+            let (what, doc_ok) = match text(p + 1) {
+                "fn" | "extern" => ("`unsafe fn`", true),
+                "impl" => ("`unsafe impl`", false),
+                "trait" => ("`unsafe trait`", false),
+                _ => ("unsafe block", false),
+            };
+            // The marker set already includes `# Safety`, so one walk
+            // covers both comment styles; `doc_ok` only shapes the hint.
+            if !lines.safety_near(t.line) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: t.line,
+                    rule: "safety-comment",
+                    msg: format!(
+                        "{what} without a `// SAFETY:` comment on the same line or \
+                         directly above{}",
+                        if doc_ok { " (a `# Safety` doc section also counts)" } else { "" }
+                    ),
+                });
+            }
+        }
+
+        // Rule: thread-outside-pool (test regions exempt).
+        if !in_test
+            && !thread_exempt
+            && t.kind == TokKind::Ident
+            && t.text == "thread"
+            && text(p + 1) == ":"
+            && text(p + 2) == ":"
+        {
+            let callee = text(p + 3);
+            if matches!(callee, "spawn" | "scope" | "Builder") {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: t.line,
+                    rule: "thread-outside-pool",
+                    msg: format!(
+                        "`thread::{callee}` outside par/pool.rs — all workers must come \
+                         from the shared pool (`par::ThreadPool`)"
+                    ),
+                });
+            }
+        }
+
+        // Rule: atomic-allowlist (test regions exempt).
+        if !in_test
+            && t.kind == TokKind::Ident
+            && ORDERINGS.contains(&t.text.as_str())
+            && p >= 3
+            && text(p - 1) == ":"
+            && text(p - 2) == ":"
+            && tok(p - 3).map(|q| q.kind == TokKind::Ident).unwrap_or(false)
+        {
+            let item = ctx.item_keys[idx].as_str();
+            match allow.lookup(rel, item, &t.text) {
+                Some(entry) => allow_used[entry] = true,
+                None => out.push(Violation {
+                    file: rel.to_string(),
+                    line: t.line,
+                    rule: "atomic-allowlist",
+                    msg: format!(
+                        "atomic ordering `{}` in `{item}` has no allowlist entry — add \
+                         `{rel} | {item} | {} | <justification>` to the allowlist after \
+                         review",
+                        t.text, t.text
+                    ),
+                }),
+            }
+        }
+
+        // Determinism lints: only in scoped modules, never in tests.
+        if !in_det_scope || in_test {
+            continue;
+        }
+        if t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+            if !lines.audit_ok_near(t.line) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: t.line,
+                    rule: "det-collections",
+                    msg: format!(
+                        "std `{}` in a determinism-scoped module: iteration order is \
+                         randomized per process — use `util`'s Fx{} instead",
+                        t.text, t.text
+                    ),
+                });
+            }
+        }
+        if t.kind == TokKind::Ident
+            && (t.text == "Instant" || t.text == "SystemTime")
+            && text(p + 1) == ":"
+            && text(p + 2) == ":"
+            && text(p + 3) == "now"
+            && !lines.audit_ok_near(t.line)
+        {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "det-timing",
+                msg: format!(
+                    "`{}::now` in a determinism-scoped module: route timing through \
+                     `util::Timer` so measurement stays out of the algorithm",
+                    t.text
+                ),
+            });
+        }
+        if t.kind == TokKind::Punct
+            && t.text == "."
+            && tok(p + 1).map(|q| q.kind == TokKind::Ident).unwrap_or(false)
+            && matches!(text(p + 1), "sum" | "fold")
+        {
+            let method = text(p + 1);
+            let call_like = matches!(text(p + 2), "(" | ":");
+            let int_turbofish = text(p + 2) == ":"
+                && text(p + 3) == ":"
+                && text(p + 4) == "<"
+                && INT_TYPES.contains(&text(p + 5));
+            let site = tok(p + 1).map(|q| q.line).unwrap_or(t.line);
+            if call_like && !int_turbofish && !lines.audit_ok_near(site) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: site,
+                    rule: "det-float-fold",
+                    msg: format!(
+                        "iterator `.{method}` in a determinism-scoped module without an \
+                         integer turbofish: float accumulation must use `par_reduce`'s \
+                         fixed chunk tree or an explicit loop (or mark a reviewed \
+                         exception with `// audit-ok: <reason>`)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn scan(rel: &str, src: &str, allow_text: &str) -> Vec<Violation> {
+        let allow = Allowlist::parse(allow_text, "t").unwrap();
+        let mut used = vec![false; allow.entries().len()];
+        let mut out = Vec::new();
+        let cfg = AuditConfig {
+            det_scopes: vec![String::new()], // everything in det scope
+            thread_exempt: vec!["par/pool.rs".into()],
+        };
+        audit_tokens(rel, &lex(src), &cfg, &allow, &mut used, &mut out);
+        out
+    }
+
+    fn rules(v: &[Violation]) -> Vec<&'static str> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn undocumented_unsafe_flavors_are_flagged_once_each() {
+        let src = "fn f() { let x = unsafe { g() }; }\n\
+                   pub struct W(*mut u8);\n\
+                   unsafe impl Send for W {}\n\
+                   pub unsafe fn raw() {}\n";
+        let v = scan("a.rs", src, "");
+        assert_eq!(rules(&v), vec!["safety-comment"; 3], "{v:?}");
+        assert_eq!(v[0].line, 1);
+        assert_eq!(v[1].line, 3);
+        assert_eq!(v[2].line, 4);
+    }
+
+    #[test]
+    fn safety_comments_same_line_above_and_doc_section_pass() {
+        let src = "fn f() {\n\
+                   // SAFETY: g upholds its contract here.\n\
+                   let x = unsafe { g() };\n\
+                   let y = unsafe { h() }; // SAFETY: same-line form.\n\
+                   }\n\
+                   pub struct W(*mut u8);\n\
+                   // SAFETY: W is only touched from one thread.\n\
+                   unsafe impl Send for W {}\n\
+                   /// Reads a byte.\n\
+                   ///\n\
+                   /// # Safety\n\
+                   /// `p` must be valid.\n\
+                   #[inline]\n\
+                   pub unsafe fn raw(p: *const u8) {}\n";
+        let v = scan("a.rs", src, "");
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn unsafe_in_strings_and_comments_is_ignored() {
+        let src = "// unsafe is mentioned here\nfn f() { let s = \"unsafe { }\"; }";
+        assert!(scan("a.rs", src, "").is_empty());
+    }
+
+    #[test]
+    fn thread_spawn_scope_builder_flagged_outside_pool_only() {
+        let src = "fn f() {\n\
+                   std::thread::spawn(|| {});\n\
+                   std::thread::scope(|s| {});\n\
+                   let b = std::thread::Builder::new();\n\
+                   std::thread::yield_now();\n\
+                   }";
+        let v = scan("x.rs", src, "");
+        assert_eq!(rules(&v), vec!["thread-outside-pool"; 3], "{v:?}");
+        assert!(scan("par/pool.rs", src, "").is_empty());
+        let in_test = format!("#[cfg(test)]\nmod tests {{ {src} }}");
+        assert!(scan("x.rs", &in_test, "").is_empty());
+    }
+
+    #[test]
+    fn atomics_match_allowlist_by_enclosing_item_alias_insensitively() {
+        let src = "use std::sync::atomic::Ordering as AtOrd;\n\
+                   struct C;\n\
+                   impl C {\n\
+                   fn bump(&self) { HITS.fetch_add(1, AtOrd::Relaxed); }\n\
+                   fn peek(&self) { HITS.load(AtOrd::Acquire); }\n\
+                   }\n\
+                   fn cmp_is_fine() -> std::cmp::Ordering { std::cmp::Ordering::Less }";
+        let ok = "x.rs | C::bump | Relaxed | counter only\n\
+                  x.rs | C::peek | Acquire | pairs with a Release store";
+        assert!(scan("x.rs", src, ok).is_empty());
+        let missing = "x.rs | C::bump | Relaxed | counter only";
+        let v = scan("x.rs", src, missing);
+        assert_eq!(rules(&v), vec!["atomic-allowlist"], "{v:?}");
+        assert!(v[0].msg.contains("C::peek"), "{}", v[0].msg);
+        assert!(v[0].msg.contains("Acquire"));
+    }
+
+    #[test]
+    fn det_lints_flag_and_release() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(xs: &[f64]) -> f64 {\n\
+                   let t = std::time::Instant::now();\n\
+                   let bad: f64 = xs.iter().sum();\n\
+                   let worse = xs.iter().fold(0.0, |a, b| a + b);\n\
+                   let fine: usize = xs.iter().map(|_| 1usize).sum::<usize>();\n\
+                   // audit-ok: fixed-order fold over a slice\n\
+                   let ok = xs.iter().fold(0.0, |a, b| a + b);\n\
+                   bad + worse + ok + fine as f64 + t.elapsed().as_secs_f64()\n\
+                   }";
+        let v = scan("recovery/f.rs", src, "");
+        let mut r = rules(&v);
+        r.sort_unstable();
+        assert_eq!(
+            r,
+            vec!["det-collections", "det-float-fold", "det-float-fold", "det-timing"],
+            "{v:?}"
+        );
+        // Outside the determinism scope the same source is clean.
+        let cfg = AuditConfig::default();
+        let allow = Allowlist::parse("", "t").unwrap();
+        let mut out = Vec::new();
+        audit_tokens("util/f.rs", &lex(src), &cfg, &allow, &mut [], &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn float_turbofish_is_still_a_violation() {
+        let src = "fn f(xs: &[f64]) -> f64 { xs.iter().sum::<f64>() }";
+        let v = scan("recovery/f.rs", src, "");
+        assert_eq!(rules(&v), vec!["det-float-fold"], "{v:?}");
+    }
+}

@@ -13,6 +13,7 @@
 //! pdgrass suite    [--scale S] [--quick]
 //! pdgrass table2 | table3 | table4 | fig1 | fig6-8   [--scale S] [--config F]
 //! pdgrass list     # suite rows
+//! pdgrass audit    [--root DIR] [--allowlist FILE]   # static analysis
 //! ```
 
 use crate::config::{Doc, RunConfig};
@@ -214,6 +215,29 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
             experiments::pipeline_overlap(&graph_names(&run), &cfg);
             Ok(())
         }
+        "audit" => {
+            let mut opts = match cli.str("config") {
+                Some(path) => crate::analysis::AuditOptions::from_doc(&Doc::load(
+                    std::path::Path::new(path),
+                )?)?,
+                None => crate::analysis::AuditOptions::default(),
+            };
+            if let Some(root) = cli.str("root") {
+                opts.root = root.to_string();
+            }
+            if let Some(allow) = cli.str("allowlist") {
+                opts.allowlist = allow.to_string();
+            }
+            let report = crate::analysis::run_audit(
+                std::path::Path::new(&opts.root),
+                std::path::Path::new(&opts.allowlist),
+            )?;
+            print!("{}", report.render());
+            if !report.ok() {
+                anyhow::bail!("audit failed: {} violation(s)", report.violations.len());
+            }
+            Ok(())
+        }
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -236,6 +260,7 @@ VERBS
   fig1                      Fig. 1 scatter (CSV)
   fig6-8                    Figs. 6-8 strong-scaling curves (CSV)
   pipeline                  barrier vs streamed prepare timings + overlap model
+  audit     [--root DIR] [--allowlist FILE]   concurrency/determinism lints
 
 OPTIONS
   --scale S      suite scale factor (default 1.0)

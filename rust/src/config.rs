@@ -260,7 +260,9 @@ impl RunConfig {
             "run.shard_min", "run.pipeline",
         ];
         for key in doc.keys() {
-            if !known.contains(&key) {
+            // `audit.*` belongs to `analysis::AuditOptions`; one config
+            // file may carry both sections.
+            if !known.contains(&key) && !key.starts_with("audit.") {
                 return Err(Error::Config(format!("unknown config key: {key}")));
             }
         }
@@ -520,6 +522,14 @@ mod tests {
         let doc = Doc::parse("[run]\nspeeling_mistake = 1\n").unwrap();
         let err = RunConfig::from_doc(&doc).unwrap_err();
         assert!(err.to_string().contains("unknown config key"), "{err}");
+    }
+
+    #[test]
+    fn audit_section_keys_are_ignored_by_run_config() {
+        let doc =
+            Doc::parse("[run]\nscale = 0.5\n[audit]\nroot = \"rust/src\"\n").unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.scale, 0.5);
     }
 
     #[test]

@@ -94,7 +94,30 @@
 //! assert!(outcome.iterations > 0);
 //! # Ok(()) }
 //! ```
+//!
+//! ## Correctness toolchain
+//!
+//! The determinism guarantee above is enforced by a static pass and a
+//! dynamic one, both in-tree:
+//!
+//! * **`pdgrass audit`** ([`analysis`]) lints `rust/src` with a
+//!   dependency-free lexer: every `unsafe` needs a `// SAFETY:` /
+//!   `# Safety` justification, thread spawning is confined to the pool,
+//!   every non-test atomic `Ordering` must appear in
+//!   `rust/analysis/atomics.allow` with a reviewed justification, and the
+//!   algorithm modules (`recovery/`, `tree/`, `solver/`) may not use
+//!   randomized-iteration collections, wall-clock timing, or
+//!   float-accumulator `.sum()`/`.fold()` (annotate deliberate
+//!   exceptions with `// audit-ok: reason`). To allow a new ordering,
+//!   add a `file | item | ordering | justification` line to the
+//!   allowlist — the audit's violation message prints the exact line.
+//! * **Schedule chaos** ([`par::chaos`]) injects seeded yield/sleep
+//!   noise at the pool's claim/steal/park and the stream's claim/await
+//!   sites when `PDGRASS_CHAOS_SEED` is set, and the chaos test suite
+//!   replays the bitwise-equivalence checks under several distinct
+//!   schedules. A failure report names the seed to replay.
 
+pub mod analysis;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -1,0 +1,201 @@
+//! Seeded schedule-chaos injection for the parallel substrate.
+//!
+//! The determinism claim — bitwise-identical outputs across strategies,
+//! pipelines, and thread counts — must hold for *every* interleaving,
+//! but an idle CI machine explores very few. This module plants cheap
+//! perturbation points at the scheduler's decision sites (chunk claim,
+//! steal, park in [`super::pool`]; chunk claim and await in
+//! [`super::stream`]) that inject seeded `yield_now`/micro-sleep noise,
+//! so the equivalence suites can be replayed under many distinct
+//! schedules:
+//!
+//! ```text
+//! PDGRASS_CHAOS_SEED=11 cargo test --test session
+//! ```
+//!
+//! Off by default: with no seed configured, a perturbation point is two
+//! relaxed-ish loads. Decisions are a pure hash of
+//! `(seed, thread salt, point, per-thread counter)`, so a failing seed
+//! reported by a test reproduces the same *decision sequence* (the OS
+//! still owns actual scheduling — chaos widens the explored set, it
+//! does not replay an exact interleaving).
+//!
+//! Perturbation only ever delays a thread; it cannot reorder the
+//! substrate's synchronization edges, so enabling chaos must not change
+//! any output bit — that is precisely what the chaos tests assert.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Scheduler decision sites that accept injected noise.
+#[derive(Clone, Copy, Debug)]
+pub enum ChaosPoint {
+    /// A pool worker (or the caller) about to claim the next chunk.
+    PoolClaim,
+    /// A pool worker about to scan sibling slots for work.
+    PoolSteal,
+    /// A pool worker about to park on the wakeup condvar.
+    PoolPark,
+    /// The stream producer about to claim the next stage chunk.
+    StreamClaim,
+    /// A stream consumer waiting for a chunk to be published.
+    StreamAwait,
+}
+
+/// In-process override state: 0 = defer to the environment,
+/// 1 = forced off, 2 = forced on with [`OVERRIDE_SEED`].
+static OVERRIDE_STATE: AtomicU8 = AtomicU8::new(0);
+static OVERRIDE_SEED: AtomicU64 = AtomicU64::new(0);
+/// Monotone source of per-thread salts.
+static NEXT_SALT: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Per-thread (salt, event counter); salt 0 means "not yet drawn".
+    static THREAD_STATE: Cell<(u64, u64)> = const { Cell::new((0, 0)) };
+}
+
+/// Force the chaos seed for this process, overriding the environment:
+/// `Some(seed)` enables injection, `None` disables it. Tests use this
+/// to compare perturbed runs against a chaos-free baseline without
+/// respawning the process.
+pub fn set_seed(seed: Option<u64>) {
+    match seed {
+        Some(s) => {
+            OVERRIDE_SEED.store(s, Ordering::Release);
+            OVERRIDE_STATE.store(2, Ordering::Release);
+        }
+        None => OVERRIDE_STATE.store(1, Ordering::Release),
+    }
+}
+
+/// The active chaos seed, if any: an in-process [`set_seed`] override
+/// first, else `PDGRASS_CHAOS_SEED` from the environment (read once).
+pub fn seed() -> Option<u64> {
+    match OVERRIDE_STATE.load(Ordering::Acquire) {
+        1 => None,
+        2 => Some(OVERRIDE_SEED.load(Ordering::Acquire)),
+        _ => env_seed(),
+    }
+}
+
+fn env_seed() -> Option<u64> {
+    static ENV: OnceLock<Option<u64>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        let raw = std::env::var("PDGRASS_CHAOS_SEED").ok()?;
+        parse_seed(&raw)
+    })
+}
+
+/// Parse a seed string: decimal, or hex with an `0x` prefix.
+fn parse_seed(raw: &str) -> Option<u64> {
+    let s = raw.trim();
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// A perturbation point. Near-free when chaos is disabled; otherwise
+/// hashes the site identity into a yield / micro-sleep / no-op choice.
+#[inline]
+pub fn chaos_point(p: ChaosPoint) {
+    if let Some(seed) = seed() {
+        perturb(seed, p);
+    }
+}
+
+#[cold]
+fn perturb(seed: u64, p: ChaosPoint) {
+    let (salt, n) = THREAD_STATE.with(|st| {
+        let (mut salt, n) = st.get();
+        if salt == 0 {
+            salt = NEXT_SALT.fetch_add(1, Ordering::Relaxed);
+        }
+        st.set((salt, n.wrapping_add(1)));
+        (salt, n)
+    });
+    match decide(seed, salt, p as u64, n) {
+        Action::Nothing => {}
+        Action::Yield => std::thread::yield_now(),
+        Action::Sleep(us) => std::thread::sleep(std::time::Duration::from_micros(us)),
+    }
+}
+
+#[derive(Debug, PartialEq, Eq)]
+enum Action {
+    Nothing,
+    Yield,
+    Sleep(u64),
+}
+
+/// Pure decision function: ~1/4 of events yield, ~1/32 sleep 1–40 µs,
+/// the rest do nothing (enough reordering pressure to move chunk
+/// boundaries between threads without drowning the test wall-clock).
+fn decide(seed: u64, salt: u64, point: u64, n: u64) -> Action {
+    let mut key = seed;
+    key ^= salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    key ^= (point + 1).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    key ^= n.wrapping_mul(0x94D0_49BB_1331_11EB);
+    let h = splitmix64(key);
+    match h % 32 {
+        0..=7 => Action::Yield,
+        8 => Action::Sleep(1 + (h >> 32) % 40),
+        _ => Action::Nothing,
+    }
+}
+
+/// splitmix64 finalizer — a strong 64-bit mix with cheap constants.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_parsing_accepts_decimal_and_hex() {
+        assert_eq!(parse_seed("42"), Some(42));
+        assert_eq!(parse_seed(" 42 "), Some(42));
+        assert_eq!(parse_seed("0xC0FFEE"), Some(0xC0FFEE));
+        assert_eq!(parse_seed("0Xff"), Some(0xff));
+        assert_eq!(parse_seed("nope"), None);
+        assert_eq!(parse_seed(""), None);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_seed_sensitive() {
+        for (salt, point, n) in [(1u64, 0u64, 0u64), (2, 3, 17), (9, 4, 1000)] {
+            assert_eq!(decide(7, salt, point, n), decide(7, salt, point, n));
+        }
+        // Different seeds must produce different decision sequences
+        // somewhere in a short window.
+        let differs = (0..256u64).any(|n| decide(1, 1, 0, n) != decide(2, 1, 0, n));
+        assert!(differs);
+    }
+
+    #[test]
+    fn decide_mixes_all_actions() {
+        let mut yields = 0;
+        let mut sleeps = 0;
+        let mut nothings = 0;
+        for n in 0..4096u64 {
+            match decide(0xC0FFEE, 3, 1, n) {
+                Action::Yield => yields += 1,
+                Action::Sleep(us) => {
+                    assert!((1..=40).contains(&us));
+                    sleeps += 1;
+                }
+                Action::Nothing => nothings += 1,
+            }
+        }
+        assert!(yields > 512, "yields={yields}");
+        assert!(sleeps > 32, "sleeps={sleeps}");
+        assert!(nothings > 2048, "nothings={nothings}");
+    }
+}

@@ -27,7 +27,10 @@
 //!   chunks produced on the pool, consumed on the caller in ascending
 //!   order with a bounded in-flight window, so adjacent pipeline stages
 //!   overlap instead of barrier-syncing (the streamed
-//!   prepare/recover pipeline is built on this; see `session`).
+//!   prepare/recover pipeline is built on this; see `session`),
+//! - [`chaos`] — seeded schedule perturbation (`PDGRASS_CHAOS_SEED`) at
+//!   the pool/stream decision sites, so the determinism contracts above
+//!   can be re-checked under many distinct interleavings.
 //!
 //! Every primitive keeps a serial fast path for `threads == 1` (or
 //! trivially small inputs), takes a per-call `threads` override, and
@@ -55,6 +58,7 @@
 //! back), else `std::thread::available_parallelism()`. The global pool is
 //! sized from this value at first use.
 
+pub mod chaos;
 pub mod pool;
 pub mod reduce;
 pub mod sort;
@@ -154,7 +158,11 @@ where
 /// `*mut T` field directly (which is neither Send nor Sync), so access goes
 /// through the [`SendPtr::write`] method which captures `&SendPtr`.
 pub(crate) struct SendPtr<T>(pub *mut T);
+// SAFETY: the pointer is only dereferenced through the unsafe methods
+// below, whose contracts require in-bounds, non-aliasing access.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: shared references only hand out raw offsets via the unsafe
+// methods; disjointness across threads is the callers' obligation.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {

@@ -48,6 +48,7 @@
 //! queued task whose scope already drained observes `next >= n` and
 //! exits without ever dereferencing the closure pointer.
 
+use super::chaos::{chaos_point, ChaosPoint};
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -82,6 +83,8 @@ struct Scope {
 // SAFETY: `func` is only dereferenced under the `pending > 0` liveness
 // protocol documented on the module; all other fields are Sync.
 unsafe impl Send for Scope {}
+// SAFETY: shared access follows the same liveness protocol — `func` is
+// read-only after construction and only dereferenced by live claims.
 unsafe impl Sync for Scope {}
 
 impl Scope {
@@ -89,6 +92,7 @@ impl Scope {
     /// the scope's creator.
     fn run(&self) {
         loop {
+            chaos_point(ChaosPoint::PoolClaim);
             let start = self.next.fetch_add(self.grain, Ordering::Relaxed);
             if start >= self.n {
                 break;
@@ -145,6 +149,7 @@ impl Shared {
         if let Some(t) = self.injector.lock().unwrap().pop_front() {
             return Some(t);
         }
+        chaos_point(ChaosPoint::PoolSteal);
         let k = self.slots.len();
         for d in 1..k {
             if let Some(t) = self.slots[(idx + d) % k].lock().unwrap().pop_back() {
@@ -174,6 +179,7 @@ fn worker_loop(shared: Arc<Shared>, idx: usize) {
             task.run();
             continue;
         }
+        chaos_point(ChaosPoint::PoolPark);
         let guard = shared.sleep_lock.lock().unwrap();
         if shared.has_work() {
             continue;

@@ -32,9 +32,27 @@ use std::cmp::Ordering;
 use std::mem::MaybeUninit;
 use std::ptr;
 use std::sync::atomic::{AtomicBool, Ordering as AtOrd};
+use std::sync::OnceLock;
 
 /// Below this many elements a slice is sorted or merged serially.
 const SEQ_CUTOFF: usize = 4096;
+
+/// The live serial cutoff: [`SEQ_CUTOFF`] unless `PDGRASS_SORT_CUTOFF`
+/// overrides it (read once, values below 2 ignored). Sanitizer CI
+/// shrinks it so Miri/TSan exercise the parallel merge paths at tiny
+/// inputs. Output is unaffected: the sort produces the stable order of
+/// the comparator whatever the cutoff, so the override is observable
+/// only in timing.
+fn seq_cutoff() -> usize {
+    static CUTOFF: OnceLock<usize> = OnceLock::new();
+    *CUTOFF.get_or_init(|| {
+        std::env::var("PDGRASS_SORT_CUTOFF")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&c| c >= 2)
+            .unwrap_or(SEQ_CUTOFF)
+    })
+}
 
 /// Parallel stable sort by a key-extraction function.
 ///
@@ -94,7 +112,7 @@ where
     // ZSTs: sorting is a permutation of identical values; run std's sort
     // for the comparator side effects (raw-pointer distance math below
     // is not defined for zero-sized T).
-    if threads == 1 || n < SEQ_CUTOFF || std::mem::size_of::<T>() == 0 {
+    if threads == 1 || n < seq_cutoff() || std::mem::size_of::<T>() == 0 {
         v.sort_by(cmp);
         return;
     }
@@ -128,7 +146,11 @@ impl<T> Clone for Raw<T> {
     }
 }
 impl<T> Copy for Raw<T> {}
+// SAFETY: a raw pointer to `T: Send` values may cross threads; the fork
+// closures only touch disjoint sub-ranges (see the merge contracts).
 unsafe impl<T: Send> Send for Raw<T> {}
+// SAFETY: shared `Raw`s only hand out the pointer via `p()`; disjoint
+// access across the fork is each call site's documented obligation.
 unsafe impl<T: Send> Sync for Raw<T> {}
 
 impl<T> Raw<T> {
@@ -142,12 +164,16 @@ impl<T> Raw<T> {
 ///
 /// Liveness contract: on return **and on unwind**, all `n` elements are
 /// live in `v` and `scratch` holds none.
+///
+/// # Safety
+/// `v` and `scratch` must each be valid for `n` elements, must not
+/// overlap, and `scratch` must hold no live elements on entry.
 unsafe fn sort_inplace<T, F>(v: *mut T, n: usize, scratch: *mut T, depth: usize, cmp: &F)
 where
     T: Send,
     F: Fn(&T, &T) -> Ordering + Sync,
 {
-    if depth == 0 || n < SEQ_CUTOFF {
+    if depth == 0 || n < seq_cutoff() {
         // std's sort is stable and panic-safe (slice stays a permutation).
         std::slice::from_raw_parts_mut(v, n).sort_by(cmp);
         return;
@@ -169,6 +195,10 @@ where
     }
     impl<T> Drop for Unmove<T> {
         fn drop(&mut self) {
+            // SAFETY: a set `moved` flag means that half is fully live in
+            // its scratch range (per `sort_move`'s contract) and `v`'s
+            // matching range is stale, so the copy restores exactly-once
+            // liveness; the flag pointers outlive the guard (same frame).
             unsafe {
                 if (*self.moved_l).load(AtOrd::Acquire) {
                     ptr::copy_nonoverlapping(self.scratch, self.v, self.mid);
@@ -189,7 +219,10 @@ where
         let (vr, sr) = (Raw(v.add(mid)), Raw(scratch.add(mid)));
         let (ml, mr) = (&moved_l, &moved_r);
         ThreadPool::global().join(
+            // SAFETY: left half — `v[..mid]` / `scratch[..mid]` are valid,
+            // disjoint from the right half's ranges, and live-in-`v`.
             move || unsafe { sort_move(vl.p(), mid, sl.p(), depth - 1, cmp, ml) },
+            // SAFETY: right half — same contract over `[mid..n]`.
             move || unsafe { sort_move(vr.p(), n - mid, sr.p(), depth - 1, cmp, mr) },
         );
     }
@@ -208,6 +241,11 @@ where
 /// otherwise fully live in `src`. The flag flips exactly at the point
 /// where liveness transitions (no panic is possible between the store
 /// and the guarded region that upholds the `dst` side).
+///
+/// # Safety
+/// `src` and `dst` must each be valid for `n` elements and must not
+/// overlap; `src` is fully live and `dst` holds no live elements on
+/// entry.
 unsafe fn sort_move<T, F>(
     src: *mut T,
     n: usize,
@@ -219,7 +257,7 @@ unsafe fn sort_move<T, F>(
     T: Send,
     F: Fn(&T, &T) -> Ordering + Sync,
 {
-    if depth == 0 || n < SEQ_CUTOFF {
+    if depth == 0 || n < seq_cutoff() {
         // Panic here leaves src live (std sort is in-place) with the
         // flag still unset — contract holds.
         std::slice::from_raw_parts_mut(src, n).sort_by(cmp);
@@ -235,7 +273,10 @@ unsafe fn sort_move<T, F>(
         // workspace), so on unwind out of this join both halves are
         // live in src and the flag is correctly still unset.
         ThreadPool::global().join(
+            // SAFETY: left half of src sorts in place using the left half
+            // of dst as workspace — valid, disjoint, live-in-src.
             move || unsafe { sort_inplace(sl.p(), mid, dl.p(), depth - 1, cmp) },
+            // SAFETY: right half — same contract over `[mid..n]`.
             move || unsafe { sort_inplace(sr.p(), n - mid, dr.p(), depth - 1, cmp) },
         );
     }
@@ -252,6 +293,11 @@ unsafe fn sort_move<T, F>(
 ///
 /// Liveness contract: entry — `a`, `b` live, `dst` uninitialized; on
 /// success **and on unwind** `dst` is fully live and the runs are stale.
+///
+/// # Safety
+/// `a`, `b`, and `dst` must be valid for `an`, `bn`, and `an + bn`
+/// elements respectively, pairwise non-overlapping, with `a`/`b` fully
+/// live and `dst` holding no live elements on entry.
 unsafe fn par_merge<T, F>(
     a: *mut T,
     an: usize,
@@ -264,7 +310,7 @@ unsafe fn par_merge<T, F>(
     T: Send,
     F: Fn(&T, &T) -> Ordering + Sync,
 {
-    if depth == 0 || an + bn < SEQ_CUTOFF || an == 0 || bn == 0 {
+    if depth == 0 || an + bn < seq_cutoff() || an == 0 || bn == 0 {
         serial_merge(a, an, b, bn, dst, cmp);
         return;
     }
@@ -279,6 +325,9 @@ unsafe fn par_merge<T, F>(
     }
     impl<T> Drop for AllIn<T> {
         fn drop(&mut self) {
+            // SAFETY: the guard is armed only while both runs are still
+            // fully live and `dst` is untouched (the splitter search
+            // consumes nothing), so a wholesale move is exactly-once.
             unsafe {
                 ptr::copy_nonoverlapping(self.a, self.dst, self.an);
                 ptr::copy_nonoverlapping(self.b, self.dst.add(self.an), self.bn);
@@ -317,6 +366,10 @@ unsafe fn par_merge<T, F>(
     }
     impl<T> Drop for FillSkipped<T> {
         fn drop(&mut self) {
+            // SAFETY: a clear `entered` flag means that side's sub-merge
+            // never started, so its (a, b) parts are still live and its
+            // dst part unwritten; the flag pointers outlive the guard
+            // (same frame), and each side's ranges are disjoint.
             unsafe {
                 if !(*self.entered_l).load(AtOrd::Acquire) {
                     ptr::copy_nonoverlapping(self.a, self.dst, self.ha);
@@ -355,10 +408,14 @@ unsafe fn par_merge<T, F>(
         ThreadPool::global().join(
             move || {
                 el.store(true, AtOrd::Release);
+                // SAFETY: left sub-merge over `(a[..ha], b[..hb],
+                // dst[..ha+hb])` — valid, live, disjoint from the right's.
                 unsafe { par_merge(pa.p(), ha, pb.p(), hb, pd.p(), depth - 1, cmp) }
             },
             move || {
                 er.store(true, AtOrd::Release);
+                // SAFETY: right sub-merge over the complementary ranges —
+                // same contract, disjoint from the left's.
                 unsafe {
                     par_merge(
                         pa.p().add(ha),
@@ -381,6 +438,10 @@ unsafe fn par_merge<T, F>(
 /// remains unconsumed (on completion of the loop *or* on a comparator
 /// panic) is copied into the unwritten remainder of `dst`, so `dst` ends
 /// fully live on every exit path.
+///
+/// # Safety
+/// Same contract as [`par_merge`]: valid, pairwise non-overlapping
+/// ranges with `a`/`b` live and `dst` uninitialized on entry.
 unsafe fn serial_merge<T, F>(a: *mut T, an: usize, b: *mut T, bn: usize, dst: *mut T, cmp: &F)
 where
     F: Fn(&T, &T) -> Ordering,
@@ -394,6 +455,9 @@ where
     }
     impl<T> Drop for Tail<T> {
         fn drop(&mut self) {
+            // SAFETY: the cursors always bound the unconsumed (still
+            // live) tails of each run and the unwritten suffix of `dst`,
+            // so moving the remainders completes `dst` exactly once.
             unsafe {
                 let ra = self.a_end.offset_from(self.a) as usize;
                 ptr::copy_nonoverlapping(self.a, self.dst, ra);
@@ -590,6 +654,9 @@ where
 }
 
 /// Count of elements in sorted `run[0..len]` strictly less than `pivot`.
+///
+/// # Safety
+/// `run` must be valid for `len` live elements.
 unsafe fn lower_bound<T, F>(run: *const T, len: usize, pivot: &T, cmp: &F) -> usize
 where
     F: Fn(&T, &T) -> Ordering,
@@ -608,6 +675,9 @@ where
 
 /// Count of elements in sorted `run[0..len]` less than or equal to
 /// `pivot` (i.e. comparing not-`Greater`).
+///
+/// # Safety
+/// `run` must be valid for `len` live elements.
 unsafe fn upper_bound<T, F>(run: *const T, len: usize, pivot: &T, cmp: &F) -> usize
 where
     F: Fn(&T, &T) -> Ordering,

@@ -44,6 +44,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
+use super::chaos::{chaos_point, ChaosPoint};
 use super::ThreadPool;
 
 /// Shared state of one stream; lives on the [`produce_stream`] frame.
@@ -103,6 +104,7 @@ impl<T> Stream<T> {
     {
         let n = self.slots.len();
         loop {
+            chaos_point(ChaosPoint::StreamClaim);
             if self.failed.load(Ordering::Acquire) {
                 return;
             }
@@ -139,6 +141,7 @@ impl<T> Stream<T> {
     {
         let n = self.slots.len();
         loop {
+            chaos_point(ChaosPoint::StreamAwait);
             if let Some(v) = self.slots[i].lock().unwrap().take() {
                 return Some(v);
             }

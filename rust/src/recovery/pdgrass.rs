@@ -218,7 +218,7 @@ fn run_pass(
     params: &Params,
     stats: &mut Stats,
 ) -> Vec<SubtaskOutcome> {
-    let total_off: usize = active.iter().map(|s| s.len()).sum();
+    let total_off: usize = active.iter().map(|s| s.len()).sum::<usize>();
     match params.strategy {
         Strategy::Serial => active
             .iter()
@@ -316,7 +316,7 @@ fn run_pass_streamed<S>(
 ) where
     S: FnMut(&Subtask, SubtaskOutcome) + Send,
 {
-    let total_off: usize = active.iter().map(|s| s.len()).sum();
+    let total_off: usize = active.iter().map(|s| s.len()).sum::<usize>();
     match params.strategy {
         Strategy::Serial => {
             for st in active {

@@ -1,0 +1,24 @@
+// Fixture: an allowlisted atomic ordering (see fixtures.allow), an
+// aliased import, and `cmp::Ordering` variants that must not match.
+// Expected: no violations.
+
+use std::cmp::Ordering as CmpOrd;
+use std::sync::atomic::{AtomicU64, Ordering as AtOrd};
+
+pub static HITS: AtomicU64 = AtomicU64::new(0);
+
+pub struct Counter;
+
+impl Counter {
+    pub fn bump(&self) {
+        HITS.fetch_add(1, AtOrd::Relaxed);
+    }
+}
+
+pub fn compare(a: u32, b: u32) -> CmpOrd {
+    if a == b {
+        CmpOrd::Equal
+    } else {
+        a.cmp(&b)
+    }
+}

@@ -1,0 +1,14 @@
+// Fixture: an atomic ordering with no allowlist entry.
+// Expected: 1 x atomic-allowlist (SeqCst in Counter::bump).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub static HITS: AtomicU64 = AtomicU64::new(0);
+
+pub struct Counter;
+
+impl Counter {
+    pub fn bump(&self) {
+        HITS.fetch_add(1, Ordering::SeqCst);
+    }
+}

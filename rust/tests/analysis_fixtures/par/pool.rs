@@ -1,0 +1,10 @@
+// Fixture: the one file allowed to create threads (matches the real
+// tree's `par/pool.rs` exemption). Expected: no violations.
+
+pub fn recruit() {
+    let h = std::thread::Builder::new()
+        .name("pdgrass-worker".into())
+        .spawn(|| {})
+        .unwrap();
+    h.join().unwrap();
+}

@@ -1,0 +1,31 @@
+// Fixture: the deterministic counterparts — integer turbofish sums,
+// an acknowledged fold, Fx collections, and test-only std collections.
+// Expected: no violations.
+
+pub fn count(xs: &[f64]) -> usize {
+    xs.iter().map(|_| 1usize).sum::<usize>()
+}
+
+pub fn total(xs: &[f64]) -> f64 {
+    // audit-ok: fixed-order fold over a slice is deterministic.
+    xs.iter().fold(0.0, |a, b| a + b)
+}
+
+pub struct Index {
+    by_id: crate::util::FxHashMap<u32, usize>,
+}
+
+impl Index {
+    pub fn lookup(&self, id: u32) -> Option<usize> {
+        self.by_id.get(&id).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_use_std_collections() {
+        let mut seen = std::collections::HashSet::new();
+        assert!(seen.insert(1u32));
+    }
+}

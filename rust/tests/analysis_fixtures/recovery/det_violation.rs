@@ -1,0 +1,16 @@
+// Fixture: determinism hazards inside a scoped module (`recovery/`).
+// Expected: det-collections (HashMap), det-timing (Instant::now),
+// 2 x det-float-fold (untyped .sum(), float .fold).
+
+use std::collections::HashMap;
+
+pub fn total(xs: &[f64]) -> f64 {
+    let t = std::time::Instant::now();
+    let mut m: HashMap<u32, f64> = HashMap::new();
+    for (i, x) in xs.iter().enumerate() {
+        m.insert(i as u32, *x);
+    }
+    let bad: f64 = m.values().sum();
+    let worse = xs.iter().fold(0.0, |a, b| a + b);
+    bad + worse + t.elapsed().as_secs_f64()
+}

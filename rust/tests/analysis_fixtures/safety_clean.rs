@@ -1,0 +1,23 @@
+// Fixture: the same shapes as safety_violation.rs, each documented in
+// one of the accepted styles. Expected: no violations.
+
+pub struct W(*mut u8);
+
+// SAFETY: W's pointer is only dereferenced by its owner.
+unsafe impl Send for W {}
+
+/// Reads the byte behind `p`.
+///
+/// # Safety
+/// `p` must be valid for reads.
+#[inline]
+pub unsafe fn raw(p: *const u8) -> u8 {
+    *p
+}
+
+pub fn caller(w: &W) -> u8 {
+    // SAFETY: the constructor guarantees a live allocation.
+    let a = unsafe { *w.0 };
+    let b = unsafe { *w.0 }; // SAFETY: same-line form.
+    a.wrapping_add(b)
+}

@@ -1,0 +1,14 @@
+// Fixture: every `unsafe` flavor without its SAFETY justification.
+// Expected: 3 x safety-comment (block, impl, fn).
+
+pub struct W(*mut u8);
+
+unsafe impl Send for W {}
+
+pub unsafe fn raw(p: *const u8) -> u8 {
+    *p
+}
+
+pub fn caller(w: &W) -> u8 {
+    unsafe { *w.0 }
+}

@@ -1,0 +1,19 @@
+// Fixture: thread APIs that are fine anywhere, plus raw spawning
+// confined to a `#[cfg(test)]` region. Expected: no violations.
+
+pub fn fine() -> usize {
+    std::thread::yield_now();
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_spawn() {
+        let h = std::thread::spawn(|| 1u32);
+        assert_eq!(h.join().unwrap(), 1);
+        std::thread::scope(|s| {
+            s.spawn(|| 2u32);
+        });
+    }
+}

@@ -1,0 +1,12 @@
+// Fixture: raw thread creation outside par/pool.rs.
+// Expected: 3 x thread-outside-pool (spawn, scope, Builder).
+
+pub fn bad() {
+    let h = std::thread::spawn(|| 1u32);
+    h.join().unwrap();
+    std::thread::scope(|s| {
+        s.spawn(|| 2u32);
+    });
+    let b = std::thread::Builder::new();
+    drop(b);
+}

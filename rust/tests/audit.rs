@@ -1,0 +1,202 @@
+//! Tests for the `pdgrass audit` static-analysis pass: every rule
+//! against its seeded violation/clean fixture pair
+//! (`rust/tests/analysis_fixtures/`), plus the self-audit — the real
+//! source tree must come back clean with zero stale allowlist entries.
+
+use pdgrass::analysis::{audit_sources, run_audit, Allowlist, AuditConfig};
+use std::path::{Path, PathBuf};
+
+fn repo() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixtures() -> PathBuf {
+    repo().join("rust/tests/analysis_fixtures")
+}
+
+/// Load one fixture as the `(relative path, contents)` pair
+/// `audit_sources` expects.
+fn fx(rel: &str) -> (String, String) {
+    let text = std::fs::read_to_string(fixtures().join(rel))
+        .unwrap_or_else(|e| panic!("fixture {rel}: {e}"));
+    (rel.to_string(), text)
+}
+
+fn fixture_allow() -> Allowlist {
+    Allowlist::load(&fixtures().join("fixtures.allow")).unwrap()
+}
+
+/// Audit the named fixtures under the repo's default config and return
+/// the violation rule ids, sorted.
+fn scan(rels: &[&str]) -> Vec<&'static str> {
+    let sources: Vec<_> = rels.iter().map(|r| fx(r)).collect();
+    let allow = fixture_allow();
+    let report = audit_sources(&sources, &allow, &AuditConfig::default());
+    let mut rules: Vec<&'static str> = report.violations.iter().map(|v| v.rule).collect();
+    rules.sort_unstable();
+    rules
+}
+
+#[test]
+fn safety_rule_flags_violation_fixture_and_passes_clean() {
+    assert_eq!(scan(&["safety_violation.rs"]), vec!["safety-comment"; 3]);
+    assert_eq!(scan(&["safety_clean.rs"]), Vec::<&str>::new());
+}
+
+#[test]
+fn thread_rule_flags_violation_fixture_and_honors_exemptions() {
+    assert_eq!(scan(&["thread_violation.rs"]), vec!["thread-outside-pool"; 3]);
+    assert_eq!(scan(&["thread_clean.rs"]), Vec::<&str>::new());
+    // Same spawn shapes are fine in the exempt file.
+    assert_eq!(scan(&["par/pool.rs"]), Vec::<&str>::new());
+}
+
+#[test]
+fn atomic_rule_requires_an_allowlist_entry() {
+    assert_eq!(scan(&["atomics_violation.rs"]), vec!["atomic-allowlist"]);
+    assert_eq!(scan(&["atomics_clean.rs"]), Vec::<&str>::new());
+    // The violation message carries the copy-pasteable allowlist line.
+    let report =
+        audit_sources(&[fx("atomics_violation.rs")], &fixture_allow(), &AuditConfig::default());
+    let msg = &report.violations[0].msg;
+    assert!(msg.contains("atomics_violation.rs | Counter::bump | SeqCst"), "{msg}");
+}
+
+#[test]
+fn det_rules_flag_violation_fixture_and_pass_clean() {
+    assert_eq!(
+        scan(&["recovery/det_violation.rs"]),
+        vec![
+            "det-collections",
+            "det-collections",
+            "det-collections",
+            "det-float-fold",
+            "det-float-fold",
+            "det-timing",
+        ]
+    );
+    assert_eq!(scan(&["recovery/det_clean.rs"]), Vec::<&str>::new());
+}
+
+#[test]
+fn whole_fixture_tree_tallies_every_rule() {
+    let report =
+        run_audit(&fixtures(), &fixtures().join("fixtures.allow")).unwrap();
+    assert!(!report.ok());
+    let count = |rule: &str| report.violations.iter().filter(|v| v.rule == rule).count();
+    assert_eq!(count("safety-comment"), 3, "{}", report.render());
+    assert_eq!(count("thread-outside-pool"), 3, "{}", report.render());
+    assert_eq!(count("atomic-allowlist"), 1, "{}", report.render());
+    assert_eq!(count("det-collections"), 3, "{}", report.render());
+    assert_eq!(count("det-timing"), 1, "{}", report.render());
+    assert_eq!(count("det-float-fold"), 2, "{}", report.render());
+    assert_eq!(report.violations.len(), 13, "{}", report.render());
+}
+
+#[test]
+fn unused_allowlist_entries_warn_without_failing() {
+    // Audit only the violation fixture: the clean fixture's entry goes
+    // unused — reported as a warning, not a violation.
+    let report =
+        audit_sources(&[fx("thread_violation.rs")], &fixture_allow(), &AuditConfig::default());
+    assert_eq!(report.unused_allow.len(), 1, "{}", report.render());
+    assert!(report.render().contains("unused allowlist entry"), "{}", report.render());
+}
+
+#[test]
+fn self_audit_source_tree_is_clean() {
+    let report = run_audit(
+        &repo().join("rust/src"),
+        &repo().join("rust/analysis/atomics.allow"),
+    )
+    .unwrap();
+    assert!(report.ok(), "self-audit failed:\n{}", report.render());
+    assert!(
+        report.unused_allow.is_empty(),
+        "stale allowlist entries:\n{}",
+        report.render()
+    );
+    // Sanity: the scan actually covered the tree.
+    assert!(report.files > 30, "only {} files scanned", report.files);
+    assert!(report.allow_entries > 20);
+}
+
+fn cli(args: &[&str]) -> anyhow::Result<()> {
+    pdgrass::cli::run(&args.iter().map(|a| a.to_string()).collect::<Vec<_>>())
+}
+
+#[test]
+fn cli_audit_fails_on_the_fixture_tree() {
+    let root = fixtures();
+    let allow = fixtures().join("fixtures.allow");
+    let err = cli(&[
+        "audit",
+        "--root",
+        root.to_str().unwrap(),
+        "--allowlist",
+        allow.to_str().unwrap(),
+    ])
+    .unwrap_err();
+    assert!(err.to_string().contains("violation"), "{err}");
+}
+
+#[test]
+fn cli_audit_passes_on_the_repo_tree() {
+    let root = repo().join("rust/src");
+    let allow = repo().join("rust/analysis/atomics.allow");
+    cli(&[
+        "audit",
+        "--root",
+        root.to_str().unwrap(),
+        "--allowlist",
+        allow.to_str().unwrap(),
+    ])
+    .unwrap();
+}
+
+#[test]
+fn cli_audit_reports_missing_allowlist_cleanly() {
+    let err = cli(&["audit", "--allowlist", "no/such/file.allow", "--root", "rust/src"])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no/such/file.allow") || err.contains("cannot"), "{err}");
+}
+
+#[test]
+fn audit_config_file_round_trips() {
+    // `[audit]` keys resolve through the same Doc parser as `[run]`.
+    let dir = std::env::temp_dir().join(format!("pdgrass-audit-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("audit.toml");
+    let root = fixtures();
+    let allow = fixtures().join("fixtures.allow");
+    std::fs::write(
+        &cfg,
+        format!(
+            "[audit]\nroot = \"{}\"\nallowlist = \"{}\"\n",
+            root.display(),
+            allow.display()
+        ),
+    )
+    .unwrap();
+    let err = cli(&["audit", "--config", cfg.to_str().unwrap()]).unwrap_err();
+    assert!(err.to_string().contains("violation"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn allowlist_rejects_malformed_lines() {
+    assert!(Allowlist::parse("only | three | fields\n", "t").is_err());
+    assert!(Allowlist::parse("a.rs | f | NotAnOrdering | why\n", "t").is_err());
+    assert!(Allowlist::parse(
+        "a.rs | f | Relaxed | once\na.rs | f | Relaxed | twice\n",
+        "t"
+    )
+    .is_err());
+}
+
+#[test]
+fn missing_audit_root_is_a_clean_error() {
+    let missing = Path::new("definitely/not/a/dir");
+    assert!(run_audit(missing, &repo().join("rust/analysis/atomics.allow")).is_err());
+}

@@ -1,0 +1,105 @@
+//! Schedule-chaos equivalence: the bitwise-determinism claims must
+//! survive adversarial scheduling. `par::chaos` injects seeded
+//! yield/sleep noise at the pool's claim/steal/park sites and the
+//! stream's claim/await sites; this suite re-runs the equivalence
+//! checks under several distinct chaos seeds and requires outputs
+//! identical to a chaos-free baseline, bit for bit.
+//!
+//! Everything lives in ONE `#[test]`: the chaos override is
+//! process-global (`chaos::set_seed`), and libtest runs tests in the same
+//! binary concurrently — two tests flipping the override would race.
+//! A failure message names the seed; replay it standalone with
+//! `PDGRASS_CHAOS_SEED=<seed> cargo test --test session`.
+
+use pdgrass::graph::Graph;
+use pdgrass::par::chaos;
+use pdgrass::recovery::Strategy;
+use pdgrass::{Pipeline, RecoverOpts, Sparsify};
+
+/// Everything the determinism claim covers, folded into one string:
+/// prepared state (score bits), recovered edges, pass count, stats,
+/// and PCG history bits.
+fn fingerprint(g: &Graph, threads: usize, pipeline: Pipeline) -> String {
+    let sess = Sparsify::graph(g.clone()).threads(threads).pipeline(pipeline);
+    let prepared =
+        if pipeline == Pipeline::Streamed { sess.prepare_streamed() } else { sess.prepare() }
+            .unwrap();
+    let mut s = String::new();
+    for e in prepared.off_tree() {
+        s.push_str(&format!(
+            "{}:{:x}:{:x};",
+            e.eid,
+            e.score.to_bits(),
+            e.resistance.to_bits()
+        ));
+    }
+    let opts = RecoverOpts {
+        strategy: Strategy::Sharded,
+        cutoff_edges: 200,
+        shard_min: 64,
+        block: 4,
+        pipeline,
+        ..RecoverOpts::with_threads(0.10, threads)
+    };
+    let r = prepared.recover(&opts).unwrap();
+    s.push_str(&format!("|edges={:?}|passes={}|stats={:?}", r.edges(), r.passes(), r.stats()));
+    let pcg = r.sparsifier().pcg(42, 1e-3, 20_000).unwrap();
+    s.push_str(&format!("|iters={}|conv={}", pcg.iterations, pcg.converged));
+    for h in &pcg.history {
+        s.push_str(&format!("{:x};", h.to_bits()));
+    }
+    s
+}
+
+fn chaos_graphs() -> Vec<(&'static str, Graph)> {
+    let community = pdgrass::gen::community(
+        pdgrass::gen::CommunityParams {
+            n: 600,
+            mean_size: 10.0,
+            tail: 1.7,
+            intra_p: 0.5,
+            bridges: 2,
+            max_size: 60,
+        },
+        &mut pdgrass::util::Rng::new(23),
+    );
+    let hub = pdgrass::gen::hub_graph(1500, 1, 1200, &mut pdgrass::util::Rng::new(7));
+    vec![("community", community), ("hub-star", hub)]
+}
+
+#[test]
+fn outputs_are_bitwise_stable_under_chaotic_schedules() {
+    let graphs = chaos_graphs();
+    let cases: Vec<(usize, Pipeline)> = vec![
+        (2, Pipeline::Barrier),
+        (2, Pipeline::Streamed),
+        (8, Pipeline::Barrier),
+        (8, Pipeline::Streamed),
+    ];
+
+    // Chaos-free baseline (overrides any ambient PDGRASS_CHAOS_SEED,
+    // so the baseline is a real baseline even in a chaos CI job).
+    chaos::set_seed(None);
+    let mut baseline = Vec::new();
+    for (label, g) in &graphs {
+        for &(threads, pipeline) in &cases {
+            baseline.push((label, threads, pipeline, fingerprint(g, threads, pipeline)));
+        }
+    }
+
+    for seed in [7u64, 0xC0FFEE, 1234] {
+        chaos::set_seed(Some(seed));
+        assert_eq!(chaos::seed(), Some(seed));
+        for (label, threads, pipeline, expect) in &baseline {
+            let g = &graphs.iter().find(|(l, _)| l == *label).unwrap().1;
+            let got = fingerprint(g, *threads, *pipeline);
+            assert_eq!(
+                &got, expect,
+                "output diverged under chaos — replay with \
+                 PDGRASS_CHAOS_SEED={seed} (graph={label}, threads={threads}, \
+                 pipeline={pipeline:?})"
+            );
+        }
+    }
+    chaos::set_seed(None);
+}

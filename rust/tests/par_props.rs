@@ -19,12 +19,30 @@ use pdgrass::util::proptest::{check, Config};
 use pdgrass::util::Rng;
 use std::ops::Range;
 
+/// Scale an input-size bound by `PDGRASS_TEST_SCALE` (a float in
+/// `(0, 1]`). The nightly Miri and ThreadSanitizer jobs set this to
+/// shrink the property suite to interpreter/instrumentation-feasible
+/// sizes — the invariants themselves are size-independent. Combine with
+/// `PDGRASS_SORT_CUTOFF` so the parallel sort paths still fork at the
+/// reduced sizes.
+fn scaled(n: usize) -> usize {
+    static SCALE: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    let f = *SCALE.get_or_init(|| {
+        std::env::var("PDGRASS_TEST_SCALE")
+            .ok()
+            .and_then(|s| s.trim().parse::<f64>().ok())
+            .filter(|f| *f > 0.0 && *f <= 1.0)
+            .unwrap_or(1.0)
+    });
+    ((n as f64 * f) as usize).max(8)
+}
+
 /// (a) `par_reduce`-backed dot/norm2: deterministic across runs and
 /// thread counts at fixed length, and ≤ 1e-12 relative error vs serial.
 #[test]
 fn prop_reduce_deterministic_and_close_to_serial() {
     check(Config { cases: 48, base_seed: 0xD07 }, "reduce_determinism", |rng| {
-        let n = rng.below(40_000);
+        let n = rng.below(scaled(40_000));
         let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let serial = dot(&a, &b);
@@ -57,7 +75,7 @@ fn prop_reduce_deterministic_and_close_to_serial() {
 #[test]
 fn prop_par_reduce_shape_depends_only_on_n_and_grain() {
     check(Config { cases: 48, base_seed: 0x9EED }, "reduce_shape", |rng| {
-        let n = rng.below(20_000);
+        let n = rng.below(scaled(20_000));
         let grain = 1 + rng.below(5000);
         let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let sum = |r: Range<usize>| {
@@ -92,7 +110,7 @@ struct Opaque {
 #[test]
 fn prop_sort_matches_std_on_random_nonclone_input() {
     check(Config { cases: 32, base_seed: 0x50BB }, "sort_random", |rng| {
-        let n = rng.below(30_000);
+        let n = rng.below(scaled(30_000));
         let threads = 1 + rng.below(8);
         let keyspace = 1 + rng.below(200) as i64;
         let keys: Vec<i64> =
@@ -121,7 +139,7 @@ fn prop_sort_matches_std_on_random_nonclone_input() {
 #[test]
 fn prop_sort_adversarial_shapes() {
     check(Config { cases: 12, base_seed: 0xADE2 }, "sort_adversarial", |rng| {
-        let n = 4096 * (1 + rng.below(3)) + rng.below(97);
+        let n = scaled(4096) * (1 + rng.below(3)) + rng.below(97);
         let threads = 2 + rng.below(7);
         let shapes: Vec<Vec<i64>> = vec![
             (0..n as i64).collect(),
@@ -157,7 +175,7 @@ fn prop_sort_adversarial_shapes() {
 fn prop_sort_by_key_matches_std_with_cached_keys() {
     use std::sync::atomic::{AtomicUsize, Ordering};
     check(Config { cases: 24, base_seed: 0x4EE5 }, "sort_by_key", |rng| {
-        let n = rng.below(20_000);
+        let n = rng.below(scaled(20_000));
         let threads = 1 + rng.below(8);
         let mut v: Vec<u64> = (0..n).map(|_| rng.next_u64() % 1000).collect();
         let mut expect = v.clone();
