@@ -4,7 +4,8 @@
 //!
 //! Measures, with min-of-N timing: LCA queries, resistance annotation,
 //! β-hop neighborhood BFS, tag-store probes, CSR vs XLA SpMV, LDLᵀ
-//! factor+solve, and the recovery phases. These numbers drive the
+//! factor+solve, the serial vs level-scheduled triangular solve, and
+//! the recovery phases. These numbers drive the
 //! before/after comparisons recorded in CHANGES.md.
 
 use pdgrass::graph::grounded_laplacian;
@@ -424,6 +425,64 @@ fn bench_giant_subtask() {
     );
 }
 
+/// Serial vs level-scheduled triangular solve, on a grid-sparsifier
+/// factor (the PCG preconditioner workload). Wall clock on this 1-core
+/// container is informational; the structural assertion replays the
+/// factor's own makespan model: at 1 thread the levelled schedule costs
+/// exactly the serial sweep, and at 8 threads the level sets must
+/// shorten the critical path. Bitwise equality of the two solves is
+/// asserted on every run.
+fn bench_trisolve() {
+    let g = pdgrass::gen::grid(200, 200, 0.4, &mut Rng::new(17));
+    let sp = build_spanning(&g);
+    let r = recovery::pdgrass(&g, &sp, &Params::new(0.05, 4));
+    let p = recovery::sparsifier(&g, &sp, &r.edges);
+    let lp = grounded_laplacian(&p, 0);
+    let perm = pdgrass::solver::rcm(&lp);
+    let lpp = pdgrass::solver::permute_sym(&lp, &perm);
+    let f = LdlFactor::factor(&lpp).unwrap();
+    let mut rng = Rng::new(18);
+    let b: Vec<f64> = (0..lpp.n).map(|_| rng.normal()).collect();
+    let mut z = b.clone();
+    let (_, ms_serial) = min_of(10, || {
+        z.copy_from_slice(&b);
+        f.solve(&mut z);
+    });
+    report("trisolve_serial", 10, ms_serial, f.nnz_l() as u64, "nnz");
+    let serial = z.clone();
+    let (_, ms_par) = min_of(10, || {
+        z.copy_from_slice(&b);
+        f.solve_par(&mut z, 8);
+    });
+    report("trisolve_levelled(8t)", 10, ms_par, f.nnz_l() as u64, "nnz");
+    for (i, (got, want)) in z.iter().zip(&serial).enumerate() {
+        assert_eq!(got.to_bits(), want.to_bits(), "levelled solve diverged at row {i}");
+    }
+    let sched = f.schedule();
+    println!(
+        "{:<38} schedule: {} forward / {} backward levels over n={}",
+        "",
+        sched.num_forward_levels(),
+        sched.num_backward_levels(),
+        lpp.n
+    );
+    let (s1, l1) = f.solve_makespan_model(1);
+    assert_eq!(s1, l1, "levelled schedule must cost the serial sweep at 1 thread");
+    let (s8, l8) = f.solve_makespan_model(8);
+    println!(
+        "{:<38} makespan model: 1t {} units, 8t serial {} vs levelled {} ({:.2}x)",
+        "",
+        s1,
+        s8,
+        l8,
+        s8 as f64 / l8.max(1) as f64
+    );
+    assert!(
+        l8 < s8,
+        "level scheduling must shorten the critical path at 8 threads: {l8} !< {s8}"
+    );
+}
+
 fn main() {
     println!("# micro bench: prepare pipeline, barrier stage-sum vs streamed overlap");
     bench_prepare_pipeline();
@@ -437,6 +496,8 @@ fn main() {
     bench_blas1();
     println!("# micro bench: clone-based vs move-based parallel sort");
     bench_sort();
+    println!("# micro bench: serial vs level-scheduled triangular solve (PCG preconditioner)");
+    bench_trisolve();
 
     let g = pdgrass::gen::suite::build("15-M6", 0.5, 42);
     println!("# micro bench on 15-M6@0.5: |V|={} |E|={}", g.num_vertices(), g.num_edges());

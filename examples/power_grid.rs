@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let lg = grounded_laplacian(&g, 0);
-    let jacobi = Jacobi::new(&lg);
+    let jacobi = Jacobi::new(&lg)?;
 
     // --- transient loop: 20 time steps, loads drift each step ---
     let steps = 20;

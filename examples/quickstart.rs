@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(2);
     let b: Vec<f64> = (0..lg.n).map(|_| rng.normal()).collect();
     let r_tree = pcg(&lg, &b, &SparsifierPrecond::new(&p_tree)?, tol, 50_000);
-    let r_jac = pcg(&lg, &b, &Jacobi::new(&lg), tol, 50_000);
+    let r_jac = pcg(&lg, &b, &Jacobi::new(&lg)?, tol, 50_000);
     println!("\nPCG to ‖r‖ ≤ 1e-3‖b‖:");
     for (name, iters, converged) in [
         ("pdGRASS sparsifier", r_pd.iterations, r_pd.converged),

@@ -136,7 +136,9 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
             let name = cli.str("graph").unwrap_or("15-M6");
             // build the graph before the timer: report sparsification
             // time, not generator time
-            let session = Sparsify::suite(name, cfg.scale, cfg.seed)?.pipeline(run.pipeline);
+            let session = Sparsify::suite(name, cfg.scale, cfg.seed)?
+                .pipeline(run.pipeline)
+                .threads(run.resolved_threads());
             let t = Timer::start();
             let prepared = session.prepare()?;
             let r = prepared.recover(&run.recover_opts(cfg.alpha))?;
@@ -160,8 +162,10 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
         "evaluate" => {
             let (cfg, run) = pipeline_cfg(&cli)?;
             let name = cli.str("graph").unwrap_or("15-M6");
-            let prepared =
-                Sparsify::suite(name, cfg.scale, cfg.seed)?.pipeline(run.pipeline).prepare()?;
+            let prepared = Sparsify::suite(name, cfg.scale, cfg.seed)?
+                .pipeline(run.pipeline)
+                .threads(run.resolved_threads())
+                .prepare()?;
             let r = prepared.recover(&run.recover_opts(cfg.alpha))?;
             let p = r.sparsifier();
             if cli.has("xla") {
@@ -266,7 +270,7 @@ OPTIONS
   --scale S      suite scale factor (default 1.0)
   --seed N       generator/RHS seed
   --alpha A      recovery ratio (default 0.02)
-  --threads N    recovery threads (0 = auto)
+  --threads N    recovery + PCG-evaluation threads (0 = auto)
   --strategy S   serial|outer|inner|mixed|sharded (default mixed)
   --shard-min N  sharded-strategy target shard size (default 4096)
   --pipeline P   barrier|streamed stage handoff (default barrier)

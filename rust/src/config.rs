@@ -410,7 +410,7 @@ impl RunConfig {
     /// thread count). Range validation happens when the options are used
     /// against a graph ([`RecoverOpts::validate`]).
     pub fn recover_opts(&self, alpha: f64) -> RecoverOpts {
-        let threads = if self.threads == 0 { crate::par::num_threads() } else { self.threads };
+        let threads = self.resolved_threads();
         RecoverOpts {
             alpha,
             beta_cap: self.beta_cap,
@@ -418,6 +418,19 @@ impl RunConfig {
             shard_min: self.shard_min,
             pipeline: self.pipeline,
             ..RecoverOpts::with_threads(alpha, threads)
+        }
+    }
+
+    /// The run's thread count with `0` (auto) resolved to the
+    /// environment's [`crate::par::num_threads`] — the value the session
+    /// builders ([`crate::Sparsify::threads`]) and thus the PCG
+    /// evaluation path should be handed, matching what
+    /// [`RunConfig::recover_opts`] resolves for recovery.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::par::num_threads()
+        } else {
+            self.threads
         }
     }
 }

@@ -28,8 +28,13 @@
 //!   the `produce_stream` cross-stage handoff (chunks produced on the
 //!   pool, consumed in deterministic order with a bounded in-flight
 //!   window) that the streamed pipeline is built on.
-//! * [`solver`] — CSR SpMV, RCM ordering, sparse LDLᵀ, and the PCG
-//!   evaluation harness (the paper's sparsifier-quality metric).
+//! * [`solver`] — CSR SpMV, RCM ordering, sparse LDLᵀ with a
+//!   level-scheduled parallel triangular solve (the factor's dependency
+//!   DAG is bucketed into level sets at factor time; both sweeps then
+//!   dispatch whole levels across the pool, bitwise identical to the
+//!   serial solve at every thread count), and the PCG evaluation
+//!   harness (the paper's sparsifier-quality metric) — fully pooled,
+//!   including the preconditioner application.
 //! * [`session`] — **the primary API**: staged
 //!   `Sparsify → Prepared → Recovered → Sparsifier` sessions that compute
 //!   the invariant state (steps 1–3 of Algorithm 1) once and recover any

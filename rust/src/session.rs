@@ -116,12 +116,15 @@ impl Sparsify {
         self
     }
 
-    /// Thread count for the preparation. Under the barrier pipeline this
-    /// drives only step 2's criticality sort (the spanning tree and
+    /// Thread count for the preparation and for downstream PCG
+    /// evaluations ([`Sparsifier::pcg`] dispatches its iteration across
+    /// this many pool workers). Under the barrier pipeline preparation
+    /// uses it only for step 2's criticality sort (the spanning tree and
     /// resistance annotation use the environment's thread count, exactly
     /// as the pre-session pipeline did); under the streamed pipeline it
-    /// sizes every `produce_stream` stage. Prepared state is thread-count
-    /// independent either way, so this only affects timing.
+    /// sizes every `produce_stream` stage. Prepared state and PCG results
+    /// are thread-count independent either way, so this only affects
+    /// timing.
     pub fn threads(mut self, threads: usize) -> Sparsify {
         self.threads = threads.max(1);
         self
@@ -195,6 +198,7 @@ impl Sparsify {
             off,
             subtasks,
             pipeline: Pipeline::Barrier,
+            threads: self.threads,
             spanning_ms,
             prep_ms: [resistance_ms, sort_ms, subtask_ms],
         })
@@ -238,6 +242,7 @@ impl Sparsify {
             off,
             subtasks,
             pipeline: Pipeline::Streamed,
+            threads: self.threads,
             spanning_ms,
             prep_ms: [fused_ms, 0.0, subtask_ms],
         }
@@ -375,6 +380,10 @@ pub struct Prepared {
     /// identical either way; step 4's discipline is chosen per recovery
     /// via [`RecoverOpts::pipeline`]).
     pipeline: Pipeline,
+    /// Session thread count ([`Sparsify::threads`]) — carried through to
+    /// [`Sparsifier::pcg`], which dispatches the evaluation across this
+    /// many pool workers (bitwise identical results at any count).
+    threads: usize,
     spanning_ms: f64,
     /// Wall-clock of [resistance annotation, sort, subtask grouping], ms.
     /// Under the streamed pipeline the first entry is the fused
@@ -425,6 +434,12 @@ impl Prepared {
     /// The stage-handoff discipline this state was prepared under.
     pub fn pipeline(&self) -> Pipeline {
         self.pipeline
+    }
+
+    /// The session's thread count ([`Sparsify::threads`]), used by
+    /// [`Sparsifier::pcg`] evaluations from this session.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Wall-clock of the spanning-tree build, ms.
@@ -552,7 +567,11 @@ impl Sparsifier<'_> {
 
     /// The paper's quality metric: solve `L_G x = b` by PCG with this
     /// sparsifier as the preconditioner, `b` drawn deterministically from
-    /// `rhs_seed`. Non-convergence is reported in the outcome (use
+    /// `rhs_seed`. The iteration — SpMV, reductions, and the
+    /// preconditioner's level-scheduled triangular solves — runs across
+    /// the session's thread count ([`Sparsify::threads`]); results are
+    /// bitwise identical at every count, so histories and golden rows do
+    /// not depend on it. Non-convergence is reported in the outcome (use
     /// [`PcgOutcome::require_converged`] to turn it into a typed error);
     /// a factorization breakdown is [`Error::NotPositiveDefinite`].
     pub fn pcg(&self, rhs_seed: u64, tol: f64, maxit: usize) -> Result<PcgOutcome> {
@@ -565,8 +584,14 @@ impl Sparsifier<'_> {
         if maxit == 0 {
             return Err(Error::BadParam { name: "maxit", why: "must be at least 1".into() });
         }
-        let res =
-            crate::solver::pcg_eval(&self.prepared.graph, &self.sparsifier, rhs_seed, tol, maxit)?;
+        let res = crate::solver::pcg_eval_par(
+            &self.prepared.graph,
+            &self.sparsifier,
+            rhs_seed,
+            tol,
+            maxit,
+            self.prepared.threads,
+        )?;
         Ok(PcgOutcome {
             iterations: res.iterations,
             relres: res.relres,

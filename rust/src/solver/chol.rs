@@ -1,15 +1,181 @@
 //! Sparse LDLᵀ factorization (up-looking, elimination-tree based — the
-//! classic Davis `LDL` algorithm) and triangular solves.
+//! classic Davis `LDL` algorithm) and triangular solves, serial and
+//! level-scheduled parallel.
 //!
 //! The PCG evaluation uses `L_P` (the sparsifier Laplacian, grounded) as
 //! the preconditioner; it is factored **once** and each PCG iteration
 //! applies two triangular solves — the same cost profile as MATLAB's
 //! `pcg(L_G, b, tol, maxit, L_chol, L_chol')` setup the paper uses.
+//!
+//! # Level-scheduled parallel solve
+//!
+//! A triangular solve is a DAG traversal: forward row `i` waits on every
+//! column `j < i` with `L[i,j] ≠ 0`, and the backward sweep on the
+//! transposed edges. At factor time [`LevelSchedule`] groups rows into
+//! *level sets* (row level = 1 + max level over its dependencies), so
+//! all rows of one level are pairwise independent and a level can be
+//! dispatched across the pool with a join per level
+//! ([`LdlFactor::solve_par`]). To keep the parallel forward sweep
+//! bitwise identical to the serial scatter in [`LdlFactor::solve`], the
+//! strict-lower factor is stored **twice**: CSC (`lp`/`li`/`lx`, what
+//! the factorization and backward sweep walk) and a row-oriented CSR
+//! mirror (`rp`/`ri`/`rx`) whose per-row gather folds the same operands
+//! in the same (ascending-column) order as the serial scatter applies
+//! them — a fixed per-row op sequence independent of thread count,
+//! matching the parity discipline of `par::par_reduce`.
 
 use crate::graph::CsrMatrix;
 
+/// Rows claimed per atomic fetch when a level is dispatched on the pool.
+const LEVEL_GRAIN: usize = 32;
+
+/// Minimum level width before a level is dispatched onto the pool;
+/// narrower levels run inline on the caller. The per-row fold is
+/// identical either way, so the cutoff is a pure scheduling choice with
+/// no effect on results (a path graph's width-1 levels never pay a
+/// dispatch).
+const LEVEL_PAR_CUTOFF: usize = 128;
+
+/// Indices claimed per fetch for the elementwise diagonal scale.
+const DIAG_GRAIN: usize = 4096;
+
+/// Level sets of the triangular-solve dependency DAG, derived once at
+/// factor time. Rows within a level are pairwise independent; levels
+/// execute in ascending order with a join between levels. Rows are
+/// stored in ascending index order inside each level (deterministic,
+/// though the solves are order-insensitive within a level: writes are
+/// disjoint and operands come from earlier levels).
+#[derive(Clone, Debug)]
+pub struct LevelSchedule {
+    /// Forward (`L`) level pointers into `fwd_rows`, length `levels + 1`.
+    fwd_ptr: Vec<usize>,
+    /// Rows grouped by forward level, ascending within each level.
+    fwd_rows: Vec<u32>,
+    /// Backward (`Lᵀ`) level pointers into `bwd_rows`.
+    bwd_ptr: Vec<usize>,
+    /// Columns grouped by backward level, ascending within each level.
+    bwd_rows: Vec<u32>,
+}
+
+impl LevelSchedule {
+    /// Derive both sweeps' level sets from the factor's sparsity pattern
+    /// (CSC `lp`/`li` plus the row mirror `rp`/`ri`).
+    fn build(n: usize, lp: &[usize], li: &[u32], rp: &[usize], ri: &[u32]) -> LevelSchedule {
+        // Forward: row i waits on every column j < i with L[i,j] ≠ 0.
+        // Ascending i visits dependencies before dependents.
+        let mut lvl = vec![0u32; n];
+        for i in 0..n {
+            let mut l = 0u32;
+            for p in rp[i]..rp[i + 1] {
+                l = l.max(lvl[ri[p] as usize] + 1);
+            }
+            lvl[i] = l;
+        }
+        let (fwd_ptr, fwd_rows) = bucket_levels(&lvl);
+        // Backward: column j waits on every row i > j with L[i,j] ≠ 0.
+        // Descending j visits dependencies first, so `lvl` can be
+        // overwritten in place with the backward levels.
+        for j in (0..n).rev() {
+            let mut l = 0u32;
+            for p in lp[j]..lp[j + 1] {
+                l = l.max(lvl[li[p] as usize] + 1);
+            }
+            lvl[j] = l;
+        }
+        let (bwd_ptr, bwd_rows) = bucket_levels(&lvl);
+        LevelSchedule { fwd_ptr, fwd_rows, bwd_ptr, bwd_rows }
+    }
+
+    /// Number of forward (`L`) levels.
+    pub fn num_forward_levels(&self) -> usize {
+        self.fwd_ptr.len() - 1
+    }
+
+    /// Rows of forward level `l`, ascending.
+    pub fn forward_level(&self, l: usize) -> &[u32] {
+        &self.fwd_rows[self.fwd_ptr[l]..self.fwd_ptr[l + 1]]
+    }
+
+    /// Number of backward (`Lᵀ`) levels.
+    pub fn num_backward_levels(&self) -> usize {
+        self.bwd_ptr.len() - 1
+    }
+
+    /// Columns of backward level `l`, ascending.
+    pub fn backward_level(&self, l: usize) -> &[u32] {
+        &self.bwd_rows[self.bwd_ptr[l]..self.bwd_ptr[l + 1]]
+    }
+}
+
+/// Counting-sort rows into level buckets: returns `(ptr, rows)` with
+/// `rows[ptr[l]..ptr[l+1]]` = the rows of level `l`, ascending (the
+/// enumeration below visits rows in index order).
+fn bucket_levels(lvl: &[u32]) -> (Vec<usize>, Vec<u32>) {
+    let n = lvl.len();
+    let nlev = lvl.iter().map(|&l| l as usize + 1).max().unwrap_or(0);
+    let mut ptr = vec![0usize; nlev + 1];
+    for &l in lvl {
+        ptr[l as usize + 1] += 1;
+    }
+    for l in 0..nlev {
+        ptr[l + 1] += ptr[l];
+    }
+    let mut rows = vec![0u32; n];
+    let mut fill = ptr.clone();
+    for (i, &l) in lvl.iter().enumerate() {
+        rows[fill[l as usize]] = i as u32;
+        fill[l as usize] += 1;
+    }
+    (ptr, rows)
+}
+
+/// Row-oriented CSR mirror of the strict-lower CSC factor. Iterating
+/// columns in ascending order fills each row's entries in ascending
+/// column order — exactly the order the serial forward scatter applies
+/// its updates to any fixed slot.
+fn lower_csr_mirror(
+    n: usize,
+    lp: &[usize],
+    li: &[u32],
+    lx: &[f64],
+) -> (Vec<usize>, Vec<u32>, Vec<f64>) {
+    let mut rp = vec![0usize; n + 1];
+    for &i in li {
+        rp[i as usize + 1] += 1;
+    }
+    for i in 0..n {
+        rp[i + 1] += rp[i];
+    }
+    let mut ri = vec![0u32; li.len()];
+    let mut rx = vec![0f64; lx.len()];
+    let mut fill = rp.clone();
+    for j in 0..n {
+        for p in lp[j]..lp[j + 1] {
+            let i = li[p] as usize;
+            ri[fill[i]] = j as u32;
+            rx[fill[i]] = lx[p];
+            fill[i] += 1;
+        }
+    }
+    (rp, ri, rx)
+}
+
+/// Total and max per-row cost (1 + gathered nnz) of one schedule level.
+fn level_cost(rows: &[u32], ptr: &[usize]) -> (u64, u64) {
+    let mut work = 0u64;
+    let mut max_row = 0u64;
+    for &i in rows {
+        let i = i as usize;
+        let c = 1 + (ptr[i + 1] - ptr[i]) as u64;
+        work += c;
+        max_row = max_row.max(c);
+    }
+    (work, max_row)
+}
+
 /// LDLᵀ factors: unit lower-triangular `L` (strict part stored CSC) and
-/// diagonal `D`.
+/// diagonal `D`, plus the row-oriented mirror of `L` and the
+/// [`LevelSchedule`] backing [`LdlFactor::solve_par`].
 #[derive(Clone, Debug)]
 pub struct LdlFactor {
     n: usize,
@@ -19,8 +185,16 @@ pub struct LdlFactor {
     li: Vec<u32>,
     /// Values of L entries.
     lx: Vec<f64>,
+    /// Row pointers of the CSR mirror of strict-lower L, length n+1.
+    rp: Vec<usize>,
+    /// Column indices of mirror entries (ascending within each row).
+    ri: Vec<u32>,
+    /// Values of mirror entries.
+    rx: Vec<f64>,
     /// Diagonal of D.
     d: Vec<f64>,
+    /// Level sets of both triangular sweeps.
+    sched: LevelSchedule,
 }
 
 /// Factorization failure: a non-positive pivot (matrix not positive
@@ -128,7 +302,9 @@ impl LdlFactor {
                 return Err(NotPositiveDefinite { at: k, pivot: d[k] });
             }
         }
-        Ok(LdlFactor { n, lp, li, lx, d })
+        let (rp, ri, rx) = lower_csr_mirror(n, &lp, &li, &lx);
+        let sched = LevelSchedule::build(n, &lp, &li, &rp, &ri);
+        Ok(LdlFactor { n, lp, li, lx, rp, ri, rx, d, sched })
     }
 
     /// Dimension.
@@ -144,6 +320,11 @@ impl LdlFactor {
     /// Nonzeros in the strict lower factor (fill-in metric).
     pub fn nnz_l(&self) -> usize {
         self.lx.len()
+    }
+
+    /// The level schedule derived at factor time (diagnostics, benches).
+    pub fn schedule(&self) -> &LevelSchedule {
+        &self.sched
     }
 
     /// Solve `L D Lᵀ x = b` in place.
@@ -170,6 +351,141 @@ impl LdlFactor {
             }
             x[j] = acc;
         }
+    }
+
+    /// As [`LdlFactor::solve`], with each [`LevelSchedule`] level
+    /// dispatched across `threads` pool workers — **bitwise identical**
+    /// to the serial solve at every thread count.
+    ///
+    /// Why parity holds: for any slot, the serial forward scatter
+    /// applies its updates in ascending column order, each operand
+    /// `x[j]` already final, skipping zero operands; the per-row gather
+    /// over the CSR mirror ([`LdlFactor::forward_row`]) folds exactly
+    /// that operand sequence (the zero-skip is replicated because
+    /// `acc -= l·0.0` is not an IEEE 754 no-op — it can flip a −0.0
+    /// accumulator to +0.0). The backward sweep is already a per-column
+    /// gather in the serial code, reproduced verbatim per column. Writes
+    /// within a level are disjoint and levels are separated by pool
+    /// joins, so scheduling cannot reorder any fold.
+    ///
+    /// `threads <= 1` takes the serial path unchanged. Level-0 rows
+    /// (resp. columns) have no dependencies and empty gathers — the
+    /// identity — so both sweeps start at level 1.
+    pub fn solve_par(&self, x: &mut [f64], threads: usize) {
+        debug_assert_eq!(x.len(), self.n);
+        if threads <= 1 {
+            self.solve(x);
+            return;
+        }
+        // forward: L y = b, level by level over the row mirror
+        {
+            let ptr = crate::par::as_send_ptr(x);
+            for l in 1..self.sched.num_forward_levels() {
+                let rows = self.sched.forward_level(l);
+                if rows.len() < LEVEL_PAR_CUTOFF {
+                    for &i in rows {
+                        // SAFETY: row i's dependencies finished in earlier
+                        // levels and this loop is single-threaded, so no
+                        // slot is accessed concurrently.
+                        unsafe { self.forward_row(&ptr, i as usize) };
+                    }
+                } else {
+                    crate::par::par_for(rows.len(), threads, LEVEL_GRAIN, |k| {
+                        // SAFETY: rows within a level are pairwise
+                        // independent and distinct (disjoint writes, reads
+                        // only from earlier levels); the per-level scope
+                        // join orders cross-level accesses.
+                        unsafe { self.forward_row(&ptr, rows[k] as usize) };
+                    });
+                }
+            }
+        }
+        // diagonal: disjoint elementwise scale, same expression per slot
+        // as the serial loop
+        let d = &self.d;
+        crate::par::par_update(x, threads, DIAG_GRAIN, |j, xj| *xj /= d[j]);
+        // backward: Lᵀ x = y, level by level over the CSC columns
+        let ptr = crate::par::as_send_ptr(x);
+        for l in 1..self.sched.num_backward_levels() {
+            let cols = self.sched.backward_level(l);
+            if cols.len() < LEVEL_PAR_CUTOFF {
+                for &j in cols {
+                    // SAFETY: column j's dependencies finished in earlier
+                    // levels and this loop is single-threaded, so no slot
+                    // is accessed concurrently.
+                    unsafe { self.backward_row(&ptr, j as usize) };
+                }
+            } else {
+                crate::par::par_for(cols.len(), threads, LEVEL_GRAIN, |k| {
+                    // SAFETY: columns within a level are pairwise
+                    // independent and distinct (disjoint writes, reads
+                    // only from earlier levels); the per-level scope join
+                    // orders cross-level accesses.
+                    unsafe { self.backward_row(&ptr, cols[k] as usize) };
+                });
+            }
+        }
+    }
+
+    /// One row of the forward substitution as a gather over the CSR
+    /// mirror: fold `x[i] -= L[i,j]·x[j]` over ascending `j` — the exact
+    /// operand sequence the serial scatter applies to slot `i`,
+    /// including the zero-operand skip (see [`LdlFactor::solve_par`]).
+    ///
+    /// # Safety
+    /// Every column of row `i` must already hold its final forward
+    /// value (i.e. belong to an earlier schedule level), and no other
+    /// thread may access slot `i` concurrently.
+    unsafe fn forward_row(&self, x: &crate::par::SendPtr<f64>, i: usize) {
+        let mut acc = *x.at(i);
+        for p in self.rp[i]..self.rp[i + 1] {
+            let xj = *x.at(self.ri[p] as usize);
+            if xj != 0.0 {
+                acc -= self.rx[p] * xj;
+            }
+        }
+        x.write(i, acc);
+    }
+
+    /// One column of the backward substitution — the serial per-column
+    /// gather verbatim.
+    ///
+    /// # Safety
+    /// Every row entry of column `j` must already hold its final
+    /// backward value (i.e. belong to an earlier schedule level), and no
+    /// other thread may access slot `j` concurrently.
+    unsafe fn backward_row(&self, x: &crate::par::SendPtr<f64>, j: usize) {
+        let mut acc = *x.at(j);
+        for p in self.lp[j]..self.lp[j + 1] {
+            acc -= self.lx[p] * *x.at(self.li[p] as usize);
+        }
+        x.write(j, acc);
+    }
+
+    /// Deterministic work–span model of the two solve variants, in
+    /// abstract row-cost units (1 + nnz gathered per row/column, plus
+    /// one unit per row for the diagonal scale): returns
+    /// `(serial_units, levelled_units)`, where a level costs the
+    /// list-scheduling bound `max(ceil(work/threads), max_row_cost)`.
+    /// At `threads == 1` the two sides are equal by construction.
+    /// `benches/micro.rs` asserts the 8-thread model win on the
+    /// grid-sparsifier workload (wall clock is printed alongside but not
+    /// asserted — CI cores vary).
+    pub fn solve_makespan_model(&self, threads: usize) -> (u64, u64) {
+        let t = threads.max(1) as u64;
+        let mut serial = self.n as u64;
+        let mut levelled = (self.n as u64).div_ceil(t);
+        for l in 0..self.sched.num_forward_levels() {
+            let (work, max_row) = level_cost(self.sched.forward_level(l), &self.rp);
+            serial += work;
+            levelled += work.div_ceil(t).max(max_row);
+        }
+        for l in 0..self.sched.num_backward_levels() {
+            let (work, max_row) = level_cost(self.sched.backward_level(l), &self.lp);
+            serial += work;
+            levelled += work.div_ceil(t).max(max_row);
+        }
+        (serial, levelled)
     }
 }
 
@@ -278,5 +594,122 @@ mod tests {
         let a = grounded_laplacian(&g, 5);
         let f = LdlFactor::factor(&a).unwrap();
         assert_eq!(f.nnz_l(), a.n - 1);
+    }
+
+    #[test]
+    fn solve_par_is_bitwise_identical_to_solve() {
+        // Random Laplacians, RCM-permuted as the preconditioner does it:
+        // the levelled solve must reproduce the serial one bit for bit
+        // at every thread count.
+        crate::util::proptest::check_default("trisolve_parity", |rng: &mut Rng| {
+            let n = 5 + rng.below(60);
+            let mut edges: Vec<(u32, u32, f64)> = (0..n as u32 - 1)
+                .map(|i| (i, i + 1, 0.5 + rng.next_f64() * 5.0))
+                .collect();
+            for _ in 0..2 * n {
+                let a = rng.below(n) as u32;
+                let b = rng.below(n) as u32;
+                if a != b {
+                    edges.push((a, b, 0.5 + rng.next_f64() * 5.0));
+                }
+            }
+            let g = crate::graph::Graph::from_edges(n, &edges);
+            let a = grounded_laplacian(&g, 0);
+            let ap = crate::solver::permute_sym(&a, &crate::solver::rcm(&a));
+            let f = LdlFactor::factor(&ap).map_err(|e| e.to_string())?;
+            let b: Vec<f64> = (0..ap.n).map(|_| rng.normal()).collect();
+            let mut serial = b.clone();
+            f.solve(&mut serial);
+            for threads in [1usize, 2, 8] {
+                let mut par = b.clone();
+                f.solve_par(&mut par, threads);
+                for (i, (u, v)) in par.iter().zip(&serial).enumerate() {
+                    if u.to_bits() != v.to_bits() {
+                        return Err(format!("threads={threads} slot {i}: {u:e} vs {v:e}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn path_schedule_is_fully_sequential_and_parity_holds() {
+        // Tridiagonal factor: every row depends on the previous one — n
+        // width-1 levels in both sweeps, the adversarial fully-serial
+        // case (solve_par must degrade to the serial order, not break).
+        let n = 300usize;
+        let edges: Vec<(u32, u32, f64)> =
+            (0..n as u32 - 1).map(|i| (i, i + 1, 1.0 + f64::from(i) * 0.01)).collect();
+        let g = crate::graph::Graph::from_edges(n, &edges);
+        let a = grounded_laplacian(&g, 0);
+        let f = LdlFactor::factor(&a).unwrap();
+        let sched = f.schedule();
+        assert_eq!(sched.num_forward_levels(), a.n);
+        assert_eq!(sched.num_backward_levels(), a.n);
+        for l in 0..a.n {
+            assert_eq!(sched.forward_level(l).len(), 1);
+            assert_eq!(sched.backward_level(l).len(), 1);
+        }
+        let mut rng = Rng::new(3);
+        let b: Vec<f64> = (0..a.n).map(|_| rng.normal()).collect();
+        let mut serial = b.clone();
+        f.solve(&mut serial);
+        for threads in [2usize, 8] {
+            let mut par = b.clone();
+            f.solve_par(&mut par, threads);
+            assert!(
+                par.iter().zip(&serial).all(|(u, v)| u.to_bits() == v.to_bits()),
+                "threads={threads}"
+            );
+        }
+        // All levels are width 1, so the model finds no span win beyond
+        // the diagonal scale; at 1 thread the sides are exactly equal.
+        let (s1, l1) = f.solve_makespan_model(1);
+        assert_eq!(s1, l1);
+    }
+
+    #[test]
+    fn star_schedule_is_two_wide_levels_and_parity_holds() {
+        // Arrow matrix (star with the hub ordered last): every leaf row
+        // is dependency-free — one wide forward level — and the hub row
+        // gathers them all. Wide enough to actually dispatch on the pool
+        // (width > LEVEL_PAR_CUTOFF).
+        let n = 400usize;
+        let hub = (n - 1) as u32;
+        let mut t: Vec<(u32, u32, f64)> = Vec::new();
+        for i in 0..n as u32 - 1 {
+            t.push((i, i, 2.0 + f64::from(i) * 0.001));
+            t.push((i, hub, -1.0));
+            t.push((hub, i, -1.0));
+        }
+        t.push((hub, hub, n as f64));
+        let a = CsrMatrix::from_triplets(n, t);
+        let f = LdlFactor::factor(&a).unwrap();
+        let sched = f.schedule();
+        assert_eq!(sched.num_forward_levels(), 2);
+        assert_eq!(sched.forward_level(0).len(), n - 1);
+        assert_eq!(sched.forward_level(1), &[hub][..]);
+        assert_eq!(sched.num_backward_levels(), 2);
+        assert_eq!(sched.backward_level(0), &[hub][..]);
+        assert_eq!(sched.backward_level(1).len(), n - 1);
+        let mut rng = Rng::new(4);
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut serial = b.clone();
+        f.solve(&mut serial);
+        for threads in [2usize, 8] {
+            let mut par = b.clone();
+            f.solve_par(&mut par, threads);
+            assert!(
+                par.iter().zip(&serial).all(|(u, v)| u.to_bits() == v.to_bits()),
+                "threads={threads}"
+            );
+        }
+        // The wide levels split across workers: the 8-thread model must
+        // beat serial, and the 1-thread model must equal it.
+        let (s1, l1) = f.solve_makespan_model(1);
+        assert_eq!(s1, l1);
+        let (s8, l8) = f.solve_makespan_model(8);
+        assert!(l8 < s8, "levelled {l8} vs serial {s8}");
     }
 }

@@ -1,16 +1,19 @@
-//! Linear-solver substrate: CSR SpMV, RCM ordering, sparse LDLᵀ, and the
-//! PCG evaluation harness (the paper's sparsifier-quality metric).
+//! Linear-solver substrate: CSR SpMV, RCM ordering, sparse LDLᵀ with a
+//! level-scheduled parallel triangular solve, and the PCG evaluation
+//! harness (the paper's sparsifier-quality metric).
 
 pub mod chol;
 pub mod order;
 pub mod pcg;
 pub mod spmv;
 
-pub use chol::{LdlFactor, NotPositiveDefinite};
-pub use order::{bandwidth, permute_sym, rcm};
+pub use chol::{LdlFactor, LevelSchedule, NotPositiveDefinite};
+pub use order::{
+    bandwidth, permute_sym, permute_vec, permute_vec_par, rcm, unpermute_vec, unpermute_vec_par,
+};
 pub use pcg::{
-    pcg, pcg_eval, pcg_iterations, pcg_par, Identity, Jacobi, PcgResult, Preconditioner,
-    SparsifierPrecond,
+    pcg, pcg_eval, pcg_eval_par, pcg_iterations, pcg_par, Identity, Jacobi, PcgResult,
+    Preconditioner, SparsifierPrecond,
 };
 pub use spmv::{
     axpy, axpy_par, dot, dot_par, norm2, norm2_par, spmv, spmv_par, xpay, xpay_par,

@@ -46,11 +46,20 @@ pub fn rcm(a: &CsrMatrix) -> Vec<u32> {
     order
 }
 
-/// Find a pseudo-peripheral vertex via repeated BFS eccentricity climbs.
+/// Cap on the pseudo-peripheral eccentricity climb. Each round is a full
+/// BFS of the component; the eccentricity is non-decreasing and nearly
+/// always saturates in 2–3 rounds (George & Liu report the same), so the
+/// cap trades a marginally better start vertex for a bounded, small
+/// constant number of sweeps on huge components. The result stays
+/// deterministic: the climb path is a pure function of the matrix.
+const PERIPHERAL_CLIMB_CAP: usize = 4;
+
+/// Find a pseudo-peripheral vertex via repeated BFS eccentricity climbs
+/// (capped at [`PERIPHERAL_CLIMB_CAP`] rounds).
 fn pseudo_peripheral(a: &CsrMatrix, start: usize, visited: &[bool]) -> usize {
     let mut cur = start;
     let mut ecc = 0usize;
-    for _ in 0..4 {
+    for _ in 0..PERIPHERAL_CLIMB_CAP {
         let (far, e) = bfs_far(a, cur, visited);
         if e <= ecc {
             break;
@@ -61,15 +70,17 @@ fn pseudo_peripheral(a: &CsrMatrix, start: usize, visited: &[bool]) -> usize {
     cur
 }
 
-/// BFS within the unvisited region; return (farthest min-degree vertex on
-/// the last level, eccentricity).
+/// BFS within the unvisited region; return (min-degree vertex on the
+/// last BFS level, eccentricity). Ties on degree break to the smallest
+/// index, so the choice is deterministic and independent of queue order.
+/// Starting the next Cuthill–McKee sweep from a low-degree peripheral
+/// vertex is the George–Liu heuristic for long, thin level structures.
 fn bfs_far(a: &CsrMatrix, start: usize, visited: &[bool]) -> (usize, usize) {
     let n = a.n;
     let mut dist = vec![u32::MAX; n];
     let mut q = std::collections::VecDeque::new();
     dist[start] = 0;
     q.push_back(start);
-    let mut last = start;
     let mut ecc = 0usize;
     while let Some(u) = q.pop_front() {
         let (s, e) = (a.rowptr[u], a.rowptr[u + 1]);
@@ -79,13 +90,25 @@ fn bfs_far(a: &CsrMatrix, start: usize, visited: &[bool]) -> (usize, usize) {
                 dist[v] = dist[u] + 1;
                 if dist[v] as usize > ecc {
                     ecc = dist[v] as usize;
-                    last = v;
                 }
                 q.push_back(v);
             }
         }
     }
-    (last, ecc)
+    // Min-degree vertex of the deepest level, smallest index on degree
+    // ties (ascending scan).
+    let mut best = start;
+    let mut best_deg = usize::MAX;
+    for v in 0..n {
+        if dist[v] != u32::MAX && dist[v] as usize == ecc {
+            let deg = a.rowptr[v + 1] - a.rowptr[v];
+            if deg < best_deg {
+                best = v;
+                best_deg = deg;
+            }
+        }
+    }
+    (best, ecc)
 }
 
 /// Symmetric permutation: `B = P A Pᵀ` with `perm[new] = old`.
@@ -118,6 +141,38 @@ pub fn unpermute_vec(x: &[f64], perm: &[u32], out: &mut [f64]) {
     for (new, &old) in perm.iter().enumerate() {
         out[old as usize] = x[new];
     }
+}
+
+/// Indices claimed per fetch by the pooled permutation kernels — the
+/// BLAS-1 grain (these are pure gather/scatter memory ops).
+const PERM_GRAIN: usize = 4096;
+
+/// As [`permute_vec`], gathered across `threads` pool workers: each slot
+/// is written once from the same expression as the serial loop, so the
+/// result is bitwise identical at every thread count.
+pub fn permute_vec_par(x: &[f64], perm: &[u32], out: &mut [f64], threads: usize) {
+    debug_assert_eq!(perm.len(), out.len());
+    if threads <= 1 {
+        permute_vec(x, perm, out);
+        return;
+    }
+    crate::par::par_fill(out, threads, PERM_GRAIN, |new| x[perm[new] as usize]);
+}
+
+/// As [`unpermute_vec`], scattered across `threads` pool workers.
+pub fn unpermute_vec_par(x: &[f64], perm: &[u32], out: &mut [f64], threads: usize) {
+    debug_assert_eq!(perm.len(), x.len());
+    debug_assert_eq!(x.len(), out.len());
+    if threads <= 1 {
+        unpermute_vec(x, perm, out);
+        return;
+    }
+    let ptr = crate::par::as_send_ptr(out);
+    crate::par::par_for(x.len(), threads, PERM_GRAIN, |new| {
+        // SAFETY: `perm` is a permutation, so each target slot is written
+        // by exactly one task; `out` outlives the scope join.
+        unsafe { ptr.write(perm[new] as usize, x[new]) };
+    });
 }
 
 /// Bandwidth of a symmetric CSR matrix (max |i − j| over entries).
@@ -175,6 +230,93 @@ mod tests {
         assert_eq!(y, [3.0, 1.0, 4.0, 2.0]);
         unpermute_vec(&y, &perm, &mut z);
         assert_eq!(z, x);
+    }
+
+    /// Symmetric adjacency-pattern matrix from undirected edge pairs
+    /// (values are irrelevant to the ordering code under test).
+    fn pattern(n: usize, edges: &[(u32, u32)]) -> CsrMatrix {
+        let mut t: Vec<(u32, u32, f64)> = Vec::with_capacity(2 * edges.len());
+        for &(u, v) in edges {
+            t.push((u, v, 1.0));
+            t.push((v, u, 1.0));
+        }
+        CsrMatrix::from_triplets(n, t)
+    }
+
+    #[test]
+    fn rcm_handles_disconnected_components() {
+        // Two shuffled paths plus an isolated vertex: RCM must emit a
+        // full permutation, restart cleanly per component, and keep each
+        // path banded.
+        let n = 101usize;
+        let mut rng = Rng::new(5);
+        let mut labels: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut labels);
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for i in 0..49 {
+            edges.push((labels[i], labels[i + 1]));
+        }
+        for i in 50..99 {
+            edges.push((labels[i], labels[i + 1]));
+        }
+        // labels[100] has no edges (empty matrix row).
+        let a = pattern(n, &edges);
+        let p = rcm(&a);
+        let mut sorted = p.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..n as u32).collect::<Vec<_>>());
+        let b = permute_sym(&a, &p);
+        assert!(bandwidth(&b) <= 2, "got {}", bandwidth(&b));
+    }
+
+    #[test]
+    fn bfs_far_prefers_min_degree_then_min_index_on_last_level() {
+        // Degree tie on the deepest level → smallest index. Star with
+        // hub 0 and leaves {1, 2, 3}: the last level is all three
+        // degree-1 leaves, so the pick must be 1 regardless of queue
+        // discovery order.
+        let star = pattern(4, &[(0, 1), (0, 2), (0, 3)]);
+        let (far, ecc) = bfs_far(&star, 0, &vec![false; star.n]);
+        assert_eq!(ecc, 1);
+        assert_eq!(far, 1);
+
+        // Min-degree beats discovery order AND smaller index. From 0 the
+        // levels are {1, 2, 5} then {3, 4}; deg(3) = |{1, 5}| = 2,
+        // deg(4) = |{2}| = 1, so 4 must win even though 3 is discovered
+        // first (via neighbor 1) and has the smaller index.
+        let g = pattern(6, &[(0, 1), (0, 2), (0, 5), (1, 3), (2, 4), (3, 5)]);
+        let (far2, ecc2) = bfs_far(&g, 0, &vec![false; g.n]);
+        assert_eq!(ecc2, 2);
+        assert_eq!(far2, 4);
+
+        // The `visited` mask restricts the region: with 4 visited, the
+        // deepest unvisited level from 0 is {3} alone.
+        let mut visited = vec![false; g.n];
+        visited[4] = true;
+        let (far3, ecc3) = bfs_far(&g, 0, &visited);
+        assert_eq!(ecc3, 2);
+        assert_eq!(far3, 3);
+    }
+
+    #[test]
+    fn permute_par_variants_match_serial_bitwise() {
+        let n = 10_000usize;
+        let mut rng = Rng::new(9);
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut perm);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut serial_p = vec![0.0; n];
+        let mut serial_u = vec![0.0; n];
+        permute_vec(&x, &perm, &mut serial_p);
+        unpermute_vec(&x, &perm, &mut serial_u);
+        for threads in [1usize, 2, 8] {
+            let mut par_p = vec![f64::NAN; n];
+            let mut par_u = vec![f64::NAN; n];
+            permute_vec_par(&x, &perm, &mut par_p, threads);
+            unpermute_vec_par(&x, &perm, &mut par_u, threads);
+            assert!(serial_p.iter().zip(&par_p).all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert!(serial_u.iter().zip(&par_u).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
     }
 
     #[test]

@@ -8,7 +8,9 @@
 //! relative-residual stopping rule.
 
 use super::chol::{LdlFactor, NotPositiveDefinite};
-use super::order::{permute_sym, permute_vec, rcm, unpermute_vec};
+use super::order::{
+    permute_sym, permute_vec, permute_vec_par, rcm, unpermute_vec, unpermute_vec_par,
+};
 use super::spmv::{axpy_par, dot_par, norm2_par, spmv_par, xpay_par};
 use crate::graph::{grounded_laplacian, CsrMatrix, Graph};
 
@@ -44,9 +46,22 @@ pub struct Jacobi {
 }
 
 impl Jacobi {
-    /// Build from a matrix's diagonal.
-    pub fn new(a: &CsrMatrix) -> Jacobi {
-        Jacobi { inv_diag: a.diagonal().iter().map(|&d| 1.0 / d).collect() }
+    /// Build from a matrix's diagonal. A zero, negative, or non-finite
+    /// diagonal entry (an isolated or grounded-out vertex) would turn
+    /// every subsequent apply into silent `inf`/NaN deep inside PCG, so
+    /// it is rejected up front as [`NotPositiveDefinite`] — the same
+    /// error the LDLᵀ factorization surfaces for the sparsifier
+    /// preconditioner.
+    pub fn new(a: &CsrMatrix) -> Result<Jacobi, NotPositiveDefinite> {
+        let diag = a.diagonal();
+        let mut inv_diag = Vec::with_capacity(diag.len());
+        for (i, &d) in diag.iter().enumerate() {
+            if d <= 0.0 || !d.is_finite() {
+                return Err(NotPositiveDefinite { at: i, pivot: d });
+            }
+            inv_diag.push(1.0 / d);
+        }
+        Ok(Jacobi { inv_diag })
     }
 }
 
@@ -69,10 +84,18 @@ impl Preconditioner for Jacobi {
 
 /// Sparsifier preconditioner: RCM-permuted LDLᵀ factorization of the
 /// grounded `L_P`, applied via two triangular solves.
+///
+/// `Sync + Send`: the permutation scratch lives in a small pooled
+/// free-list (a `Mutex`-guarded stack of buffers, à la
+/// `recovery::subctx::ScratchPool`) rather than the `RefCell` it used
+/// to be, so one factored preconditioner can be shared by concurrent
+/// PCG runs and called from pool workers. The lock is held only for a
+/// `Vec` pop/push around each apply — never across the solve itself.
 pub struct SparsifierPrecond {
     perm: Vec<u32>,
     factor: LdlFactor,
-    buf: std::cell::RefCell<Vec<f64>>,
+    /// Free-list of permutation buffers, each of length `factor.len()`.
+    scratch: std::sync::Mutex<Vec<Vec<f64>>>,
 }
 
 impl SparsifierPrecond {
@@ -87,21 +110,53 @@ impl SparsifierPrecond {
         let perm = rcm(a);
         let ap = permute_sym(a, &perm);
         let factor = LdlFactor::factor(&ap)?;
-        Ok(SparsifierPrecond { perm, factor, buf: std::cell::RefCell::new(vec![0.0; a.n]) })
+        Ok(SparsifierPrecond { perm, factor, scratch: std::sync::Mutex::new(Vec::new()) })
     }
 
     /// Fill-in of the factor (diagnostics).
     pub fn nnz_l(&self) -> usize {
         self.factor.nnz_l()
     }
+
+    /// Pop a scratch buffer off the free-list, or allocate one. Every
+    /// buffer is fully overwritten by `permute_vec` before use, so no
+    /// clearing is needed. A poisoned lock (a panicked apply elsewhere)
+    /// only guards a buffer free-list, so it is safe to keep using.
+    fn take_buf(&self) -> Vec<f64> {
+        let popped = self.scratch.lock().unwrap_or_else(|e| e.into_inner()).pop();
+        popped.unwrap_or_else(|| vec![0.0; self.factor.len()])
+    }
+
+    /// Return a scratch buffer to the free-list.
+    fn put_buf(&self, buf: Vec<f64>) {
+        self.scratch.lock().unwrap_or_else(|e| e.into_inner()).push(buf);
+    }
 }
 
 impl Preconditioner for SparsifierPrecond {
     fn apply(&self, r: &[f64], z: &mut [f64]) {
-        let mut buf = self.buf.borrow_mut();
+        let mut buf = self.take_buf();
         permute_vec(r, &self.perm, &mut buf);
         self.factor.solve(&mut buf);
         unpermute_vec(&buf, &self.perm, z);
+        self.put_buf(buf);
+    }
+
+    /// Pooled apply: permutation gather/scatter as disjoint elementwise
+    /// writes and the triangular solves level-scheduled across the pool
+    /// ([`LdlFactor::solve_par`]) — bitwise identical to the serial
+    /// [`Preconditioner::apply`] at every thread count, which `pcg_par`'s
+    /// exact-parity guarantee depends on.
+    fn apply_par(&self, r: &[f64], z: &mut [f64], threads: usize) {
+        if threads <= 1 {
+            self.apply(r, z);
+            return;
+        }
+        let mut buf = self.take_buf();
+        permute_vec_par(r, &self.perm, &mut buf, threads);
+        self.factor.solve_par(&mut buf, threads);
+        unpermute_vec_par(&buf, &self.perm, z, threads);
+        self.put_buf(buf);
     }
 }
 
@@ -142,8 +197,8 @@ pub fn pcg<M: Preconditioner>(
 /// direction update through `xpay_par`, the reductions through
 /// `dot_par`/`norm2_par`, and the preconditioner through
 /// [`Preconditioner::apply_par`] (pooled for the elementwise [`Jacobi`]
-/// path; [`SparsifierPrecond`]'s triangular solves still take the serial
-/// fallback — a parallel triangular solve remains the open follow-up).
+/// path, and for [`SparsifierPrecond`], whose two triangular solves run
+/// level-scheduled on the pool — see `solver::chol::LevelSchedule`).
 ///
 /// Results are bitwise identical at every thread count, not merely
 /// close: the row-parallel SpMV performs the same per-row folds, the
@@ -205,8 +260,11 @@ pub fn pcg_par<M: Preconditioner>(
 
 /// The paper's quality measurement, one place: solve `L_G x = b` (ground
 /// vertex 0) with the sparsifier preconditioner and a deterministic
-/// seeded-normal RHS. Shared by [`pcg_iterations`] and the session API's
-/// `Sparsifier::pcg`, so both evaluate exactly the same system.
+/// seeded-normal RHS. Serial convenience wrapper over [`pcg_eval_par`];
+/// shared by [`pcg_iterations`]. The session API's `Sparsifier::pcg`
+/// goes through [`pcg_eval_par`] with the session's thread count — the
+/// two evaluate exactly the same system and, by [`pcg_par`]'s parity
+/// guarantee, produce identical results.
 pub fn pcg_eval(
     g: &Graph,
     sparsifier: &Graph,
@@ -214,11 +272,26 @@ pub fn pcg_eval(
     tol: f64,
     maxit: usize,
 ) -> Result<PcgResult, NotPositiveDefinite> {
+    pcg_eval_par(g, sparsifier, rhs_seed, tol, maxit, 1)
+}
+
+/// As [`pcg_eval`], with the PCG iteration — SpMV, reductions, BLAS-1
+/// tail, and the preconditioner's level-scheduled triangular solves —
+/// dispatched across `threads` pool workers. Results (iterates, history,
+/// iteration count) are bitwise identical at every thread count.
+pub fn pcg_eval_par(
+    g: &Graph,
+    sparsifier: &Graph,
+    rhs_seed: u64,
+    tol: f64,
+    maxit: usize,
+    threads: usize,
+) -> Result<PcgResult, NotPositiveDefinite> {
     let lg = grounded_laplacian(g, 0);
     let m = SparsifierPrecond::new(sparsifier)?;
     let mut rng = crate::util::Rng::new(rhs_seed);
     let b: Vec<f64> = (0..lg.n).map(|_| rng.normal()).collect();
-    Ok(pcg(&lg, &b, &m, tol, maxit))
+    Ok(pcg_par(&lg, &b, &m, tol, maxit, threads))
 }
 
 /// Convenience: PCG iteration count for solving `L_G x = b` with the
@@ -268,7 +341,7 @@ mod tests {
     fn jacobi_no_worse_than_identity() {
         let (a, b, _) = laplacian_system(2);
         let plain = pcg(&a, &b, &Identity, 1e-6, 5000);
-        let jac = pcg(&a, &b, &Jacobi::new(&a), 1e-6, 5000);
+        let jac = pcg(&a, &b, &Jacobi::new(&a).unwrap(), 1e-6, 5000);
         assert!(jac.converged && plain.converged);
         assert!(jac.iterations <= plain.iterations + 15);
     }
@@ -293,7 +366,7 @@ mod tests {
         let p = crate::recovery::sparsifier(&g, &sp, &r.edges);
         let m = SparsifierPrecond::new(&p).unwrap();
         let with_p = pcg(&a, &b, &m, 1e-3, 5000);
-        let with_j = pcg(&a, &b, &Jacobi::new(&a), 1e-3, 5000);
+        let with_j = pcg(&a, &b, &Jacobi::new(&a).unwrap(), 1e-3, 5000);
         assert!(with_p.converged);
         assert!(
             with_p.iterations < with_j.iterations,
@@ -306,7 +379,7 @@ mod tests {
     #[test]
     fn history_is_monotonic_enough_and_matches_iterations() {
         let (a, b, _) = laplacian_system(5);
-        let res = pcg(&a, &b, &Jacobi::new(&a), 1e-6, 5000);
+        let res = pcg(&a, &b, &Jacobi::new(&a).unwrap(), 1e-6, 5000);
         assert_eq!(res.history.len(), res.iterations);
         assert!(res.history.last().unwrap() <= &1e-6);
     }
@@ -314,7 +387,7 @@ mod tests {
     #[test]
     fn jacobi_apply_par_is_bitwise_identical_to_serial() {
         let (a, _, _) = laplacian_system(8);
-        let m = Jacobi::new(&a);
+        let m = Jacobi::new(&a).unwrap();
         let mut rng = Rng::new(17);
         // Pad well past the pooled kernel's grain so several chunks run.
         let n = 20_000usize.max(a.n);
@@ -340,17 +413,103 @@ mod tests {
     }
 
     #[test]
-    fn default_apply_par_falls_back_to_serial_apply() {
-        // SparsifierPrecond keeps the default (serial) apply_par: both
-        // entry points must produce identical output.
+    fn sparsifier_apply_par_is_bitwise_identical_to_serial() {
+        // SparsifierPrecond overrides apply_par with the level-scheduled
+        // solve: both entry points must produce identical bits at every
+        // thread count.
         let (a, b, _) = laplacian_system(9);
         let m = SparsifierPrecond::from_matrix(&a).unwrap();
         let mut serial = vec![0.0; a.n];
         m.apply(&b, &mut serial);
-        for threads in [1usize, 8] {
-            let mut par = vec![0.0; a.n];
+        for threads in [1usize, 2, 8] {
+            let mut par = vec![f64::NAN; a.n];
             m.apply_par(&b, &mut par, threads);
-            assert!(serial.iter().zip(&par).all(|(x, y)| x.to_bits() == y.to_bits()));
+            assert!(
+                serial.iter().zip(&par).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn jacobi_rejects_zero_and_negative_diagonal() {
+        // An isolated/grounded-out vertex yields a zero diagonal; the
+        // old code silently produced an `inf` inverse that only surfaced
+        // as NaN deep inside PCG.
+        let a = CsrMatrix::from_triplets(2, vec![(0, 0, 1.0), (1, 1, 0.0)]);
+        let err = Jacobi::new(&a).unwrap_err();
+        assert_eq!(err.at, 1);
+        assert_eq!(err.pivot, 0.0);
+        let neg = CsrMatrix::from_triplets(2, vec![(0, 0, -2.0), (1, 1, 1.0)]);
+        assert_eq!(Jacobi::new(&neg).unwrap_err().at, 0);
+        // A missing diagonal entry reads as zero and is rejected too.
+        let missing = CsrMatrix::from_triplets(2, vec![(0, 0, 3.0), (0, 1, 1.0), (1, 0, 1.0)]);
+        assert_eq!(Jacobi::new(&missing).unwrap_err().at, 1);
+    }
+
+    #[test]
+    fn sparsifier_precond_is_sync_and_shareable_across_threads() {
+        // The scratch free-list (not a RefCell) makes the preconditioner
+        // Sync: one factored instance must serve concurrent callers and
+        // give every caller the serial answer.
+        fn assert_sync_send<T: Sync + Send>() {}
+        assert_sync_send::<SparsifierPrecond>();
+
+        let (a, b, _) = laplacian_system(10);
+        let m = SparsifierPrecond::from_matrix(&a).unwrap();
+        let mut expect = vec![0.0; a.n];
+        m.apply(&b, &mut expect);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut z = vec![0.0; b.len()];
+                        m.apply(&b, &mut z);
+                        z
+                    })
+                })
+                .collect();
+            for h in handles {
+                let z = h.join().unwrap();
+                assert!(expect.iter().zip(&z).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+        });
+    }
+
+    #[test]
+    fn pcg_par_with_sparsifier_precond_matches_serial_exactly() {
+        // The acceptance bar for the levelled solve: a full PCG run with
+        // a real sparsifier preconditioner (tree + recovered edges) must
+        // reproduce the serial iterate sequence, history, and iteration
+        // count bit for bit at every thread count.
+        let (a, b, g) = laplacian_system(11);
+        let sp = crate::tree::build_spanning(&g);
+        let r = crate::recovery::pdgrass(&g, &sp, &crate::recovery::Params::new(0.10, 2));
+        let p = crate::recovery::sparsifier(&g, &sp, &r.edges);
+        let m = SparsifierPrecond::new(&p).unwrap();
+        let serial = pcg(&a, &b, &m, 1e-6, 5000);
+        assert!(serial.converged);
+        for threads in [2usize, 8] {
+            let par = pcg_par(&a, &b, &m, 1e-6, 5000, threads);
+            assert_eq!(par.iterations, serial.iterations, "threads={threads}");
+            assert_eq!(par.converged, serial.converged);
+            assert_eq!(par.history, serial.history, "threads={threads}");
+            assert_eq!(par.x, serial.x, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pcg_eval_par_matches_pcg_eval_exactly() {
+        let g = gen::grid(12, 12, 0.5, &mut Rng::new(13));
+        let sp = crate::tree::build_spanning(&g);
+        let r = crate::recovery::pdgrass(&g, &sp, &crate::recovery::Params::new(0.05, 1));
+        let p = crate::recovery::sparsifier(&g, &sp, &r.edges);
+        let serial = pcg_eval(&g, &p, 42, 1e-3, 10_000).unwrap();
+        for threads in [2usize, 8] {
+            let par = pcg_eval_par(&g, &p, 42, 1e-3, 10_000, threads).unwrap();
+            assert_eq!(par.iterations, serial.iterations, "threads={threads}");
+            assert_eq!(par.history, serial.history, "threads={threads}");
+            assert_eq!(par.x, serial.x, "threads={threads}");
         }
     }
 
@@ -361,7 +520,7 @@ mod tests {
         // tree, so the iterate sequence (and thus iteration count and
         // history) must be identical, not merely close.
         let (a, b, _) = laplacian_system(7);
-        let m = Jacobi::new(&a);
+        let m = Jacobi::new(&a).unwrap();
         let serial = pcg(&a, &b, &m, 1e-6, 5000);
         for threads in [2usize, 4, 8] {
             let par = pcg_par(&a, &b, &m, 1e-6, 5000, threads);

@@ -11,14 +11,18 @@
 //! A failure message names the seed; replay it standalone with
 //! `PDGRASS_CHAOS_SEED=<seed> cargo test --test session`.
 
-use pdgrass::graph::Graph;
+use pdgrass::graph::{grounded_laplacian, Graph};
 use pdgrass::par::chaos;
-use pdgrass::recovery::Strategy;
+use pdgrass::recovery::{self, Strategy};
+use pdgrass::solver::{pcg_par, Preconditioner, SparsifierPrecond};
+use pdgrass::util::Rng;
 use pdgrass::{Pipeline, RecoverOpts, Sparsify};
 
 /// Everything the determinism claim covers, folded into one string:
 /// prepared state (score bits), recovered edges, pass count, stats,
-/// and PCG history bits.
+/// session PCG history bits, plus the low-level `SparsifierPrecond`
+/// path — one `apply_par` application (level-scheduled triangular
+/// solves) and a full `pcg_par` run, both as raw `f64` bits.
 fn fingerprint(g: &Graph, threads: usize, pipeline: Pipeline) -> String {
     let sess = Sparsify::graph(g.clone()).threads(threads).pipeline(pipeline);
     let prepared =
@@ -46,6 +50,25 @@ fn fingerprint(g: &Graph, threads: usize, pipeline: Pipeline) -> String {
     let pcg = r.sparsifier().pcg(42, 1e-3, 20_000).unwrap();
     s.push_str(&format!("|iters={}|conv={}", pcg.iterations, pcg.converged));
     for h in &pcg.history {
+        s.push_str(&format!("{:x};", h.to_bits()));
+    }
+    // Direct low-level parity: the preconditioner's level-scheduled
+    // triangular solves (`apply_par`) and the fully-pooled `pcg_par`
+    // must be as schedule-immune as the session path above.
+    let p = recovery::sparsifier(prepared.graph(), prepared.spanning(), r.edges());
+    let lg = grounded_laplacian(prepared.graph(), 0);
+    let m = SparsifierPrecond::new(&p).unwrap();
+    let mut rng = Rng::new(42);
+    let rhs: Vec<f64> = (0..lg.n).map(|_| rng.normal()).collect();
+    let mut z = vec![0.0; lg.n];
+    m.apply_par(&rhs, &mut z, threads);
+    s.push_str("|precond=");
+    for v in &z {
+        s.push_str(&format!("{:x};", v.to_bits()));
+    }
+    let par = pcg_par(&lg, &rhs, &m, 1e-3, 20_000, threads);
+    s.push_str(&format!("|par_iters={}|par_conv={}|", par.iterations, par.converged));
+    for h in &par.history {
         s.push_str(&format!("{:x};", h.to_bits()));
     }
     s

@@ -209,7 +209,7 @@ fn prop_pcg_par_matches_serial_iterates() {
         let g = pdgrass::gen::grid(w, h, 0.3 + 0.4 * rng.next_f64(), rng);
         let lg = grounded_laplacian(&g, 0);
         let b: Vec<f64> = (0..lg.n).map(|_| rng.normal()).collect();
-        let m = Jacobi::new(&lg);
+        let m = Jacobi::new(&lg).map_err(|e| e.to_string())?;
         let serial = pcg(&lg, &b, &m, 1e-30, 5);
         for threads in [2usize, 4, 8] {
             let par = pcg_par(&lg, &b, &m, 1e-30, 5, threads);

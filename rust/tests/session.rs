@@ -229,6 +229,42 @@ fn streamed_prepare_and_recover_match_barrier_bitwise() {
     }
 }
 
+/// Satellite regression: `Sparsifier::pcg` dispatches to the pooled
+/// solver with the session's thread count (it used to hardcode the
+/// serial path and silently ignore `Sparsify::threads`). The evaluation
+/// must stay bitwise identical to the serial baseline at every thread
+/// count, on both pipeline disciplines — level-scheduled triangular
+/// solves and fixed-tree reductions included.
+#[test]
+fn session_pcg_is_bitwise_identical_across_threads_and_pipelines() {
+    let g = pdgrass::gen::grid(40, 40, 0.4, &mut pdgrass::util::Rng::new(19));
+    let opts = RecoverOpts::new(0.10);
+    let base_sess = Sparsify::graph(g.clone()).threads(1).prepare().unwrap();
+    assert_eq!(base_sess.threads(), 1);
+    let base = base_sess.recover(&opts).unwrap().sparsifier().pcg(42, 1e-3, 50_000).unwrap();
+    assert!(base.converged);
+    for pipeline in [Pipeline::Barrier, Pipeline::Streamed] {
+        for threads in [1usize, 2, 8] {
+            let sess = Sparsify::graph(g.clone()).threads(threads).pipeline(pipeline);
+            let prepared = if pipeline == Pipeline::Streamed {
+                sess.prepare_streamed().unwrap()
+            } else {
+                sess.prepare().unwrap()
+            };
+            assert_eq!(prepared.threads(), threads);
+            let got =
+                prepared.recover(&opts).unwrap().sparsifier().pcg(42, 1e-3, 50_000).unwrap();
+            let label = format!("{pipeline:?} t={threads}");
+            assert_eq!(got.iterations, base.iterations, "{label}: iterations");
+            assert_eq!(got.converged, base.converged, "{label}: converged");
+            assert_eq!(got.history.len(), base.history.len(), "{label}: history len");
+            for (x, y) in got.history.iter().zip(&base.history) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{label}: history bits");
+            }
+        }
+    }
+}
+
 /// Prepare-side instrumentation: a recover-many sweep pays prepare once.
 #[test]
 fn prepare_and_recover_counters_track_the_split() {

@@ -100,7 +100,7 @@ fn scan_fused_jacobi_matches_rust_jacobi() {
     let b: Vec<f64> = (0..lg.n).map(|_| rng.normal()).collect();
     let (x, hist) = jacobi_pcg_xla(&rt, &lg, &b).unwrap();
     let xla_iters = pdgrass::runtime::iterations_to_tol(&hist, 1e-3).expect("must converge");
-    let rust = pcg(&lg, &b, &Jacobi::new(&lg), 1e-3, 200);
+    let rust = pcg(&lg, &b, &Jacobi::new(&lg).unwrap(), 1e-3, 200);
     assert!(rust.converged);
     let diff = (rust.iterations as i64 - xla_iters as i64).abs();
     assert!(diff <= rust.iterations as i64 / 10 + 3, "{} vs {xla_iters}", rust.iterations);
