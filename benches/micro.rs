@@ -7,6 +7,11 @@
 //! factor+solve, the serial vs level-scheduled triangular solve, and
 //! the recovery phases. These numbers drive the
 //! before/after comparisons recorded in CHANGES.md.
+//!
+//! Besides the stdout report, the run writes a machine-readable
+//! `BENCH_8.json` (override the path with `PDGRASS_BENCH_OUT`): every
+//! `report()` sample lands in `bench_ms` and every structural makespan
+//! model value in `model_units`. Format documented in ROADMAP.md.
 
 use pdgrass::graph::grounded_laplacian;
 use pdgrass::recovery::strict::{neighborhoods, TagStore};
@@ -15,10 +20,47 @@ use pdgrass::solver::{spmv, LdlFactor, SparsifierPrecond};
 use pdgrass::tree::{build_spanning, off_tree_edges};
 use pdgrass::util::{min_of, Rng};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Wall-clock samples (name, min-of-N ms) accumulated for the JSON dump.
+static SAMPLES: Mutex<Vec<(String, f64)>> = Mutex::new(Vec::new());
+/// Structural makespan-model values (name, units) — machine-independent.
+static MODELS: Mutex<Vec<(String, u64)>> = Mutex::new(Vec::new());
 
 fn report(name: &str, iters: usize, ms: f64, unit_count: u64, unit: &str) {
     let per = ms * 1e6 / unit_count.max(1) as f64;
     println!("{name:<38} {ms:>9.2} ms / {iters} it   ({per:>8.1} ns/{unit})");
+    SAMPLES.lock().unwrap().push((name.to_string(), ms));
+}
+
+/// Record one structural model value for the JSON dump.
+fn model(name: &str, units: u64) {
+    MODELS.lock().unwrap().push((name.to_string(), units));
+}
+
+/// Write the accumulated samples as `BENCH_8.json` (or
+/// `$PDGRASS_BENCH_OUT`). Hand-rolled JSON — names are bench identifiers
+/// (no escapes needed), values plain decimals.
+fn write_bench_json() {
+    let path = std::env::var("PDGRASS_BENCH_OUT").unwrap_or_else(|_| "BENCH_8.json".to_string());
+    let mut out = String::from("{\n  \"schema\": \"pdgrass-bench-v1\",\n  \"pr\": 8,\n");
+    out.push_str("  \"bench_ms\": {\n");
+    let samples = SAMPLES.lock().unwrap();
+    for (i, (name, ms)) in samples.iter().enumerate() {
+        let sep = if i + 1 == samples.len() { "" } else { "," };
+        out.push_str(&format!("    \"{name}\": {ms:.4}{sep}\n"));
+    }
+    out.push_str("  },\n  \"model_units\": {\n");
+    let models = MODELS.lock().unwrap();
+    for (i, (name, units)) in models.iter().enumerate() {
+        let sep = if i + 1 == models.len() { "" } else { "," };
+        out.push_str(&format!("    \"{name}\": {units}{sep}\n"));
+    }
+    out.push_str("  }\n}\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("# wrote {path}"),
+        Err(e) => println!("# could not write {path}: {e}"),
+    }
 }
 
 /// The pre-pool `par_for`: spawn + join fresh scoped threads on every
@@ -357,6 +399,10 @@ fn bench_prepare_pipeline() {
     let (b1, s1) = (prep_barrier_makespan(&sim, 1), prep_streamed_makespan(&sim, 1));
     assert!(s1 <= b1, "streamed must be no worse serially: {s1} > {b1}");
     let (b8, s8) = (prep_barrier_makespan(&sim, 8), prep_streamed_makespan(&sim, 8));
+    model("prep_makespan_barrier_1t", b1);
+    model("prep_makespan_streamed_1t", s1);
+    model("prep_makespan_barrier_8t", b8);
+    model("prep_makespan_streamed_8t", s8);
     println!(
         "{:<38} makespan model: 1t {} vs {} units, 8t barrier {} vs streamed {} ({:.2}x)",
         "",
@@ -412,6 +458,8 @@ fn bench_giant_subtask() {
     let outer_units: u64 = outer_costs.iter().map(|&(c, e)| c as u64 + e as u64).sum();
     let (s, par) = schedsim::simulate_sharded(&costs, &schedsim::SimParams::sharded(8, 512));
     let sharded_units = s + par;
+    model("giant_subtask_makespan_outer_8t", outer_units);
+    model("giant_subtask_makespan_sharded_8t", sharded_units);
     println!(
         "{:<38} makespan(8t) outer {} units vs sharded {} units — sharded {:.2}x",
         "",
@@ -469,6 +517,9 @@ fn bench_trisolve() {
     let (s1, l1) = f.solve_makespan_model(1);
     assert_eq!(s1, l1, "levelled schedule must cost the serial sweep at 1 thread");
     let (s8, l8) = f.solve_makespan_model(8);
+    model("trisolve_makespan_serial_1t", s1);
+    model("trisolve_makespan_serial_8t", s8);
+    model("trisolve_makespan_levelled_8t", l8);
     println!(
         "{:<38} makespan model: 1t {} units, 8t serial {} vs levelled {} ({:.2}x)",
         "",
@@ -605,5 +656,6 @@ fn main() {
         Err(e) => println!("spmv_xla_dispatch: skipped ({e})"),
     }
 
+    write_bench_json();
     println!("# micro done");
 }

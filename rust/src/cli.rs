@@ -14,9 +14,11 @@
 //! pdgrass table2 | table3 | table4 | fig1 | fig6-8   [--scale S] [--config F]
 //! pdgrass list     # suite rows
 //! pdgrass audit    [--root DIR] [--allowlist FILE]   # static analysis
+//! pdgrass serve    [--socket P] [--cache-capacity N] [--max-in-flight N]
+//! pdgrass bombard  [--socket P] [--requests N] [--clients N] [--graphs A,B]
 //! ```
 
-use crate::config::{Doc, RunConfig};
+use crate::config::{Doc, RunConfig, ServeConfig};
 use crate::coordinator::{experiments, PipelineConfig};
 use crate::session::Sparsify;
 use crate::util::{sci, Timer};
@@ -105,6 +107,11 @@ fn pipeline_cfg(cli: &Cli) -> anyhow::Result<(PipelineConfig, RunConfig)> {
     let mut p = run.pipeline();
     p.alpha = cli.f64("alpha", p.alpha)?;
     Ok((p, run))
+}
+
+/// Split a `--graphs a,b,c`-style comma list.
+fn csv_list(s: &str) -> Vec<String> {
+    s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect()
 }
 
 fn graph_names(run: &RunConfig) -> Vec<&str> {
@@ -242,6 +249,85 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
             }
             Ok(())
         }
+        "serve" => {
+            let mut cfg = match cli.str("config") {
+                Some(path) => ServeConfig::from_doc(&Doc::load(std::path::Path::new(path))?)?,
+                None => ServeConfig::default(),
+            };
+            if let Some(s) = cli.str("socket") {
+                cfg.socket = std::path::PathBuf::from(s);
+            }
+            if let Some(s) = cli.str("cache-capacity") {
+                cfg.cache_capacity = s.parse()?;
+                if cfg.cache_capacity == 0 {
+                    anyhow::bail!("--cache-capacity: must be at least 1");
+                }
+            }
+            if let Some(s) = cli.str("max-in-flight") {
+                cfg.max_in_flight = s.parse()?;
+                if cfg.max_in_flight == 0 {
+                    anyhow::bail!("--max-in-flight: must be at least 1");
+                }
+            }
+            if let Some(s) = cli.str("deadline-ms") {
+                cfg.deadline_ms = s.parse()?;
+            }
+            if let Some(s) = cli.str("failure-cap") {
+                cfg.failure_cap = s.parse()?;
+            }
+            if let Some(s) = cli.str("log") {
+                cfg.log = s.to_string();
+            }
+            if let Some(s) = cli.str("threads") {
+                cfg.threads = s.parse()?;
+            }
+            println!(
+                "pdgrass serve: listening on {} (cache {}, in-flight {}, {} thread(s))",
+                cfg.socket.display(),
+                cfg.cache_capacity,
+                cfg.max_in_flight,
+                cfg.resolved_threads()
+            );
+            let server = crate::serve::Server::start(cfg)?;
+            server.wait();
+            println!("pdgrass serve: shut down");
+            Ok(())
+        }
+        "bombard" => {
+            let mut cfg = crate::serve::BombardConfig::default();
+            if let Some(s) = cli.str("socket") {
+                cfg.socket = std::path::PathBuf::from(s);
+            }
+            if let Some(s) = cli.str("requests") {
+                cfg.requests = s.parse()?;
+            }
+            if let Some(s) = cli.str("clients") {
+                cfg.clients = s.parse()?;
+            }
+            if let Some(s) = cli.str("graphs") {
+                cfg.graphs = csv_list(s);
+            }
+            if let Some(s) = cli.str("alphas") {
+                cfg.alphas = csv_list(s)
+                    .iter()
+                    .map(|a| a.parse::<f64>().map_err(|e| anyhow::anyhow!("--alphas: {e}")))
+                    .collect::<anyhow::Result<_>>()?;
+            }
+            cfg.scale = cli.f64("scale", cfg.scale)?;
+            if let Some(s) = cli.str("seed") {
+                cfg.seed = s.parse()?;
+            }
+            if let Some(s) = cli.str("deadline-ms") {
+                cfg.deadline_ms = s.parse()?;
+            }
+            cfg.shutdown = cli.has("shutdown");
+            let report = crate::serve::bombard::run(&cfg)?;
+            println!("{}", report.render());
+            if report.failed > 0 {
+                anyhow::bail!("bombard: {} failed request(s)", report.failed);
+            }
+            Ok(())
+        }
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -265,6 +351,8 @@ VERBS
   fig6-8                    Figs. 6-8 strong-scaling curves (CSV)
   pipeline                  barrier vs streamed prepare timings + overlap model
   audit     [--root DIR] [--allowlist FILE]   concurrency/determinism lints
+  serve                     sparsification daemon on a Unix socket
+  bombard                   deterministic load replay against a daemon
 
 OPTIONS
   --scale S      suite scale factor (default 1.0)
@@ -274,8 +362,24 @@ OPTIONS
   --strategy S   serial|outer|inner|mixed|sharded (default mixed)
   --shard-min N  sharded-strategy target shard size (default 4096)
   --pipeline P   barrier|streamed stage handoff (default barrier)
-  --config F     TOML run config ([run] section)
+  --config F     TOML run config ([run]/[serve] sections)
   --quick        tiny scale + 1 trial (smoke)
+
+SERVE OPTIONS ([serve] config keys; flags override)
+  --socket P         Unix socket path (default /tmp/pdgrass.sock)
+  --cache-capacity N resident prepared graphs before LRU eviction (default 8)
+  --max-in-flight N  concurrent compute requests before typed rejection (default 4)
+  --deadline-ms N    default per-request deadline, 0 = none (default 0)
+  --failure-cap N    consecutive prepare failures per spec before fast-reject
+  --log TARGET       request summaries: stderr | off | file path (default stderr)
+
+BOMBARD OPTIONS
+  --requests N       total requests in the mix (default 64)
+  --clients N        concurrent client connections (default 4)
+  --graphs A,B       suite graphs the mix draws from (default 15-M6)
+  --alphas X,Y       alpha values the mix draws from (default 0.02,0.05,0.10)
+  --deadline-ms N    attach a per-request deadline to compute requests
+  --shutdown         send a shutdown request after the run
 ";
 
 #[cfg(test)]
@@ -358,5 +462,32 @@ mod tests {
     fn list_and_help_run() {
         run(&s(&["list"])).unwrap();
         run(&s(&["help"])).unwrap();
+    }
+
+    #[test]
+    fn serve_flag_validation_fails_before_binding() {
+        let err = run(&s(&["serve", "--cache-capacity", "0"])).unwrap_err().to_string();
+        assert!(err.contains("cache-capacity"), "{err}");
+        let err = run(&s(&["serve", "--max-in-flight", "0"])).unwrap_err().to_string();
+        assert!(err.contains("max-in-flight"), "{err}");
+    }
+
+    #[test]
+    fn bombard_without_a_daemon_is_a_clean_error() {
+        let err = run(&s(&[
+            "bombard", "--socket", "/tmp/pdgrass-cli-no-daemon.sock", "--requests", "2",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(!err.is_empty());
+        let err = run(&s(&["bombard", "--alphas", "zero"])).unwrap_err().to_string();
+        assert!(err.contains("alphas"), "{err}");
+    }
+
+    #[test]
+    fn csv_list_splits_and_trims() {
+        assert_eq!(csv_list("a, b ,c"), vec!["a", "b", "c"]);
+        assert_eq!(csv_list("a,,"), vec!["a"]);
+        assert!(csv_list("").is_empty());
     }
 }

@@ -260,9 +260,10 @@ impl RunConfig {
             "run.shard_min", "run.pipeline",
         ];
         for key in doc.keys() {
-            // `audit.*` belongs to `analysis::AuditOptions`; one config
-            // file may carry both sections.
-            if !known.contains(&key) && !key.starts_with("audit.") {
+            // `audit.*` belongs to `analysis::AuditOptions` and `serve.*`
+            // to [`ServeConfig`]; one config file may carry all three
+            // sections.
+            if !known.contains(&key) && !key.starts_with("audit.") && !key.starts_with("serve.") {
                 return Err(Error::Config(format!("unknown config key: {key}")));
             }
         }
@@ -435,6 +436,132 @@ impl RunConfig {
     }
 }
 
+/// Typed `[serve]` section for the daemon (`pdgrass serve`); see
+/// [`crate::serve`] for the subsystem it configures.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Unix-domain socket path the daemon binds.
+    pub socket: std::path::PathBuf,
+    /// Max resident [`crate::Prepared`] states (LRU beyond this; ≥ 1).
+    pub cache_capacity: usize,
+    /// Admission cap: concurrent compute requests before typed
+    /// `Overloaded` rejection (≥ 1).
+    pub max_in_flight: usize,
+    /// Default per-request deadline, ms (0 = none; requests may carry
+    /// their own `deadline_ms`).
+    pub deadline_ms: u64,
+    /// Consecutive prepare failures per graph spec before fast-rejection
+    /// (0 = unlimited).
+    pub failure_cap: u32,
+    /// Summary-log sink: `"stderr"`, `"off"`, or a file path.
+    pub log: String,
+    /// Default worker threads per request (0 = auto:
+    /// [`crate::par::num_threads`]).
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            socket: std::path::PathBuf::from("/tmp/pdgrass.sock"),
+            cache_capacity: 8,
+            max_in_flight: 4,
+            deadline_ms: 0,
+            failure_cap: 3,
+            log: "stderr".to_string(),
+            threads: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Build from a parsed document (`[serve]` section), validating keys
+    /// and values. Other sections (`run.*`, `audit.*`, top-level) are
+    /// ignored so one file can configure the whole binary.
+    pub fn from_doc(doc: &Doc) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::default();
+        let known = [
+            "serve.socket", "serve.cache_capacity", "serve.max_in_flight", "serve.deadline_ms",
+            "serve.failure_cap", "serve.log", "serve.threads",
+        ];
+        for key in doc.keys() {
+            if key.starts_with("serve.") && !known.contains(&key) {
+                return Err(Error::Config(format!("unknown config key: {key}")));
+            }
+        }
+        if let Some(v) = doc.get("serve.socket") {
+            let s = v.as_str().ok_or_else(|| Error::BadParam {
+                name: "serve.socket",
+                why: "not a string".into(),
+            })?;
+            cfg.socket = std::path::PathBuf::from(s);
+        }
+        if let Some(v) = doc.get("serve.cache_capacity") {
+            cfg.cache_capacity = v.as_usize().ok_or_else(|| Error::BadParam {
+                name: "serve.cache_capacity",
+                why: "not a non-negative int".into(),
+            })?;
+            if cfg.cache_capacity == 0 {
+                return Err(Error::BadParam {
+                    name: "serve.cache_capacity",
+                    why: "must be at least 1".into(),
+                });
+            }
+        }
+        if let Some(v) = doc.get("serve.max_in_flight") {
+            cfg.max_in_flight = v.as_usize().ok_or_else(|| Error::BadParam {
+                name: "serve.max_in_flight",
+                why: "not a non-negative int".into(),
+            })?;
+            if cfg.max_in_flight == 0 {
+                return Err(Error::BadParam {
+                    name: "serve.max_in_flight",
+                    why: "must be at least 1".into(),
+                });
+            }
+        }
+        if let Some(v) = doc.get("serve.deadline_ms") {
+            cfg.deadline_ms = v.as_usize().ok_or_else(|| Error::BadParam {
+                name: "serve.deadline_ms",
+                why: "not a non-negative int".into(),
+            })? as u64;
+        }
+        if let Some(v) = doc.get("serve.failure_cap") {
+            let f = v.as_usize().ok_or_else(|| Error::BadParam {
+                name: "serve.failure_cap",
+                why: "not a non-negative int".into(),
+            })?;
+            cfg.failure_cap = u32::try_from(f).map_err(|_| Error::BadParam {
+                name: "serve.failure_cap",
+                why: format!("{f} exceeds u32 range"),
+            })?;
+        }
+        if let Some(v) = doc.get("serve.log") {
+            cfg.log = v
+                .as_str()
+                .ok_or_else(|| Error::BadParam { name: "serve.log", why: "not a string".into() })?
+                .to_string();
+        }
+        if let Some(v) = doc.get("serve.threads") {
+            cfg.threads = v.as_usize().ok_or_else(|| Error::BadParam {
+                name: "serve.threads",
+                why: "not a non-negative int".into(),
+            })?;
+        }
+        Ok(cfg)
+    }
+
+    /// The daemon's default thread count with `0` (auto) resolved to the
+    /// environment's [`crate::par::num_threads`].
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::par::num_threads()
+        } else {
+            self.threads
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -541,6 +668,57 @@ mod tests {
     fn audit_section_keys_are_ignored_by_run_config() {
         let doc =
             Doc::parse("[run]\nscale = 0.5\n[audit]\nroot = \"rust/src\"\n").unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.scale, 0.5);
+    }
+
+    #[test]
+    fn serve_config_roundtrip_and_defaults() {
+        let doc = Doc::parse(
+            "[serve]\nsocket = \"/tmp/s.sock\"\ncache_capacity = 2\nmax_in_flight = 3\n\
+             deadline_ms = 500\nfailure_cap = 1\nlog = \"off\"\nthreads = 4\n",
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.socket, std::path::PathBuf::from("/tmp/s.sock"));
+        assert_eq!(cfg.cache_capacity, 2);
+        assert_eq!(cfg.max_in_flight, 3);
+        assert_eq!(cfg.deadline_ms, 500);
+        assert_eq!(cfg.failure_cap, 1);
+        assert_eq!(cfg.log, "off");
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.resolved_threads(), 4);
+
+        let d = ServeConfig::default();
+        assert_eq!(d.cache_capacity, 8);
+        assert_eq!(d.max_in_flight, 4);
+        assert_eq!(d.deadline_ms, 0);
+        assert!(d.resolved_threads() >= 1);
+    }
+
+    #[test]
+    fn serve_config_validates() {
+        let doc = Doc::parse("[serve]\ncache_capacity = 0\n").unwrap();
+        match ServeConfig::from_doc(&doc) {
+            Err(Error::BadParam { name, .. }) => assert_eq!(name, "serve.cache_capacity"),
+            other => panic!("expected BadParam, got {other:?}"),
+        }
+        let doc = Doc::parse("[serve]\nmax_in_flight = 0\n").unwrap();
+        match ServeConfig::from_doc(&doc) {
+            Err(Error::BadParam { name, .. }) => assert_eq!(name, "serve.max_in_flight"),
+            other => panic!("expected BadParam, got {other:?}"),
+        }
+        let doc = Doc::parse("[serve]\nspeeling = 1\n").unwrap();
+        assert!(ServeConfig::from_doc(&doc).is_err());
+        // Non-serve sections pass through untouched.
+        let doc = Doc::parse("[run]\nscale = 0.5\n[serve]\nlog = \"off\"\n").unwrap();
+        assert_eq!(ServeConfig::from_doc(&doc).unwrap().log, "off");
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().scale, 0.5);
+    }
+
+    #[test]
+    fn serve_section_keys_are_ignored_by_run_config() {
+        let doc = Doc::parse("[run]\nscale = 0.5\n[serve]\ncache_capacity = 2\n").unwrap();
         let cfg = RunConfig::from_doc(&doc).unwrap();
         assert_eq!(cfg.scale, 0.5);
     }

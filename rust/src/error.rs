@@ -50,6 +50,23 @@ pub enum Error {
         /// The offending pivot value.
         pivot: f64,
     },
+    /// The serve daemon is at its in-flight request cap; the request was
+    /// rejected up front instead of queued unboundedly. Retry later.
+    Overloaded {
+        /// Requests currently being served.
+        in_flight: usize,
+        /// The configured admission cap.
+        cap: usize,
+    },
+    /// A request's deadline elapsed before its work completed. The work
+    /// already done (e.g. a cache fill) is kept; only this response is
+    /// abandoned.
+    DeadlineExceeded {
+        /// Wall time spent before the deadline check fired.
+        elapsed_ms: u64,
+        /// The deadline the request carried.
+        deadline_ms: u64,
+    },
     /// Config file is malformed (parse error or unknown key).
     Config(String),
     /// Underlying I/O failure.
@@ -72,6 +89,12 @@ impl fmt::Display for Error {
                     f,
                     "preconditioner factorization failed: non-positive pivot {pivot} at index {at}"
                 )
+            }
+            Error::Overloaded { in_flight, cap } => {
+                write!(f, "server overloaded: {in_flight} requests in flight (cap {cap})")
+            }
+            Error::DeadlineExceeded { elapsed_ms, deadline_ms } => {
+                write!(f, "deadline exceeded: {elapsed_ms} ms elapsed (deadline {deadline_ms} ms)")
             }
             Error::Config(msg) => write!(f, "config: {msg}"),
             Error::Io(e) => write!(f, "io error: {e}"),
@@ -113,6 +136,12 @@ mod tests {
         assert!(e.to_string().contains("3 components"));
         let e = Error::NoConvergence { iters: 10, residual: 0.5 };
         assert!(e.to_string().contains("10 iterations"));
+        let e = Error::Overloaded { in_flight: 4, cap: 4 };
+        assert!(e.to_string().contains("4 requests in flight"), "{e}");
+        assert!(e.to_string().contains("cap 4"), "{e}");
+        let e = Error::DeadlineExceeded { elapsed_ms: 120, deadline_ms: 100 };
+        assert!(e.to_string().contains("120 ms"), "{e}");
+        assert!(e.to_string().contains("deadline 100 ms"), "{e}");
     }
 
     #[test]

@@ -72,6 +72,17 @@
 //! * [`coordinator`] / [`cli`] / [`config`] — experiment drivers
 //!   reproducing the paper's tables and figures, all wired through the
 //!   session API; plus the launcher surface.
+//! * [`serve`] — the serving layer: `pdgrass serve` runs a long-lived
+//!   daemon that owns an LRU cache of [`Prepared`] states keyed by the
+//!   deterministic graph fingerprint ([`graph::fingerprint`]) and
+//!   answers line-delimited-JSON `prepare`/`recover`/`pcg` requests over
+//!   a Unix-domain socket — prepare once per *graph*, serve step 4 at
+//!   any (α, strategy, pipeline) to any number of clients. Bounded
+//!   admission rejects excess load with a typed `overloaded` error
+//!   instead of queueing; per-request deadlines and per-spec failure
+//!   caps degrade gracefully; every request emits a JSON-lines run
+//!   summary. `pdgrass bombard` replays seeded deterministic traffic
+//!   against it and reports throughput and tail latency.
 //! * [`gen`], [`runtime`], [`util`] — the synthetic evaluation suite, the
 //!   XLA/Pallas kernel runtime, and shared utilities.
 //!
@@ -132,6 +143,7 @@ pub mod graph;
 pub mod par;
 pub mod recovery;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod solver;
 pub mod tree;

@@ -64,7 +64,7 @@ pub mod reduce;
 pub mod sort;
 pub mod stream;
 
-pub use pool::ThreadPool;
+pub use pool::{spawn_service, ServiceHandle, ThreadPool};
 pub use reduce::par_reduce;
 pub use stream::produce_stream;
 

@@ -378,6 +378,52 @@ impl ThreadPool {
     }
 }
 
+/// Handle to a service thread started by [`spawn_service`]; join it to
+/// wait for the service to exit.
+#[derive(Debug)]
+pub struct ServiceHandle {
+    inner: std::thread::JoinHandle<()>,
+}
+
+impl ServiceHandle {
+    /// Wait for the service thread to finish. Panics from the service
+    /// body propagate here, same as `std::thread::JoinHandle::join` +
+    /// unwrap.
+    pub fn join(self) {
+        if let Err(p) = self.inner.join() {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// Whether the service thread has exited (join would not block).
+    pub fn is_finished(&self) -> bool {
+        self.inner.is_finished()
+    }
+}
+
+/// Spawn a named **service** thread — a thread that spends its life
+/// blocked on I/O (a socket accept loop, a per-connection reader), not
+/// computing. Compute must go through the pool ([`ThreadPool::run_scope`]
+/// and the `par_*` primitives): parking a pool worker on a socket would
+/// starve every parallel loop in the process, and conversely a service
+/// thread that wants parallelism calls into the pool like any other
+/// caller (its `run_scope` participates, so this composes deadlock-free).
+///
+/// This is the crate's only sanctioned thread-creation site outside the
+/// pool's own workers — the `pdgrass audit` thread rule pins thread
+/// spawning to this file, and the serve daemon goes through here rather
+/// than widening that exemption.
+pub fn spawn_service<F>(name: &str, f: F) -> ServiceHandle
+where
+    F: FnOnce() + Send + 'static,
+{
+    let inner = std::thread::Builder::new()
+        .name(format!("pdgrass-svc-{name}"))
+        .spawn(f)
+        .expect("spawn service thread");
+    ServiceHandle { inner }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -539,6 +585,23 @@ mod tests {
             ThreadPool::global().join_map(|| 1u64, || -> u64 { panic!("side b fails") })
         }));
         assert!(result.is_err());
+    }
+
+    #[test]
+    fn spawn_service_runs_and_joins() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let f2 = flag.clone();
+        let h = spawn_service("test", move || {
+            // A service thread may recruit the pool like any caller.
+            let hits: Vec<AtomicU64> = (0..64).map(|_| AtomicU64::new(0)).collect();
+            par_for(64, 4, 1, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+            f2.store(true, Ordering::Release);
+        });
+        h.join();
+        assert!(flag.load(Ordering::Acquire));
     }
 
     #[test]

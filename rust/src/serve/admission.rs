@@ -1,0 +1,150 @@
+//! Admission control: a bounded in-flight counter with RAII permits.
+//!
+//! The daemon shares one compute pool; letting every connection queue
+//! unbounded work would trade rejection for unbounded latency. Instead,
+//! compute verbs (`prepare`/`recover`/`pcg`) must [`Admission::try_acquire`]
+//! a permit first; past the cap the request is rejected immediately with
+//! the typed [`Error::Overloaded`] — the client sees a structured
+//! `{in_flight, cap}` rejection it can back off on, and the requests
+//! already admitted keep their latency. Control verbs
+//! (`stats`/`evict`/`shutdown`) bypass admission: they are O(µs)
+//! bookkeeping and must work *especially* when the daemon is saturated.
+//!
+//! A plain `Mutex` around four counters — the hot path is one lock per
+//! request, dwarfed by the work the permit admits, and keeping it
+//! mutex-only means no new entries in the reviewed atomics allowlist.
+
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AdmissionStats {
+    pub in_flight: usize,
+    pub cap: usize,
+    pub accepted: u64,
+    pub rejected: u64,
+    /// High-water mark of concurrent in-flight requests.
+    pub peak: usize,
+}
+
+struct State {
+    in_flight: usize,
+    cap: usize,
+    accepted: u64,
+    rejected: u64,
+    peak: usize,
+}
+
+/// Bounded admission gate; see the module docs.
+pub struct Admission {
+    state: Mutex<State>,
+}
+
+impl Admission {
+    /// Gate admitting at most `cap` (≥ 1, validated by config)
+    /// concurrent permits.
+    pub fn new(cap: usize) -> Admission {
+        Admission {
+            state: Mutex::new(State {
+                in_flight: 0,
+                cap: cap.max(1),
+                accepted: 0,
+                rejected: 0,
+                peak: 0,
+            }),
+        }
+    }
+
+    /// Try to admit one request. At the cap this fails immediately with
+    /// [`Error::Overloaded`] — no queuing. Dropping the returned permit
+    /// releases the slot.
+    pub fn try_acquire(&self) -> Result<Permit<'_>> {
+        let mut s = self.state.lock().unwrap();
+        if s.in_flight >= s.cap {
+            s.rejected += 1;
+            return Err(Error::Overloaded { in_flight: s.in_flight, cap: s.cap });
+        }
+        s.in_flight += 1;
+        s.accepted += 1;
+        s.peak = s.peak.max(s.in_flight);
+        Ok(Permit { admission: self })
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> AdmissionStats {
+        let s = self.state.lock().unwrap();
+        AdmissionStats {
+            in_flight: s.in_flight,
+            cap: s.cap,
+            accepted: s.accepted,
+            rejected: s.rejected,
+            peak: s.peak,
+        }
+    }
+
+    fn release(&self) {
+        let mut s = self.state.lock().unwrap();
+        debug_assert!(s.in_flight > 0, "permit released twice");
+        s.in_flight = s.in_flight.saturating_sub(1);
+    }
+}
+
+/// RAII admission slot: held for the duration of one compute request,
+/// released on drop (including unwinds — a panicking handler must not
+/// leak its slot or the daemon would ratchet toward permanent overload).
+pub struct Permit<'a> {
+    admission: &'a Admission,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.admission.release();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_to_cap_then_rejects_typed() {
+        let adm = Admission::new(2);
+        let p1 = adm.try_acquire().unwrap();
+        let p2 = adm.try_acquire().unwrap();
+        match adm.try_acquire() {
+            Err(Error::Overloaded { in_flight, cap }) => {
+                assert_eq!((in_flight, cap), (2, 2));
+            }
+            Err(e) => panic!("expected Overloaded, got {e:?}"),
+            Ok(_) => panic!("expected Overloaded, got a permit"),
+        }
+        let s = adm.stats();
+        assert_eq!((s.in_flight, s.accepted, s.rejected, s.peak), (2, 2, 1, 2));
+        drop(p1);
+        let _p3 = adm.try_acquire().expect("slot freed by drop");
+        drop(p2);
+        let s = adm.stats();
+        assert_eq!(s.in_flight, 1);
+        assert_eq!(s.peak, 2, "peak is a high-water mark");
+    }
+
+    #[test]
+    fn cap_zero_clamps_to_one() {
+        let adm = Admission::new(0);
+        let _p = adm.try_acquire().unwrap();
+        assert!(adm.try_acquire().is_err());
+    }
+
+    #[test]
+    fn permit_released_on_unwind() {
+        let adm = Admission::new(1);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _p = adm.try_acquire().unwrap();
+            panic!("handler died");
+        }));
+        assert!(result.is_err());
+        assert_eq!(adm.stats().in_flight, 0, "unwind must release the slot");
+        let _p = adm.try_acquire().unwrap();
+    }
+}

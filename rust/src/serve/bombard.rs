@@ -1,0 +1,349 @@
+//! Load-replay harness: seeded deterministic traffic against a daemon.
+//!
+//! `pdgrass bombard` replays a heavy-traffic request mix — recover-heavy
+//! with periodic `pcg` and `stats` interleaves — against a running
+//! daemon and reports throughput plus p50/p95/p99 latency. The mix is a
+//! pure function of the [`BombardConfig`] (graph/α picks come from the
+//! repo's deterministic [`Rng`]), so two runs with the same config send
+//! byte-identical request lines in the same per-client order: a
+//! reproducible load for regression-hunting, not a fuzzer.
+//!
+//! Outcomes are counted in four disjoint buckets:
+//!
+//! - `ok` — served; only these contribute latency samples (designed-fast
+//!   rejections would skew the percentiles low),
+//! - `overloaded` / `deadline_exceeded` — the daemon's typed
+//!   back-pressure working as intended, *not* failures,
+//! - `failed` — everything that should never happen under a correct
+//!   daemon: protocol errors, unexpected typed errors, dead sockets.
+//!
+//! The CI smoke job runs a small mix and asserts `failed == 0`.
+//!
+//! Client connections ride the shared [`crate::par`] pool via
+//! [`par_for`] (one index per client), so the harness obeys the
+//! repo-wide "no threads outside the pool" rule; against an in-process
+//! server the pool's caller-participation guarantees progress even when
+//! every worker is parked on socket I/O.
+
+use std::sync::Mutex;
+
+use super::json::{int, num, obj, str as jstr, Value};
+use super::protocol::Client;
+use crate::error::{Error, Result};
+use crate::par::par_for;
+use crate::util::stats::percentile_sorted;
+use crate::util::{Rng, Timer};
+
+/// Parameters of one replay run.
+#[derive(Clone, Debug)]
+pub struct BombardConfig {
+    /// Daemon socket to replay against.
+    pub socket: std::path::PathBuf,
+    /// Total requests across all clients.
+    pub requests: usize,
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Suite graph names the mix draws from.
+    pub graphs: Vec<String>,
+    /// α values the mix draws from.
+    pub alphas: Vec<f64>,
+    /// Suite scale for every drawn graph.
+    pub scale: f64,
+    /// Mix seed: same seed, same request lines.
+    pub seed: u64,
+    /// Per-request deadline to attach, ms (0 = none).
+    pub deadline_ms: u64,
+    /// Send a `shutdown` request after the run completes.
+    pub shutdown: bool,
+}
+
+impl Default for BombardConfig {
+    fn default() -> BombardConfig {
+        BombardConfig {
+            socket: std::path::PathBuf::from("/tmp/pdgrass.sock"),
+            requests: 64,
+            clients: 4,
+            graphs: vec!["15-M6".to_string()],
+            alphas: vec![0.02, 0.05, 0.10],
+            scale: 0.02,
+            seed: 42,
+            deadline_ms: 0,
+            shutdown: false,
+        }
+    }
+}
+
+/// Aggregated outcome of a replay run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BombardReport {
+    pub sent: usize,
+    pub ok: usize,
+    pub overloaded: usize,
+    pub deadline_exceeded: usize,
+    /// Requests that failed in a way back-pressure does not explain —
+    /// the CI smoke job requires this to be zero.
+    pub failed: usize,
+    pub elapsed_ms: f64,
+    /// Latency percentiles over `ok` responses, microseconds.
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Served (`ok`) requests per wall-clock second.
+    pub throughput_rps: f64,
+}
+
+impl BombardReport {
+    /// Human-readable multi-line report for the CLI.
+    pub fn render(&self) -> String {
+        format!(
+            "bombard: {} sent, {} ok, {} overloaded, {} deadline_exceeded, {} failed\n\
+             elapsed {:.1} ms, throughput {:.1} req/s\n\
+             latency p50 {:.0} us, p95 {:.0} us, p99 {:.0} us",
+            self.sent,
+            self.ok,
+            self.overloaded,
+            self.deadline_exceeded,
+            self.failed,
+            self.elapsed_ms,
+            self.throughput_rps,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+        )
+    }
+}
+
+/// Generate the full deterministic request-line sequence for a config.
+/// Request `i` (0-based, wire id `i+1`) is: every 16th a `stats`, every
+/// 16th a capped `pcg`, otherwise a `recover`, with graph and α drawn
+/// from the seeded [`Rng`]. Public so tests can assert replay identity.
+pub fn request_lines(cfg: &BombardConfig) -> Vec<String> {
+    let mut rng = Rng::new(cfg.seed);
+    (0..cfg.requests)
+        .map(|i| {
+            let id = int((i + 1) as u64);
+            if i % 16 == 15 {
+                return obj(vec![("id", id), ("verb", jstr("stats"))]).render();
+            }
+            let name = cfg.graphs[rng.below(cfg.graphs.len())].clone();
+            let alpha = cfg.alphas[rng.below(cfg.alphas.len())];
+            let graph = obj(vec![("name", jstr(name)), ("scale", num(cfg.scale))]);
+            let verb = if i % 16 == 7 { "pcg" } else { "recover" };
+            let mut fields = vec![
+                ("id", id),
+                ("verb", jstr(verb)),
+                ("graph", graph),
+                ("alpha", num(alpha)),
+            ];
+            if verb == "pcg" {
+                // Cap the quality probe so one hard graph cannot stall
+                // the whole replay.
+                fields.push(("maxit", int(500)));
+            }
+            if cfg.deadline_ms > 0 {
+                fields.push(("deadline_ms", int(cfg.deadline_ms)));
+            }
+            obj(fields).render()
+        })
+        .collect()
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Outcome {
+    Ok,
+    Overloaded,
+    Deadline,
+    Failed,
+}
+
+/// Classify one raw response line into an outcome bucket.
+fn classify(line: &str) -> Outcome {
+    let Ok(v) = super::json::parse(line) else {
+        return Outcome::Failed;
+    };
+    if v.get("ok").and_then(Value::as_bool) == Some(true) {
+        return Outcome::Ok;
+    }
+    match v.get("error").and_then(Value::as_str) {
+        Some("overloaded") => Outcome::Overloaded,
+        Some("deadline_exceeded") => Outcome::Deadline,
+        _ => Outcome::Failed,
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Counts {
+    sent: usize,
+    ok: usize,
+    overloaded: usize,
+    deadline_exceeded: usize,
+    failed: usize,
+}
+
+/// One client's share of the replay: requests `c, c+clients, …` in
+/// order, on its own connection. A dead socket counts the request
+/// failed and reconnects once per subsequent request.
+fn client_loop(cfg: &BombardConfig, c: usize, lines: &[String]) -> (Counts, Vec<f64>) {
+    let stride = cfg.clients.max(1);
+    let mut counts = Counts::default();
+    let mut lats = Vec::new();
+    let mut client = Client::connect(&cfg.socket).ok();
+    let mut i = c;
+    while i < lines.len() {
+        counts.sent += 1;
+        if client.is_none() {
+            client = Client::connect(&cfg.socket).ok();
+        }
+        match client.as_mut() {
+            None => counts.failed += 1,
+            Some(cl) => {
+                let t = Timer::start();
+                match cl.call_line(&lines[i]) {
+                    Ok(resp) => match classify(&resp) {
+                        Outcome::Ok => {
+                            counts.ok += 1;
+                            lats.push(t.us());
+                        }
+                        Outcome::Overloaded => counts.overloaded += 1,
+                        Outcome::Deadline => counts.deadline_exceeded += 1,
+                        Outcome::Failed => counts.failed += 1,
+                    },
+                    Err(_) => {
+                        counts.failed += 1;
+                        client = None;
+                    }
+                }
+            }
+        }
+        i += stride;
+    }
+    (counts, lats)
+}
+
+/// Run the replay. Fails up front (typed) on an empty mix or an
+/// unreachable daemon; individual request failures are *counted*, not
+/// propagated, so the report always covers the full mix.
+pub fn run(cfg: &BombardConfig) -> Result<BombardReport> {
+    if cfg.requests == 0 {
+        return Err(Error::BadParam { name: "requests", why: "must be at least 1".into() });
+    }
+    if cfg.clients == 0 {
+        return Err(Error::BadParam { name: "clients", why: "must be at least 1".into() });
+    }
+    if cfg.graphs.is_empty() {
+        return Err(Error::BadParam { name: "graphs", why: "need at least one graph".into() });
+    }
+    if cfg.alphas.is_empty() {
+        return Err(Error::BadParam { name: "alphas", why: "need at least one alpha".into() });
+    }
+    // Probe before fanning out: "daemon not running" should be one
+    // clear error, not `requests` counted failures.
+    Client::connect(&cfg.socket)?;
+    let lines = request_lines(cfg);
+    let merged: Mutex<(Counts, Vec<f64>)> = Mutex::new((Counts::default(), Vec::new()));
+    let t = Timer::start();
+    par_for(cfg.clients, cfg.clients, 1, |c| {
+        let (counts, lats) = client_loop(cfg, c, &lines);
+        let mut m = merged.lock().unwrap();
+        m.0.sent += counts.sent;
+        m.0.ok += counts.ok;
+        m.0.overloaded += counts.overloaded;
+        m.0.deadline_exceeded += counts.deadline_exceeded;
+        m.0.failed += counts.failed;
+        m.1.extend(lats);
+    });
+    let elapsed_ms = t.ms();
+    if cfg.shutdown {
+        let mut cl = Client::connect(&cfg.socket)?;
+        let line =
+            obj(vec![("id", int(cfg.requests as u64 + 1)), ("verb", jstr("shutdown"))]).render();
+        let _ = cl.call_line(&line);
+    }
+    let (counts, mut lats) = merged.into_inner().unwrap();
+    lats.sort_unstable_by(f64::total_cmp);
+    let pct = |p: f64| if lats.is_empty() { 0.0 } else { percentile_sorted(&lats, p) };
+    Ok(BombardReport {
+        sent: counts.sent,
+        ok: counts.ok,
+        overloaded: counts.overloaded,
+        deadline_exceeded: counts.deadline_exceeded,
+        failed: counts.failed,
+        elapsed_ms,
+        p50_us: pct(50.0),
+        p95_us: pct(95.0),
+        p99_us: pct(99.0),
+        throughput_rps: if elapsed_ms > 0.0 {
+            counts.ok as f64 / (elapsed_ms / 1000.0)
+        } else {
+            0.0
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_is_deterministic_and_covers_the_verbs() {
+        let cfg = BombardConfig {
+            requests: 48,
+            graphs: vec!["a".into(), "b".into()],
+            alphas: vec![0.02, 0.1],
+            ..BombardConfig::default()
+        };
+        let lines = request_lines(&cfg);
+        assert_eq!(lines, request_lines(&cfg), "same seed, same bytes");
+        assert_eq!(lines.len(), 48);
+        let count = |needle: &str| lines.iter().filter(|l| l.contains(needle)).count();
+        assert_eq!(count(r#""verb":"stats""#), 3);
+        assert_eq!(count(r#""verb":"pcg""#), 3);
+        assert_eq!(count(r#""verb":"recover""#), 42);
+        // Every compute line parses as a valid protocol request.
+        for line in &lines {
+            super::super::protocol::Request::parse(line).unwrap();
+        }
+        // A different seed reorders the graph/α draws.
+        let other = request_lines(&BombardConfig { seed: 43, ..cfg });
+        assert_ne!(lines, other);
+    }
+
+    #[test]
+    fn deadline_is_attached_when_configured() {
+        let cfg =
+            BombardConfig { requests: 4, deadline_ms: 250, ..BombardConfig::default() };
+        for line in request_lines(&cfg) {
+            if !line.contains(r#""verb":"stats""#) {
+                assert!(line.contains(r#""deadline_ms":250"#), "{line}");
+            }
+        }
+    }
+
+    #[test]
+    fn classify_buckets_are_disjoint_and_total() {
+        assert_eq!(classify(r#"{"id":1,"ok":true,"recovered":4}"#), Outcome::Ok);
+        assert_eq!(
+            classify(r#"{"id":1,"ok":false,"error":"overloaded","in_flight":4,"cap":4}"#),
+            Outcome::Overloaded
+        );
+        assert_eq!(
+            classify(r#"{"id":1,"ok":false,"error":"deadline_exceeded"}"#),
+            Outcome::Deadline
+        );
+        assert_eq!(classify(r#"{"id":1,"ok":false,"error":"bad_param"}"#), Outcome::Failed);
+        assert_eq!(classify("not json"), Outcome::Failed);
+    }
+
+    #[test]
+    fn run_rejects_empty_mix_and_missing_daemon() {
+        let cfg = BombardConfig { requests: 0, ..BombardConfig::default() };
+        assert!(matches!(run(&cfg), Err(Error::BadParam { name: "requests", .. })));
+        let cfg = BombardConfig { alphas: vec![], ..BombardConfig::default() };
+        assert!(matches!(run(&cfg), Err(Error::BadParam { name: "alphas", .. })));
+        let cfg = BombardConfig {
+            socket: std::path::PathBuf::from("/tmp/pdgrass-no-such-daemon.sock"),
+            ..BombardConfig::default()
+        };
+        assert!(matches!(run(&cfg), Err(Error::Io(_))));
+    }
+}

@@ -1,0 +1,395 @@
+//! The daemon's LRU cache of [`Prepared`] states.
+//!
+//! Keyed by the deterministic graph fingerprint
+//! ([`crate::graph::fingerprint`]): steps 1–3 of Algorithm 1 are a pure
+//! function of the graph, so equal fingerprints mean interchangeable
+//! prepared state — a hit serves a recover at any (α, strategy,
+//! pipeline) combo without re-preparing. Entries are `Arc<Prepared>` so
+//! a handler can keep recovering off an entry that was concurrently
+//! evicted: eviction drops the cache's reference, never the state under
+//! a running request.
+//!
+//! A spec memo maps `(name, scale, seed)` → fingerprint so repeat
+//! spec-addressed requests skip graph regeneration entirely; the memo is
+//! advisory (pruned with its entry on eviction) and never consulted for
+//! fingerprint-addressed requests.
+//!
+//! **Failure containment:** a *prepare* failure (unknown graph, bad
+//! scale, disconnected input) is recorded per spec; after
+//! `failure_cap` consecutive failures the spec is fast-rejected without
+//! burning pool time, until an `evict` resets it. A *recover/pcg*
+//! failure never counts against the entry — bad α on a healthy graph
+//! must not poison the cached prepared state (the graceful-degradation
+//! requirement; the integration test exercises exactly this).
+//!
+//! All coordination is one plain `Mutex` — the critical sections are
+//! pointer-sized bookkeeping (the expensive prepare runs *outside* the
+//! lock), so there is nothing here for the atomics allowlist.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::session::Prepared;
+
+/// Identity of a generatable graph spec: name, scale (by bit pattern —
+/// the memo must distinguish any two floats the generator would), seed.
+type SpecKey = (String, u64, u64);
+
+/// Cumulative cache counters, snapshot via [`PreparedCache::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+struct Entry {
+    prepared: Arc<Prepared>,
+    /// Logical clock of the last touch — smallest is evicted first.
+    last_used: u64,
+    /// Requests served off this entry (diagnostics via `stats`).
+    uses: u64,
+}
+
+#[derive(Default)]
+struct FailureRecord {
+    consecutive: u32,
+    last_error: String,
+}
+
+struct Inner {
+    capacity: usize,
+    failure_cap: u32,
+    entries: HashMap<u64, Entry>,
+    spec_memo: HashMap<SpecKey, u64>,
+    failures: HashMap<SpecKey, FailureRecord>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Bounded, thread-safe LRU cache of prepared sessions. See the module
+/// docs for semantics.
+pub struct PreparedCache {
+    inner: Mutex<Inner>,
+}
+
+impl PreparedCache {
+    /// A cache holding at most `capacity` entries (≥ 1, validated by
+    /// config). `failure_cap` = consecutive prepare failures per spec
+    /// before fast-rejection (0 disables the cap).
+    pub fn new(capacity: usize, failure_cap: u32) -> PreparedCache {
+        PreparedCache {
+            inner: Mutex::new(Inner {
+                capacity: capacity.max(1),
+                failure_cap,
+                entries: HashMap::new(),
+                spec_memo: HashMap::new(),
+                failures: HashMap::new(),
+                clock: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    fn spec_key(name: &str, scale: f64, seed: u64) -> SpecKey {
+        (name.to_string(), scale.to_bits(), seed)
+    }
+
+    /// Look up by fingerprint, counting a hit or miss and refreshing
+    /// recency on hit.
+    pub fn get(&self, fingerprint: u64) -> Option<Arc<Prepared>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        match inner.entries.get_mut(&fingerprint) {
+            Some(e) => {
+                e.last_used = clock;
+                e.uses += 1;
+                inner.hits += 1;
+                Some(e.prepared.clone())
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Look up by spec memo (no graph regeneration on hit). Counts like
+    /// [`PreparedCache::get`]. A memo pointing at an evicted entry is
+    /// pruned and reported as a miss.
+    pub fn get_spec(&self, name: &str, scale: f64, seed: u64) -> Option<Arc<Prepared>> {
+        let key = PreparedCache::spec_key(name, scale, seed);
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        let Some(&fp) = inner.spec_memo.get(&key) else {
+            inner.misses += 1;
+            return None;
+        };
+        match inner.entries.get_mut(&fp) {
+            Some(e) => {
+                e.last_used = clock;
+                e.uses += 1;
+                inner.hits += 1;
+                Some(e.prepared.clone())
+            }
+            None => {
+                inner.spec_memo.remove(&key);
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// If the spec has hit its consecutive-prepare-failure cap, the
+    /// recorded reason; the caller fast-rejects without preparing.
+    pub fn failure_capped(&self, name: &str, scale: f64, seed: u64) -> Option<String> {
+        let key = PreparedCache::spec_key(name, scale, seed);
+        let inner = self.inner.lock().unwrap();
+        if inner.failure_cap == 0 {
+            return None;
+        }
+        inner
+            .failures
+            .get(&key)
+            .filter(|r| r.consecutive >= inner.failure_cap)
+            .map(|r| r.last_error.clone())
+    }
+
+    /// Record a prepare failure for the spec (consecutive count; reset
+    /// by success or evict).
+    pub fn record_prepare_failure(&self, name: &str, scale: f64, seed: u64, error: &str) {
+        let key = PreparedCache::spec_key(name, scale, seed);
+        let mut inner = self.inner.lock().unwrap();
+        let rec = inner.failures.entry(key).or_default();
+        rec.consecutive += 1;
+        rec.last_error = error.to_string();
+    }
+
+    /// Insert a freshly prepared state, evicting least-recently-used
+    /// entries beyond capacity. If the fingerprint is already present
+    /// (two handlers raced the same miss), the existing entry wins and
+    /// is returned — both handlers then share one state. A spec memo is
+    /// recorded when the insert came from a spec-addressed request, and
+    /// any failure record for that spec is cleared.
+    pub fn insert(
+        &self,
+        prepared: Arc<Prepared>,
+        spec: Option<(&str, f64, u64)>,
+    ) -> (Arc<Prepared>, Vec<u64>) {
+        let fp = prepared.fingerprint();
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        if let Some((name, scale, seed)) = spec {
+            let key = PreparedCache::spec_key(name, scale, seed);
+            inner.failures.remove(&key);
+            inner.spec_memo.insert(key, fp);
+        }
+        let kept = match inner.entries.get_mut(&fp) {
+            Some(existing) => {
+                existing.last_used = clock;
+                existing.uses += 1;
+                existing.prepared.clone()
+            }
+            None => {
+                inner
+                    .entries
+                    .insert(fp, Entry { prepared: prepared.clone(), last_used: clock, uses: 1 });
+                prepared
+            }
+        };
+        let mut evicted = Vec::new();
+        while inner.entries.len() > inner.capacity {
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(k, _)| **k != fp)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            let Some(victim) = victim else { break };
+            inner.entries.remove(&victim);
+            inner.spec_memo.retain(|_, v| *v != victim);
+            inner.evictions += 1;
+            evicted.push(victim);
+        }
+        (kept, evicted)
+    }
+
+    /// Drop one entry (returning whether it existed) and clear every
+    /// failure record whose memo pointed at it. Explicit evictions do
+    /// not count in the `evictions` stat (that tracks LRU pressure).
+    pub fn evict(&self, fingerprint: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let existed = inner.entries.remove(&fingerprint).is_some();
+        let stale: Vec<SpecKey> = inner
+            .spec_memo
+            .iter()
+            .filter(|(_, v)| **v == fingerprint)
+            .map(|(k, _)| k.clone())
+            .collect();
+        for key in stale {
+            inner.spec_memo.remove(&key);
+            inner.failures.remove(&key);
+        }
+        existed
+    }
+
+    /// Drop every entry, memo, and failure record. Returns how many
+    /// entries were dropped.
+    pub fn evict_all(&self) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let n = inner.entries.len();
+        inner.entries.clear();
+        inner.spec_memo.clear();
+        inner.failures.clear();
+        n
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            entries: inner.entries.len(),
+            capacity: inner.capacity,
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+        }
+    }
+
+    /// Resident fingerprints with their use counts, sorted by
+    /// fingerprint so the `stats` response is deterministic.
+    pub fn resident(&self) -> Vec<(u64, u64)> {
+        let inner = self.inner.lock().unwrap();
+        let mut rows: Vec<(u64, u64)> =
+            inner.entries.iter().map(|(fp, e)| (*fp, e.uses)).collect();
+        rows.sort_unstable_by_key(|(fp, _)| *fp);
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::Sparsify;
+    use crate::util::Rng;
+
+    fn prep(seed: u64) -> Arc<Prepared> {
+        let g = crate::gen::grid(8, 8, 0.5, &mut Rng::new(seed));
+        Arc::new(Sparsify::graph(g).prepare().unwrap())
+    }
+
+    #[test]
+    fn hit_miss_and_recency_accounting() {
+        let cache = PreparedCache::new(4, 0);
+        let a = prep(1);
+        let fp = a.fingerprint();
+        assert!(cache.get(fp).is_none());
+        cache.insert(a.clone(), Some(("a", 1.0, 1)));
+        assert!(cache.get(fp).is_some());
+        assert!(cache.get_spec("a", 1.0, 1).is_some());
+        assert!(cache.get_spec("a", 2.0, 1).is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (2, 2, 1));
+        assert_eq!(cache.resident().len(), 1);
+        assert_eq!(cache.resident()[0].0, fp);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_at_capacity() {
+        let cache = PreparedCache::new(2, 0);
+        let (a, b, c) = (prep(1), prep(2), prep(3));
+        let (fa, fb, fc) = (a.fingerprint(), b.fingerprint(), c.fingerprint());
+        assert_ne!(fa, fb);
+        cache.insert(a, None);
+        cache.insert(b, None);
+        // Touch a, so b is now least recently used.
+        assert!(cache.get(fa).is_some());
+        let (_, evicted) = cache.insert(c, None);
+        assert_eq!(evicted, vec![fb]);
+        assert!(cache.get(fb).is_none());
+        assert!(cache.get(fa).is_some());
+        assert!(cache.get(fc).is_some());
+        assert_eq!(cache.stats().evictions, 1);
+        assert_eq!(cache.stats().entries, 2);
+    }
+
+    #[test]
+    fn racing_inserts_share_one_entry() {
+        let cache = PreparedCache::new(4, 0);
+        let g = crate::gen::grid(8, 8, 0.5, &mut Rng::new(9));
+        let first = Arc::new(Sparsify::graph(g.clone()).prepare().unwrap());
+        let second = Arc::new(Sparsify::graph(g).prepare().unwrap());
+        assert_eq!(first.fingerprint(), second.fingerprint());
+        let (kept1, _) = cache.insert(first.clone(), None);
+        let (kept2, _) = cache.insert(second, None);
+        // The first insert wins; the racing duplicate is discarded.
+        assert!(Arc::ptr_eq(&kept1, &first));
+        assert!(Arc::ptr_eq(&kept2, &first));
+        assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn failure_cap_trips_and_evict_resets() {
+        let cache = PreparedCache::new(2, 2);
+        assert!(cache.failure_capped("bad", 1.0, 7).is_none());
+        cache.record_prepare_failure("bad", 1.0, 7, "boom");
+        assert!(cache.failure_capped("bad", 1.0, 7).is_none(), "below cap");
+        cache.record_prepare_failure("bad", 1.0, 7, "boom again");
+        assert_eq!(cache.failure_capped("bad", 1.0, 7).as_deref(), Some("boom again"));
+        // Distinct specs are tracked independently.
+        assert!(cache.failure_capped("bad", 2.0, 7).is_none());
+        // A successful insert for the spec clears its record.
+        let a = prep(1);
+        cache.insert(a.clone(), Some(("bad", 1.0, 7)));
+        assert!(cache.failure_capped("bad", 1.0, 7).is_none());
+        // Trip it again, then evict-by-fingerprint also resets (the
+        // documented operator escape hatch).
+        cache.record_prepare_failure("bad", 1.0, 7, "x");
+        cache.record_prepare_failure("bad", 1.0, 7, "x");
+        assert!(cache.failure_capped("bad", 1.0, 7).is_some());
+        assert!(cache.evict(a.fingerprint()));
+        assert!(cache.failure_capped("bad", 1.0, 7).is_none());
+        assert!(!cache.evict(a.fingerprint()), "second evict is a no-op");
+    }
+
+    #[test]
+    fn failure_cap_zero_disables() {
+        let cache = PreparedCache::new(2, 0);
+        for _ in 0..10 {
+            cache.record_prepare_failure("bad", 1.0, 7, "boom");
+        }
+        assert!(cache.failure_capped("bad", 1.0, 7).is_none());
+    }
+
+    #[test]
+    fn evict_all_clears_everything() {
+        let cache = PreparedCache::new(4, 1);
+        cache.insert(prep(1), Some(("a", 1.0, 1)));
+        cache.insert(prep(2), Some(("b", 1.0, 1)));
+        assert_eq!(cache.evict_all(), 2);
+        assert_eq!(cache.stats().entries, 0);
+        assert!(cache.get_spec("a", 1.0, 1).is_none());
+    }
+
+    #[test]
+    fn evicted_entry_survives_for_holders() {
+        let cache = PreparedCache::new(1, 0);
+        let a = prep(1);
+        cache.insert(a.clone(), None);
+        let held = cache.get(a.fingerprint()).unwrap();
+        let (_, evicted) = cache.insert(prep(2), None);
+        assert_eq!(evicted, vec![a.fingerprint()]);
+        // The held Arc still recovers fine after eviction.
+        let r = held.recover(&crate::session::RecoverOpts::new(0.05)).unwrap();
+        assert!(!r.edges().is_empty());
+    }
+}

@@ -1,0 +1,446 @@
+//! Minimal JSON value, parser, and renderer — std-only, like the rest of
+//! the vendor policy (same spirit as `config`'s hand-rolled TOML subset).
+//!
+//! The serve protocol is line-delimited JSON, so this module only needs
+//! (a) a recursive-descent parser for a full JSON document on one line
+//! and (b) a deterministic renderer. Objects are a `Vec<(String, Value)>`
+//! rather than a map: field order is preserved exactly as built, which is
+//! what makes identical responses **byte**-identical — the protocol's
+//! bitwise-determinism contract would be unverifiable over a `HashMap`'s
+//! iteration order.
+//!
+//! Number rendering: values that are mathematically integers with
+//! magnitude below 2⁵³ print as integers (`42`, not `42.0`), everything
+//! else prints via Rust's shortest-roundtrip `f64` formatting. Both are
+//! deterministic functions of the bit pattern.
+
+use std::fmt::Write as _;
+
+/// A JSON document. Objects preserve insertion order (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Object field lookup (first match; protocol objects never repeat
+    /// keys).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric field as `f64`.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Numeric field as a non-negative integer (rejects fractions,
+    /// negatives, and magnitudes above 2⁵³ where `f64` loses exactness).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n <= 9_007_199_254_740_992.0 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// String field.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Boolean field.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array field.
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Render as compact JSON (no whitespace). Deterministic: object
+    /// fields print in insertion order, numbers as documented on the
+    /// module.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(true) => out.push_str("true"),
+            Value::Bool(false) => out.push_str("false"),
+            Value::Num(n) => render_num(*n, out),
+            Value::Str(s) => render_str(s, out),
+            Value::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_str(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Convenience constructors so protocol code reads declaratively.
+pub fn num(n: f64) -> Value {
+    Value::Num(n)
+}
+pub fn int(n: u64) -> Value {
+    Value::Num(n as f64)
+}
+pub fn str(s: impl Into<String>) -> Value {
+    Value::Str(s.into())
+}
+pub fn obj(fields: Vec<(&str, Value)>) -> Value {
+    Value::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn render_num(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        // JSON has no NaN/Inf; the protocol never emits them, but render
+        // defensively as null rather than producing invalid JSON.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 9_007_199_254_740_992.0 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
+fn render_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse one complete JSON document. Trailing whitespace is allowed;
+/// trailing non-whitespace is an error (a protocol line is one document).
+pub fn parse(input: &str) -> Result<Value, String> {
+    let bytes = input.as_bytes();
+    let mut p = Parser { bytes, pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != bytes.len() {
+        return Err(format!("trailing content at byte {}", p.pos));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.bump() == Some(b) {
+            Ok(())
+        } else {
+            Err(format!("expected `{}` at byte {}", b as char, self.pos.saturating_sub(1)))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Value) -> Result<Value, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, String> {
+        match self.peek() {
+            Some(b'n') => self.literal("null", Value::Null),
+            Some(b't') => self.literal("true", Value::Bool(true)),
+            Some(b'f') => self.literal("false", Value::Bool(false)),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected `{}` at byte {}", c as char, self.pos)),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn array(&mut self) -> Result<Value, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Value::Arr(items)),
+                _ => return Err(format!("expected `,` or `]` at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Value::Obj(fields)),
+                _ => return Err(format!("expected `,` or `}}` at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            // Consume one UTF-8 scalar: re-borrow as str from pos.
+            let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                .map_err(|_| "invalid utf-8".to_string())?;
+            let mut chars = rest.chars();
+            let c = chars.next().ok_or("unterminated string")?;
+            self.pos += c.len_utf8();
+            match c {
+                '"' => return Ok(s),
+                '\\' => {
+                    let esc = chars.next().ok_or("unterminated escape")?;
+                    self.pos += esc.len_utf8();
+                    match esc {
+                        '"' => s.push('"'),
+                        '\\' => s.push('\\'),
+                        '/' => s.push('/'),
+                        'n' => s.push('\n'),
+                        'r' => s.push('\r'),
+                        't' => s.push('\t'),
+                        'b' => s.push('\u{0008}'),
+                        'f' => s.push('\u{000c}'),
+                        'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .ok_or("truncated \\u escape")?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            self.pos += 4;
+                            // Surrogate pairs: \uD800-\uDBFF must pair
+                            // with a following \uDC00-\uDFFF.
+                            let cp = if (0xd800..0xdc00).contains(&cp) {
+                                if self.bytes.get(self.pos..self.pos + 2) != Some(&b"\\u"[..]) {
+                                    return Err("lone high surrogate".to_string());
+                                }
+                                self.pos += 2;
+                                let hex2 = self
+                                    .bytes
+                                    .get(self.pos..self.pos + 4)
+                                    .and_then(|h| std::str::from_utf8(h).ok())
+                                    .ok_or("truncated surrogate pair")?;
+                                let lo = u32::from_str_radix(hex2, 16)
+                                    .map_err(|_| "bad \\u escape".to_string())?;
+                                self.pos += 4;
+                                if !(0xdc00..0xe000).contains(&lo) {
+                                    return Err("invalid low surrogate".to_string());
+                                }
+                                0x10000 + ((cp - 0xd800) << 10) + (lo - 0xdc00)
+                            } else if (0xdc00..0xe000).contains(&cp) {
+                                return Err("lone low surrogate".to_string());
+                            } else {
+                                cp
+                            };
+                            s.push(char::from_u32(cp).ok_or("invalid code point")?);
+                        }
+                        other => return Err(format!("unknown escape `\\{other}`")),
+                    }
+                }
+                c => s.push(c),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<f64>()
+            .map(Value::Num)
+            .map_err(|_| format!("invalid number `{text}` at byte {start}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_protocol_shaped_documents() {
+        let line = r#"{"id":7,"verb":"recover","alpha":0.05,"opts":{"shard_min":4096,"jbp":true},"tags":["a","b"],"note":null}"#;
+        let v = parse(line).unwrap();
+        assert_eq!(v.get("id").unwrap().as_u64(), Some(7));
+        assert_eq!(v.get("verb").unwrap().as_str(), Some("recover"));
+        assert_eq!(v.get("alpha").unwrap().as_f64(), Some(0.05));
+        assert_eq!(v.get("opts").unwrap().get("shard_min").unwrap().as_u64(), Some(4096));
+        assert_eq!(v.get("opts").unwrap().get("jbp").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("tags").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("note"), Some(&Value::Null));
+        // Render → parse is a fixed point (field order preserved).
+        assert_eq!(parse(&v.render()).unwrap(), v);
+        assert_eq!(v.render(), parse(&v.render()).unwrap().render());
+    }
+
+    #[test]
+    fn integers_render_without_fraction() {
+        assert_eq!(int(42).render(), "42");
+        assert_eq!(num(42.0).render(), "42");
+        assert_eq!(num(-3.0).render(), "-3");
+        assert_eq!(num(0.5).render(), "0.5");
+        assert_eq!(int(u64::MAX >> 12).render(), format!("{}", u64::MAX >> 12));
+        assert_eq!(num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let s = "quote\" slash\\ newline\n tab\t unicode☃ ctrl\u{0001}";
+        let rendered = str(s).render();
+        assert_eq!(parse(&rendered).unwrap().as_str(), Some(s));
+        // Incoming escaped forms parse too.
+        assert_eq!(parse(r#""☃""#).unwrap().as_str(), Some("☃"));
+        assert_eq!(parse(r#""😀""#).unwrap().as_str(), Some("😀"));
+        assert_eq!(parse(r#""\/""#).unwrap().as_str(), Some("/"));
+    }
+
+    #[test]
+    fn malformed_documents_are_errors_not_panics() {
+        for bad in [
+            "", "{", "}", "[1,", r#"{"a"}"#, r#"{"a":}"#, "nul", "tru", "01x", "\"unterminated",
+            r#""\q""#, r#""\ud800""#, r#""\udc00""#, "{} trailing", "1 2",
+        ] {
+            assert!(parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn as_u64_is_strict() {
+        assert_eq!(parse("3.5").unwrap().as_u64(), None);
+        assert_eq!(parse("-1").unwrap().as_u64(), None);
+        assert_eq!(parse("1e300").unwrap().as_u64(), None);
+        assert_eq!(parse("12").unwrap().as_u64(), Some(12));
+        assert_eq!(parse("12").unwrap().as_f64(), Some(12.0));
+    }
+
+    #[test]
+    fn object_field_order_is_preserved_bytewise() {
+        let a = obj(vec![("z", int(1)), ("a", int(2))]);
+        assert_eq!(a.render(), r#"{"z":1,"a":2}"#);
+        let b = obj(vec![("a", int(2)), ("z", int(1))]);
+        assert_eq!(b.render(), r#"{"a":2,"z":1}"#);
+        assert_ne!(a.render(), b.render());
+    }
+}

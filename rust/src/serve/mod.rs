@@ -1,0 +1,88 @@
+//! Sparsification-as-a-service: a multi-graph session daemon.
+//!
+//! Algorithm 1 splits cleanly into an expensive, graph-pure half (steps
+//! 1–3: Laplacian, spanning tree, density ordering — [`crate::Prepared`])
+//! and a cheap, parameter-sensitive half (step 4: recovery at some α /
+//! strategy / pipeline). That shape *is* a serving layer: prepare once,
+//! cache by content, answer many recover/PCG requests against the cached
+//! state. This module is that daemon.
+//!
+//! # Architecture
+//!
+//! - [`protocol`] — line-delimited JSON over a Unix-domain socket
+//!   (std-only; no serde, no tokio). Verbs: `prepare`, `recover`, `pcg`,
+//!   `stats`, `evict`, `shutdown`. Success responses are restricted to
+//!   deterministic content so identical requests produce byte-identical
+//!   lines; [`protocol::Client`] is the blocking client.
+//! - [`cache`] — LRU [`cache::PreparedCache`] keyed by the deterministic
+//!   graph fingerprint ([`crate::graph::fingerprint`]), with a spec memo
+//!   and per-spec consecutive-failure caps.
+//! - [`admission`] — bounded in-flight gate: past `max_in_flight`,
+//!   requests get a typed `overloaded` rejection instead of queueing.
+//! - [`server`] — socket lifecycle, per-connection handler threads (via
+//!   [`crate::par::spawn_service`]; compute still runs on the shared
+//!   pool), per-request deadlines, graceful shutdown.
+//! - [`summary`] — JSON-lines per-request run summaries (timings, cache
+//!   hit/miss, outcome) and the daemon counters behind `stats`.
+//! - [`bombard`] — seeded deterministic load replay reporting throughput
+//!   and p50/p95/p99 latency.
+//! - [`json`] — the minimal JSON value/parser the wire format rides on.
+//!
+//! # Quickstart
+//!
+//! Serve (defaults: socket `/tmp/pdgrass.sock`, 8 cached graphs, 4
+//! in-flight requests, summaries to stderr):
+//!
+//! ```text
+//! pdgrass serve --socket /tmp/pdgrass.sock --cache-capacity 8 --max-in-flight 4
+//! ```
+//!
+//! Talk to it (any newline-framed socket client works):
+//!
+//! ```text
+//! {"id":1,"verb":"prepare","graph":{"name":"15-M6","scale":0.05}}
+//! {"id":2,"verb":"recover","graph":{"name":"15-M6","scale":0.05},"alpha":0.05}
+//! {"id":3,"verb":"stats"}
+//! ```
+//!
+//! Replay a deterministic load and print percentiles (exits nonzero if
+//! any request fails for a reason back-pressure does not explain):
+//!
+//! ```text
+//! pdgrass bombard --socket /tmp/pdgrass.sock --requests 64 --clients 4 \
+//!     --graphs 15-M6 --alphas 0.02,0.05 --scale 0.02 --seed 42
+//! ```
+//!
+//! Or in-process:
+//!
+//! ```no_run
+//! use pdgrass::config::ServeConfig;
+//! use pdgrass::serve::{protocol::Client, server::Server};
+//!
+//! let mut cfg = ServeConfig::default();
+//! cfg.socket = std::path::PathBuf::from("/tmp/pdgrass-demo.sock");
+//! let server = Server::start(cfg)?;
+//! let mut client = Client::connect(server.socket())?;
+//! let resp = client.call_line(
+//!     r#"{"id":1,"verb":"recover","graph":{"name":"15-M6","scale":0.02},"alpha":0.05}"#,
+//! )?;
+//! assert!(resp.contains(r#""ok":true"#));
+//! server.stop();
+//! server.wait();
+//! # Ok::<(), Box<dyn std::error::Error>>(())
+//! ```
+
+pub mod admission;
+pub mod bombard;
+pub mod cache;
+pub mod json;
+pub mod protocol;
+pub mod server;
+pub mod summary;
+
+pub use admission::{Admission, AdmissionStats};
+pub use bombard::{BombardConfig, BombardReport};
+pub use cache::{CacheStats, PreparedCache};
+pub use protocol::Client;
+pub use server::Server;
+pub use summary::{RequestSummary, SummaryLog};

@@ -1,0 +1,531 @@
+//! Wire protocol of the serve daemon: line-delimited JSON over a
+//! Unix-domain socket.
+//!
+//! Each request is one JSON object on one line; each response is one
+//! JSON object on one line, in request order per connection. Requests
+//! carry a client-chosen `id` that the response echoes, a verb, and
+//! verb-specific fields:
+//!
+//! ```json
+//! {"id":1,"verb":"prepare","graph":{"name":"15-M6","scale":0.05},"pipeline":"streamed"}
+//! {"id":2,"verb":"recover","fingerprint":"0x9ae1d0...","alpha":0.05,"strategy":"sharded"}
+//! {"id":3,"verb":"pcg","graph":{"name":"15-M6","scale":0.05},"alpha":0.05,"tol":1e-3,"maxit":500}
+//! {"id":4,"verb":"stats"}
+//! {"id":5,"verb":"evict","fingerprint":"0x9ae1d0..."}
+//! {"id":6,"verb":"shutdown"}
+//! ```
+//!
+//! `recover` and `pcg` address their graph either by a full spec
+//! (`"graph"`, which the daemon prepares and caches on miss) or by bare
+//! `"fingerprint"` (cache-only; a miss is a typed `unknown_graph`
+//! error — the client must send the spec at least once). Graph
+//! fingerprints travel as `"0x"`-prefixed 16-digit hex strings
+//! ([`crate::graph::fingerprint_hex`]), never as JSON numbers — `f64`
+//! cannot hold 64 bits exactly.
+//!
+//! **Determinism contract:** success responses contain only values that
+//! are deterministic functions of the request content — fingerprints,
+//! edge counts, edge hashes, PCG iterates. Timings and cache hit/miss
+//! live in the daemon's JSON-lines summary log and the `stats` verb
+//! instead, so two identical requests always produce **byte-identical**
+//! response lines (the integration test asserts this against a direct
+//! in-process `Prepared::recover`).
+//!
+//! Failures are `{"ok":false,"error":<kind>,"message":...}` with the
+//! typed kinds of [`enum@Error`] (`overloaded` and `deadline_exceeded`
+//! carry their fields); lines that don't parse as a valid request get
+//! kind `protocol` and the connection stays open.
+
+use std::io::{BufRead, BufReader, Read, Write};
+
+use super::json::{self, int, obj, str as jstr, Value};
+use crate::error::Error;
+use crate::graph::{fingerprint_hex, parse_fingerprint};
+use crate::recovery::{Pipeline, Strategy};
+use crate::session::RecoverOpts;
+
+/// Default α when a recover/pcg request omits it (paper's sparsest
+/// operating point).
+pub const DEFAULT_ALPHA: f64 = 0.02;
+/// Default PCG tolerance / iteration cap when a pcg request omits them.
+pub const DEFAULT_TOL: f64 = 1e-3;
+pub const DEFAULT_MAXIT: usize = 1000;
+
+/// How a request names its graph.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Target {
+    /// Full spec: prepare (and cache) on miss.
+    Spec(GraphSpec),
+    /// Bare fingerprint: cache-only, `unknown_graph` on miss.
+    Fingerprint(u64),
+}
+
+/// A generatable suite graph: `(name, scale, seed)` fully determines the
+/// edge list, so the spec is as good as shipping the graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphSpec {
+    pub name: String,
+    pub scale: f64,
+    pub seed: u64,
+}
+
+/// Step-4 knobs a recover/pcg request may override. `threads == 0`
+/// means "the daemon's configured default".
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReqOpts {
+    pub alpha: f64,
+    pub strategy: Strategy,
+    pub pipeline: Pipeline,
+    pub shard_min: usize,
+    pub threads: usize,
+}
+
+impl ReqOpts {
+    /// Resolve into full [`RecoverOpts`] given the daemon's default
+    /// thread count.
+    pub fn recover_opts(&self, default_threads: usize) -> RecoverOpts {
+        let threads = if self.threads == 0 { default_threads } else { self.threads };
+        RecoverOpts {
+            strategy: self.strategy,
+            pipeline: self.pipeline,
+            shard_min: self.shard_min,
+            ..RecoverOpts::with_threads(self.alpha, threads)
+        }
+    }
+}
+
+/// One parsed request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Client-chosen id, echoed in the response.
+    pub id: u64,
+    /// Per-request deadline override, ms (`None` → daemon default).
+    pub deadline_ms: Option<u64>,
+    pub verb: Verb,
+}
+
+/// The request verbs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Verb {
+    /// Run Algorithm-1 steps 1–3 for a graph and cache the result.
+    Prepare { spec: GraphSpec, pipeline: Pipeline, threads: usize },
+    /// Step 4 at the requested (α, strategy, pipeline, shard_min) off
+    /// the cached prepared state (filling the cache on a spec miss).
+    Recover { target: Target, opts: ReqOpts, return_edges: bool },
+    /// Recover, assemble the sparsifier, and run the PCG quality metric.
+    Pcg { target: Target, opts: ReqOpts, rhs_seed: u64, tol: f64, maxit: usize },
+    /// Daemon counters: per-verb totals, cache and admission stats.
+    Stats,
+    /// Drop one cached entry (by fingerprint) or all of them.
+    Evict { fingerprint: Option<u64> },
+    /// Stop accepting, drain, unlink the socket, exit.
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one protocol line. Errors are protocol-level (malformed
+    /// JSON, missing/mistyped fields) and are reported with kind
+    /// `protocol`; they carry the offending request's id when one could
+    /// be read.
+    pub fn parse(line: &str) -> Result<Request, (Option<u64>, String)> {
+        let v = json::parse(line).map_err(|e| (None, format!("malformed JSON: {e}")))?;
+        let id = v.get("id").and_then(Value::as_u64);
+        Request::from_value(&v).map_err(|msg| (id, msg))
+    }
+
+    fn from_value(v: &Value) -> Result<Request, String> {
+        let id = field_u64(v, "id")?.ok_or("missing `id`")?;
+        let deadline_ms = field_u64(v, "deadline_ms")?;
+        let verb_name = field_str(v, "verb")?.ok_or("missing `verb`")?;
+        let verb = match verb_name {
+            "prepare" => {
+                let spec = graph_spec(v)?.ok_or("prepare requires a `graph` object")?;
+                Verb::Prepare {
+                    spec,
+                    pipeline: field_pipeline(v)?,
+                    threads: field_u64(v, "threads")?.unwrap_or(0) as usize,
+                }
+            }
+            "recover" => Verb::Recover {
+                target: target(v)?,
+                opts: req_opts(v)?,
+                return_edges: field_bool(v, "return_edges")?.unwrap_or(false),
+            },
+            "pcg" => Verb::Pcg {
+                target: target(v)?,
+                opts: req_opts(v)?,
+                rhs_seed: field_u64(v, "rhs_seed")?.unwrap_or(1),
+                tol: field_f64(v, "tol")?.unwrap_or(DEFAULT_TOL),
+                maxit: field_u64(v, "maxit")?.unwrap_or(DEFAULT_MAXIT as u64) as usize,
+            },
+            "stats" => Verb::Stats,
+            "evict" => Verb::Evict { fingerprint: field_fingerprint(v)? },
+            "shutdown" => Verb::Shutdown,
+            other => return Err(format!("unknown verb {other:?}")),
+        };
+        Ok(Request { id, deadline_ms, verb })
+    }
+}
+
+fn field_u64(v: &Value, key: &str) -> Result<Option<u64>, String> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(f) => f.as_u64().map(Some).ok_or(format!("`{key}` must be a non-negative integer")),
+    }
+}
+
+fn field_f64(v: &Value, key: &str) -> Result<Option<f64>, String> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(f) => f.as_f64().map(Some).ok_or(format!("`{key}` must be a number")),
+    }
+}
+
+fn field_bool(v: &Value, key: &str) -> Result<Option<bool>, String> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(f) => f.as_bool().map(Some).ok_or(format!("`{key}` must be a boolean")),
+    }
+}
+
+fn field_str<'v>(v: &'v Value, key: &str) -> Result<Option<&'v str>, String> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(f) => f.as_str().map(Some).ok_or(format!("`{key}` must be a string")),
+    }
+}
+
+fn field_fingerprint(v: &Value) -> Result<Option<u64>, String> {
+    match field_str(v, "fingerprint")? {
+        None => Ok(None),
+        Some(s) => parse_fingerprint(s)
+            .map(Some)
+            .ok_or(format!("`fingerprint` must be 0x-prefixed hex, got {s:?}")),
+    }
+}
+
+fn field_pipeline(v: &Value) -> Result<Pipeline, String> {
+    match field_str(v, "pipeline")? {
+        None => Ok(Pipeline::Barrier),
+        Some(s) => s.parse::<Pipeline>().map_err(|e| e.to_string()),
+    }
+}
+
+fn graph_spec(v: &Value) -> Result<Option<GraphSpec>, String> {
+    let Some(g) = v.get("graph") else {
+        return Ok(None);
+    };
+    if !matches!(g, Value::Obj(_)) {
+        return Err("`graph` must be an object".to_string());
+    }
+    let name = field_str(g, "name")?.ok_or("`graph` requires a `name`")?.to_string();
+    let scale = field_f64(g, "scale")?.unwrap_or(1.0);
+    let seed = field_u64(g, "seed")?.unwrap_or(crate::gen::DEFAULT_SEED);
+    Ok(Some(GraphSpec { name, scale, seed }))
+}
+
+fn target(v: &Value) -> Result<Target, String> {
+    let fp = field_fingerprint(v)?;
+    let spec = graph_spec(v)?;
+    match (fp, spec) {
+        (Some(_), Some(_)) => Err("give either `graph` or `fingerprint`, not both".to_string()),
+        (Some(fp), None) => Ok(Target::Fingerprint(fp)),
+        (None, Some(spec)) => Ok(Target::Spec(spec)),
+        (None, None) => Err("missing target: give `graph` or `fingerprint`".to_string()),
+    }
+}
+
+fn req_opts(v: &Value) -> Result<ReqOpts, String> {
+    let strategy = match field_str(v, "strategy")? {
+        None => Strategy::Mixed,
+        Some(s) => s.parse::<Strategy>().map_err(|e| e.to_string())?,
+    };
+    Ok(ReqOpts {
+        alpha: field_f64(v, "alpha")?.unwrap_or(DEFAULT_ALPHA),
+        strategy,
+        pipeline: field_pipeline(v)?,
+        shard_min: field_u64(v, "shard_min")?.unwrap_or(4096) as usize,
+        threads: field_u64(v, "threads")?.unwrap_or(0) as usize,
+    })
+}
+
+/// Stable wire name of each typed error kind.
+pub fn error_kind(e: &Error) -> &'static str {
+    match e {
+        Error::Overloaded { .. } => "overloaded",
+        Error::DeadlineExceeded { .. } => "deadline_exceeded",
+        Error::BadParam { .. } => "bad_param",
+        Error::Disconnected { .. } => "disconnected",
+        Error::UnknownGraph { .. } => "unknown_graph",
+        Error::NoConvergence { .. } => "no_convergence",
+        Error::NotPositiveDefinite { .. } => "not_positive_definite",
+        Error::Config(_) => "config",
+        Error::Io(_) => "io",
+    }
+}
+
+/// Build a success response: `{"id":..,"ok":true, <fields>}`.
+pub fn ok_response(id: u64, fields: Vec<(&str, Value)>) -> Value {
+    let mut all = vec![("id", int(id)), ("ok", Value::Bool(true))];
+    all.extend(fields);
+    obj(all)
+}
+
+/// Build a typed error response. `overloaded` and `deadline_exceeded`
+/// carry their structured fields so clients can back off / re-budget
+/// without parsing the message.
+pub fn error_response(id: Option<u64>, e: &Error) -> Value {
+    let mut fields = vec![
+        ("id", id.map(int).unwrap_or(Value::Null)),
+        ("ok", Value::Bool(false)),
+        ("error", jstr(error_kind(e))),
+        ("message", jstr(e.to_string())),
+    ];
+    match e {
+        Error::Overloaded { in_flight, cap } => {
+            fields.push(("in_flight", int(*in_flight as u64)));
+            fields.push(("cap", int(*cap as u64)));
+        }
+        Error::DeadlineExceeded { elapsed_ms, deadline_ms } => {
+            fields.push(("elapsed_ms", int(*elapsed_ms)));
+            fields.push(("deadline_ms", int(*deadline_ms)));
+        }
+        _ => {}
+    }
+    obj(fields)
+}
+
+/// Build a protocol-level error response (the line was not a valid
+/// request). The connection stays open after these.
+pub fn protocol_error_response(id: Option<u64>, message: &str) -> Value {
+    obj(vec![
+        ("id", id.map(int).unwrap_or(Value::Null)),
+        ("ok", Value::Bool(false)),
+        ("error", jstr("protocol")),
+        ("message", jstr(message)),
+    ])
+}
+
+/// Render a fingerprint the way every response field does.
+pub fn fp_value(fp: u64) -> Value {
+    jstr(fingerprint_hex(fp))
+}
+
+/// Blocking protocol client over a Unix-domain socket — used by the
+/// bombard load generator, the integration tests, and scriptable from
+/// `pdgrass bombard`'s building blocks.
+pub struct Client {
+    writer: std::os::unix::net::UnixStream,
+    reader: BufReader<std::os::unix::net::UnixStream>,
+}
+
+impl Client {
+    /// Connect to a daemon's socket.
+    pub fn connect(path: &std::path::Path) -> std::io::Result<Client> {
+        let stream = std::os::unix::net::UnixStream::connect(path)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { writer: stream, reader })
+    }
+
+    /// Send one raw request line, receive one raw response line (without
+    /// the trailing newline). The raw-line form exists so tests can
+    /// assert byte identity of responses.
+    pub fn call_line(&mut self, line: &str) -> std::io::Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            ));
+        }
+        while resp.ends_with('\n') || resp.ends_with('\r') {
+            resp.pop();
+        }
+        Ok(resp)
+    }
+
+    /// Send a request document, parse the response document.
+    pub fn call(&mut self, request: &Value) -> std::io::Result<Value> {
+        let line = self.call_line(&request.render())?;
+        json::parse(&line)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+}
+
+/// Read one line (newline-stripped) from a buffered reader — the
+/// server-side receive primitive; `Ok(None)` is a clean EOF.
+pub fn read_line<R: Read>(reader: &mut BufReader<R>) -> std::io::Result<Option<String>> {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(Some(line))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_examples() {
+        let r = Request::parse(
+            r#"{"id":1,"verb":"prepare","graph":{"name":"15-M6","scale":0.05},"pipeline":"streamed"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.id, 1);
+        assert_eq!(r.deadline_ms, None);
+        match r.verb {
+            Verb::Prepare { spec, pipeline, threads } => {
+                assert_eq!(spec.name, "15-M6");
+                assert_eq!(spec.scale, 0.05);
+                assert_eq!(spec.seed, crate::gen::DEFAULT_SEED);
+                assert_eq!(pipeline, Pipeline::Streamed);
+                assert_eq!(threads, 0);
+            }
+            other => panic!("expected Prepare, got {other:?}"),
+        }
+
+        let r = Request::parse(
+            r#"{"id":2,"verb":"recover","fingerprint":"0x2b4dac9cd7c1de97","alpha":0.05,"strategy":"sharded","return_edges":true,"deadline_ms":250}"#,
+        )
+        .unwrap();
+        assert_eq!(r.deadline_ms, Some(250));
+        match r.verb {
+            Verb::Recover { target, opts, return_edges } => {
+                assert_eq!(target, Target::Fingerprint(0x2b4d_ac9c_d7c1_de97));
+                assert_eq!(opts.alpha, 0.05);
+                assert_eq!(opts.strategy, Strategy::Sharded);
+                assert_eq!(opts.pipeline, Pipeline::Barrier);
+                assert_eq!(opts.shard_min, 4096);
+                assert_eq!(opts.threads, 0);
+                assert!(return_edges);
+            }
+            other => panic!("expected Recover, got {other:?}"),
+        }
+
+        let r = Request::parse(
+            r#"{"id":3,"verb":"pcg","graph":{"name":"15-M6","scale":0.05,"seed":7},"tol":0.001,"maxit":500}"#,
+        )
+        .unwrap();
+        match r.verb {
+            Verb::Pcg { target, opts, rhs_seed, tol, maxit } => {
+                assert_eq!(
+                    target,
+                    Target::Spec(GraphSpec { name: "15-M6".into(), scale: 0.05, seed: 7 })
+                );
+                assert_eq!(opts.alpha, DEFAULT_ALPHA);
+                assert_eq!(rhs_seed, 1);
+                assert_eq!(tol, 1e-3);
+                assert_eq!(maxit, 500);
+            }
+            other => panic!("expected Pcg, got {other:?}"),
+        }
+
+        assert_eq!(Request::parse(r#"{"id":4,"verb":"stats"}"#).unwrap().verb, Verb::Stats);
+        assert_eq!(
+            Request::parse(r#"{"id":5,"verb":"evict","fingerprint":"0xdeadbeef"}"#).unwrap().verb,
+            Verb::Evict { fingerprint: Some(0xdead_beef) }
+        );
+        assert_eq!(
+            Request::parse(r#"{"id":5,"verb":"evict"}"#).unwrap().verb,
+            Verb::Evict { fingerprint: None }
+        );
+        assert_eq!(Request::parse(r#"{"id":6,"verb":"shutdown"}"#).unwrap().verb, Verb::Shutdown);
+    }
+
+    #[test]
+    fn protocol_errors_carry_the_id_when_readable() {
+        // Unreadable id → None.
+        assert_eq!(Request::parse("not json").unwrap_err().0, None);
+        // Readable id, bad verb → Some(id).
+        let (id, msg) = Request::parse(r#"{"id":9,"verb":"explode"}"#).unwrap_err();
+        assert_eq!(id, Some(9));
+        assert!(msg.contains("explode"), "{msg}");
+        // Missing verb / id.
+        assert!(Request::parse(r#"{"id":1}"#).is_err());
+        assert!(Request::parse(r#"{"verb":"stats"}"#).is_err());
+        // Both graph and fingerprint.
+        let (_, msg) = Request::parse(
+            r#"{"id":1,"verb":"recover","graph":{"name":"g"},"fingerprint":"0x1"}"#,
+        )
+        .unwrap_err();
+        assert!(msg.contains("not both"), "{msg}");
+        // Neither.
+        assert!(Request::parse(r#"{"id":1,"verb":"recover"}"#).is_err());
+        // Mistyped fields.
+        assert!(Request::parse(r#"{"id":"one","verb":"stats"}"#).is_err());
+        assert!(Request::parse(r#"{"id":1,"verb":"recover","fingerprint":17}"#).is_err());
+        assert!(Request::parse(r#"{"id":1,"verb":"recover","graph":"g"}"#).is_err());
+        assert!(Request::parse(r#"{"id":1,"verb":"prepare"}"#).is_err());
+        assert!(Request::parse(r#"{"id":1,"verb":"recover","graph":{"name":"g"},"strategy":"bogus"}"#).is_err());
+    }
+
+    #[test]
+    fn req_opts_resolve_against_daemon_defaults() {
+        let opts = ReqOpts {
+            alpha: 0.05,
+            strategy: Strategy::Sharded,
+            pipeline: Pipeline::Streamed,
+            shard_min: 512,
+            threads: 0,
+        };
+        let r = opts.recover_opts(6);
+        assert_eq!(r.threads, 6);
+        assert_eq!(r.block, 6);
+        assert_eq!(r.strategy, Strategy::Sharded);
+        assert_eq!(r.pipeline, Pipeline::Streamed);
+        assert_eq!(r.shard_min, 512);
+        let r = ReqOpts { threads: 3, ..opts }.recover_opts(6);
+        assert_eq!(r.threads, 3);
+        assert_eq!(r.block, 3);
+    }
+
+    #[test]
+    fn error_responses_are_typed_and_structured() {
+        let v = error_response(Some(4), &Error::Overloaded { in_flight: 8, cap: 8 });
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(v.get("in_flight").unwrap().as_u64(), Some(8));
+        assert_eq!(v.get("cap").unwrap().as_u64(), Some(8));
+
+        let v = error_response(None, &Error::DeadlineExceeded { elapsed_ms: 9, deadline_ms: 5 });
+        assert_eq!(v.get("id"), Some(&Value::Null));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("deadline_exceeded"));
+        assert_eq!(v.get("elapsed_ms").unwrap().as_u64(), Some(9));
+        assert_eq!(v.get("deadline_ms").unwrap().as_u64(), Some(5));
+
+        let v = protocol_error_response(Some(1), "nope");
+        assert_eq!(v.get("error").unwrap().as_str(), Some("protocol"));
+
+        let v = ok_response(3, vec![("fingerprint", fp_value(0xab))]);
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("fingerprint").unwrap().as_str(), Some("0x00000000000000ab"));
+    }
+
+    #[test]
+    fn every_error_kind_has_a_stable_wire_name() {
+        let kinds = [
+            error_kind(&Error::Overloaded { in_flight: 1, cap: 1 }),
+            error_kind(&Error::DeadlineExceeded { elapsed_ms: 1, deadline_ms: 1 }),
+            error_kind(&Error::BadParam { name: "x", why: String::new() }),
+            error_kind(&Error::Disconnected { components: 2 }),
+            error_kind(&Error::UnknownGraph { name: String::new() }),
+            error_kind(&Error::NoConvergence { iters: 1, residual: 1.0 }),
+            error_kind(&Error::NotPositiveDefinite { at: 0, pivot: 0.0 }),
+            error_kind(&Error::Config(String::new())),
+            error_kind(&Error::Io(std::io::Error::other("x"))),
+        ];
+        let mut unique: Vec<&str> = kinds.to_vec();
+        unique.sort_unstable();
+        unique.dedup();
+        assert_eq!(unique.len(), kinds.len(), "kinds must be distinct: {kinds:?}");
+    }
+}

@@ -1,0 +1,641 @@
+//! The daemon: socket lifecycle, connection handling, request dispatch.
+//!
+//! # Lifecycle
+//!
+//! [`Server::start`] binds the configured Unix-domain socket (recovering
+//! a stale socket file left by a killed daemon: if nothing answers a
+//! probe connect, the file is unlinked and re-bound; if something
+//! answers, startup fails rather than hijacking a live daemon) and
+//! starts an acceptor on a [`spawn_service`] thread. Each connection
+//! gets its own service thread reading line-delimited requests;
+//! **compute** runs on the shared [`crate::par::ThreadPool`] via the
+//! ordinary session API, so a daemon with 30 connections still schedules
+//! work across one pool rather than 30× oversubscribing the machine.
+//!
+//! Shutdown is cooperative (pure std cannot install signal handlers):
+//! the `shutdown` verb — or [`Server::stop`] in-process — sets a flag
+//! and pokes the acceptor with a self-connect; connection readers poll
+//! the flag every 200 ms read-timeout tick. [`Server::wait`] joins the
+//! acceptor and every handler, then unlinks the socket. A daemon killed
+//! by SIGTERM instead simply dies; the stale-socket recovery above makes
+//! the next start clean, which is what the CI smoke job asserts.
+//!
+//! # Dispatch
+//!
+//! Compute verbs (`prepare`/`recover`/`pcg`) pass admission control
+//! first ([`Admission`]) — past `max_in_flight` they are rejected with
+//! the typed `overloaded` error immediately. Admitted requests check
+//! their deadline between stages (after prepare, after recover, after
+//! PCG): a blown deadline abandons the *response*, never the work
+//! already absorbed into the cache — the entry stays warm for the
+//! retry. Control verbs (`stats`/`evict`/`shutdown`) bypass admission.
+//!
+//! A failed request never poisons state: a recover error (e.g. a bad α)
+//! leaves the cache entry intact; a prepare failure is recorded per
+//! spec and only fast-rejects that spec after `failure_cap` consecutive
+//! failures (reset by `evict` or a later success); a handler panic is
+//! confined to its connection and releases its admission permit.
+//!
+//! # Response determinism
+//!
+//! Compute-verb success responses carry only deterministic values
+//! (fingerprints, counts, edge ids/hashes, PCG iterates) — identical
+//! requests get byte-identical response lines regardless of cache
+//! state, thread count, or concurrency. `stats` is the explicit
+//! exception (it reports live counters and uptime); timings and cache
+//! hit/miss per request go to the summary log ([`SummaryLog`]).
+
+use std::io::{BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::admission::Admission;
+use super::cache::PreparedCache;
+use super::json::{int, num, obj, str as jstr, Value};
+use super::protocol::{
+    error_kind, error_response, fp_value, ok_response, protocol_error_response, GraphSpec,
+    ReqOpts, Request, Target, Verb,
+};
+use super::summary::{RequestSummary, ServerCounters, SummaryLog};
+use crate::config::ServeConfig;
+use crate::error::{Error, Result};
+use crate::graph::{fingerprint_hex, Fnv1a};
+use crate::par::{spawn_service, ServiceHandle};
+use crate::recovery::Pipeline;
+use crate::session::{Prepared, Sparsify};
+use crate::util::Timer;
+
+/// How often blocked connection readers wake to check the shutdown flag.
+const READ_TICK: Duration = Duration::from_millis(200);
+
+struct Shared {
+    config: ServeConfig,
+    /// `config.threads` with 0 resolved, once, at startup.
+    default_threads: usize,
+    cache: PreparedCache,
+    admission: Admission,
+    counters: ServerCounters,
+    log: SummaryLog,
+    shutdown: Mutex<bool>,
+    handlers: Mutex<Vec<ServiceHandle>>,
+}
+
+/// A running daemon. Hold it and [`Server::wait`] to serve until a
+/// `shutdown` request (the `pdgrass serve` verb does exactly this), or
+/// drive it in-process from tests via the accessors.
+pub struct Server {
+    shared: Arc<Shared>,
+    acceptor: Option<ServiceHandle>,
+}
+
+impl Server {
+    /// Bind the socket and start accepting. See the module docs for the
+    /// stale-socket recovery semantics.
+    pub fn start(config: ServeConfig) -> Result<Server> {
+        let socket = config.socket.clone();
+        if socket.exists() {
+            match UnixStream::connect(&socket) {
+                Ok(_) => {
+                    return Err(Error::Config(format!(
+                        "socket {} is in use by a running daemon",
+                        socket.display()
+                    )));
+                }
+                Err(_) => {
+                    // Stale file from a killed daemon — reclaim it.
+                    std::fs::remove_file(&socket)?;
+                }
+            }
+        }
+        let listener = UnixListener::bind(&socket)?;
+        let log = SummaryLog::open(&config.log)?;
+        let shared = Arc::new(Shared {
+            default_threads: config.resolved_threads(),
+            cache: PreparedCache::new(config.cache_capacity, config.failure_cap),
+            admission: Admission::new(config.max_in_flight),
+            counters: ServerCounters::default(),
+            log,
+            shutdown: Mutex::new(false),
+            handlers: Mutex::new(Vec::new()),
+            config,
+        });
+        let accept_shared = shared.clone();
+        let acceptor = spawn_service("accept", move || accept_loop(listener, accept_shared));
+        Ok(Server { shared, acceptor: Some(acceptor) })
+    }
+
+    /// The socket path this daemon is bound to.
+    pub fn socket(&self) -> &std::path::Path {
+        &self.shared.config.socket
+    }
+
+    /// The admission gate — exposed so tests can pin the daemon at its
+    /// cap deterministically (pre-acquire permits, then assert a
+    /// client's request is rejected typed).
+    pub fn admission(&self) -> &Admission {
+        &self.shared.admission
+    }
+
+    /// The prepared-state cache (test/diagnostic access).
+    pub fn cache(&self) -> &PreparedCache {
+        &self.shared.cache
+    }
+
+    /// Request shutdown from in-process: set the flag and poke the
+    /// acceptor awake. Follow with [`Server::wait`].
+    pub fn stop(&self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        // The poke connection exists only to unblock `accept`; it is
+        // dropped by the acceptor after the flag check.
+        let _ = UnixStream::connect(&self.shared.config.socket);
+    }
+
+    /// Block until shutdown (the `shutdown` verb or [`Server::stop`]),
+    /// join the acceptor and every connection handler, and unlink the
+    /// socket file.
+    pub fn wait(mut self) {
+        if let Some(acceptor) = self.acceptor.take() {
+            acceptor.join();
+        }
+        // The acceptor is dead, so no new handlers can appear.
+        let handlers = std::mem::take(&mut *self.shared.handlers.lock().unwrap());
+        for h in handlers {
+            h.join();
+        }
+        let _ = std::fs::remove_file(&self.shared.config.socket);
+    }
+}
+
+fn accept_loop(listener: UnixListener, shared: Arc<Shared>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if *shared.shutdown.lock().unwrap() {
+                    break;
+                }
+                continue;
+            }
+        };
+        if *shared.shutdown.lock().unwrap() {
+            // The stream is the shutdown poke (or a client racing it);
+            // either way, stop accepting.
+            break;
+        }
+        let conn_shared = shared.clone();
+        let handle = spawn_service("conn", move || handle_connection(conn_shared, stream));
+        let mut handlers = shared.handlers.lock().unwrap();
+        handlers.retain(|h| !h.is_finished());
+        handlers.push(handle);
+    }
+}
+
+fn handle_connection(shared: Arc<Shared>, stream: UnixStream) {
+    if stream.set_read_timeout(Some(READ_TICK)).is_err() {
+        return;
+    }
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        use std::io::BufRead;
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => break,
+            Ok(_) => {
+                let complete = buf.last() == Some(&b'\n');
+                if !complete {
+                    // Ok without a delimiter is EOF mid-line; serve the
+                    // partial line, then close.
+                    let line = String::from_utf8_lossy(&buf).into_owned();
+                    let _ = serve_line(&shared, line.trim_end_matches(['\n', '\r']), &mut writer);
+                    break;
+                }
+                let line = String::from_utf8_lossy(&buf).into_owned();
+                buf.clear();
+                let line = line.trim_end_matches(['\n', '\r']);
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match serve_line(&shared, line, &mut writer) {
+                    Ok(keep_open) if keep_open => {}
+                    _ => break,
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Timeout tick: partial bytes (if any) stay in `buf` and
+                // the next read_until continues the same line.
+                if *shared.shutdown.lock().unwrap() {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Handle one request line: dispatch, respond, log, count. Returns
+/// `Ok(false)` when the connection should close (shutdown verb),
+/// `Err` on a dead client socket.
+fn serve_line(shared: &Shared, line: &str, writer: &mut UnixStream) -> std::io::Result<bool> {
+    let t = Timer::start();
+    let (response, mut summary, keep_open) = match Request::parse(line) {
+        Err((id, msg)) => {
+            let summary = RequestSummary {
+                id,
+                verb: "protocol",
+                ok: false,
+                error: Some("protocol".to_string()),
+                ..RequestSummary::default()
+            };
+            (protocol_error_response(id, &msg), summary, true)
+        }
+        Ok(req) => dispatch(shared, &req),
+    };
+    summary.total_ms = t.ms();
+    shared
+        .counters
+        .record(summary.verb, if summary.ok { None } else { summary.error.as_deref() });
+    shared.log.emit(&summary);
+    writer.write_all(response.render().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    Ok(keep_open)
+}
+
+/// Per-request deadline: 0 = none. Checked between stages — compute is
+/// never interrupted mid-stage, so a blown deadline costs at most one
+/// stage of latency and abandons only the response.
+struct Deadline {
+    start: Instant,
+    limit_ms: u64,
+}
+
+impl Deadline {
+    fn new(limit_ms: u64) -> Deadline {
+        Deadline { start: Instant::now(), limit_ms }
+    }
+
+    fn check(&self) -> Result<()> {
+        if self.limit_ms == 0 {
+            return Ok(());
+        }
+        let elapsed = self.start.elapsed().as_millis() as u64;
+        if elapsed > self.limit_ms {
+            Err(Error::DeadlineExceeded { elapsed_ms: elapsed, deadline_ms: self.limit_ms })
+        } else {
+            Ok(())
+        }
+    }
+}
+
+fn dispatch(shared: &Shared, req: &Request) -> (Value, RequestSummary, bool) {
+    let mut summary = RequestSummary {
+        id: Some(req.id),
+        verb: verb_name(&req.verb),
+        ok: true,
+        ..RequestSummary::default()
+    };
+    let deadline = Deadline::new(req.deadline_ms.unwrap_or(shared.config.deadline_ms));
+    let mut keep_open = true;
+    let result = match &req.verb {
+        Verb::Prepare { spec, pipeline, threads } => {
+            handle_prepare(shared, &deadline, &mut summary, spec, *pipeline, *threads)
+        }
+        Verb::Recover { target, opts, return_edges } => {
+            handle_recover(shared, &deadline, &mut summary, target, opts, *return_edges)
+        }
+        Verb::Pcg { target, opts, rhs_seed, tol, maxit } => {
+            handle_pcg(shared, &deadline, &mut summary, target, opts, *rhs_seed, *tol, *maxit)
+        }
+        Verb::Stats => Ok(stats_fields(shared)),
+        Verb::Evict { fingerprint } => {
+            let evicted = match fingerprint {
+                Some(fp) => {
+                    summary.fingerprint = Some(*fp);
+                    usize::from(shared.cache.evict(*fp))
+                }
+                None => shared.cache.evict_all(),
+            };
+            Ok(vec![("evicted", int(evicted as u64))])
+        }
+        Verb::Shutdown => {
+            *shared.shutdown.lock().unwrap() = true;
+            let _ = UnixStream::connect(&shared.config.socket);
+            keep_open = false;
+            Ok(vec![("stopping", Value::Bool(true))])
+        }
+    };
+    let response = match result {
+        Ok(fields) => ok_response(req.id, fields),
+        Err(e) => {
+            summary.ok = false;
+            summary.error = Some(error_kind(&e).to_string());
+            error_response(Some(req.id), &e)
+        }
+    };
+    (response, summary, keep_open)
+}
+
+fn verb_name(verb: &Verb) -> &'static str {
+    match verb {
+        Verb::Prepare { .. } => "prepare",
+        Verb::Recover { .. } => "recover",
+        Verb::Pcg { .. } => "pcg",
+        Verb::Stats => "stats",
+        Verb::Evict { .. } => "evict",
+        Verb::Shutdown => "shutdown",
+    }
+}
+
+/// Resolve a target to cached prepared state, preparing (and caching) on
+/// a spec miss. Updates the summary's fingerprint / cache / prepare_ms
+/// fields as a side effect.
+fn resolve_target(
+    shared: &Shared,
+    summary: &mut RequestSummary,
+    target: &Target,
+    pipeline: Pipeline,
+    threads: usize,
+) -> Result<Arc<Prepared>> {
+    match target {
+        Target::Fingerprint(fp) => {
+            summary.fingerprint = Some(*fp);
+            match shared.cache.get(*fp) {
+                Some(p) => {
+                    summary.cache_hit = Some(true);
+                    Ok(p)
+                }
+                None => {
+                    summary.cache_hit = Some(false);
+                    Err(Error::UnknownGraph { name: fingerprint_hex(*fp) })
+                }
+            }
+        }
+        Target::Spec(spec) => {
+            if let Some(p) = shared.cache.get_spec(&spec.name, spec.scale, spec.seed) {
+                summary.cache_hit = Some(true);
+                summary.fingerprint = Some(p.fingerprint());
+                return Ok(p);
+            }
+            summary.cache_hit = Some(false);
+            if let Some(reason) =
+                shared.cache.failure_capped(&spec.name, spec.scale, spec.seed)
+            {
+                return Err(Error::BadParam {
+                    name: "graph",
+                    why: format!(
+                        "spec disabled after {} consecutive prepare failures (last: {reason}); \
+                         `evict` to re-enable",
+                        shared.config.failure_cap
+                    ),
+                });
+            }
+            let t = Timer::start();
+            let threads = if threads == 0 { shared.default_threads } else { threads };
+            let prepared = Sparsify::suite(&spec.name, spec.scale, spec.seed)
+                .and_then(|s| s.threads(threads).pipeline(pipeline).prepare());
+            summary.prepare_ms = t.ms();
+            match prepared {
+                Ok(p) => {
+                    let (kept, _evicted) =
+                        shared.cache.insert(Arc::new(p), Some((&spec.name, spec.scale, spec.seed)));
+                    summary.fingerprint = Some(kept.fingerprint());
+                    Ok(kept)
+                }
+                Err(e) => {
+                    shared.cache.record_prepare_failure(
+                        &spec.name,
+                        spec.scale,
+                        spec.seed,
+                        &e.to_string(),
+                    );
+                    Err(e)
+                }
+            }
+        }
+    }
+}
+
+fn handle_prepare(
+    shared: &Shared,
+    deadline: &Deadline,
+    summary: &mut RequestSummary,
+    spec: &GraphSpec,
+    pipeline: Pipeline,
+    threads: usize,
+) -> Result<Vec<(&'static str, Value)>> {
+    let _permit = shared.admission.try_acquire()?;
+    deadline.check()?;
+    let prepared =
+        resolve_target(shared, summary, &Target::Spec(spec.clone()), pipeline, threads)?;
+    deadline.check()?;
+    Ok(vec![
+        ("fingerprint", fp_value(prepared.fingerprint())),
+        ("vertices", int(prepared.graph().num_vertices() as u64)),
+        ("edges", int(prepared.graph().num_edges() as u64)),
+        ("off_tree", int(prepared.num_off_tree() as u64)),
+        ("subtasks", int(prepared.subtasks().len() as u64)),
+    ])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_recover(
+    shared: &Shared,
+    deadline: &Deadline,
+    summary: &mut RequestSummary,
+    target: &Target,
+    opts: &ReqOpts,
+    return_edges: bool,
+) -> Result<Vec<(&'static str, Value)>> {
+    let _permit = shared.admission.try_acquire()?;
+    deadline.check()?;
+    let prepared = resolve_target(shared, summary, target, opts.pipeline, opts.threads)?;
+    deadline.check()?;
+    let t = Timer::start();
+    let recover_opts = opts.recover_opts(shared.default_threads);
+    let recovered = prepared.recover(&recover_opts);
+    summary.recover_ms = t.ms();
+    let recovered = recovered?;
+    deadline.check()?;
+    summary.recovered = Some(recovered.edges().len());
+    let mut fields = vec![
+        ("fingerprint", fp_value(prepared.fingerprint())),
+        ("recovered", int(recovered.edges().len() as u64)),
+        ("edges_hash", jstr(edges_hash(recovered.edges()))),
+    ];
+    if return_edges {
+        let ids = recovered.edges().iter().map(|&e| int(e as u64)).collect();
+        fields.push(("edges", Value::Arr(ids)));
+    }
+    Ok(fields)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_pcg(
+    shared: &Shared,
+    deadline: &Deadline,
+    summary: &mut RequestSummary,
+    target: &Target,
+    opts: &ReqOpts,
+    rhs_seed: u64,
+    tol: f64,
+    maxit: usize,
+) -> Result<Vec<(&'static str, Value)>> {
+    let _permit = shared.admission.try_acquire()?;
+    deadline.check()?;
+    let prepared = resolve_target(shared, summary, target, opts.pipeline, opts.threads)?;
+    deadline.check()?;
+    let t = Timer::start();
+    let recovered = prepared.recover(&opts.recover_opts(shared.default_threads));
+    summary.recover_ms = t.ms();
+    let recovered = recovered?;
+    summary.recovered = Some(recovered.edges().len());
+    deadline.check()?;
+    let t = Timer::start();
+    let outcome = recovered.sparsifier().pcg(rhs_seed, tol, maxit);
+    summary.pcg_ms = t.ms();
+    let outcome = outcome?;
+    deadline.check()?;
+    summary.iterations = Some(outcome.iterations);
+    // Non-convergence is data, not an error: the sparsifier quality
+    // metric legitimately reports "did not converge in maxit".
+    Ok(vec![
+        ("fingerprint", fp_value(prepared.fingerprint())),
+        ("recovered", int(recovered.edges().len() as u64)),
+        ("iterations", int(outcome.iterations as u64)),
+        ("relres", num(outcome.relres)),
+        ("converged", Value::Bool(outcome.converged)),
+    ])
+}
+
+/// FNV-1a digest of the recovered edge-id sequence — the compact
+/// deterministic witness clients (and the bitwise-identity test) compare
+/// without shipping the full id list.
+fn edges_hash(edges: &[u32]) -> String {
+    let mut h = Fnv1a::new();
+    h.write_u64(edges.len() as u64);
+    for &e in edges {
+        h.write_u32(e);
+    }
+    fingerprint_hex(h.finish())
+}
+
+fn stats_fields(shared: &Shared) -> Vec<(&'static str, Value)> {
+    let cache = shared.cache.stats();
+    let adm = shared.admission.stats();
+    let c = shared.counters.snapshot();
+    let resident: Vec<Value> = shared
+        .cache
+        .resident()
+        .into_iter()
+        .map(|(fp, uses)| {
+            obj(vec![("fingerprint", fp_value(fp)), ("uses", int(uses))])
+        })
+        .collect();
+    vec![
+        ("uptime_ms", int(shared.log.uptime_ms())),
+        (
+            "requests",
+            obj(vec![
+                ("prepare", int(c.prepare)),
+                ("recover", int(c.recover)),
+                ("pcg", int(c.pcg)),
+                ("stats", int(c.stats)),
+                ("evict", int(c.evict)),
+                ("errors", int(c.errors)),
+                ("overloaded", int(c.overloaded)),
+                ("deadline_exceeded", int(c.deadline_exceeded)),
+            ]),
+        ),
+        (
+            "cache",
+            obj(vec![
+                ("entries", int(cache.entries as u64)),
+                ("capacity", int(cache.capacity as u64)),
+                ("hits", int(cache.hits)),
+                ("misses", int(cache.misses)),
+                ("evictions", int(cache.evictions)),
+                ("resident", Value::Arr(resident)),
+            ]),
+        ),
+        (
+            "admission",
+            obj(vec![
+                ("in_flight", int(adm.in_flight as u64)),
+                ("cap", int(adm.cap as u64)),
+                ("accepted", int(adm.accepted)),
+                ("rejected", int(adm.rejected)),
+                ("peak", int(adm.peak as u64)),
+            ]),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_zero_never_fires() {
+        let d = Deadline::new(0);
+        std::thread::sleep(Duration::from_millis(2));
+        d.check().unwrap();
+    }
+
+    #[test]
+    fn deadline_fires_typed_after_limit() {
+        let d = Deadline::new(1);
+        std::thread::sleep(Duration::from_millis(5));
+        match d.check() {
+            Err(Error::DeadlineExceeded { elapsed_ms, deadline_ms }) => {
+                assert!(elapsed_ms >= 2, "elapsed {elapsed_ms}");
+                assert_eq!(deadline_ms, 1);
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn edges_hash_is_order_and_content_sensitive() {
+        let a = edges_hash(&[1, 2, 3]);
+        assert_eq!(a, edges_hash(&[1, 2, 3]), "deterministic");
+        assert_ne!(a, edges_hash(&[3, 2, 1]), "order matters");
+        assert_ne!(a, edges_hash(&[1, 2]), "length matters");
+        assert_ne!(edges_hash(&[]), edges_hash(&[0]), "empty vs zero id");
+        assert!(a.starts_with("0x") && a.len() == 18);
+    }
+
+    #[test]
+    fn stale_socket_is_reclaimed_but_live_socket_is_not() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("pdgrass-stale-{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        // Plant a stale socket file nothing is listening on.
+        drop(UnixListener::bind(&path).unwrap());
+        assert!(path.exists(), "bind leaves a socket file behind");
+        let cfg = ServeConfig {
+            socket: path.clone(),
+            log: "off".to_string(),
+            ..ServeConfig::default()
+        };
+        let server = Server::start(cfg.clone()).expect("stale socket must be reclaimed");
+        // A second daemon on the same live socket must refuse.
+        match Server::start(cfg) {
+            Err(Error::Config(msg)) => assert!(msg.contains("in use"), "{msg}"),
+            Err(e) => panic!("expected Config error, got {e:?}"),
+            Ok(_) => panic!("expected Config error, got a second live daemon"),
+        }
+        server.stop();
+        server.wait();
+        assert!(!path.exists(), "wait() unlinks the socket");
+    }
+}

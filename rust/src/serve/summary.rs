@@ -1,0 +1,270 @@
+//! Structured per-request run summaries and daemon counters.
+//!
+//! Every handled request — success or failure — emits one JSON line to
+//! the summary sink: request id and verb, graph fingerprint (when
+//! resolved), cache `hit`/`miss`, per-stage timings, and outcome. This
+//! is where *non-deterministic* observability lives: response bodies are
+//! restricted to deterministic content so identical requests stay
+//! byte-identical (see `protocol`), and anything wall-clock-shaped —
+//! timings, hit/miss, error text — goes here and into the `stats` verb.
+//!
+//! ```json
+//! {"ts_ms":5123,"id":2,"verb":"recover","fingerprint":"0x9ae1…","cache":"hit",
+//!  "ok":true,"recovered":410,"prepare_ms":0.0,"recover_ms":3.2,"pcg_ms":0.0,"total_ms":3.4}
+//! ```
+//!
+//! The sink is selected by `[serve] log`: `"stderr"` (default, keeps
+//! stdout clean for the CLI), `"off"`, or a file path (appended,
+//! created on demand).
+
+use std::io::Write;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::json::{int, num, obj, str as jstr, Value};
+use crate::graph::fingerprint_hex;
+
+/// Everything one request contributes to the summary log. Fields left
+/// at their defaults are omitted from the line.
+#[derive(Debug, Default)]
+pub struct RequestSummary {
+    pub id: Option<u64>,
+    pub verb: &'static str,
+    pub fingerprint: Option<u64>,
+    /// `Some(true)` = served from cache, `Some(false)` = miss (prepared
+    /// on demand), `None` = not a cache-addressed verb.
+    pub cache_hit: Option<bool>,
+    pub ok: bool,
+    /// Wire error kind when `!ok` (e.g. `"overloaded"`).
+    pub error: Option<String>,
+    pub prepare_ms: f64,
+    pub recover_ms: f64,
+    pub pcg_ms: f64,
+    pub total_ms: f64,
+    /// Recovered edge count (recover/pcg verbs).
+    pub recovered: Option<usize>,
+    /// PCG iterations (pcg verb).
+    pub iterations: Option<usize>,
+}
+
+impl RequestSummary {
+    /// Render the JSON line (without trailing newline). `ts_ms` is
+    /// daemon uptime at emit — relative time, so logs are comparable
+    /// across runs.
+    pub fn render(&self, ts_ms: u64) -> String {
+        let mut fields: Vec<(&str, Value)> = vec![
+            ("ts_ms", int(ts_ms)),
+            ("id", self.id.map(int).unwrap_or(Value::Null)),
+            ("verb", jstr(self.verb)),
+        ];
+        if let Some(fp) = self.fingerprint {
+            fields.push(("fingerprint", jstr(fingerprint_hex(fp))));
+        }
+        if let Some(hit) = self.cache_hit {
+            fields.push(("cache", jstr(if hit { "hit" } else { "miss" })));
+        }
+        fields.push(("ok", Value::Bool(self.ok)));
+        if let Some(e) = &self.error {
+            fields.push(("error", jstr(e.clone())));
+        }
+        if let Some(n) = self.recovered {
+            fields.push(("recovered", int(n as u64)));
+        }
+        if let Some(n) = self.iterations {
+            fields.push(("iterations", int(n as u64)));
+        }
+        fields.push(("prepare_ms", num(round3(self.prepare_ms))));
+        fields.push(("recover_ms", num(round3(self.recover_ms))));
+        fields.push(("pcg_ms", num(round3(self.pcg_ms))));
+        fields.push(("total_ms", num(round3(self.total_ms))));
+        obj(fields).render()
+    }
+}
+
+fn round3(ms: f64) -> f64 {
+    (ms * 1000.0).round() / 1000.0
+}
+
+enum Sink {
+    Off,
+    Stderr,
+    File(Box<std::fs::File>),
+}
+
+/// Serialized summary sink: one line per request, whole lines only (the
+/// mutex spans the write, so concurrent handlers never interleave
+/// mid-line).
+pub struct SummaryLog {
+    sink: Mutex<Sink>,
+    started: Instant,
+}
+
+impl SummaryLog {
+    /// Open the sink named by the `[serve] log` config value.
+    pub fn open(target: &str) -> std::io::Result<SummaryLog> {
+        let sink = match target {
+            "off" => Sink::Off,
+            "stderr" => Sink::Stderr,
+            path => {
+                let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+                Sink::File(Box::new(file))
+            }
+        };
+        Ok(SummaryLog { sink: Mutex::new(sink), started: Instant::now() })
+    }
+
+    /// Milliseconds since the log (≈ the daemon) started.
+    pub fn uptime_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    /// Emit one summary line. I/O errors are swallowed: observability
+    /// must never fail a request.
+    pub fn emit(&self, summary: &RequestSummary) {
+        let line = summary.render(self.uptime_ms());
+        let mut sink = self.sink.lock().unwrap();
+        let _ = match &mut *sink {
+            Sink::Off => Ok(()),
+            Sink::Stderr => writeln!(std::io::stderr(), "{line}"),
+            Sink::File(f) => writeln!(f, "{line}"),
+        };
+    }
+}
+
+/// Per-verb request counters for the `stats` verb. Mutex-only, like the
+/// other serve bookkeeping.
+#[derive(Default)]
+pub struct ServerCounters {
+    inner: Mutex<Counters>,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Counters {
+    pub prepare: u64,
+    pub recover: u64,
+    pub pcg: u64,
+    pub stats: u64,
+    pub evict: u64,
+    pub errors: u64,
+    pub overloaded: u64,
+    pub deadline_exceeded: u64,
+}
+
+impl ServerCounters {
+    /// Count one handled request by verb name; failures also bump
+    /// `errors` and the dedicated overload/deadline counters by kind.
+    pub fn record(&self, verb: &str, error_kind: Option<&str>) {
+        let mut c = self.inner.lock().unwrap();
+        match verb {
+            "prepare" => c.prepare += 1,
+            "recover" => c.recover += 1,
+            "pcg" => c.pcg += 1,
+            "stats" => c.stats += 1,
+            "evict" => c.evict += 1,
+            _ => {}
+        }
+        if let Some(kind) = error_kind {
+            c.errors += 1;
+            match kind {
+                "overloaded" => c.overloaded += 1,
+                "deadline_exceeded" => c.deadline_exceeded += 1,
+                _ => {}
+            }
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn snapshot(&self) -> Counters {
+        *self.inner.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::json;
+
+    #[test]
+    fn summary_line_is_valid_json_with_expected_fields() {
+        let s = RequestSummary {
+            id: Some(7),
+            verb: "recover",
+            fingerprint: Some(0xab),
+            cache_hit: Some(true),
+            ok: true,
+            recovered: Some(410),
+            prepare_ms: 0.0,
+            recover_ms: 3.21544,
+            total_ms: 3.4,
+            ..RequestSummary::default()
+        };
+        let line = s.render(5123);
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("ts_ms").unwrap().as_u64(), Some(5123));
+        assert_eq!(v.get("id").unwrap().as_u64(), Some(7));
+        assert_eq!(v.get("verb").unwrap().as_str(), Some("recover"));
+        assert_eq!(v.get("fingerprint").unwrap().as_str(), Some("0x00000000000000ab"));
+        assert_eq!(v.get("cache").unwrap().as_str(), Some("hit"));
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("recovered").unwrap().as_u64(), Some(410));
+        assert_eq!(v.get("recover_ms").unwrap().as_f64(), Some(3.215));
+        assert!(v.get("error").is_none());
+        assert!(v.get("iterations").is_none());
+    }
+
+    #[test]
+    fn failure_summaries_carry_the_kind() {
+        let s = RequestSummary {
+            id: None,
+            verb: "recover",
+            ok: false,
+            error: Some("overloaded".into()),
+            ..RequestSummary::default()
+        };
+        let v = json::parse(&s.render(1)).unwrap();
+        assert_eq!(v.get("id"), Some(&json::Value::Null));
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("error").unwrap().as_str(), Some("overloaded"));
+        assert!(v.get("cache").is_none(), "no cache field when not resolved");
+    }
+
+    #[test]
+    fn file_sink_appends_one_line_per_emit() {
+        let path = std::env::temp_dir().join(format!("pdgrass-sum-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let log = SummaryLog::open(path.to_str().unwrap()).unwrap();
+            log.emit(&RequestSummary { id: Some(1), verb: "stats", ok: true, ..Default::default() });
+            log.emit(&RequestSummary { id: Some(2), verb: "stats", ok: true, ..Default::default() });
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            json::parse(line).unwrap();
+        }
+        let _ = std::fs::remove_file(&path);
+        // "off" and "stderr" sinks must open and emit without error.
+        SummaryLog::open("off").unwrap().emit(&RequestSummary::default());
+    }
+
+    #[test]
+    fn counters_accumulate_by_verb_and_kind() {
+        let c = ServerCounters::default();
+        c.record("prepare", None);
+        c.record("recover", None);
+        c.record("recover", Some("overloaded"));
+        c.record("pcg", Some("deadline_exceeded"));
+        c.record("stats", None);
+        c.record("evict", Some("bad_param"));
+        let s = c.snapshot();
+        assert_eq!(s.prepare, 1);
+        assert_eq!(s.recover, 2);
+        assert_eq!(s.pcg, 1);
+        assert_eq!(s.stats, 1);
+        assert_eq!(s.evict, 1);
+        assert_eq!(s.errors, 3);
+        assert_eq!(s.overloaded, 1);
+        assert_eq!(s.deadline_exceeded, 1);
+    }
+}

@@ -190,9 +190,11 @@ impl Sparsify {
         let subtask_ms = t.ms();
 
         PREPARE_COUNT.fetch_add(1, Ordering::Relaxed);
+        let fingerprint = graph::fingerprint(&self.graph);
         Ok(Prepared {
             id: NEXT_PREPARED_ID.fetch_add(1, Ordering::Relaxed),
             name: self.name,
+            fingerprint,
             graph: self.graph,
             spanning,
             off,
@@ -234,9 +236,11 @@ impl Sparsify {
         let subtask_ms = t.ms();
 
         PREPARE_COUNT.fetch_add(1, Ordering::Relaxed);
+        let fingerprint = graph::fingerprint(&self.graph);
         Prepared {
             id: NEXT_PREPARED_ID.fetch_add(1, Ordering::Relaxed),
             name: self.name,
+            fingerprint,
             graph: self.graph,
             spanning,
             off,
@@ -370,6 +374,10 @@ impl RecoverOpts {
 pub struct Prepared {
     id: u64,
     name: Option<String>,
+    /// Deterministic content hash of the graph ([`graph::fingerprint`]):
+    /// the serving layer's cache key. Unlike `id`, equal graphs get equal
+    /// fingerprints across processes, platforms, and time.
+    fingerprint: u64,
     graph: Graph,
     spanning: Spanning,
     /// Off-tree edges, score-sorted descending (step 2's output).
@@ -401,6 +409,14 @@ impl Prepared {
     /// Session label, if any.
     pub fn name(&self) -> Option<&str> {
         self.name.as_deref()
+    }
+
+    /// Deterministic content hash of the session graph
+    /// ([`graph::fingerprint`]) — byte-stable across platforms and
+    /// processes, so it can key a cross-process cache of prepared state
+    /// (the serve daemon's `Prepared` cache keys on exactly this).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
     }
 
     /// The owned input graph.
@@ -725,6 +741,21 @@ mod tests {
         assert_eq!(streamed.prep_ms()[1], 0.0);
         let r = streamed.recover(&RecoverOpts::new(0.05)).unwrap();
         assert!(!r.edges().is_empty());
+    }
+
+    #[test]
+    fn fingerprint_is_content_keyed_unlike_id() {
+        let g = crate::gen::grid(10, 10, 0.5, &mut Rng::new(1));
+        let a = Sparsify::graph(g.clone()).prepare().unwrap();
+        let b = Sparsify::graph(g).prepare_streamed().unwrap();
+        // Same graph → same fingerprint, even across pipelines…
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint(), crate::graph::fingerprint(a.graph()));
+        // …but distinct session ids.
+        assert_ne!(a.id(), b.id());
+        let other = crate::gen::grid(10, 10, 0.5, &mut Rng::new(2));
+        let c = Sparsify::graph(other).prepare().unwrap();
+        assert_ne!(c.fingerprint(), a.fingerprint());
     }
 
     #[test]

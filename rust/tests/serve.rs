@@ -1,0 +1,312 @@
+//! Integration tests for the serving layer: an in-process daemon on a
+//! temp socket, driven by real protocol clients.
+//!
+//! The headline assertions, per the subsystem's contract:
+//! - concurrent daemon responses are **byte-identical** to each other
+//!   and carry exactly the edges a direct in-process
+//!   `Prepared::recover` produces,
+//! - cache hit/miss accounting is exact and LRU eviction follows
+//!   recency order at capacity two,
+//! - past the admission cap, requests are rejected with the typed
+//!   structured `overloaded` error and succeed once load drains,
+//! - failures degrade gracefully: a bad-α recover and a blown deadline
+//!   poison neither the cache entry nor the daemon,
+//! - the bombard replay completes a mixed load with zero failures.
+//!
+//! Tests spawn raw `std::thread` clients deliberately — the audit's
+//! thread-outside-pool rule exempts tests, and real clients live outside
+//! the daemon's pool.
+
+use pdgrass::config::ServeConfig;
+use pdgrass::serve::json::{self, Value};
+use pdgrass::serve::{bombard, BombardConfig, Client, Server};
+use pdgrass::session::{RecoverOpts, Sparsify};
+
+const SCALE: f64 = 0.02;
+
+/// Unique-per-test socket path (under `sun_path`'s ~100-byte limit).
+fn sock(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("pdg-{}-{tag}.sock", std::process::id()))
+}
+
+/// Start a daemon on a fresh socket with quiet logging, then let the
+/// test tweak the config.
+fn start(tag: &str, tweak: impl FnOnce(&mut ServeConfig)) -> Server {
+    let mut cfg = ServeConfig { socket: sock(tag), log: "off".to_string(), ..Default::default() };
+    tweak(&mut cfg);
+    let _ = std::fs::remove_file(&cfg.socket);
+    Server::start(cfg).expect("daemon must start on a fresh temp socket")
+}
+
+fn recover_line(id: u64, name: &str, alpha: f64) -> String {
+    format!(
+        r#"{{"id":{id},"verb":"recover","graph":{{"name":"{name}","scale":{SCALE}}},"alpha":{alpha}}}"#
+    )
+}
+
+fn call(server: &Server, line: &str) -> Value {
+    let mut client = Client::connect(server.socket()).unwrap();
+    let resp = client.call_line(line).unwrap();
+    json::parse(&resp).unwrap()
+}
+
+#[test]
+fn cache_hit_accounting_is_exact() {
+    let server = start("hits", |_| {});
+    let mut client = Client::connect(server.socket()).unwrap();
+    let first = client.call_line(&recover_line(1, "15-M6", 0.05)).unwrap();
+    assert!(first.contains(r#""ok":true"#), "{first}");
+    // Identical spec again: served from cache, byte-identical except id.
+    let second = client.call_line(&recover_line(2, "15-M6", 0.05)).unwrap();
+    assert!(second.contains(r#""ok":true"#), "{second}");
+
+    let stats = server.cache().stats();
+    assert_eq!(stats.entries, 1);
+    assert_eq!(stats.misses, 1, "first request misses");
+    assert_eq!(stats.hits, 1, "second request hits the spec memo");
+    assert_eq!(stats.evictions, 0);
+
+    // The stats verb reports the same numbers over the wire.
+    let v = call(&server, r#"{"id":3,"verb":"stats"}"#);
+    let cache = v.get("cache").unwrap();
+    assert_eq!(cache.get("hits").unwrap().as_u64(), Some(1));
+    assert_eq!(cache.get("misses").unwrap().as_u64(), Some(1));
+    assert_eq!(cache.get("entries").unwrap().as_u64(), Some(1));
+    assert_eq!(cache.get("resident").unwrap().as_arr().unwrap().len(), 1);
+
+    server.stop();
+    server.wait();
+}
+
+#[test]
+fn lru_eviction_follows_recency_at_capacity_two() {
+    let server = start("lru", |cfg| cfg.cache_capacity = 2);
+    let mut client = Client::connect(server.socket()).unwrap();
+    let fp_of = |resp: &str| {
+        json::parse(resp).unwrap().get("fingerprint").unwrap().as_str().unwrap().to_string()
+    };
+    let a = fp_of(&client.call_line(&recover_line(1, "15-M6", 0.05)).unwrap());
+    let _b = fp_of(&client.call_line(&recover_line(2, "07-com-DBLP", 0.05)).unwrap());
+    // Touch A so B is least recently used, then add C.
+    client.call_line(&recover_line(3, "15-M6", 0.05)).unwrap();
+    let c = fp_of(&client.call_line(&recover_line(4, "09-com-Youtube", 0.05)).unwrap());
+
+    let stats = server.cache().stats();
+    assert_eq!(stats.entries, 2, "capacity two");
+    assert_eq!(stats.evictions, 1, "exactly B was LRU-evicted");
+    let resident: Vec<String> = server
+        .cache()
+        .resident()
+        .into_iter()
+        .map(|(fp, _)| pdgrass::graph::fingerprint_hex(fp))
+        .collect();
+    assert!(resident.contains(&a), "A touched, stays");
+    assert!(resident.contains(&c), "C just inserted, stays");
+
+    // Fingerprint-addressed request for the evicted B: typed miss.
+    let evicted = call(
+        &server,
+        r#"{"id":5,"verb":"recover","fingerprint":"0x0000000000000001","alpha":0.05}"#,
+    );
+    assert_eq!(evicted.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(evicted.get("error").unwrap().as_str(), Some("unknown_graph"));
+
+    server.stop();
+    server.wait();
+}
+
+#[test]
+fn concurrent_recovers_are_bitwise_identical_to_direct() {
+    let server = start("bitwise", |cfg| cfg.max_in_flight = 8);
+    let line = format!(
+        r#"{{"id":7,"verb":"recover","graph":{{"name":"15-M6","scale":{SCALE}}},"alpha":0.05,"return_edges":true}}"#
+    );
+    let path = server.socket().to_path_buf();
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let path = path.clone();
+        let line = line.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&path).unwrap();
+            client.call_line(&line).unwrap()
+        }));
+    }
+    let responses: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for r in &responses[1..] {
+        assert_eq!(r, &responses[0], "concurrent responses must be byte-identical");
+    }
+
+    // Ground truth: the same recovery, run directly in-process.
+    let prepared = Sparsify::suite("15-M6", SCALE, pdgrass::gen::DEFAULT_SEED)
+        .unwrap()
+        .prepare()
+        .unwrap();
+    let direct = prepared.recover(&RecoverOpts::with_threads(0.05, 2)).unwrap();
+
+    let v = json::parse(&responses[0]).unwrap();
+    assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(
+        v.get("fingerprint").unwrap().as_str().unwrap(),
+        pdgrass::graph::fingerprint_hex(prepared.fingerprint())
+    );
+    assert_eq!(v.get("recovered").unwrap().as_u64(), Some(direct.edges().len() as u64));
+    let served: Vec<u32> = v
+        .get("edges")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|e| e.as_u64().unwrap() as u32)
+        .collect();
+    assert_eq!(served, direct.edges(), "served edges == direct Prepared::recover edges");
+
+    server.stop();
+    server.wait();
+}
+
+#[test]
+fn overloaded_rejection_is_typed_and_drains() {
+    let server = start("overload", |cfg| cfg.max_in_flight = 1);
+    // Pin the daemon at its cap deterministically.
+    let permit = server.admission().try_acquire().unwrap();
+    let v = call(&server, &recover_line(1, "15-M6", 0.05));
+    assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(v.get("error").unwrap().as_str(), Some("overloaded"));
+    assert_eq!(v.get("in_flight").unwrap().as_u64(), Some(1));
+    assert_eq!(v.get("cap").unwrap().as_u64(), Some(1));
+    // Control verbs bypass admission even at the cap.
+    let stats = call(&server, r#"{"id":2,"verb":"stats"}"#);
+    assert_eq!(stats.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(
+        stats.get("admission").unwrap().get("rejected").unwrap().as_u64(),
+        Some(1)
+    );
+    // Load drains: the identical request now succeeds.
+    drop(permit);
+    let v = call(&server, &recover_line(3, "15-M6", 0.05));
+    assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{v:?}");
+
+    server.stop();
+    server.wait();
+}
+
+#[test]
+fn failures_degrade_gracefully_without_poisoning() {
+    let server = start("graceful", |cfg| cfg.failure_cap = 2);
+    let mut client = Client::connect(server.socket()).unwrap();
+
+    // Warm the cache, then fail a recover against it (bad α).
+    let ok = client.call_line(&recover_line(1, "15-M6", 0.05)).unwrap();
+    assert!(ok.contains(r#""ok":true"#), "{ok}");
+    let bad = json::parse(&client.call_line(&recover_line(2, "15-M6", -1.0)).unwrap()).unwrap();
+    assert_eq!(bad.get("error").unwrap().as_str(), Some("bad_param"));
+    // Neither the entry nor the daemon is poisoned: same spec recovers
+    // fine, still from cache.
+    let hits_before = server.cache().stats().hits;
+    let again = client.call_line(&recover_line(3, "15-M6", 0.05)).unwrap();
+    assert!(again.contains(r#""ok":true"#), "{again}");
+    assert!(server.cache().stats().hits > hits_before, "entry survived the failed recover");
+
+    // Prepare failures trip the per-spec cap...
+    let nope = r#"{"id":4,"verb":"recover","graph":{"name":"no-such-graph"},"alpha":0.05}"#;
+    let first = json::parse(&client.call_line(nope).unwrap()).unwrap();
+    assert_eq!(first.get("error").unwrap().as_str(), Some("unknown_graph"));
+    let second = json::parse(&client.call_line(nope).unwrap()).unwrap();
+    assert_eq!(second.get("error").unwrap().as_str(), Some("unknown_graph"));
+    let capped = json::parse(&client.call_line(nope).unwrap()).unwrap();
+    assert_eq!(capped.get("error").unwrap().as_str(), Some("bad_param"), "{capped:?}");
+    assert!(
+        capped.get("message").unwrap().as_str().unwrap().contains("evict"),
+        "the fast-reject names the reset escape hatch"
+    );
+    // ...and `evict` resets the cap (back to the real error).
+    let ev = json::parse(&client.call_line(r#"{"id":7,"verb":"evict"}"#).unwrap()).unwrap();
+    assert_eq!(ev.get("ok").unwrap().as_bool(), Some(true));
+    let reset = json::parse(&client.call_line(nope).unwrap()).unwrap();
+    assert_eq!(reset.get("error").unwrap().as_str(), Some("unknown_graph"));
+
+    // A malformed line gets a protocol error and keeps the connection.
+    let garbage = client.call_line("this is not json").unwrap();
+    assert!(garbage.contains(r#""error":"protocol""#), "{garbage}");
+    let still_alive = client.call_line(r#"{"id":8,"verb":"stats"}"#).unwrap();
+    assert!(still_alive.contains(r#""ok":true"#), "{still_alive}");
+
+    server.stop();
+    server.wait();
+}
+
+#[test]
+fn deadline_exceeded_is_typed_and_the_cache_keeps_the_work() {
+    let server = start("deadline", |_| {});
+    // A 1 ms deadline cannot cover a cold prepare + PCG solve; the
+    // response is a typed deadline_exceeded...
+    let line = r#"{"id":1,"verb":"pcg","graph":{"name":"09-com-Youtube","scale":0.05},"alpha":0.05,"deadline_ms":1}"#;
+    // In principle a heavily-loaded host could blow the 1 ms deadline at
+    // the check *before* the prepare stage, in which case no work was
+    // admitted yet — retry until the deadline fires after it.
+    for attempt in 0.. {
+        let v = call(&server, line);
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{v:?}");
+        assert_eq!(v.get("error").unwrap().as_str(), Some("deadline_exceeded"));
+        assert_eq!(v.get("deadline_ms").unwrap().as_u64(), Some(1));
+        assert!(v.get("elapsed_ms").unwrap().as_u64().unwrap() > 1);
+        if server.cache().stats().entries == 1 {
+            break;
+        }
+        assert!(attempt < 50, "deadline fired before the prepare stage on every attempt");
+    }
+    // ...but the prepare it admitted stays cached: the retry without a
+    // deadline is a spec-memo hit.
+    assert_eq!(server.cache().stats().entries, 1, "deadline must not discard the prepare");
+    let retry = call(
+        &server,
+        r#"{"id":2,"verb":"recover","graph":{"name":"09-com-Youtube","scale":0.05},"alpha":0.05}"#,
+    );
+    assert_eq!(retry.get("ok").unwrap().as_bool(), Some(true), "{retry:?}");
+    assert_eq!(server.cache().stats().hits, 1);
+
+    server.stop();
+    server.wait();
+}
+
+#[test]
+fn shutdown_verb_stops_the_daemon_and_unlinks_the_socket() {
+    let server = start("shutdown", |_| {});
+    let path = server.socket().to_path_buf();
+    let v = call(&server, r#"{"id":1,"verb":"shutdown"}"#);
+    assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(v.get("stopping").unwrap().as_bool(), Some(true));
+    server.wait(); // must return promptly — the verb stops the acceptor
+    assert!(!path.exists(), "socket unlinked on shutdown");
+}
+
+#[test]
+fn bombard_mixed_load_completes_with_zero_failures() {
+    let server = start("bombard", |cfg| cfg.max_in_flight = 8);
+    let cfg = BombardConfig {
+        socket: server.socket().to_path_buf(),
+        requests: 32,
+        clients: 3,
+        graphs: vec!["15-M6".to_string(), "07-com-DBLP".to_string()],
+        alphas: vec![0.02, 0.05],
+        scale: SCALE,
+        seed: 42,
+        deadline_ms: 0,
+        shutdown: false,
+    };
+    let report = bombard::run(&cfg).unwrap();
+    assert_eq!(report.sent, 32);
+    assert_eq!(report.failed, 0, "{report:?}");
+    assert_eq!(report.ok + report.overloaded + report.deadline_exceeded, 32);
+    assert!(report.ok > 0);
+    assert!(report.p50_us > 0.0 && report.p99_us >= report.p95_us && report.p95_us >= report.p50_us);
+    assert!(report.throughput_rps > 0.0);
+    let rendered = report.render();
+    assert!(rendered.contains("p50") && rendered.contains("p95") && rendered.contains("p99"));
+
+    // Replays are deterministic: the same config generates the same mix.
+    assert_eq!(bombard::request_lines(&cfg), bombard::request_lines(&cfg));
+
+    server.stop();
+    server.wait();
+}
