@@ -9,7 +9,7 @@
 //! before/after comparisons recorded in CHANGES.md.
 //!
 //! Besides the stdout report, the run writes a machine-readable
-//! `BENCH_8.json` (override the path with `PDGRASS_BENCH_OUT`): every
+//! `BENCH_9.json` (override the path with `PDGRASS_BENCH_OUT`): every
 //! `report()` sample lands in `bench_ms` and every structural makespan
 //! model value in `model_units`. Format documented in ROADMAP.md.
 
@@ -38,12 +38,12 @@ fn model(name: &str, units: u64) {
     MODELS.lock().unwrap().push((name.to_string(), units));
 }
 
-/// Write the accumulated samples as `BENCH_8.json` (or
+/// Write the accumulated samples as `BENCH_9.json` (or
 /// `$PDGRASS_BENCH_OUT`). Hand-rolled JSON — names are bench identifiers
 /// (no escapes needed), values plain decimals.
 fn write_bench_json() {
-    let path = std::env::var("PDGRASS_BENCH_OUT").unwrap_or_else(|_| "BENCH_8.json".to_string());
-    let mut out = String::from("{\n  \"schema\": \"pdgrass-bench-v1\",\n  \"pr\": 8,\n");
+    let path = std::env::var("PDGRASS_BENCH_OUT").unwrap_or_else(|_| "BENCH_9.json".to_string());
+    let mut out = String::from("{\n  \"schema\": \"pdgrass-bench-v1\",\n  \"pr\": 9,\n");
     out.push_str("  \"bench_ms\": {\n");
     let samples = SAMPLES.lock().unwrap();
     for (i, (name, ms)) in samples.iter().enumerate() {
@@ -473,6 +473,30 @@ fn bench_giant_subtask() {
     );
 }
 
+/// Cold prepare vs snapshot warm start: what the serve layer's
+/// `snapshot_dir` buys per cache miss. Cold pays steps 1–3 in full;
+/// warm pays encode-once then decode+validate per restart. The decoded
+/// state must re-encode to the identical bytes (asserted every run).
+fn bench_snapshot() {
+    use pdgrass::{Prepared, Sparsify};
+    let (name, scale, seed) = ("07-com-DBLP", 0.3, 42u64);
+    let (prepared, ms_cold) =
+        min_of(3, || Sparsify::suite(name, scale, seed).unwrap().threads(4).prepare().unwrap());
+    let off_n = prepared.num_off_tree() as u64;
+    report("snapshot_cold_prepare", 3, ms_cold, off_n, "edge");
+    let (bytes, ms_enc) = min_of(3, || prepared.to_snapshot_bytes());
+    report("snapshot_encode", 3, ms_enc, bytes.len() as u64, "byte");
+    let (loaded, ms_dec) = min_of(3, || Prepared::from_snapshot_bytes(&bytes).unwrap());
+    report("snapshot_decode_validate", 3, ms_dec, bytes.len() as u64, "byte");
+    assert_eq!(loaded.to_snapshot_bytes(), bytes, "round trip must be bitwise stable");
+    println!(
+        "{:<38} warm load {:.2}x vs cold prepare ({} KiB container)",
+        "",
+        ms_cold / ms_dec.max(1e-9),
+        bytes.len() / 1024
+    );
+}
+
 /// Serial vs level-scheduled triangular solve, on a grid-sparsifier
 /// factor (the PCG preconditioner workload). Wall clock on this 1-core
 /// container is informational; the structural assertion replays the
@@ -541,6 +565,8 @@ fn main() {
     bench_giant_subtask();
     println!("# micro bench: alpha-sweep with shared Prepared vs recompute (session API)");
     bench_alpha_sweep();
+    println!("# micro bench: cold prepare vs snapshot encode/decode warm start");
+    bench_snapshot();
     println!("# micro bench: parallel-substrate dispatch cost (spawn vs persistent pool)");
     bench_dispatch();
     println!("# micro bench: BLAS-1 serial vs pooled (PCG inner-loop ops)");

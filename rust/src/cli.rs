@@ -14,8 +14,9 @@
 //! pdgrass table2 | table3 | table4 | fig1 | fig6-8   [--scale S] [--config F]
 //! pdgrass list     # suite rows
 //! pdgrass audit    [--root DIR] [--allowlist FILE]   # static analysis
-//! pdgrass serve    [--socket P] [--cache-capacity N] [--max-in-flight N]
-//! pdgrass bombard  [--socket P] [--requests N] [--clients N] [--graphs A,B]
+//! pdgrass prepare  --graph NAME [--save FILE.pdsnap | --load FILE.pdsnap]
+//! pdgrass serve    [--socket P] [--cache-capacity N] [--snapshot-dir D]
+//! pdgrass bombard  [--socket P] [--requests N] [--clients N] [--warm-compare]
 //! ```
 
 use crate::config::{Doc, RunConfig, ServeConfig};
@@ -196,6 +197,41 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
             }
             Ok(())
         }
+        "prepare" => {
+            let (cfg, run) = pipeline_cfg(&cli)?;
+            let prepared = match cli.str("load") {
+                Some(path) => {
+                    let t = Timer::start();
+                    let p = crate::session::Prepared::load(std::path::Path::new(path))?
+                        .with_threads(run.resolved_threads());
+                    println!("loaded snapshot {path} in {:.1} ms", t.ms());
+                    p
+                }
+                None => {
+                    let name = cli.str("graph").unwrap_or("15-M6");
+                    let t = Timer::start();
+                    let p = Sparsify::suite(name, cfg.scale, cfg.seed)?
+                        .pipeline(run.pipeline)
+                        .threads(run.resolved_threads())
+                        .prepare()?;
+                    println!("prepared {name} in {:.1} ms", t.ms());
+                    p
+                }
+            };
+            println!(
+                "fingerprint {} |V|={} |E|={} off-tree={} subtasks={}",
+                crate::graph::fingerprint_hex(prepared.fingerprint()),
+                prepared.graph().num_vertices(),
+                prepared.graph().num_edges(),
+                prepared.num_off_tree(),
+                prepared.subtasks().len(),
+            );
+            if let Some(out) = cli.str("save") {
+                prepared.save(std::path::Path::new(out))?;
+                println!("wrote {out}");
+            }
+            Ok(())
+        }
         "suite" | "table2" => {
             let (cfg, run) = pipeline_cfg(&cli)?;
             experiments::table2(&graph_names(&run), &run.alphas, &cfg);
@@ -281,6 +317,12 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
             if let Some(s) = cli.str("threads") {
                 cfg.threads = s.parse()?;
             }
+            if let Some(s) = cli.str("snapshot-dir") {
+                if s.is_empty() {
+                    anyhow::bail!("--snapshot-dir: must not be empty");
+                }
+                cfg.snapshot_dir = Some(std::path::PathBuf::from(s));
+            }
             println!(
                 "pdgrass serve: listening on {} (cache {}, in-flight {}, {} thread(s))",
                 cfg.socket.display(),
@@ -321,10 +363,19 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
                 cfg.deadline_ms = s.parse()?;
             }
             cfg.shutdown = cli.has("shutdown");
-            let report = crate::serve::bombard::run(&cfg)?;
-            println!("{}", report.render());
-            if report.failed > 0 {
-                anyhow::bail!("bombard: {} failed request(s)", report.failed);
+            if cli.has("warm-compare") {
+                let report = crate::serve::bombard::run_compare(&cfg)?;
+                println!("{}", report.render());
+                let failed = report.cold.failed + report.warm.failed;
+                if failed > 0 {
+                    anyhow::bail!("bombard: {failed} failed request(s)");
+                }
+            } else {
+                let report = crate::serve::bombard::run(&cfg)?;
+                println!("{}", report.render());
+                if report.failed > 0 {
+                    anyhow::bail!("bombard: {} failed request(s)", report.failed);
+                }
             }
             Ok(())
         }
@@ -351,6 +402,7 @@ VERBS
   fig6-8                    Figs. 6-8 strong-scaling curves (CSV)
   pipeline                  barrier vs streamed prepare timings + overlap model
   audit     [--root DIR] [--allowlist FILE]   concurrency/determinism lints
+  prepare   --graph NAME [--save F] [--load F]  prepared-state snapshots
   serve                     sparsification daemon on a Unix socket
   bombard                   deterministic load replay against a daemon
 
@@ -372,6 +424,9 @@ SERVE OPTIONS ([serve] config keys; flags override)
   --deadline-ms N    default per-request deadline, 0 = none (default 0)
   --failure-cap N    consecutive prepare failures per spec before fast-reject
   --log TARGET       request summaries: stderr | off | file path (default stderr)
+  --snapshot-dir D   cross-process warm-start cache of <fingerprint>.pdsnap
+                     snapshots: cache misses try a snapshot load before a full
+                     prepare; successful prepares are written back (default off)
 
 BOMBARD OPTIONS
   --requests N       total requests in the mix (default 64)
@@ -380,6 +435,14 @@ BOMBARD OPTIONS
   --alphas X,Y       alpha values the mix draws from (default 0.02,0.05,0.10)
   --deadline-ms N    attach a per-request deadline to compute requests
   --shutdown         send a shutdown request after the run
+  --warm-compare     replay the mix twice with an evict-all before each pass:
+                     cold (full prepare, snapshot write-back) vs warm
+                     (snapshot load); prints both reports + elapsed ratio
+
+PREPARE OPTIONS
+  --graph NAME       suite graph to prepare (default 15-M6)
+  --save F.pdsnap    write the prepared state as a versioned snapshot
+  --load F.pdsnap    load a snapshot instead of preparing (skips steps 1-3)
 ";
 
 #[cfg(test)]
@@ -482,6 +545,22 @@ mod tests {
         assert!(!err.is_empty());
         let err = run(&s(&["bombard", "--alphas", "zero"])).unwrap_err().to_string();
         assert!(err.contains("alphas"), "{err}");
+    }
+
+    #[test]
+    fn prepare_saves_and_loads_a_snapshot() {
+        let dir =
+            std::env::temp_dir().join(format!("pdgrass-cli-prepare-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cli.pdsnap");
+        let p = path.to_str().unwrap();
+        run(&s(&["prepare", "--graph", "15-M6", "--scale", "0.02", "--save", p])).unwrap();
+        run(&s(&["prepare", "--load", p])).unwrap();
+        let err = run(&s(&["prepare", "--load", "/tmp/pdgrass-no-such.pdsnap"]))
+            .unwrap_err()
+            .to_string();
+        assert!(!err.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -458,6 +458,12 @@ pub struct ServeConfig {
     /// Default worker threads per request (0 = auto:
     /// [`crate::par::num_threads`]).
     pub threads: usize,
+    /// Cross-process warm-start directory: cache misses first try to
+    /// load `<fingerprint>.pdsnap` from here ([`crate::snapshot`]), and
+    /// successful prepares are written back, so a restarted daemon
+    /// answers its first request without re-running Algorithm-1 steps
+    /// 1–3. `None` (default) disables snapshotting.
+    pub snapshot_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -470,6 +476,7 @@ impl Default for ServeConfig {
             failure_cap: 3,
             log: "stderr".to_string(),
             threads: 0,
+            snapshot_dir: None,
         }
     }
 }
@@ -482,7 +489,7 @@ impl ServeConfig {
         let mut cfg = ServeConfig::default();
         let known = [
             "serve.socket", "serve.cache_capacity", "serve.max_in_flight", "serve.deadline_ms",
-            "serve.failure_cap", "serve.log", "serve.threads",
+            "serve.failure_cap", "serve.log", "serve.threads", "serve.snapshot_dir",
         ];
         for key in doc.keys() {
             if key.starts_with("serve.") && !known.contains(&key) {
@@ -547,6 +554,19 @@ impl ServeConfig {
                 name: "serve.threads",
                 why: "not a non-negative int".into(),
             })?;
+        }
+        if let Some(v) = doc.get("serve.snapshot_dir") {
+            let s = v.as_str().ok_or_else(|| Error::BadParam {
+                name: "serve.snapshot_dir",
+                why: "not a string".into(),
+            })?;
+            if s.is_empty() {
+                return Err(Error::BadParam {
+                    name: "serve.snapshot_dir",
+                    why: "must be a non-empty path".into(),
+                });
+            }
+            cfg.snapshot_dir = Some(std::path::PathBuf::from(s));
         }
         Ok(cfg)
     }
@@ -694,6 +714,28 @@ mod tests {
         assert_eq!(d.max_in_flight, 4);
         assert_eq!(d.deadline_ms, 0);
         assert!(d.resolved_threads() >= 1);
+        assert_eq!(d.snapshot_dir, None);
+    }
+
+    #[test]
+    fn serve_snapshot_dir_round_trips_and_validates() {
+        let doc = Doc::parse("[serve]\nsnapshot_dir = \"/tmp/snaps\"\n").unwrap();
+        let cfg = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.snapshot_dir, Some(std::path::PathBuf::from("/tmp/snaps")));
+        // Absent key → disabled.
+        let cfg = ServeConfig::from_doc(&Doc::parse("[serve]\n").unwrap()).unwrap();
+        assert_eq!(cfg.snapshot_dir, None);
+        // Wrong type and empty string are typed errors naming the key.
+        let doc = Doc::parse("[serve]\nsnapshot_dir = 3\n").unwrap();
+        match ServeConfig::from_doc(&doc) {
+            Err(Error::BadParam { name, .. }) => assert_eq!(name, "serve.snapshot_dir"),
+            other => panic!("expected BadParam, got {other:?}"),
+        }
+        let doc = Doc::parse("[serve]\nsnapshot_dir = \"\"\n").unwrap();
+        match ServeConfig::from_doc(&doc) {
+            Err(Error::BadParam { name, .. }) => assert_eq!(name, "serve.snapshot_dir"),
+            other => panic!("expected BadParam, got {other:?}"),
+        }
     }
 
     #[test]

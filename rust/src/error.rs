@@ -67,6 +67,15 @@ pub enum Error {
         /// The deadline the request carried.
         deadline_ms: u64,
     },
+    /// A `Prepared` snapshot failed validation: bad magic, unsupported
+    /// format version, fingerprint mismatch, a section digest that does
+    /// not match its bytes (truncation / bit-rot), or an internal
+    /// inconsistency in the decoded arrays. The snapshot is rejected
+    /// whole; callers fall back to a full prepare.
+    Snapshot {
+        /// What failed validation.
+        why: String,
+    },
     /// Config file is malformed (parse error or unknown key).
     Config(String),
     /// Underlying I/O failure.
@@ -96,6 +105,7 @@ impl fmt::Display for Error {
             Error::DeadlineExceeded { elapsed_ms, deadline_ms } => {
                 write!(f, "deadline exceeded: {elapsed_ms} ms elapsed (deadline {deadline_ms} ms)")
             }
+            Error::Snapshot { why } => write!(f, "snapshot rejected: {why}"),
             Error::Config(msg) => write!(f, "config: {msg}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -142,6 +152,9 @@ mod tests {
         let e = Error::DeadlineExceeded { elapsed_ms: 120, deadline_ms: 100 };
         assert!(e.to_string().contains("120 ms"), "{e}");
         assert!(e.to_string().contains("deadline 100 ms"), "{e}");
+        let e = Error::Snapshot { why: "section 3 digest mismatch".into() };
+        assert!(e.to_string().contains("snapshot rejected"), "{e}");
+        assert!(e.to_string().contains("section 3 digest mismatch"), "{e}");
     }
 
     #[test]

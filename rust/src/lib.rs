@@ -39,6 +39,15 @@
 //!   `Sparsify → Prepared → Recovered → Sparsifier` sessions that compute
 //!   the invariant state (steps 1–3 of Algorithm 1) once and recover any
 //!   number of (α, strategy, threads) variants from it.
+//! * [`snapshot`] — the warm-start story: [`Prepared::save`] /
+//!   [`Prepared::load`] persist that invariant state as a versioned,
+//!   checksummed flat-array container (CRC-32 per section, fingerprint
+//!   cross-check, full semantic re-validation on load), so a *different
+//!   process* — a restarted daemon, another fleet worker, a later CLI
+//!   run — skips steps 1–3 entirely and pays O(read + validate). A
+//!   loaded snapshot recovers and evaluates bitwise identically to the
+//!   `Prepared` that was saved; anything corrupt or stale is the typed
+//!   [`Error::Snapshot`], never a silently-wrong state.
 //!
 //! ## Pipeline disciplines: barrier vs streamed
 //!
@@ -82,7 +91,11 @@
 //!   instead of queueing; per-request deadlines and per-spec failure
 //!   caps degrade gracefully; every request emits a JSON-lines run
 //!   summary. `pdgrass bombard` replays seeded deterministic traffic
-//!   against it and reports throughput and tail latency.
+//!   against it and reports throughput and tail latency. With a
+//!   configured `[serve] snapshot_dir`, cache misses first try a
+//!   snapshot load ([`snapshot`]) and successful prepares are written
+//!   back — so a restarted daemon answers its first request from a warm
+//!   load instead of re-running steps 1–3.
 //! * [`gen`], [`runtime`], [`util`] — the synthetic evaluation suite, the
 //!   XLA/Pallas kernel runtime, and shared utilities.
 //!
@@ -145,6 +158,7 @@ pub mod recovery;
 pub mod runtime;
 pub mod serve;
 pub mod session;
+pub mod snapshot;
 pub mod solver;
 pub mod tree;
 pub mod util;

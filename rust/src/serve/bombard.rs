@@ -280,6 +280,64 @@ pub fn run(cfg: &BombardConfig) -> Result<BombardReport> {
     })
 }
 
+/// Cold-vs-warm replay comparison (`pdgrass bombard --warm-compare`).
+///
+/// Both passes replay the *same* deterministic mix; the only difference
+/// is what the daemon's prepare path finds. See [`run_compare`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompareReport {
+    /// First pass: in-memory cache evicted up front, so every spec pays
+    /// a full prepare (which, with a `snapshot_dir`, writes back).
+    pub cold: BombardReport,
+    /// Second pass: cache evicted again — with a `snapshot_dir` the
+    /// prepares are now warm snapshot loads; without one this measures
+    /// a plain re-prepare and the comparison should be ~1×.
+    pub warm: BombardReport,
+}
+
+impl CompareReport {
+    /// Human-readable comparison for the CLI: both reports plus the
+    /// cold/warm elapsed ratio.
+    pub fn render(&self) -> String {
+        let speedup = if self.warm.elapsed_ms > 0.0 {
+            self.cold.elapsed_ms / self.warm.elapsed_ms
+        } else {
+            0.0
+        };
+        format!(
+            "cold (evicted cache, full prepare):\n{}\n\
+             warm (evicted cache, snapshot load):\n{}\n\
+             cold/warm elapsed ratio: {:.2}x",
+            self.cold.render(),
+            self.warm.render(),
+            speedup,
+        )
+    }
+}
+
+/// Drop every cached entry on the daemon so the next request of each
+/// spec goes through the prepare path again.
+fn evict_all(socket: &std::path::Path) -> Result<()> {
+    let mut cl = Client::connect(socket)?;
+    let line = obj(vec![("id", int(1)), ("verb", jstr("evict"))]).render();
+    cl.call_line(&line)?;
+    Ok(())
+}
+
+/// Replay the mix twice — evict-all, cold pass, evict-all, warm pass —
+/// and report both. Pointed at a daemon with a configured
+/// `snapshot_dir`, the cold pass populates the snapshot directory and
+/// the warm pass quantifies what the warm-start cache buys: the request
+/// mixes are byte-identical, so the elapsed ratio isolates prepare cost.
+/// `cfg.shutdown` is honored only after the warm pass.
+pub fn run_compare(cfg: &BombardConfig) -> Result<CompareReport> {
+    evict_all(&cfg.socket)?;
+    let cold = run(&BombardConfig { shutdown: false, ..cfg.clone() })?;
+    evict_all(&cfg.socket)?;
+    let warm = run(cfg)?;
+    Ok(CompareReport { cold, warm })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -345,5 +403,21 @@ mod tests {
             ..BombardConfig::default()
         };
         assert!(matches!(run(&cfg), Err(Error::Io(_))));
+    }
+
+    #[test]
+    fn compare_requires_a_daemon_and_renders_the_ratio() {
+        let cfg = BombardConfig {
+            socket: std::path::PathBuf::from("/tmp/pdgrass-no-such-daemon.sock"),
+            ..BombardConfig::default()
+        };
+        assert!(matches!(run_compare(&cfg), Err(Error::Io(_))));
+        let report = CompareReport {
+            cold: BombardReport { elapsed_ms: 300.0, ..BombardReport::default() },
+            warm: BombardReport { elapsed_ms: 100.0, ..BombardReport::default() },
+        };
+        let text = report.render();
+        assert!(text.contains("cold/warm elapsed ratio: 3.00x"), "{text}");
+        assert!(text.contains("cold (evicted cache, full prepare):"), "{text}");
     }
 }

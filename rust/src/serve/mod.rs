@@ -53,6 +53,27 @@
 //!     --graphs 15-M6 --alphas 0.02,0.05 --scale 0.02 --seed 42
 //! ```
 //!
+//! # Warm starts: `snapshot_dir`
+//!
+//! With a snapshot directory configured (`[serve] snapshot_dir` in the
+//! config file, or `--snapshot-dir`), the daemon becomes restartable
+//! without re-paying steps 1–3: every successful prepare is written back
+//! as a fingerprint-keyed [`crate::snapshot`] container
+//! (`<dir>/<fingerprint>.pdsnap`), and every cache miss *first* tries a
+//! snapshot load — full validation included — before falling back to a
+//! full prepare. A corrupt or stale file is counted (`load_failures` in
+//! the `stats` verb's `snapshot` block, `"snapshot":"load-failure"` in
+//! run summaries) and then healed by the fallback prepare's write-back;
+//! it never poisons the cache or fails the request.
+//!
+//! ```text
+//! pdgrass serve --socket /tmp/pdgrass.sock --snapshot-dir /var/cache/pdgrass
+//! # ... daemon restarts (crash, deploy, reboot) ...
+//! pdgrass serve --socket /tmp/pdgrass.sock --snapshot-dir /var/cache/pdgrass
+//! # first request per known graph is now a warm load, not a prepare
+//! pdgrass bombard --socket /tmp/pdgrass.sock --warm-compare   # quantify it
+//! ```
+//!
 //! Or in-process:
 //!
 //! ```no_run
@@ -81,8 +102,8 @@ pub mod server;
 pub mod summary;
 
 pub use admission::{Admission, AdmissionStats};
-pub use bombard::{BombardConfig, BombardReport};
+pub use bombard::{BombardConfig, BombardReport, CompareReport};
 pub use cache::{CacheStats, PreparedCache};
 pub use protocol::Client;
 pub use server::Server;
-pub use summary::{RequestSummary, SummaryLog};
+pub use summary::{RequestSummary, SnapStats, SnapshotCounters, SummaryLog};

@@ -259,6 +259,7 @@ pub fn error_kind(e: &Error) -> &'static str {
         Error::UnknownGraph { .. } => "unknown_graph",
         Error::NoConvergence { .. } => "no_convergence",
         Error::NotPositiveDefinite { .. } => "not_positive_definite",
+        Error::Snapshot { .. } => "snapshot",
         Error::Config(_) => "config",
         Error::Io(_) => "io",
     }
@@ -520,6 +521,7 @@ mod tests {
             error_kind(&Error::UnknownGraph { name: String::new() }),
             error_kind(&Error::NoConvergence { iters: 1, residual: 1.0 }),
             error_kind(&Error::NotPositiveDefinite { at: 0, pivot: 0.0 }),
+            error_kind(&Error::Snapshot { why: String::new() }),
             error_kind(&Error::Config(String::new())),
             error_kind(&Error::Io(std::io::Error::other("x"))),
         ];

@@ -57,7 +57,7 @@ use super::protocol::{
     error_kind, error_response, fp_value, ok_response, protocol_error_response, GraphSpec,
     ReqOpts, Request, Target, Verb,
 };
-use super::summary::{RequestSummary, ServerCounters, SummaryLog};
+use super::summary::{RequestSummary, ServerCounters, SnapshotCounters, SummaryLog};
 use crate::config::ServeConfig;
 use crate::error::{Error, Result};
 use crate::graph::{fingerprint_hex, Fnv1a};
@@ -76,6 +76,8 @@ struct Shared {
     cache: PreparedCache,
     admission: Admission,
     counters: ServerCounters,
+    /// Warm-start bookkeeping for the `snapshot_dir` path.
+    snap: SnapshotCounters,
     log: SummaryLog,
     shutdown: Mutex<bool>,
     handlers: Mutex<Vec<ServiceHandle>>,
@@ -110,11 +112,15 @@ impl Server {
         }
         let listener = UnixListener::bind(&socket)?;
         let log = SummaryLog::open(&config.log)?;
+        if let Some(dir) = &config.snapshot_dir {
+            std::fs::create_dir_all(dir)?;
+        }
         let shared = Arc::new(Shared {
             default_threads: config.resolved_threads(),
             cache: PreparedCache::new(config.cache_capacity, config.failure_cap),
             admission: Admission::new(config.max_in_flight),
             counters: ServerCounters::default(),
+            snap: SnapshotCounters::default(),
             log,
             shutdown: Mutex::new(false),
             handlers: Mutex::new(Vec::new()),
@@ -140,6 +146,12 @@ impl Server {
     /// The prepared-state cache (test/diagnostic access).
     pub fn cache(&self) -> &PreparedCache {
         &self.shared.cache
+    }
+
+    /// Warm-start counters for the `snapshot_dir` path
+    /// (test/diagnostic access).
+    pub fn snapshot_stats(&self) -> super::summary::SnapStats {
+        self.shared.snap.snapshot()
     }
 
     /// Request shutdown from in-process: set the flag and poke the
@@ -356,9 +368,59 @@ fn verb_name(verb: &Verb) -> &'static str {
     }
 }
 
+/// Try to warm-load `fp` from the configured snapshot directory.
+///
+/// Returns `Some(prepared)` only for a snapshot that decoded *and* whose
+/// content fingerprint matches the probed one — a valid snapshot stored
+/// under the wrong filename must not poison the cache. Counter and
+/// summary classification: decoded + matching → `hit`; missing file (or
+/// any other I/O error) → `miss`; a typed [`Error::Snapshot`] rejection
+/// or a fingerprint mismatch → `load-failure`. Never fails the request.
+fn try_snapshot_load(shared: &Shared, summary: &mut RequestSummary, fp: u64) -> Option<Prepared> {
+    let dir = shared.config.snapshot_dir.as_ref()?;
+    let path = crate::snapshot::file_path(dir, fp);
+    match Prepared::load(&path) {
+        Ok(p) if p.fingerprint() == fp => {
+            shared.snap.record_hit();
+            summary.snapshot = Some("hit");
+            Some(p)
+        }
+        Ok(_) => {
+            // Decoded fine but holds a different graph: the file was
+            // renamed or copied under the wrong key. Treat as corrupt.
+            shared.snap.record_load_failure();
+            summary.snapshot = Some("load-failure");
+            None
+        }
+        Err(Error::Snapshot { .. }) => {
+            shared.snap.record_load_failure();
+            summary.snapshot = Some("load-failure");
+            None
+        }
+        Err(_) => {
+            shared.snap.record_miss();
+            summary.snapshot = Some("miss");
+            None
+        }
+    }
+}
+
+/// Best-effort snapshot write-back after a successful prepare. Save
+/// errors are swallowed: the request already has its answer in memory.
+fn try_snapshot_save(shared: &Shared, prepared: &Prepared) {
+    if let Some(dir) = shared.config.snapshot_dir.as_ref() {
+        let path = crate::snapshot::file_path(dir, prepared.fingerprint());
+        if prepared.save(&path).is_ok() {
+            shared.snap.record_save();
+        }
+    }
+}
+
 /// Resolve a target to cached prepared state, preparing (and caching) on
-/// a spec miss. Updates the summary's fingerprint / cache / prepare_ms
-/// fields as a side effect.
+/// a spec miss. With a configured `snapshot_dir`, cache misses first try
+/// a snapshot load, and freshly prepared state is written back. Updates
+/// the summary's fingerprint / cache / snapshot / prepare_ms fields as a
+/// side effect.
 fn resolve_target(
     shared: &Shared,
     summary: &mut RequestSummary,
@@ -376,6 +438,15 @@ fn resolve_target(
                 }
                 None => {
                     summary.cache_hit = Some(false);
+                    let t = Timer::start();
+                    if let Some(p) = try_snapshot_load(shared, summary, *fp) {
+                        summary.prepare_ms = t.ms();
+                        let threads =
+                            if threads == 0 { shared.default_threads } else { threads };
+                        let (kept, _evicted) =
+                            shared.cache.insert(Arc::new(p.with_threads(threads)), None);
+                        return Ok(kept);
+                    }
                     Err(Error::UnknownGraph { name: fingerprint_hex(*fp) })
                 }
             }
@@ -401,14 +472,42 @@ fn resolve_target(
             }
             let t = Timer::start();
             let threads = if threads == 0 { shared.default_threads } else { threads };
-            let prepared = Sparsify::suite(&spec.name, spec.scale, spec.seed)
-                .and_then(|s| s.threads(threads).pipeline(pipeline).prepare());
+            let session = match Sparsify::suite(&spec.name, spec.scale, spec.seed) {
+                Ok(s) => s.threads(threads).pipeline(pipeline),
+                Err(e) => {
+                    summary.prepare_ms = t.ms();
+                    shared.cache.record_prepare_failure(
+                        &spec.name,
+                        spec.scale,
+                        spec.seed,
+                        &e.to_string(),
+                    );
+                    return Err(e);
+                }
+            };
+            if let Some(p) = try_snapshot_load(shared, summary, session.fingerprint()) {
+                summary.prepare_ms = t.ms();
+                let (kept, _evicted) = shared.cache.insert(
+                    Arc::new(p.with_threads(threads)),
+                    Some((&spec.name, spec.scale, spec.seed)),
+                );
+                summary.fingerprint = Some(kept.fingerprint());
+                return Ok(kept);
+            }
+            let prepared = session.prepare();
             summary.prepare_ms = t.ms();
             match prepared {
                 Ok(p) => {
-                    let (kept, _evicted) =
-                        shared.cache.insert(Arc::new(p), Some((&spec.name, spec.scale, spec.seed)));
+                    let mine = Arc::new(p);
+                    let (kept, _evicted) = shared
+                        .cache
+                        .insert(mine.clone(), Some((&spec.name, spec.scale, spec.seed)));
                     summary.fingerprint = Some(kept.fingerprint());
+                    // Only the insert-race winner writes the snapshot, so
+                    // concurrent preparers don't stampede the same file.
+                    if Arc::ptr_eq(&kept, &mine) {
+                        try_snapshot_save(shared, &kept);
+                    }
                     Ok(kept)
                 }
                 Err(e) => {
@@ -533,6 +632,7 @@ fn stats_fields(shared: &Shared) -> Vec<(&'static str, Value)> {
     let cache = shared.cache.stats();
     let adm = shared.admission.stats();
     let c = shared.counters.snapshot();
+    let snap = shared.snap.snapshot();
     let resident: Vec<Value> = shared
         .cache
         .resident()
@@ -575,6 +675,15 @@ fn stats_fields(shared: &Shared) -> Vec<(&'static str, Value)> {
                 ("accepted", int(adm.accepted)),
                 ("rejected", int(adm.rejected)),
                 ("peak", int(adm.peak as u64)),
+            ]),
+        ),
+        (
+            "snapshot",
+            obj(vec![
+                ("hits", int(snap.hits)),
+                ("misses", int(snap.misses)),
+                ("load_failures", int(snap.load_failures)),
+                ("saves", int(snap.saves)),
             ]),
         ),
     ]

@@ -34,6 +34,12 @@ pub struct RequestSummary {
     /// `Some(true)` = served from cache, `Some(false)` = miss (prepared
     /// on demand), `None` = not a cache-addressed verb.
     pub cache_hit: Option<bool>,
+    /// Snapshot warm-start outcome on a cache miss, when `[serve]
+    /// snapshot_dir` is configured: `"hit"` (loaded, steps 1–3 skipped),
+    /// `"miss"` (no file; full prepare), or `"load-failure"` (file
+    /// present but rejected; full prepare). `None` when snapshotting is
+    /// off or the cache already held the state.
+    pub snapshot: Option<&'static str>,
     pub ok: bool,
     /// Wire error kind when `!ok` (e.g. `"overloaded"`).
     pub error: Option<String>,
@@ -62,6 +68,9 @@ impl RequestSummary {
         }
         if let Some(hit) = self.cache_hit {
             fields.push(("cache", jstr(if hit { "hit" } else { "miss" })));
+        }
+        if let Some(snap) = self.snapshot {
+            fields.push(("snapshot", jstr(snap)));
         }
         fields.push(("ok", Value::Bool(self.ok)));
         if let Some(e) = &self.error {
@@ -179,6 +188,57 @@ impl ServerCounters {
     }
 }
 
+/// Warm-start bookkeeping for the `[serve] snapshot_dir` path,
+/// surfaced by the `stats` verb. Mutex-only, like the other serve
+/// bookkeeping (no new atomics — the audit allowlist stays untouched).
+#[derive(Default)]
+pub struct SnapshotCounters {
+    inner: Mutex<SnapStats>,
+}
+
+/// Snapshot warm-start counters: all cache misses with snapshotting
+/// enabled fall into exactly one of `hits` / `misses` / `load_failures`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SnapStats {
+    /// Cache misses answered by a validated snapshot load.
+    pub hits: u64,
+    /// Cache misses with no snapshot file on disk (full prepare).
+    pub misses: u64,
+    /// Cache misses where a snapshot file existed but was rejected
+    /// (corrupt, stale version, wrong fingerprint) — fell back to a full
+    /// prepare without poisoning anything.
+    pub load_failures: u64,
+    /// Snapshots written back after a full prepare.
+    pub saves: u64,
+}
+
+impl SnapshotCounters {
+    /// Count a warm load.
+    pub fn record_hit(&self) {
+        self.inner.lock().unwrap().hits += 1;
+    }
+
+    /// Count a probe that found no snapshot file.
+    pub fn record_miss(&self) {
+        self.inner.lock().unwrap().misses += 1;
+    }
+
+    /// Count a rejected snapshot file (typed fall-back to full prepare).
+    pub fn record_load_failure(&self) {
+        self.inner.lock().unwrap().load_failures += 1;
+    }
+
+    /// Count a snapshot written back to the directory.
+    pub fn record_save(&self) {
+        self.inner.lock().unwrap().saves += 1;
+    }
+
+    /// Counter snapshot.
+    pub fn snapshot(&self) -> SnapStats {
+        *self.inner.lock().unwrap()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +306,36 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         // "off" and "stderr" sinks must open and emit without error.
         SummaryLog::open("off").unwrap().emit(&RequestSummary::default());
+    }
+
+    #[test]
+    fn snapshot_field_renders_only_when_set() {
+        let s = RequestSummary {
+            id: Some(3),
+            verb: "recover",
+            cache_hit: Some(false),
+            snapshot: Some("hit"),
+            ok: true,
+            ..RequestSummary::default()
+        };
+        let v = json::parse(&s.render(9)).unwrap();
+        assert_eq!(v.get("cache").unwrap().as_str(), Some("miss"));
+        assert_eq!(v.get("snapshot").unwrap().as_str(), Some("hit"));
+        // Absent when snapshotting didn't participate.
+        let s = RequestSummary { verb: "recover", ok: true, ..RequestSummary::default() };
+        assert!(json::parse(&s.render(9)).unwrap().get("snapshot").is_none());
+    }
+
+    #[test]
+    fn snapshot_counters_accumulate() {
+        let c = SnapshotCounters::default();
+        c.record_hit();
+        c.record_miss();
+        c.record_miss();
+        c.record_load_failure();
+        c.record_save();
+        let s = c.snapshot();
+        assert_eq!(s, SnapStats { hits: 1, misses: 2, load_failures: 1, saves: 1 });
     }
 
     #[test]

@@ -148,6 +148,15 @@ impl Sparsify {
         self.pipeline(Pipeline::Streamed).prepare()
     }
 
+    /// Deterministic content hash of the session graph
+    /// ([`graph::fingerprint`]), available *before* [`Sparsify::prepare`]
+    /// — so a caller can probe a snapshot cache (and skip steps 1–3
+    /// entirely via [`Prepared::load`]) before committing to a full
+    /// prepare. Equal to [`Prepared::fingerprint`] of the prepared state.
+    pub fn fingerprint(&self) -> u64 {
+        graph::fingerprint(&self.graph)
+    }
+
     /// Run steps 1–3 once: spanning tree on effective weights, resistance
     /// scoring of every off-tree edge, score sort, LCA subtask grouping.
     /// The worker pool is warmed before any timed stage.
@@ -495,6 +504,75 @@ impl Prepared {
         rec.step_ms = [self.prep_ms[0], self.prep_ms[1], self.prep_ms[2], rec.step_ms[3]];
         RECOVER_COUNT.fetch_add(1, Ordering::Relaxed);
         Ok(Recovered { prepared: self, rec })
+    }
+
+    /// Reassemble a `Prepared` from snapshot-decoded parts (the
+    /// validated output of `snapshot::from_bytes`). Gets a fresh session
+    /// id and the environment's thread count; timings are zeroed —
+    /// they are execution history, not prepared state. Does *not* bump
+    /// [`prepare_count`]: no steps 1–3 were paid, which is exactly what
+    /// warm-start tests assert.
+    pub(crate) fn from_snapshot_parts(
+        name: Option<String>,
+        graph: Graph,
+        spanning: Spanning,
+        off: Vec<OffTreeEdge>,
+        subtasks: Vec<Subtask>,
+        pipeline: Pipeline,
+    ) -> Prepared {
+        let fingerprint = graph::fingerprint(&graph);
+        Prepared {
+            id: NEXT_PREPARED_ID.fetch_add(1, Ordering::Relaxed),
+            name,
+            fingerprint,
+            graph,
+            spanning,
+            off,
+            subtasks,
+            pipeline,
+            threads: crate::par::num_threads(),
+            spanning_ms: 0.0,
+            prep_ms: [0.0; 3],
+        }
+    }
+
+    /// Replace the session thread count (used by [`Sparsifier::pcg`])
+    /// on a loaded snapshot — thread count is an execution parameter,
+    /// not serialized state, so the serve daemon re-applies its resolved
+    /// count after a warm load. Results are bitwise identical at every
+    /// count; this only affects scheduling.
+    pub fn with_threads(mut self, threads: usize) -> Prepared {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Serialize this prepared state into the versioned, checksummed
+    /// snapshot container (see [`crate::snapshot`] for the format).
+    pub fn to_snapshot_bytes(&self) -> Vec<u8> {
+        crate::snapshot::to_bytes(self)
+    }
+
+    /// Deserialize and fully validate a snapshot produced by
+    /// [`Prepared::to_snapshot_bytes`]. Corruption, truncation, version
+    /// or fingerprint mismatch — anything not bitwise equivalent to a
+    /// fresh prepare — is the typed [`Error::Snapshot`].
+    pub fn from_snapshot_bytes(data: &[u8]) -> Result<Prepared> {
+        crate::snapshot::from_bytes(data)
+    }
+
+    /// Persist this prepared state to `path` (atomic temp-file +
+    /// rename). A later [`Prepared::load`] — in this process or any
+    /// other — skips Algorithm-1 steps 1–3 entirely.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        crate::snapshot::save(self, path)
+    }
+
+    /// Load a prepared state saved by [`Prepared::save`]. A missing file
+    /// is [`Error::Io`]; an invalid one is [`Error::Snapshot`]. The
+    /// loaded state recovers and evaluates bitwise identically to the
+    /// `Prepared` that was saved.
+    pub fn load(path: &std::path::Path) -> Result<Prepared> {
+        crate::snapshot::load(path)
     }
 
     /// feGRASS baseline (loose similarity, serial, multi-pass) over the

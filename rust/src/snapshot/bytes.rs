@@ -1,0 +1,234 @@
+//! Little-endian codecs and the CRC-32 section digest for snapshots.
+//!
+//! Everything in a snapshot is flat little-endian scalars: `u32`/`u64`
+//! words and `f64` values stored as their IEEE-754 bit patterns (so a
+//! round trip is bitwise, never a reformat through decimal). Sections are
+//! digested with CRC-32 (IEEE, reflected polynomial `0xEDB88320`), chosen
+//! over a fast non-cryptographic hash because CRC-32 detects *every*
+//! single-byte corruption — the property the corruption fuzz suite
+//! (`rust/tests/snapshot.rs`) exercises byte-by-byte.
+
+use crate::error::{Error, Result};
+
+/// Construct the typed snapshot-rejection error.
+pub fn snap_err(why: impl Into<String>) -> Error {
+    Error::Snapshot { why: why.into() }
+}
+
+/// CRC-32 (IEEE) lookup table, built at compile time.
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            k += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = u32::MAX;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+/// Append a `u32`, little-endian.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `u64`, little-endian.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `u32` slice, little-endian.
+pub fn put_u32s(out: &mut Vec<u8>, vs: &[u32]) {
+    out.reserve(vs.len() * 4);
+    for &v in vs {
+        put_u32(out, v);
+    }
+}
+
+/// Append a `u64` slice, little-endian.
+pub fn put_u64s(out: &mut Vec<u8>, vs: &[u64]) {
+    out.reserve(vs.len() * 8);
+    for &v in vs {
+        put_u64(out, v);
+    }
+}
+
+/// Append an `f64` slice as IEEE-754 bit patterns, little-endian.
+pub fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+    out.reserve(vs.len() * 8);
+    for &v in vs {
+        put_u64(out, v.to_bits());
+    }
+}
+
+/// Decode a section body as a `u32` array.
+pub fn get_u32s(bytes: &[u8], what: &str) -> Result<Vec<u32>> {
+    if bytes.len() % 4 != 0 {
+        return Err(snap_err(format!(
+            "{what}: section length {} is not a multiple of 4",
+            bytes.len()
+        )));
+    }
+    Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Decode a section body as a `u64` array.
+pub fn get_u64s(bytes: &[u8], what: &str) -> Result<Vec<u64>> {
+    if bytes.len() % 8 != 0 {
+        return Err(snap_err(format!(
+            "{what}: section length {} is not a multiple of 8",
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect())
+}
+
+/// Decode a section body as an `f64` array (bit patterns, no reformat).
+pub fn get_f64s(bytes: &[u8], what: &str) -> Result<Vec<f64>> {
+    Ok(get_u64s(bytes, what)?.into_iter().map(f64::from_bits).collect())
+}
+
+/// Bounds-checked sequential reader over a byte slice (used for the
+/// variable-layout META section; the array sections decode whole).
+pub struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    what: &'static str,
+}
+
+impl<'a> Cursor<'a> {
+    /// Reader over `bytes`, labelled `what` in errors.
+    pub fn new(bytes: &'a [u8], what: &'static str) -> Cursor<'a> {
+        Cursor { bytes, pos: 0, what }
+    }
+
+    /// Take the next `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.bytes.len()).ok_or_else(|| {
+            snap_err(format!(
+                "{}: truncated at byte {} (wanted {} more of {})",
+                self.what,
+                self.pos,
+                n,
+                self.bytes.len()
+            ))
+        })?;
+        let out = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Assert the reader consumed the section exactly — trailing garbage
+    /// is corruption, not slack.
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.bytes.len() {
+            return Err(snap_err(format!(
+                "{}: {} trailing bytes after the last field",
+                self.what,
+                self.bytes.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // The standard CRC-32 check value: CRC32("123456789").
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn crc32_detects_every_single_byte_flip() {
+        let base: Vec<u8> = (0..64u8).collect();
+        let digest = crc32(&base);
+        for i in 0..base.len() {
+            for bit in 0..8 {
+                let mut mutated = base.clone();
+                mutated[i] ^= 1 << bit;
+                assert_ne!(crc32(&mutated), digest, "flip byte {i} bit {bit} undetected");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_arrays_round_trip_bitwise() {
+        let u32s = vec![0u32, 1, u32::MAX, 0xDEAD_BEEF];
+        let u64s = vec![0u64, u64::MAX, 0x0123_4567_89AB_CDEF];
+        let f64s = vec![0.0f64, -0.0, 1.5, f64::MIN_POSITIVE, 1.0 / 3.0];
+        let (mut a, mut b, mut c) = (Vec::new(), Vec::new(), Vec::new());
+        put_u32s(&mut a, &u32s);
+        put_u64s(&mut b, &u64s);
+        put_f64s(&mut c, &f64s);
+        assert_eq!(get_u32s(&a, "a").unwrap(), u32s);
+        assert_eq!(get_u64s(&b, "b").unwrap(), u64s);
+        let back = get_f64s(&c, "c").unwrap();
+        assert_eq!(back.len(), f64s.len());
+        for (x, y) in back.iter().zip(&f64s) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn misaligned_section_lengths_are_typed_errors() {
+        assert!(matches!(get_u32s(&[0u8; 5], "x"), Err(Error::Snapshot { .. })));
+        assert!(matches!(get_u64s(&[0u8; 12], "x"), Err(Error::Snapshot { .. })));
+        assert!(matches!(get_f64s(&[0u8; 7], "x"), Err(Error::Snapshot { .. })));
+    }
+
+    #[test]
+    fn cursor_is_bounds_checked_and_exact() {
+        let mut body = Vec::new();
+        put_u32(&mut body, 7);
+        put_u64(&mut body, 9);
+        let mut c = Cursor::new(&body, "META");
+        assert_eq!(c.u32().unwrap(), 7);
+        assert_eq!(c.u64().unwrap(), 9);
+        c.finish().unwrap();
+
+        // Reading past the end is typed.
+        let mut c = Cursor::new(&body, "META");
+        assert_eq!(c.u64().unwrap(), 7 | (9 << 32));
+        assert!(matches!(c.u64(), Err(Error::Snapshot { .. })));
+
+        // Trailing bytes are typed.
+        let c = Cursor::new(&body, "META");
+        assert!(matches!(c.finish(), Err(Error::Snapshot { .. })));
+    }
+}

@@ -1,0 +1,810 @@
+//! Versioned, checksummed binary snapshots of [`Prepared`] state.
+//!
+//! Algorithm 1 steps 1–3 — spanning tree, resistance-scored off-tree
+//! order, LCA subtasks — are pure functions of the graph, yet every
+//! process historically paid them again. A snapshot persists exactly that
+//! prepared state so a warm start is O(read + validate): the session API
+//! exposes it as [`Prepared::save`] / [`Prepared::load`], the CLI as
+//! `pdgrass prepare --save/--load`, and the serve daemon tries a
+//! snapshot load on every cache miss when `[serve] snapshot_dir` is
+//! configured (see `serve::server`).
+//!
+//! # Container format (version 1)
+//!
+//! Flat little-endian arrays behind a 40-byte header and a section
+//! table. All offsets are 8-aligned and sections sit at canonical
+//! sequential positions, so a later mmap mode can point straight into
+//! the file:
+//!
+//! ```text
+//! header   (40 B)  magic "PDGRSNAP" · version u32 · section count u32
+//!                  · graph fingerprint u64 · payload length u64
+//!                  · CRC-32 of the section table u32 · reserved u32 (0)
+//! table    (17×24) per section: id u32 · CRC-32 u32 · offset u64 · len u64
+//! payload          section bodies in id order, zero-padded to 8 bytes
+//! ```
+//!
+//! The 17 sections carry the CSR edge list (`u`/`v`/`w`), the rooted
+//! tree's per-vertex arrays, the tree-edge flags, the score-sorted
+//! off-tree list, and the subtask grouping (CSR of indices), plus a META
+//! section with dimensions, root, pipeline tag, and the optional session
+//! name. Wall-clock timings are *not* serialized — a loaded `Prepared`
+//! reports zero prep timings — and neither is the thread count, which is
+//! an execution parameter, not prepared state.
+//!
+//! # Validation: corruption is typed, wrong content is rejected
+//!
+//! [`from_bytes`] accepts a byte string only if **every** byte is
+//! accounted for: magic, version, section count, reserved word, exact
+//! file length, table digest, canonical per-section offsets, per-section
+//! CRC-32 digests, and zero padding. Any single-byte corruption or
+//! truncation anywhere in the file therefore surfaces as the typed
+//! [`Error::Snapshot`] — never a panic, never a silently-wrong
+//! `Prepared` (the fuzz suite in `rust/tests/snapshot.rs` flips every
+//! byte and checks exactly this).
+//!
+//! Beyond integrity, the decoder re-validates *semantics*: the graph
+//! must re-hash to the header fingerprint, the tree arrays must be a
+//! consistent rooted spanning tree over flagged graph edges (bitwise
+//! `rdepth` recurrence included), every off-tree entry is compared
+//! against a fresh [`annotate_off_tree_edge`] recomputation, the score
+//! order must be the strict [`score_cmp`] total order, and the subtask
+//! grouping must be the unique (size-desc, lca-asc) partition. A file
+//! with valid digests but wrong content is still rejected, and an
+//! accepted load is bitwise identical to a fresh prepare.
+
+pub mod bytes;
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::graph::{self, Edge, Graph};
+use crate::recovery::score::score_cmp;
+use crate::recovery::subtask::Subtask;
+use crate::recovery::Pipeline;
+use crate::session::Prepared;
+use crate::tree::{annotate_off_tree_edge, OffTreeEdge, RootedTree, SkipTable, Spanning};
+
+use bytes::{
+    crc32, get_f64s, get_u32s, get_u64s, put_f64s, put_u32, put_u32s, put_u64, put_u64s, snap_err,
+    Cursor,
+};
+
+/// File magic: first 8 bytes of every snapshot.
+pub const MAGIC: [u8; 8] = *b"PDGRSNAP";
+/// Current container format version.
+pub const VERSION: u32 = 1;
+/// Fixed header length in bytes.
+const HEADER_LEN: usize = 40;
+/// Section-table entry length in bytes (id, crc, offset, len).
+const TABLE_ENTRY_LEN: usize = 24;
+
+/// Dimensions, root, pipeline tag, optional name.
+const SEC_META: u32 = 1;
+/// CSR edge endpoints `u` (`m × u32`).
+const SEC_EDGE_U: u32 = 2;
+/// CSR edge endpoints `v` (`m × u32`).
+const SEC_EDGE_V: u32 = 3;
+/// CSR edge weights (`m × f64`).
+const SEC_EDGE_W: u32 = 4;
+/// Tree parent per vertex (`n × u32`).
+const SEC_TREE_PARENT: u32 = 5;
+/// Parent-edge weight per vertex (`n × f64`).
+const SEC_TREE_PARENT_W: u32 = 6;
+/// Unweighted depth per vertex (`n × u32`).
+const SEC_TREE_DEPTH: u32 = 7;
+/// Resistive depth per vertex (`n × f64`).
+const SEC_TREE_RDEPTH: u32 = 8;
+/// BFS order from the root (`n × u32`).
+const SEC_TREE_ORDER: u32 = 9;
+/// Per-edge tree flag (`m × u8`, each 0/1).
+const SEC_TREE_FLAGS: u32 = 10;
+/// Off-tree edge ids, score order (`k × u32`).
+const SEC_OFF_EID: u32 = 11;
+/// Off-tree LCAs (`k × u32`).
+const SEC_OFF_LCA: u32 = 12;
+/// Off-tree tree-path resistances (`k × f64`).
+const SEC_OFF_RESISTANCE: u32 = 13;
+/// Off-tree criticality scores (`k × f64`).
+const SEC_OFF_SCORE: u32 = 14;
+/// Subtask LCAs (`s × u32`).
+const SEC_SUB_LCA: u32 = 15;
+/// Subtask index-CSR offsets (`(s+1) × u64`).
+const SEC_SUB_PTR: u32 = 16;
+/// Subtask index-CSR ids (`k × u32`).
+const SEC_SUB_IDXS: u32 = 17;
+
+/// Canonical section layout: every version-1 snapshot contains exactly
+/// these sections, in exactly this order. The decoder enforces the list
+/// entry-for-entry, so section ids double as indices (`id - 1`).
+const SECTIONS: [(u32, &str); 17] = [
+    (SEC_META, "META"),
+    (SEC_EDGE_U, "EDGE_U"),
+    (SEC_EDGE_V, "EDGE_V"),
+    (SEC_EDGE_W, "EDGE_W"),
+    (SEC_TREE_PARENT, "TREE_PARENT"),
+    (SEC_TREE_PARENT_W, "TREE_PARENT_W"),
+    (SEC_TREE_DEPTH, "TREE_DEPTH"),
+    (SEC_TREE_RDEPTH, "TREE_RDEPTH"),
+    (SEC_TREE_ORDER, "TREE_ORDER"),
+    (SEC_TREE_FLAGS, "TREE_FLAGS"),
+    (SEC_OFF_EID, "OFF_EID"),
+    (SEC_OFF_LCA, "OFF_LCA"),
+    (SEC_OFF_RESISTANCE, "OFF_RESISTANCE"),
+    (SEC_OFF_SCORE, "OFF_SCORE"),
+    (SEC_SUB_LCA, "SUB_LCA"),
+    (SEC_SUB_PTR, "SUB_PTR"),
+    (SEC_SUB_IDXS, "SUB_IDXS"),
+];
+
+/// Assembles sections into the final container byte string.
+struct Writer {
+    sections: Vec<(u32, Vec<u8>)>,
+}
+
+impl Writer {
+    fn new() -> Writer {
+        Writer { sections: Vec::with_capacity(SECTIONS.len()) }
+    }
+
+    fn push(&mut self, id: u32, body: Vec<u8>) {
+        self.sections.push((id, body));
+    }
+
+    /// Header + table + payload. Sections land at sequential 8-aligned
+    /// offsets (zero-padded), which the decoder requires exactly.
+    fn finish(self, fingerprint: u64) -> Vec<u8> {
+        let mut table = Vec::with_capacity(self.sections.len() * TABLE_ENTRY_LEN);
+        let mut payload = Vec::new();
+        for (id, body) in &self.sections {
+            put_u32(&mut table, *id);
+            put_u32(&mut table, crc32(body));
+            put_u64(&mut table, payload.len() as u64);
+            put_u64(&mut table, body.len() as u64);
+            payload.extend_from_slice(body);
+            while payload.len() % 8 != 0 {
+                payload.push(0);
+            }
+        }
+        let mut out = Vec::with_capacity(HEADER_LEN + table.len() + payload.len());
+        out.extend_from_slice(&MAGIC);
+        put_u32(&mut out, VERSION);
+        put_u32(&mut out, self.sections.len() as u32);
+        put_u64(&mut out, fingerprint);
+        put_u64(&mut out, payload.len() as u64);
+        put_u32(&mut out, crc32(&table));
+        put_u32(&mut out, 0); // reserved, validated zero on load
+        out.extend_from_slice(&table);
+        out.extend_from_slice(&payload);
+        out
+    }
+}
+
+/// Serialize `p` into a version-1 snapshot container.
+pub fn to_bytes(p: &Prepared) -> Vec<u8> {
+    let g = p.graph();
+    let sp = p.spanning();
+    let off = p.off_tree();
+    let subs = p.subtasks();
+    let (n, m) = (g.num_vertices(), g.num_edges());
+
+    let mut meta = Vec::new();
+    put_u64(&mut meta, n as u64);
+    put_u64(&mut meta, m as u64);
+    put_u64(&mut meta, off.len() as u64);
+    put_u64(&mut meta, subs.len() as u64);
+    put_u32(&mut meta, sp.root);
+    put_u32(&mut meta, match p.pipeline() {
+        Pipeline::Barrier => 0,
+        Pipeline::Streamed => 1,
+    });
+    match p.name() {
+        None => put_u32(&mut meta, 0),
+        Some(nm) => {
+            put_u32(&mut meta, 1);
+            put_u32(&mut meta, nm.len() as u32);
+            meta.extend_from_slice(nm.as_bytes());
+        }
+    }
+
+    let mut w = Writer::new();
+    w.push(SEC_META, meta);
+
+    let (mut eu, mut ev, mut ew) = (Vec::new(), Vec::new(), Vec::new());
+    for e in g.edges() {
+        eu.push(e.u);
+        ev.push(e.v);
+        ew.push(e.w);
+    }
+    let mut body = Vec::new();
+    put_u32s(&mut body, &eu);
+    w.push(SEC_EDGE_U, body);
+    let mut body = Vec::new();
+    put_u32s(&mut body, &ev);
+    w.push(SEC_EDGE_V, body);
+    let mut body = Vec::new();
+    put_f64s(&mut body, &ew);
+    w.push(SEC_EDGE_W, body);
+
+    let t = &sp.tree;
+    let mut body = Vec::new();
+    put_u32s(&mut body, &t.parent);
+    w.push(SEC_TREE_PARENT, body);
+    let mut body = Vec::new();
+    put_f64s(&mut body, &t.parent_w);
+    w.push(SEC_TREE_PARENT_W, body);
+    let mut body = Vec::new();
+    put_u32s(&mut body, &t.depth);
+    w.push(SEC_TREE_DEPTH, body);
+    let mut body = Vec::new();
+    put_f64s(&mut body, &t.rdepth);
+    w.push(SEC_TREE_RDEPTH, body);
+    let mut body = Vec::new();
+    put_u32s(&mut body, &t.order);
+    w.push(SEC_TREE_ORDER, body);
+    w.push(SEC_TREE_FLAGS, sp.is_tree_edge.iter().map(|&b| b as u8).collect());
+
+    let (mut eid, mut lca, mut res, mut score) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    for e in off {
+        eid.push(e.eid);
+        lca.push(e.lca);
+        res.push(e.resistance);
+        score.push(e.score);
+    }
+    let mut body = Vec::new();
+    put_u32s(&mut body, &eid);
+    w.push(SEC_OFF_EID, body);
+    let mut body = Vec::new();
+    put_u32s(&mut body, &lca);
+    w.push(SEC_OFF_LCA, body);
+    let mut body = Vec::new();
+    put_f64s(&mut body, &res);
+    w.push(SEC_OFF_RESISTANCE, body);
+    let mut body = Vec::new();
+    put_f64s(&mut body, &score);
+    w.push(SEC_OFF_SCORE, body);
+
+    let mut sub_lca = Vec::with_capacity(subs.len());
+    let mut sub_ptr = Vec::with_capacity(subs.len() + 1);
+    let mut sub_idxs = Vec::with_capacity(off.len());
+    sub_ptr.push(0u64);
+    for s in subs {
+        sub_lca.push(s.lca);
+        sub_idxs.extend_from_slice(&s.idxs);
+        sub_ptr.push(sub_idxs.len() as u64);
+    }
+    let mut body = Vec::new();
+    put_u32s(&mut body, &sub_lca);
+    w.push(SEC_SUB_LCA, body);
+    let mut body = Vec::new();
+    put_u64s(&mut body, &sub_ptr);
+    w.push(SEC_SUB_PTR, body);
+    let mut body = Vec::new();
+    put_u32s(&mut body, &sub_idxs);
+    w.push(SEC_SUB_IDXS, body);
+
+    w.finish(p.fingerprint())
+}
+
+/// Convert a stored `u64` dimension to `usize`, typed on overflow.
+fn usize_of(v: u64, what: &str) -> Result<usize> {
+    usize::try_from(v).map_err(|_| snap_err(format!("{what} {v} overflows usize")))
+}
+
+/// Assert a decoded array has the META-implied length.
+fn expect_len<T>(xs: &[T], want: usize, what: &str) -> Result<()> {
+    if xs.len() != want {
+        return Err(snap_err(format!("{what}: {} entries, META implies {want}", xs.len())));
+    }
+    Ok(())
+}
+
+/// Header + table + integrity-validated section bodies.
+struct Container<'a> {
+    fingerprint: u64,
+    sections: Vec<&'a [u8]>,
+}
+
+impl Container<'_> {
+    /// Body of section `id` (layout guarantees `id - 1` indexes it).
+    fn sec(&self, id: u32) -> &[u8] {
+        self.sections[(id - 1) as usize]
+    }
+}
+
+/// Validate the container envelope: magic, version, exact length, table
+/// digest, canonical offsets, per-section digests, zero padding. After
+/// this returns, every byte of the file is covered by some check.
+fn parse_container(data: &[u8]) -> Result<Container<'_>> {
+    if data.len() < HEADER_LEN {
+        return Err(snap_err(format!(
+            "truncated header: {} bytes, need {HEADER_LEN}",
+            data.len()
+        )));
+    }
+    if data[0..8] != MAGIC {
+        return Err(snap_err("bad magic: not a pdGRASS snapshot"));
+    }
+    let word32 = |at: usize| u32::from_le_bytes(data[at..at + 4].try_into().unwrap());
+    let word64 = |at: usize| u64::from_le_bytes(data[at..at + 8].try_into().unwrap());
+    let version = word32(8);
+    if version != VERSION {
+        return Err(snap_err(format!(
+            "unsupported format version {version} (this build reads version {VERSION})"
+        )));
+    }
+    let count = word32(12) as usize;
+    if count != SECTIONS.len() {
+        return Err(snap_err(format!("section count {count}, expected {}", SECTIONS.len())));
+    }
+    let fingerprint = word64(16);
+    let payload_len = usize_of(word64(24), "payload length")?;
+    let table_crc = word32(32);
+    let reserved = word32(36);
+    if reserved != 0 {
+        return Err(snap_err(format!("reserved header word is {reserved}, expected 0")));
+    }
+    let table_len = count * TABLE_ENTRY_LEN;
+    let expected = HEADER_LEN
+        .checked_add(table_len)
+        .and_then(|x| x.checked_add(payload_len))
+        .ok_or_else(|| snap_err("header-implied file length overflows"))?;
+    if data.len() != expected {
+        return Err(snap_err(format!(
+            "file length {} does not match header-implied {expected}",
+            data.len()
+        )));
+    }
+    let table = &data[HEADER_LEN..HEADER_LEN + table_len];
+    if crc32(table) != table_crc {
+        return Err(snap_err("section table digest mismatch"));
+    }
+    let payload = &data[HEADER_LEN + table_len..];
+
+    let mut sections = Vec::with_capacity(count);
+    let mut at = 0usize; // canonical next offset within the payload
+    for (i, &(id, name)) in SECTIONS.iter().enumerate() {
+        let e = &table[i * TABLE_ENTRY_LEN..(i + 1) * TABLE_ENTRY_LEN];
+        let got_id = u32::from_le_bytes(e[0..4].try_into().unwrap());
+        let got_crc = u32::from_le_bytes(e[4..8].try_into().unwrap());
+        let got_off = u64::from_le_bytes(e[8..16].try_into().unwrap());
+        let got_len = usize_of(u64::from_le_bytes(e[16..24].try_into().unwrap()), "section len")?;
+        if got_id != id {
+            return Err(snap_err(format!(
+                "table entry {i}: section id {got_id}, expected {id} ({name})"
+            )));
+        }
+        if got_off != at as u64 {
+            return Err(snap_err(format!(
+                "section {name}: offset {got_off}, canonical layout requires {at}"
+            )));
+        }
+        let end = at
+            .checked_add(got_len)
+            .filter(|&e| e <= payload.len())
+            .ok_or_else(|| snap_err(format!("section {name} overruns the payload")))?;
+        let body = &payload[at..end];
+        if crc32(body) != got_crc {
+            return Err(snap_err(format!("section {name} digest mismatch")));
+        }
+        at = end;
+        while at % 8 != 0 {
+            if at >= payload.len() {
+                return Err(snap_err(format!("section {name}: padding truncated")));
+            }
+            if payload[at] != 0 {
+                return Err(snap_err(format!("section {name}: nonzero alignment padding")));
+            }
+            at += 1;
+        }
+        sections.push(body);
+    }
+    if at != payload.len() {
+        return Err(snap_err(format!("{} trailing payload bytes", payload.len() - at)));
+    }
+    Ok(Container { fingerprint, sections })
+}
+
+/// Deserialize and fully validate a snapshot, reconstructing [`Prepared`]
+/// without re-running Algorithm-1 steps 1–3. Rejects (typed
+/// [`Error::Snapshot`]) anything that is not bitwise equivalent to the
+/// state a fresh prepare of the same graph would produce.
+pub fn from_bytes(data: &[u8]) -> Result<Prepared> {
+    let c = parse_container(data)?;
+
+    // META: dimensions and tags.
+    let mut meta = Cursor::new(c.sec(SEC_META), "META");
+    let n = usize_of(meta.u64()?, "vertex count")?;
+    let m = usize_of(meta.u64()?, "edge count")?;
+    let k = usize_of(meta.u64()?, "off-tree count")?;
+    let s = usize_of(meta.u64()?, "subtask count")?;
+    let root = meta.u32()?;
+    let pipe_tag = meta.u32()?;
+    let name = match meta.u32()? {
+        0 => None,
+        1 => {
+            let len = meta.u32()? as usize;
+            let raw = meta.take(len)?;
+            Some(
+                String::from_utf8(raw.to_vec())
+                    .map_err(|_| snap_err("META: session name is not UTF-8"))?,
+            )
+        }
+        other => return Err(snap_err(format!("META: bad name flag {other}"))),
+    };
+    meta.finish()?;
+    let pipeline = match pipe_tag {
+        0 => Pipeline::Barrier,
+        1 => Pipeline::Streamed,
+        other => return Err(snap_err(format!("META: bad pipeline tag {other}"))),
+    };
+    if n < 2 || m < 1 {
+        return Err(snap_err(format!("META: degenerate dimensions n={n} m={m}")));
+    }
+    if n > u32::MAX as usize || m > u32::MAX as usize {
+        return Err(snap_err(format!("META: dimensions n={n} m={m} exceed u32 ids")));
+    }
+    if m < n - 1 || k != m - (n - 1) {
+        return Err(snap_err(format!(
+            "META: off-tree count {k} inconsistent with n={n}, m={m} (expected m-(n-1))"
+        )));
+    }
+    if (root as usize) >= n {
+        return Err(snap_err(format!("META: root {root} out of range for n={n}")));
+    }
+    if s > k {
+        return Err(snap_err(format!("META: {s} subtasks over {k} off-tree edges")));
+    }
+
+    // Graph: validated CSR edges, then the fingerprint cross-check.
+    let eu = get_u32s(c.sec(SEC_EDGE_U), "EDGE_U")?;
+    let ev = get_u32s(c.sec(SEC_EDGE_V), "EDGE_V")?;
+    let ew = get_f64s(c.sec(SEC_EDGE_W), "EDGE_W")?;
+    expect_len(&eu, m, "EDGE_U")?;
+    expect_len(&ev, m, "EDGE_V")?;
+    expect_len(&ew, m, "EDGE_W")?;
+    let mut edges = Vec::with_capacity(m);
+    let mut prev: Option<(u32, u32)> = None;
+    for i in 0..m {
+        let (u, v, w) = (eu[i], ev[i], ew[i]);
+        if u >= v || (v as usize) >= n {
+            return Err(snap_err(format!("edge {i}: endpoints ({u},{v}) invalid for n={n}")));
+        }
+        if !w.is_finite() || w <= 0.0 {
+            return Err(snap_err(format!("edge {i}: weight {w} is not finite-positive")));
+        }
+        if let Some(p) = prev {
+            if (u, v) <= p {
+                return Err(snap_err(format!("edge {i}: ids not strictly ascending by (u,v)")));
+            }
+        }
+        prev = Some((u, v));
+        edges.push(Edge { u, v, w });
+    }
+    let g = Graph::from_unique_edges(n, edges);
+    let fp = graph::fingerprint(&g);
+    if fp != c.fingerprint {
+        return Err(snap_err(format!(
+            "graph fingerprint mismatch: header says {}, content hashes to {}",
+            graph::fingerprint_hex(c.fingerprint),
+            graph::fingerprint_hex(fp)
+        )));
+    }
+
+    // Spanning tree: arrays must form a rooted tree over flagged graph
+    // edges, with the exact bitwise rdepth recurrence `build` uses.
+    let parent = get_u32s(c.sec(SEC_TREE_PARENT), "TREE_PARENT")?;
+    let parent_w = get_f64s(c.sec(SEC_TREE_PARENT_W), "TREE_PARENT_W")?;
+    let depth = get_u32s(c.sec(SEC_TREE_DEPTH), "TREE_DEPTH")?;
+    let rdepth = get_f64s(c.sec(SEC_TREE_RDEPTH), "TREE_RDEPTH")?;
+    let order = get_u32s(c.sec(SEC_TREE_ORDER), "TREE_ORDER")?;
+    let flags = c.sec(SEC_TREE_FLAGS);
+    expect_len(&parent, n, "TREE_PARENT")?;
+    expect_len(&parent_w, n, "TREE_PARENT_W")?;
+    expect_len(&depth, n, "TREE_DEPTH")?;
+    expect_len(&rdepth, n, "TREE_RDEPTH")?;
+    expect_len(&order, n, "TREE_ORDER")?;
+    expect_len(flags, m, "TREE_FLAGS")?;
+
+    let r = root as usize;
+    if parent[r] != root || parent_w[r].to_bits() != 0 || depth[r] != 0 || rdepth[r].to_bits() != 0
+    {
+        return Err(snap_err("tree: root row is not (parent=root, w=0, depth=0, rdepth=0)"));
+    }
+    if order[0] != root {
+        return Err(snap_err(format!("tree: order starts at {}, root is {root}", order[0])));
+    }
+    let mut pos = vec![usize::MAX; n];
+    for (i, &v) in order.iter().enumerate() {
+        if (v as usize) >= n || pos[v as usize] != usize::MAX {
+            return Err(snap_err(format!("tree: order entry {i} ({v}) out of range or repeated")));
+        }
+        pos[v as usize] = i;
+    }
+    for v in 0..n as u32 {
+        if v == root {
+            continue;
+        }
+        let vi = v as usize;
+        let p = parent[vi];
+        if (p as usize) >= n || p == v {
+            return Err(snap_err(format!("tree: vertex {v} has invalid parent {p}")));
+        }
+        if pos[p as usize] >= pos[vi] {
+            return Err(snap_err(format!("tree: parent {p} does not precede {v} in order")));
+        }
+        if depth[vi] != depth[p as usize] + 1 {
+            return Err(snap_err(format!("tree: depth of {v} is not parent depth + 1")));
+        }
+        let w = parent_w[vi];
+        if !w.is_finite() || w <= 0.0 {
+            return Err(snap_err(format!("tree: parent weight of {v} is {w}")));
+        }
+        if rdepth[vi].to_bits() != (rdepth[p as usize] + 1.0 / w).to_bits() {
+            return Err(snap_err(format!("tree: rdepth of {v} breaks the bitwise recurrence")));
+        }
+        // The parent link must be a flagged graph edge of the same weight.
+        let linked = g.neighbors(v).any(|(nb, nw, eid)| {
+            nb == p && flags[eid as usize] == 1 && nw.to_bits() == w.to_bits()
+        });
+        if !linked {
+            return Err(snap_err(format!(
+                "tree: ({v},{p}) is not a flagged graph edge of weight {w}"
+            )));
+        }
+    }
+    let mut tree_edges = 0usize;
+    for (i, &f) in flags.iter().enumerate() {
+        if f > 1 {
+            return Err(snap_err(format!("tree: flag {i} is {f}, expected 0/1")));
+        }
+        tree_edges += f as usize;
+    }
+    if tree_edges != n - 1 {
+        return Err(snap_err(format!("tree: {tree_edges} flagged edges, expected {}", n - 1)));
+    }
+    let tree = RootedTree::from_parts(root, parent, parent_w, depth, rdepth, order);
+    let skip = SkipTable::build(&tree);
+    let is_tree_edge: Vec<bool> = flags.iter().map(|&b| b == 1).collect();
+    let spanning = Spanning { tree, skip, is_tree_edge, root };
+
+    // Off-tree list: every entry re-derived from the graph + tree and
+    // compared bitwise, order checked against the strict score order.
+    let off_eid = get_u32s(c.sec(SEC_OFF_EID), "OFF_EID")?;
+    let off_lca = get_u32s(c.sec(SEC_OFF_LCA), "OFF_LCA")?;
+    let off_res = get_f64s(c.sec(SEC_OFF_RESISTANCE), "OFF_RESISTANCE")?;
+    let off_score = get_f64s(c.sec(SEC_OFF_SCORE), "OFF_SCORE")?;
+    expect_len(&off_eid, k, "OFF_EID")?;
+    expect_len(&off_lca, k, "OFF_LCA")?;
+    expect_len(&off_res, k, "OFF_RESISTANCE")?;
+    expect_len(&off_score, k, "OFF_SCORE")?;
+    let mut seen = vec![false; m];
+    let mut off: Vec<OffTreeEdge> = Vec::with_capacity(k);
+    for i in 0..k {
+        let eid = off_eid[i];
+        if (eid as usize) >= m || spanning.is_tree_edge[eid as usize] {
+            return Err(snap_err(format!("off-tree entry {i}: edge {eid} invalid or a tree edge")));
+        }
+        if seen[eid as usize] {
+            return Err(snap_err(format!("off-tree entry {i}: edge {eid} repeated")));
+        }
+        seen[eid as usize] = true;
+        let e = annotate_off_tree_edge(&g, &spanning, eid);
+        if e.lca != off_lca[i]
+            || e.resistance.to_bits() != off_res[i].to_bits()
+            || e.score.to_bits() != off_score[i].to_bits()
+        {
+            return Err(snap_err(format!(
+                "off-tree entry {i} (edge {eid}) does not match recomputation"
+            )));
+        }
+        if let Some(last) = off.last() {
+            if score_cmp(last, &e) != std::cmp::Ordering::Less {
+                return Err(snap_err(format!("off-tree entry {i}: list is not score-sorted")));
+            }
+        }
+        off.push(e);
+    }
+
+    // Subtasks: the unique partition of 0..k grouped by LCA, ordered
+    // size-desc with lca-asc tie-break (exactly `make_subtasks`' order).
+    let sub_lca = get_u32s(c.sec(SEC_SUB_LCA), "SUB_LCA")?;
+    let sub_ptr = get_u64s(c.sec(SEC_SUB_PTR), "SUB_PTR")?;
+    let sub_idxs = get_u32s(c.sec(SEC_SUB_IDXS), "SUB_IDXS")?;
+    expect_len(&sub_lca, s, "SUB_LCA")?;
+    expect_len(&sub_ptr, s + 1, "SUB_PTR")?;
+    expect_len(&sub_idxs, k, "SUB_IDXS")?;
+    if sub_ptr[0] != 0 || sub_ptr[s] != k as u64 {
+        return Err(snap_err("subtasks: CSR offsets do not span the off-tree list"));
+    }
+    let mut used = vec![false; k];
+    let mut lca_seen = vec![false; n];
+    let mut subtasks: Vec<Subtask> = Vec::with_capacity(s);
+    for j in 0..s {
+        let lo = usize_of(sub_ptr[j], "subtask offset")?;
+        let hi = usize_of(sub_ptr[j + 1], "subtask offset")?;
+        if hi <= lo || hi > k {
+            return Err(snap_err(format!("subtask {j}: empty or non-monotone CSR range")));
+        }
+        let lca = sub_lca[j];
+        if (lca as usize) >= n || lca_seen[lca as usize] {
+            return Err(snap_err(format!("subtask {j}: LCA {lca} out of range or repeated")));
+        }
+        lca_seen[lca as usize] = true;
+        let idxs = sub_idxs[lo..hi].to_vec();
+        for (t, &ix) in idxs.iter().enumerate() {
+            if (ix as usize) >= k || used[ix as usize] {
+                return Err(snap_err(format!("subtask {j}: index {ix} out of range or repeated")));
+            }
+            used[ix as usize] = true;
+            if t > 0 && idxs[t - 1] >= ix {
+                return Err(snap_err(format!("subtask {j}: indices not strictly ascending")));
+            }
+            if off[ix as usize].lca != lca {
+                return Err(snap_err(format!(
+                    "subtask {j}: index {ix} has LCA {}, subtask claims {lca}",
+                    off[ix as usize].lca
+                )));
+            }
+        }
+        if let Some(prev) = subtasks.last() {
+            let ordered =
+                idxs.len() < prev.len() || (idxs.len() == prev.len() && prev.lca < lca);
+            if !ordered {
+                return Err(snap_err(format!(
+                    "subtask {j}: grouping is not (size-desc, lca-asc) ordered"
+                )));
+            }
+        }
+        subtasks.push(Subtask { lca, idxs });
+    }
+    // sub_ptr spans 0..k with no repeats, so every off-tree index is
+    // covered; no separate `used` sweep needed.
+
+    Ok(Prepared::from_snapshot_parts(name, g, spanning, off, subtasks, pipeline))
+}
+
+/// Canonical snapshot filename for a graph fingerprint inside `dir`:
+/// `<fingerprint-hex>.pdsnap` — the key the serve daemon probes on a
+/// cache miss.
+pub fn file_path(dir: &Path, fingerprint: u64) -> PathBuf {
+    dir.join(format!("{}.pdsnap", graph::fingerprint_hex(fingerprint)))
+}
+
+/// Write `p` to `path` atomically (temp file + rename), so a concurrent
+/// loader never observes a half-written snapshot.
+pub fn save(p: &Prepared, path: &Path) -> Result<()> {
+    let data = to_bytes(p);
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, &data)?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(Error::Io(e));
+    }
+    Ok(())
+}
+
+/// Read and validate a snapshot file. A missing/unreadable file is
+/// [`Error::Io`]; a present-but-invalid one is [`Error::Snapshot`].
+pub fn load(path: &Path) -> Result<Prepared> {
+    let data = std::fs::read(path)?;
+    from_bytes(&data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::Sparsify;
+    use crate::util::Rng;
+
+    fn prepared() -> Prepared {
+        let g = crate::gen::grid(9, 9, 0.5, &mut Rng::new(7));
+        Sparsify::graph(g).named("snap-unit").prepare().unwrap()
+    }
+
+    fn assert_equivalent(a: &Prepared, b: &Prepared) {
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.name(), b.name());
+        assert_eq!(a.pipeline(), b.pipeline());
+        assert_eq!(a.graph().num_vertices(), b.graph().num_vertices());
+        assert_eq!(a.graph().edges().len(), b.graph().edges().len());
+        assert_eq!(a.num_off_tree(), b.num_off_tree());
+        for (x, y) in a.off_tree().iter().zip(b.off_tree()) {
+            assert_eq!(x.eid, y.eid);
+            assert_eq!(x.lca, y.lca);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
+        assert_eq!(a.subtasks().len(), b.subtasks().len());
+        for (x, y) in a.subtasks().iter().zip(b.subtasks()) {
+            assert_eq!(x.lca, y.lca);
+            assert_eq!(x.idxs, y.idxs);
+        }
+    }
+
+    #[test]
+    fn round_trips_bitwise() {
+        let p = prepared();
+        let data = to_bytes(&p);
+        let q = from_bytes(&data).unwrap();
+        assert_equivalent(&p, &q);
+        // Timings are not state: a loaded snapshot reports zero.
+        assert_eq!(q.spanning_ms(), 0.0);
+        assert_eq!(q.prep_ms(), [0.0; 3]);
+        // Re-encoding the loaded state reproduces the file byte-for-byte.
+        assert_eq!(to_bytes(&q), data);
+    }
+
+    #[test]
+    fn file_save_load_round_trips() {
+        let p = prepared();
+        let path = std::env::temp_dir().join(format!("pdg-snap-unit-{}.pdsnap", std::process::id()));
+        save(&p, &path).unwrap();
+        let q = load(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_equivalent(&p, &q);
+    }
+
+    #[test]
+    fn missing_file_is_io_not_snapshot() {
+        let path = std::env::temp_dir().join("pdg-snap-missing-definitely.pdsnap");
+        assert!(matches!(load(&path), Err(Error::Io(_))));
+    }
+
+    #[test]
+    fn wrong_version_and_magic_are_typed() {
+        let p = prepared();
+        let data = to_bytes(&p);
+        let mut bad = data.clone();
+        bad[0] = b'X';
+        assert!(matches!(from_bytes(&bad), Err(Error::Snapshot { .. })));
+        let mut bad = data;
+        bad[8] = 99; // version word
+        let err = from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn wrong_fingerprint_is_typed() {
+        let p = prepared();
+        let mut data = to_bytes(&p);
+        data[16] ^= 0xFF; // fingerprint word
+        let err = from_bytes(&data).unwrap_err();
+        assert!(matches!(err, Error::Snapshot { .. }));
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+    }
+
+    #[test]
+    fn every_truncation_is_typed() {
+        let p = prepared();
+        let data = to_bytes(&p);
+        for len in [0, 8, 39, 40, 100, data.len() / 2, data.len() - 1] {
+            assert!(
+                matches!(from_bytes(&data[..len]), Err(Error::Snapshot { .. })),
+                "truncation to {len} not rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn flip_smoke_across_regions() {
+        // The exhaustive every-byte fuzz lives in rust/tests/snapshot.rs;
+        // here a smoke pass over one byte per region.
+        let p = prepared();
+        let data = to_bytes(&p);
+        let header_and_table = HEADER_LEN + SECTIONS.len() * TABLE_ENTRY_LEN;
+        for at in [4, 13, 20, 28, 33, 37, HEADER_LEN + 5, header_and_table + 3, data.len() - 2] {
+            let mut bad = data.clone();
+            bad[at] ^= 0x01;
+            assert!(
+                matches!(from_bytes(&bad), Err(Error::Snapshot { .. })),
+                "flip at byte {at} not rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn filename_is_fingerprint_keyed() {
+        let path = file_path(Path::new("/tmp/snaps"), 0xABCD);
+        assert_eq!(path, Path::new("/tmp/snaps/0x000000000000abcd.pdsnap"));
+    }
+}

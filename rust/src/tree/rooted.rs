@@ -85,6 +85,46 @@ impl RootedTree {
         RootedTree { root, parent, parent_w, depth, rdepth, order, cxadj, cadj }
     }
 
+    /// Reassemble a tree from its per-vertex arrays (snapshot load path).
+    ///
+    /// The children CSR is derived here with the same counting-sort fill
+    /// `build` uses, so a tree round-tripped through flat arrays is
+    /// field-for-field identical to the original — `children()` order
+    /// included. Callers (the snapshot decoder) must have validated the
+    /// arrays first: equal lengths, in-range parents, `parent[root] ==
+    /// root`, and `order` a root-first traversal in which every
+    /// non-root's parent precedes it.
+    pub fn from_parts(
+        root: u32,
+        parent: Vec<u32>,
+        parent_w: Vec<f64>,
+        depth: Vec<u32>,
+        rdepth: Vec<f64>,
+        order: Vec<u32>,
+    ) -> RootedTree {
+        let n = parent.len();
+        let mut cnt = vec![0usize; n];
+        for v in 0..n as u32 {
+            if v != root {
+                cnt[parent[v as usize] as usize] += 1;
+            }
+        }
+        let mut cxadj = vec![0usize; n + 1];
+        for i in 0..n {
+            cxadj[i + 1] = cxadj[i] + cnt[i];
+        }
+        let mut cadj = vec![0u32; n.saturating_sub(1)];
+        let mut cur = cxadj.clone();
+        for &v in &order {
+            if v != root {
+                let p = parent[v as usize] as usize;
+                cadj[cur[p]] = v;
+                cur[p] += 1;
+            }
+        }
+        RootedTree { root, parent, parent_w, depth, rdepth, order, cxadj, cadj }
+    }
+
     /// Number of vertices.
     pub fn len(&self) -> usize {
         self.parent.len()
@@ -189,6 +229,33 @@ mod tests {
         nb2.sort();
         assert_eq!(nb2, vec![0, 1, 2]);
         assert_eq!(t.neighborhood(3, 0), vec![3]);
+    }
+
+    #[test]
+    fn from_parts_round_trips_build_exactly() {
+        let g = Graph::from_edges(
+            6,
+            &[(0, 1, 1.0), (0, 2, 2.0), (2, 3, 1.5), (2, 4, 0.5), (4, 5, 3.0)],
+        );
+        let t = RootedTree::build(&g, &[true; 5], 2);
+        let r = RootedTree::from_parts(
+            t.root,
+            t.parent.clone(),
+            t.parent_w.clone(),
+            t.depth.clone(),
+            t.rdepth.clone(),
+            t.order.clone(),
+        );
+        assert_eq!(r.root, t.root);
+        assert_eq!(r.parent, t.parent);
+        assert_eq!(r.parent_w, t.parent_w);
+        assert_eq!(r.depth, t.depth);
+        assert_eq!(r.rdepth, t.rdepth);
+        assert_eq!(r.order, t.order);
+        // The derived children CSR must match too — order included.
+        for v in 0..t.len() as u32 {
+            assert_eq!(r.children(v), t.children(v), "children of {v}");
+        }
     }
 
     #[test]

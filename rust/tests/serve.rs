@@ -280,6 +280,153 @@ fn shutdown_verb_stops_the_daemon_and_unlinks_the_socket() {
     assert!(!path.exists(), "socket unlinked on shutdown");
 }
 
+/// Unique-per-test snapshot directory.
+fn snapdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("pdg-snapdir-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn snapshot_warm_start_across_restart_serves_byte_identical_responses() {
+    let dir = snapdir("warm");
+    let line = format!(
+        r#"{{"id":1,"verb":"recover","graph":{{"name":"15-M6","scale":{SCALE}}},"alpha":0.05,"return_edges":true}}"#
+    );
+
+    // Cold daemon: the first request misses both the in-memory cache and
+    // the (empty) snapshot dir, prepares in full, and writes back.
+    let server = start("warm1", |cfg| cfg.snapshot_dir = Some(dir.clone()));
+    let mut client = Client::connect(server.socket()).unwrap();
+    let cold = client.call_line(&line).unwrap();
+    assert!(cold.contains(r#""ok":true"#), "{cold}");
+    let snap = server.snapshot_stats();
+    assert_eq!(snap.misses, 1, "no snapshot on disk yet");
+    assert_eq!(snap.saves, 1, "prepare written back");
+    assert_eq!(snap.hits, 0);
+    assert_eq!(snap.load_failures, 0);
+    drop(client);
+    server.stop();
+    server.wait();
+
+    // Exactly one fingerprint-keyed snapshot landed on disk.
+    let files: Vec<_> =
+        std::fs::read_dir(&dir).unwrap().map(|e| e.unwrap().path()).collect();
+    assert_eq!(files.len(), 1, "{files:?}");
+    assert_eq!(files[0].extension().unwrap(), "pdsnap");
+
+    // Restarted daemon, same dir: the first request is answered from the
+    // warm load — and is byte-identical to the cold daemon's response.
+    let server = start("warm2", |cfg| cfg.snapshot_dir = Some(dir.clone()));
+    let mut client = Client::connect(server.socket()).unwrap();
+    let warm = client.call_line(&line).unwrap();
+    assert_eq!(warm, cold, "warm-start response must be byte-identical");
+    let snap = server.snapshot_stats();
+    assert_eq!(snap.hits, 1, "first request after restart is a warm load");
+    assert_eq!(snap.misses, 0);
+    assert_eq!(snap.load_failures, 0);
+    assert_eq!(snap.saves, 0, "a warm load is not re-saved");
+    // Second identical request: plain in-memory hit, snapshot untouched.
+    let again = client.call_line(&line).unwrap();
+    assert_eq!(again, cold);
+    assert_eq!(server.snapshot_stats().hits, 1);
+
+    // The stats verb reports the same counters over the wire.
+    let v = call(&server, r#"{"id":9,"verb":"stats"}"#);
+    let s = v.get("snapshot").unwrap();
+    assert_eq!(s.get("hits").unwrap().as_u64(), Some(1));
+    assert_eq!(s.get("misses").unwrap().as_u64(), Some(0));
+    assert_eq!(s.get("load_failures").unwrap().as_u64(), Some(0));
+    assert_eq!(s.get("saves").unwrap().as_u64(), Some(0));
+
+    server.stop();
+    server.wait();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_snapshot_falls_back_to_full_prepare_and_heals() {
+    let dir = snapdir("corrupt");
+    let line = format!(
+        r#"{{"id":1,"verb":"recover","graph":{{"name":"15-M6","scale":{SCALE}}},"alpha":0.05,"return_edges":true}}"#
+    );
+
+    // Warm the snapshot dir, then corrupt the file on disk.
+    let server = start("corr1", |cfg| cfg.snapshot_dir = Some(dir.clone()));
+    let cold = {
+        let mut client = Client::connect(server.socket()).unwrap();
+        client.call_line(&line).unwrap()
+    };
+    server.stop();
+    server.wait();
+    let path = std::fs::read_dir(&dir).unwrap().next().unwrap().unwrap().path();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+
+    // Restarted daemon: the rejected snapshot is *counted* and the
+    // request falls back to a full prepare — same bytes served, nothing
+    // poisoned — and the write-back heals the corrupt file.
+    let server = start("corr2", |cfg| cfg.snapshot_dir = Some(dir.clone()));
+    let mut client = Client::connect(server.socket()).unwrap();
+    let resp = client.call_line(&line).unwrap();
+    assert_eq!(resp, cold, "fallback prepare serves the same bytes");
+    let snap = server.snapshot_stats();
+    assert_eq!(snap.load_failures, 1, "corrupt snapshot counted as a load failure");
+    assert_eq!(snap.hits, 0);
+    assert_eq!(snap.misses, 0);
+    assert_eq!(snap.saves, 1, "the fresh prepare healed the snapshot");
+    drop(client);
+    server.stop();
+    server.wait();
+
+    // Third start: the healed snapshot warm-loads cleanly.
+    let server = start("corr3", |cfg| cfg.snapshot_dir = Some(dir.clone()));
+    let mut client = Client::connect(server.socket()).unwrap();
+    assert_eq!(client.call_line(&line).unwrap(), cold);
+    assert_eq!(server.snapshot_stats().hits, 1);
+
+    server.stop();
+    server.wait();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bombard_warm_compare_runs_cold_and_warm_passes() {
+    let dir = snapdir("compare");
+    let server = start("compare", |cfg| {
+        cfg.max_in_flight = 8;
+        cfg.snapshot_dir = Some(dir.clone());
+    });
+    let cfg = BombardConfig {
+        socket: server.socket().to_path_buf(),
+        requests: 12,
+        clients: 2,
+        graphs: vec!["15-M6".to_string()],
+        alphas: vec![0.02, 0.05],
+        scale: SCALE,
+        seed: 42,
+        deadline_ms: 0,
+        shutdown: false,
+    };
+    let report = bombard::run_compare(&cfg).unwrap();
+    assert_eq!(report.cold.failed, 0, "{report:?}");
+    assert_eq!(report.warm.failed, 0, "{report:?}");
+    assert_eq!(report.cold.sent, 12);
+    assert_eq!(report.warm.sent, 12);
+    // The cold pass wrote the snapshot; the warm pass (after evict-all)
+    // re-resolved the spec from it.
+    let snap = server.snapshot_stats();
+    assert!(snap.saves >= 1, "{snap:?}");
+    assert!(snap.hits >= 1, "{snap:?}");
+    assert!(report.render().contains("cold/warm elapsed ratio"));
+
+    server.stop();
+    server.wait();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn bombard_mixed_load_completes_with_zero_failures() {
     let server = start("bombard", |cfg| cfg.max_in_flight = 8);

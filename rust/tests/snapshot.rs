@@ -1,0 +1,269 @@
+//! Snapshot integration properties: `save → load` recovers a `Prepared`
+//! that is *bitwise identical* to the freshly prepared one — same
+//! re-encoded bytes, same recovered edge sets, same PCG convergence
+//! histories — across graph shapes × pipelines × thread counts; and
+//! every corruption of the container (truncation, bit flip, stale
+//! header) is the typed `Error::Snapshot`, never a panic and never a
+//! silently-wrong state.
+
+use pdgrass::gen::{self, CommunityParams};
+use pdgrass::graph::Graph;
+use pdgrass::util::Rng;
+use pdgrass::{Error, Pipeline, Prepared, RecoverOpts, Sparsify};
+
+/// Planted-community graph: moderately skewed subtask distribution.
+fn community_graph() -> Graph {
+    gen::community(
+        CommunityParams {
+            n: 400,
+            mean_size: 8.0,
+            tail: 1.8,
+            intra_p: 0.6,
+            bridges: 2,
+            max_size: 40,
+        },
+        &mut Rng::new(7),
+    )
+}
+
+/// Hub-star graph: one dominant LCA subtask (the skewed worst case).
+fn hub_star_graph() -> Graph {
+    gen::hub_graph(400, 4, 60, &mut Rng::new(11))
+}
+
+/// Pure tree: zero off-tree edges, zero subtasks — the degenerate
+/// container with three empty payload sections.
+fn pure_tree_graph() -> Graph {
+    let mut rng = Rng::new(13);
+    let n = 200usize;
+    let mut edges = Vec::with_capacity(n - 1);
+    for v in 1..n {
+        let parent = rng.below(v) as u32;
+        edges.push((parent, v as u32, rng.range_f64(1.0, 10.0)));
+    }
+    Graph::from_edges(n, &edges)
+}
+
+fn graphs() -> Vec<(&'static str, Graph)> {
+    vec![
+        ("community", community_graph()),
+        ("hub-star", hub_star_graph()),
+        ("pure-tree", pure_tree_graph()),
+    ]
+}
+
+fn prepare(g: &Graph, name: &str, pipeline: Pipeline, threads: usize) -> Prepared {
+    Sparsify::graph(g.clone())
+        .named(name)
+        .pipeline(pipeline)
+        .threads(threads)
+        .prepare()
+        .unwrap()
+}
+
+/// The core property, over graphs × {Barrier, Streamed} × {1, 2, 8}
+/// threads: a snapshot round trip reproduces the fresh `Prepared`
+/// exactly. "Exactly" is checked three ways — the loaded state
+/// re-encodes to the same bytes, recovers the same edge set, and drives
+/// PCG through a bitwise-identical residual history.
+#[test]
+fn save_load_recover_is_bitwise_identical_to_fresh_prepare() {
+    for (name, g) in graphs() {
+        for pipeline in [Pipeline::Barrier, Pipeline::Streamed] {
+            for threads in [1usize, 2, 8] {
+                let fresh = prepare(&g, name, pipeline, threads);
+                let bytes = fresh.to_snapshot_bytes();
+                let loaded = Prepared::from_snapshot_bytes(&bytes)
+                    .unwrap_or_else(|e| panic!("{name}/{pipeline:?}/{threads}: {e}"))
+                    .with_threads(threads);
+
+                assert_eq!(loaded.fingerprint(), fresh.fingerprint(), "{name}");
+                assert_eq!(loaded.name(), fresh.name(), "{name}");
+                assert_eq!(loaded.pipeline(), fresh.pipeline(), "{name}");
+                assert_eq!(loaded.num_off_tree(), fresh.num_off_tree(), "{name}");
+                assert_eq!(
+                    loaded.to_snapshot_bytes(),
+                    bytes,
+                    "{name}/{pipeline:?}/{threads}: re-encode differs"
+                );
+
+                let opts = RecoverOpts::with_threads(0.05, threads);
+                let a = fresh.recover(&opts).unwrap();
+                let b = loaded.recover(&opts).unwrap();
+                assert_eq!(
+                    a.edges(),
+                    b.edges(),
+                    "{name}/{pipeline:?}/{threads}: recovered edges differ"
+                );
+                assert_eq!(a.passes(), b.passes(), "{name}");
+
+                let ha: Vec<u64> = a
+                    .sparsifier()
+                    .pcg(42, 1e-3, 2000)
+                    .unwrap()
+                    .history
+                    .iter()
+                    .map(|r| r.to_bits())
+                    .collect();
+                let hb: Vec<u64> = b
+                    .sparsifier()
+                    .pcg(42, 1e-3, 2000)
+                    .unwrap()
+                    .history
+                    .iter()
+                    .map(|r| r.to_bits())
+                    .collect();
+                assert_eq!(ha, hb, "{name}/{pipeline:?}/{threads}: PCG history differs");
+            }
+        }
+    }
+}
+
+/// File-level round trip through `Prepared::save` / `Prepared::load`,
+/// plus the load-path error taxonomy: a missing file is `Error::Io`
+/// (cache *miss*), a corrupt file is `Error::Snapshot` (load failure).
+#[test]
+fn file_save_load_round_trips_and_errors_are_typed() {
+    let dir = std::env::temp_dir().join(format!("pdgrass-snap-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let fresh = prepare(&community_graph(), "community", Pipeline::Barrier, 2);
+    let path = pdgrass::snapshot::file_path(&dir, fresh.fingerprint());
+    fresh.save(&path).unwrap();
+    let loaded = Prepared::load(&path).unwrap();
+    assert_eq!(loaded.to_snapshot_bytes(), fresh.to_snapshot_bytes());
+
+    match Prepared::load(&dir.join("absent.pdsnap")) {
+        Err(Error::Io(_)) => {}
+        other => panic!("missing file: expected Io, got {other:?}"),
+    }
+
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    let corrupt = dir.join("corrupt.pdsnap");
+    std::fs::write(&corrupt, &bytes).unwrap();
+    match Prepared::load(&corrupt) {
+        Err(Error::Snapshot { .. }) => {}
+        other => panic!("corrupt file: expected Snapshot, got {other:?}"),
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Exhaustive deterministic corruption fuzz on a small container:
+/// every single-byte flip, at every offset, in every region — header,
+/// section table, each payload section, alignment padding — must be
+/// rejected with the typed `Error::Snapshot`. No flip may panic, and no
+/// flip may decode (the container has no undetectable single-byte
+/// corruption).
+#[test]
+fn every_single_byte_flip_is_rejected_typed() {
+    let fresh = prepare(&pure_tree_graph(), "tree", Pipeline::Barrier, 1);
+    let bytes = fresh.to_snapshot_bytes();
+    assert!(Prepared::from_snapshot_bytes(&bytes).is_ok(), "baseline must decode");
+    for i in 0..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x01;
+        match Prepared::from_snapshot_bytes(&bad) {
+            Err(Error::Snapshot { .. }) => {}
+            Ok(_) => panic!("flip at byte {i} decoded successfully"),
+            Err(other) => panic!("flip at byte {i}: wrong error type {other:?}"),
+        }
+        // High bit too: exercises sign/magnitude corruption of floats
+        // and lengths, not just low-bit noise.
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x80;
+        match Prepared::from_snapshot_bytes(&bad) {
+            Err(Error::Snapshot { .. }) => {}
+            Ok(_) => panic!("high flip at byte {i} decoded successfully"),
+            Err(other) => panic!("high flip at byte {i}: wrong error type {other:?}"),
+        }
+    }
+}
+
+/// Every truncation length — not a sample, all of them — is rejected
+/// typed. Covers mid-header, mid-table, mid-section, and the
+/// one-byte-short case.
+#[test]
+fn every_truncation_is_rejected_typed() {
+    let fresh = prepare(&pure_tree_graph(), "tree", Pipeline::Streamed, 1);
+    let bytes = fresh.to_snapshot_bytes();
+    for len in 0..bytes.len() {
+        match Prepared::from_snapshot_bytes(&bytes[..len]) {
+            Err(Error::Snapshot { .. }) => {}
+            Ok(_) => panic!("truncation to {len} bytes decoded successfully"),
+            Err(other) => panic!("truncation to {len}: wrong error type {other:?}"),
+        }
+    }
+    // Trailing garbage is equally stale.
+    let mut long = bytes.clone();
+    long.push(0);
+    assert!(matches!(
+        Prepared::from_snapshot_bytes(&long),
+        Err(Error::Snapshot { .. })
+    ));
+}
+
+/// Stale headers are named in the rejection: a bumped version mentions
+/// both versions, a foreign fingerprint mentions the mismatch.
+#[test]
+fn stale_headers_are_rejected_with_named_reasons() {
+    let fresh = prepare(&hub_star_graph(), "hub", Pipeline::Barrier, 2);
+    let bytes = fresh.to_snapshot_bytes();
+
+    let mut wrong_version = bytes.clone();
+    wrong_version[8] = 0xEE;
+    match Prepared::from_snapshot_bytes(&wrong_version) {
+        Err(Error::Snapshot { why }) => {
+            assert!(why.contains("version"), "{why}")
+        }
+        other => panic!("expected Snapshot, got {other:?}"),
+    }
+
+    let mut wrong_magic = bytes.clone();
+    wrong_magic[0] = b'X';
+    match Prepared::from_snapshot_bytes(&wrong_magic) {
+        Err(Error::Snapshot { why }) => {
+            assert!(why.contains("magic"), "{why}")
+        }
+        other => panic!("expected Snapshot, got {other:?}"),
+    }
+
+    // A foreign fingerprint survives CRC checks (the header is not
+    // CRC'd) but fails the decoded-graph cross-check.
+    let mut wrong_fp = bytes.clone();
+    wrong_fp[20] ^= 0xFF;
+    match Prepared::from_snapshot_bytes(&wrong_fp) {
+        Err(Error::Snapshot { why }) => {
+            assert!(why.contains("fingerprint"), "{why}")
+        }
+        other => panic!("expected Snapshot, got {other:?}"),
+    }
+}
+
+/// Loading does not count as a prepare: the warm path must leave the
+/// session-level prepare counter untouched, which is exactly what the
+/// daemon's warm-start stats rely on.
+#[test]
+fn loading_a_snapshot_does_not_bump_the_prepare_counter() {
+    let fresh = prepare(&pure_tree_graph(), "tree", Pipeline::Barrier, 1);
+    let bytes = fresh.to_snapshot_bytes();
+    // The counter is process-global and sibling tests prepare
+    // concurrently, so require one clean window rather than a single
+    // read pair: a load that *did* bump the counter can never produce
+    // `after == before`, while unrelated prepares can only spoil an
+    // attempt, not fake a pass.
+    let mut loaded = None;
+    for _ in 0..64 {
+        let before = pdgrass::session::prepare_count();
+        let p = Prepared::from_snapshot_bytes(&bytes).unwrap();
+        if pdgrass::session::prepare_count() == before {
+            loaded = Some(p);
+            break;
+        }
+    }
+    let loaded = loaded.expect("no clean counter window in 64 attempts");
+    // ...and the loaded state is fully usable for step 4.
+    loaded.recover(&RecoverOpts::new(0.05)).unwrap();
+}
