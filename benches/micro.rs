@@ -9,9 +9,11 @@
 //! before/after comparisons recorded in CHANGES.md.
 //!
 //! Besides the stdout report, the run writes a machine-readable
-//! `BENCH_9.json` (override the path with `PDGRASS_BENCH_OUT`): every
+//! `BENCH_10.json` (override the path with `PDGRASS_BENCH_OUT`): every
 //! `report()` sample lands in `bench_ms` and every structural makespan
 //! model value in `model_units`. Format documented in ROADMAP.md.
+//! `pdgrass benchdiff <old.json> <new.json>` compares two such dumps:
+//! `model_units` must match exactly, `bench_ms` within a tolerance band.
 
 use pdgrass::graph::grounded_laplacian;
 use pdgrass::recovery::strict::{neighborhoods, TagStore};
@@ -38,12 +40,12 @@ fn model(name: &str, units: u64) {
     MODELS.lock().unwrap().push((name.to_string(), units));
 }
 
-/// Write the accumulated samples as `BENCH_9.json` (or
+/// Write the accumulated samples as `BENCH_10.json` (or
 /// `$PDGRASS_BENCH_OUT`). Hand-rolled JSON — names are bench identifiers
 /// (no escapes needed), values plain decimals.
 fn write_bench_json() {
-    let path = std::env::var("PDGRASS_BENCH_OUT").unwrap_or_else(|_| "BENCH_9.json".to_string());
-    let mut out = String::from("{\n  \"schema\": \"pdgrass-bench-v1\",\n  \"pr\": 9,\n");
+    let path = std::env::var("PDGRASS_BENCH_OUT").unwrap_or_else(|_| "BENCH_10.json".to_string());
+    let mut out = String::from("{\n  \"schema\": \"pdgrass-bench-v1\",\n  \"pr\": 10,\n");
     out.push_str("  \"bench_ms\": {\n");
     let samples = SAMPLES.lock().unwrap();
     for (i, (name, ms)) in samples.iter().enumerate() {
@@ -497,6 +499,45 @@ fn bench_snapshot() {
     );
 }
 
+/// Cache-blocked nnz-balanced SpMV vs the row-count split, on a hub-star
+/// Laplacian whose heavy rows defeat a per-row-count partition (one
+/// chunk inherits the hub rows and serializes the sweep). Wall clock on
+/// this 1-core container is informational; the structural assertion
+/// replays [`spmv_traffic_model`]: at 8 threads the nnz-balanced blocked
+/// partition must beat the row-count split. Bitwise equality of the
+/// parallel kernel against the serial sweep is asserted on every run.
+fn bench_spmv_blocked() {
+    use pdgrass::solver::{spmv_par, spmv_traffic_model};
+    let g = pdgrass::gen::hub_graph(40_000, 2, 20_000, &mut Rng::new(23));
+    let a = grounded_laplacian(&g, 0);
+    let mut rng = Rng::new(24);
+    let x: Vec<f64> = (0..a.n).map(|_| rng.normal()).collect();
+    let mut y = vec![0.0; a.n];
+    let (_, ms_serial) = min_of(10, || spmv(&a, &x, &mut y));
+    report("spmv_hub_serial", 10, ms_serial, a.nnz() as u64, "nnz");
+    let serial = y.clone();
+    let (_, ms_par) = min_of(10, || spmv_par(&a, &x, &mut y, 8));
+    report("spmv_hub_blocked(8t)", 10, ms_par, a.nnz() as u64, "nnz");
+    for (i, (got, want)) in y.iter().zip(&serial).enumerate() {
+        assert_eq!(got.to_bits(), want.to_bits(), "blocked spmv diverged at row {i}");
+    }
+    let (row_count, balanced) = spmv_traffic_model(&a, 8);
+    model("spmv_traffic_row_count_8t", row_count);
+    model("spmv_traffic_balanced_blocked_8t", balanced);
+    println!(
+        "{:<38} traffic model(8t): row-count {} units vs balanced blocked {} ({:.2}x)",
+        "",
+        row_count,
+        balanced,
+        row_count as f64 / balanced.max(1) as f64
+    );
+    assert!(
+        balanced < row_count,
+        "balanced blocked partition must beat the row-count split on the hub star: \
+         {balanced} !< {row_count}"
+    );
+}
+
 /// Serial vs level-scheduled triangular solve, on a grid-sparsifier
 /// factor (the PCG preconditioner workload). Wall clock on this 1-core
 /// container is informational; the structural assertion replays the
@@ -575,6 +616,8 @@ fn main() {
     bench_sort();
     println!("# micro bench: serial vs level-scheduled triangular solve (PCG preconditioner)");
     bench_trisolve();
+    println!("# micro bench: cache-blocked nnz-balanced SpMV vs row-count split (hub star)");
+    bench_spmv_blocked();
 
     let g = pdgrass::gen::suite::build("15-M6", 0.5, 42);
     println!("# micro bench on 15-M6@0.5: |V|={} |E|={}", g.num_vertices(), g.num_edges());

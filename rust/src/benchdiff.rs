@@ -1,0 +1,503 @@
+//! Bench-artifact comparison: the no-regression gate behind
+//! `pdgrass benchdiff <old.json> <new.json>`.
+//!
+//! `benches/micro.rs` writes a machine-readable dump per run (schema
+//! `pdgrass-bench-v1`): every wall-clock sample in `bench_ms` and every
+//! structural makespan/traffic model value in `model_units`. This module
+//! parses two such dumps and compares them:
+//!
+//! - **`model_units` must match exactly.** The models (trisolve level
+//!   schedule, prepare overlap, sharded makespan, SpMV traffic) are
+//!   deterministic functions of the workload — machine-independent by
+//!   construction — so any drift is a real structural change and fails
+//!   the gate outright.
+//! - **`bench_ms` must stay within a tolerance band.** Wall clocks are
+//!   noisy; a new sample is a regression only when it exceeds
+//!   `old * (1 + tolerance)`. Comparisons across different machines are
+//!   meaningless — CI passes `models_only` and pins just the structural
+//!   half.
+//!
+//! Keys present on only one side are reported as notes, not failures:
+//! benches are added and retired PR by PR, and the committed artifact's
+//! own diff makes that visible. The checked counts are printed so a gate
+//! that silently compared nothing is conspicuous.
+//!
+//! The parser is hand-rolled like the TOML subset in [`crate::config`]
+//! (no `serde_json` in the offline vendor set) and accepts exactly the
+//! shape `micro.rs` emits: one object with `schema`/`pr` scalars and two
+//! flat string→number objects. All failures are the typed
+//! [`Error::Bench`].
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Schema identifier every artifact must carry.
+pub const SCHEMA: &str = "pdgrass-bench-v1";
+
+/// Default `bench_ms` tolerance band (new may be up to 50% slower —
+/// generous because shared runners are noisy; `model_units` stay exact
+/// regardless).
+pub const DEFAULT_TOLERANCE: f64 = 0.5;
+
+fn bench_err(why: impl Into<String>) -> Error {
+    Error::Bench(why.into())
+}
+
+/// One parsed `BENCH_*.json` artifact. Entry order follows the file
+/// (micro.rs writes benches in execution order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    /// PR number the artifact was recorded for.
+    pub pr: u64,
+    /// Wall-clock samples: bench name → min-of-N milliseconds.
+    pub bench_ms: Vec<(String, f64)>,
+    /// Structural model values: model name → deterministic units.
+    pub model_units: Vec<(String, u64)>,
+}
+
+impl BenchReport {
+    /// Parse an artifact, validating the schema tag and rejecting
+    /// duplicate or unknown top-level keys.
+    pub fn parse(text: &str) -> Result<BenchReport> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut schema: Option<String> = None;
+        let mut pr: Option<u64> = None;
+        let mut bench_ms: Option<Vec<(String, f64)>> = None;
+        let mut model_units: Option<Vec<(String, u64)>> = None;
+        p.object(|p, key| match key {
+            "schema" => {
+                if schema.replace(p.string()?).is_some() {
+                    return Err(bench_err("duplicate key: schema"));
+                }
+                Ok(())
+            }
+            "pr" => {
+                let v = p.number()?;
+                if v < 0.0 || v.fract() != 0.0 {
+                    return Err(bench_err(format!("pr must be a non-negative integer, got {v}")));
+                }
+                if pr.replace(v as u64).is_some() {
+                    return Err(bench_err("duplicate key: pr"));
+                }
+                Ok(())
+            }
+            "bench_ms" => {
+                let mut entries = Vec::new();
+                p.object(|p, name| {
+                    entries.push((name.to_string(), p.number()?));
+                    Ok(())
+                })?;
+                if bench_ms.replace(entries).is_some() {
+                    return Err(bench_err("duplicate key: bench_ms"));
+                }
+                Ok(())
+            }
+            "model_units" => {
+                let mut entries = Vec::new();
+                p.object(|p, name| {
+                    let v = p.number()?;
+                    if v < 0.0 || v.fract() != 0.0 {
+                        return Err(bench_err(format!(
+                            "model_units.{name} must be a non-negative integer, got {v}"
+                        )));
+                    }
+                    entries.push((name.to_string(), v as u64));
+                    Ok(())
+                })?;
+                if model_units.replace(entries).is_some() {
+                    return Err(bench_err("duplicate key: model_units"));
+                }
+                Ok(())
+            }
+            other => Err(bench_err(format!("unknown top-level key: {other}"))),
+        })?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(bench_err(format!("trailing bytes at offset {}", p.i)));
+        }
+        match schema.as_deref() {
+            Some(SCHEMA) => {}
+            Some(other) => {
+                return Err(bench_err(format!("schema {other:?}, expected {SCHEMA:?}")))
+            }
+            None => return Err(bench_err("missing key: schema")),
+        }
+        Ok(BenchReport {
+            pr: pr.ok_or_else(|| bench_err("missing key: pr"))?,
+            bench_ms: bench_ms.ok_or_else(|| bench_err("missing key: bench_ms"))?,
+            model_units: model_units.ok_or_else(|| bench_err("missing key: model_units"))?,
+        })
+    }
+
+    /// Load and parse an artifact from disk.
+    pub fn load(path: &Path) -> Result<BenchReport> {
+        BenchReport::parse(&std::fs::read_to_string(path)?)
+    }
+
+    fn ms(&self, name: &str) -> Option<f64> {
+        self.bench_ms.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    fn units(&self, name: &str) -> Option<u64> {
+        self.model_units.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+}
+
+/// Outcome of one artifact comparison.
+#[derive(Clone, Debug)]
+pub struct Diff {
+    /// PR number of the baseline artifact.
+    pub old_pr: u64,
+    /// PR number of the candidate artifact.
+    pub new_pr: u64,
+    /// Model values compared on both sides.
+    pub checked_models: usize,
+    /// Wall-clock samples compared on both sides (0 under `models_only`).
+    pub checked_benches: usize,
+    /// Gate failures: model drift or out-of-band slowdowns.
+    pub violations: Vec<String>,
+    /// Non-failing observations: added/removed keys, big speedups.
+    pub notes: Vec<String>,
+}
+
+impl Diff {
+    /// Did the candidate pass the gate?
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Human-readable report (stable ordering; CI logs diff cleanly).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "benchdiff: baseline pr {} vs candidate pr {}\n  model_units: {} compared, {} \
+             violation(s)\n  bench_ms:    {} compared\n",
+            self.old_pr,
+            self.new_pr,
+            self.checked_models,
+            self.violations.len(),
+            self.checked_benches,
+        );
+        for v in &self.violations {
+            out.push_str(&format!("  FAIL {v}\n"));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("  note {n}\n"));
+        }
+        out
+    }
+}
+
+/// Compare `new` against the `old` baseline. `tolerance` is the
+/// fractional `bench_ms` slowdown band (e.g. `0.5` = 50%); it must be
+/// finite and non-negative. With `models_only` the wall clocks are
+/// skipped entirely — the cross-machine (CI) mode.
+pub fn diff(
+    old: &BenchReport,
+    new: &BenchReport,
+    tolerance: f64,
+    models_only: bool,
+) -> Result<Diff> {
+    if !tolerance.is_finite() || tolerance < 0.0 {
+        return Err(Error::BadParam {
+            name: "tolerance",
+            why: format!("must be finite and non-negative, got {tolerance}"),
+        });
+    }
+    let mut d = Diff {
+        old_pr: old.pr,
+        new_pr: new.pr,
+        checked_models: 0,
+        checked_benches: 0,
+        violations: Vec::new(),
+        notes: Vec::new(),
+    };
+    for (name, old_units) in &old.model_units {
+        match new.units(name) {
+            Some(new_units) if new_units == *old_units => d.checked_models += 1,
+            Some(new_units) => {
+                d.checked_models += 1;
+                d.violations.push(format!(
+                    "model {name}: {old_units} units -> {new_units} (models must match exactly)"
+                ));
+            }
+            None => d.notes.push(format!("model removed: {name}")),
+        }
+    }
+    for (name, _) in &new.model_units {
+        if old.units(name).is_none() {
+            d.notes.push(format!("model added: {name}"));
+        }
+    }
+    if !models_only {
+        for (name, old_ms) in &old.bench_ms {
+            match new.ms(name) {
+                Some(new_ms) => {
+                    d.checked_benches += 1;
+                    if new_ms > old_ms * (1.0 + tolerance) {
+                        d.violations.push(format!(
+                            "bench {name}: {old_ms:.3} ms -> {new_ms:.3} ms (band +{:.0}%)",
+                            tolerance * 100.0
+                        ));
+                    } else if *old_ms > 0.0 && new_ms < old_ms * 0.5 {
+                        d.notes.push(format!(
+                            "bench {name}: {old_ms:.3} ms -> {new_ms:.3} ms (speedup)"
+                        ));
+                    }
+                }
+                None => d.notes.push(format!("bench removed: {name}")),
+            }
+        }
+        for (name, _) in &new.bench_ms {
+            if old.ms(name).is_none() {
+                d.notes.push(format!("bench added: {name}"));
+            }
+        }
+    }
+    Ok(d)
+}
+
+/// Minimal JSON reader for the bench schema: objects, double-quoted
+/// strings without escapes (bench identifiers), and plain decimal
+/// numbers. Anything else is a typed error — artifacts are produced by
+/// `micro.rs`, so deviation means corruption, not dialect.
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        self.ws();
+        if self.i < self.b.len() && self.b[self.i] == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(bench_err(format!("expected {:?} at offset {}", c as char, self.i)))
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.ws();
+        self.b.get(self.i).copied()
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let start = self.i;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'"' => {
+                    let s = std::str::from_utf8(&self.b[start..self.i])
+                        .map_err(|_| bench_err("non-UTF-8 string"))?;
+                    self.i += 1;
+                    return Ok(s.to_string());
+                }
+                b'\\' => return Err(bench_err("escapes are not part of the bench schema")),
+                _ => self.i += 1,
+            }
+        }
+        Err(bench_err("unterminated string"))
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        self.ws();
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).expect("ascii slice");
+        s.parse::<f64>().map_err(|_| bench_err(format!("bad number at offset {start}: {s:?}")))
+    }
+
+    /// Parse `{ "key": <value>, ... }`, handing each key to `f` with the
+    /// cursor positioned at its value.
+    fn object<F>(&mut self, mut f: F) -> Result<()>
+    where
+        F: FnMut(&mut Self, &str) -> Result<()>,
+    {
+        self.expect(b'{')?;
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            f(self, &key)?;
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => return Err(bench_err(format!("expected ',' or '}}' at offset {}", self.i))),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact(pr: u64, benches: &[(&str, f64)], models: &[(&str, u64)]) -> BenchReport {
+        BenchReport {
+            pr,
+            bench_ms: benches.iter().map(|&(n, v)| (n.to_string(), v)).collect(),
+            model_units: models.iter().map(|&(n, v)| (n.to_string(), v)).collect(),
+        }
+    }
+
+    /// Serialize in the exact format `benches/micro.rs` writes.
+    fn render_artifact(r: &BenchReport) -> String {
+        let mut out = format!("{{\n  \"schema\": \"{SCHEMA}\",\n  \"pr\": {},\n", r.pr);
+        out.push_str("  \"bench_ms\": {\n");
+        for (i, (name, ms)) in r.bench_ms.iter().enumerate() {
+            let sep = if i + 1 == r.bench_ms.len() { "" } else { "," };
+            out.push_str(&format!("    \"{name}\": {ms:.4}{sep}\n"));
+        }
+        out.push_str("  },\n  \"model_units\": {\n");
+        for (i, (name, units)) in r.model_units.iter().enumerate() {
+            let sep = if i + 1 == r.model_units.len() { "" } else { "," };
+            out.push_str(&format!("    \"{name}\": {units}{sep}\n"));
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    #[test]
+    fn parses_the_micro_bench_format() {
+        let r = artifact(
+            9,
+            &[("spmv_csr_f64", 1.25), ("lca_query", 0.875)],
+            &[("trisolve_makespan_serial_1t", 123_456)],
+        );
+        let parsed = BenchReport::parse(&render_artifact(&r)).unwrap();
+        assert_eq!(parsed, r);
+        // Key order and empty sections survive.
+        let empty = artifact(10, &[], &[]);
+        assert_eq!(BenchReport::parse(&render_artifact(&empty)).unwrap(), empty);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_artifacts() {
+        fn doc(schema: &str, pr: &str, rest: &str) -> String {
+            format!("{{\"schema\": \"{schema}\", \"pr\": {pr}{rest}}}")
+        }
+        const REST: &str = ", \"bench_ms\": {}, \"model_units\": {}";
+        const FRAC: &str = ", \"bench_ms\": {}, \"model_units\": {\"m\": 1.5}";
+        let cases = [
+            (String::new(), "expected"),
+            ("{}".to_string(), "missing key: schema"),
+            (doc("other-v9", "1", REST), "schema"),
+            (doc(SCHEMA, "1", ", \"bench_ms\": {}"), "missing key: model_units"),
+            (doc(SCHEMA, "1.5", REST), "pr"),
+            (doc(SCHEMA, "1", FRAC), "model_units.m"),
+            (doc(SCHEMA, "1", ", \"bench_ms\": {}, \"model_units\": {}, \"x\": 1"), "unknown"),
+            (doc(SCHEMA, "1", REST) + " junk", "trailing"),
+            (doc(SCHEMA, "1, \"pr\": 2", REST), "duplicate"),
+        ];
+        for (text, needle) in cases {
+            match BenchReport::parse(&text) {
+                Err(Error::Bench(why)) => assert!(why.contains(needle), "{text:?}: {why}"),
+                other => panic!("{text:?}: expected Bench error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn identical_artifacts_pass() {
+        let r = artifact(9, &[("a", 1.0)], &[("m", 10)]);
+        let d = diff(&r, &r, DEFAULT_TOLERANCE, false).unwrap();
+        assert!(d.ok(), "{}", d.render());
+        assert_eq!(d.checked_models, 1);
+        assert_eq!(d.checked_benches, 1);
+    }
+
+    #[test]
+    fn model_drift_fails_exactly() {
+        let old = artifact(9, &[], &[("m", 10)]);
+        let new = artifact(10, &[], &[("m", 11)]);
+        let d = diff(&old, &new, DEFAULT_TOLERANCE, false).unwrap();
+        assert!(!d.ok());
+        assert!(d.violations[0].contains("m"), "{:?}", d.violations);
+        assert!(d.render().contains("FAIL"), "{}", d.render());
+        // Off by one in either direction — exact means exact.
+        let new = artifact(10, &[], &[("m", 9)]);
+        assert!(!diff(&old, &new, DEFAULT_TOLERANCE, false).unwrap().ok());
+    }
+
+    #[test]
+    fn bench_band_tolerates_noise_but_not_regressions() {
+        let old = artifact(9, &[("a", 10.0)], &[]);
+        // 40% slower: inside the default 50% band.
+        let d = diff(&old, &artifact(10, &[("a", 14.0)], &[]), DEFAULT_TOLERANCE, false).unwrap();
+        assert!(d.ok(), "{}", d.render());
+        // 60% slower: out of band.
+        let d = diff(&old, &artifact(10, &[("a", 16.0)], &[]), DEFAULT_TOLERANCE, false).unwrap();
+        assert!(!d.ok());
+        assert!(d.violations[0].contains("a"), "{:?}", d.violations);
+        // Big speedups are notes, never failures.
+        let d = diff(&old, &artifact(10, &[("a", 2.0)], &[]), DEFAULT_TOLERANCE, false).unwrap();
+        assert!(d.ok());
+        assert!(d.notes.iter().any(|n| n.contains("speedup")), "{:?}", d.notes);
+    }
+
+    #[test]
+    fn models_only_ignores_wall_clocks() {
+        let old = artifact(9, &[("a", 1.0)], &[("m", 10)]);
+        let new = artifact(10, &[("a", 100.0)], &[("m", 10)]);
+        let d = diff(&old, &new, DEFAULT_TOLERANCE, true).unwrap();
+        assert!(d.ok(), "{}", d.render());
+        assert_eq!(d.checked_benches, 0);
+        assert_eq!(d.checked_models, 1);
+    }
+
+    #[test]
+    fn key_churn_is_a_note_not_a_failure() {
+        let old = artifact(9, &[("gone", 1.0)], &[("old_m", 5)]);
+        let new = artifact(10, &[("fresh", 1.0)], &[("new_m", 7)]);
+        let d = diff(&old, &new, DEFAULT_TOLERANCE, false).unwrap();
+        assert!(d.ok(), "{}", d.render());
+        assert_eq!(d.checked_models, 0);
+        assert_eq!(d.checked_benches, 0);
+        let joined = d.notes.join("\n");
+        let needles = [
+            "model removed: old_m",
+            "model added: new_m",
+            "bench removed: gone",
+            "bench added: fresh",
+        ];
+        for needle in needles {
+            assert!(joined.contains(needle), "{joined}");
+        }
+    }
+
+    #[test]
+    fn bad_tolerance_is_a_typed_error() {
+        let r = artifact(9, &[], &[]);
+        for t in [-0.1, f64::NAN, f64::INFINITY] {
+            match diff(&r, &r, t, false) {
+                Err(Error::BadParam { name, .. }) => assert_eq!(name, "tolerance"),
+                other => panic!("expected BadParam, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn load_surfaces_io_errors() {
+        match BenchReport::load(Path::new("/tmp/pdgrass-no-such-bench.json")) {
+            Err(Error::Io(_)) => {}
+            other => panic!("expected Io, got {other:?}"),
+        }
+    }
+}

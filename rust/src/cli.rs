@@ -17,7 +17,12 @@
 //! pdgrass prepare  --graph NAME [--save FILE.pdsnap | --load FILE.pdsnap]
 //! pdgrass serve    [--socket P] [--cache-capacity N] [--snapshot-dir D]
 //! pdgrass bombard  [--socket P] [--requests N] [--clients N] [--warm-compare]
+//! pdgrass benchdiff OLD.json NEW.json [--tolerance T] [--models-only]
 //! ```
+//!
+//! `benchdiff` is the one verb taking positional arguments (the two
+//! artifact paths), so it is routed before the strict `--key value`
+//! parser.
 
 use crate::config::{Doc, RunConfig, ServeConfig};
 use crate::coordinator::{experiments, PipelineConfig};
@@ -105,6 +110,9 @@ fn pipeline_cfg(cli: &Cli) -> anyhow::Result<(PipelineConfig, RunConfig)> {
     if let Some(s) = cli.str("pipeline") {
         run.pipeline = s.parse()?;
     }
+    if let Some(s) = cli.str("relabel") {
+        run.relabel = s.parse()?;
+    }
     let mut p = run.pipeline();
     p.alpha = cli.f64("alpha", p.alpha)?;
     Ok((p, run))
@@ -123,8 +131,44 @@ fn graph_names(run: &RunConfig) -> Vec<&str> {
     }
 }
 
+/// `pdgrass benchdiff OLD.json NEW.json [--tolerance T] [--models-only]`:
+/// compare two `benches/micro.rs` artifacts. Takes positional paths, so
+/// it parses its own arguments instead of going through [`Cli::parse`].
+fn run_benchdiff(args: &[String]) -> anyhow::Result<()> {
+    let mut paths: Vec<&str> = Vec::new();
+    let mut tolerance = crate::benchdiff::DEFAULT_TOLERANCE;
+    let mut models_only = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--tolerance" => {
+                let v = it.next().ok_or_else(|| anyhow::anyhow!("--tolerance: missing value"))?;
+                tolerance = v.parse().map_err(|e| anyhow::anyhow!("--tolerance: {e}"))?;
+            }
+            "--models-only" => models_only = true,
+            flag if flag.starts_with("--") => anyhow::bail!("benchdiff: unknown option {flag}"),
+            path => paths.push(path),
+        }
+    }
+    if paths.len() != 2 {
+        anyhow::bail!("usage: pdgrass benchdiff OLD.json NEW.json [--tolerance T] [--models-only]");
+    }
+    let (old_path, new_path) = (paths[0], paths[1]);
+    let old = crate::benchdiff::BenchReport::load(std::path::Path::new(old_path))?;
+    let new = crate::benchdiff::BenchReport::load(std::path::Path::new(new_path))?;
+    let d = crate::benchdiff::diff(&old, &new, tolerance, models_only)?;
+    print!("{}", d.render());
+    if !d.ok() {
+        anyhow::bail!("benchdiff: {} regression(s) vs {old_path}", d.violations.len());
+    }
+    Ok(())
+}
+
 /// Entry point for `main`.
 pub fn run(args: &[String]) -> anyhow::Result<()> {
+    if args.first().map(String::as_str) == Some("benchdiff") {
+        return run_benchdiff(&args[1..]);
+    }
     let cli = Cli::parse(args)?;
     match cli.verb.as_str() {
         "list" => {
@@ -146,6 +190,7 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
             // time, not generator time
             let session = Sparsify::suite(name, cfg.scale, cfg.seed)?
                 .pipeline(run.pipeline)
+                .relabel(run.relabel)
                 .threads(run.resolved_threads());
             let t = Timer::start();
             let prepared = session.prepare()?;
@@ -172,6 +217,7 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
             let name = cli.str("graph").unwrap_or("15-M6");
             let prepared = Sparsify::suite(name, cfg.scale, cfg.seed)?
                 .pipeline(run.pipeline)
+                .relabel(run.relabel)
                 .threads(run.resolved_threads())
                 .prepare()?;
             let r = prepared.recover(&run.recover_opts(cfg.alpha))?;
@@ -212,6 +258,7 @@ pub fn run(args: &[String]) -> anyhow::Result<()> {
                     let t = Timer::start();
                     let p = Sparsify::suite(name, cfg.scale, cfg.seed)?
                         .pipeline(run.pipeline)
+                        .relabel(run.relabel)
                         .threads(run.resolved_threads())
                         .prepare()?;
                     println!("prepared {name} in {:.1} ms", t.ms());
@@ -405,6 +452,9 @@ VERBS
   prepare   --graph NAME [--save F] [--load F]  prepared-state snapshots
   serve                     sparsification daemon on a Unix socket
   bombard                   deterministic load replay against a daemon
+  benchdiff OLD.json NEW.json [--tolerance T] [--models-only]
+                            bench no-regression gate: model_units exact,
+                            bench_ms within the band (default +50%)
 
 OPTIONS
   --scale S      suite scale factor (default 1.0)
@@ -414,6 +464,8 @@ OPTIONS
   --strategy S   serial|outer|inner|mixed|sharded (default mixed)
   --shard-min N  sharded-strategy target shard size (default 4096)
   --pipeline P   barrier|streamed stage handoff (default barrier)
+  --relabel R    none|bfs|degree vertex-locality relabeling at ingest
+                 (outputs stay in original ids; default none)
   --config F     TOML run config ([run]/[serve] sections)
   --quick        tiny scale + 1 trial (smoke)
 
@@ -489,6 +541,78 @@ mod tests {
             "--pipeline", "streamed",
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn relabeled_sparsify_runs_end_to_end() {
+        // Tiny scale smoke: both relabel modes through the whole CLI
+        // stack (ingest permutation, permuted-space pipeline, mapped-back
+        // sparsifier).
+        for mode in ["bfs", "degree"] {
+            run(&s(&[
+                "sparsify", "--graph", "07-com-DBLP", "--scale", "0.02", "--alpha", "0.05",
+                "--relabel", mode,
+            ]))
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn bad_relabel_is_a_clean_error() {
+        let err = run(&s(&[
+            "sparsify", "--graph", "15-M6", "--scale", "0.02", "--relabel", "hilbert",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("relabel"), "{err}");
+    }
+
+    #[test]
+    fn benchdiff_gates_on_models_and_bands() {
+        let dir =
+            std::env::temp_dir().join(format!("pdgrass-cli-benchdiff-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let write = |name: &str, pr: u64, ms: f64, units: u64| -> String {
+            let path = dir.join(name);
+            std::fs::write(
+                &path,
+                format!(
+                    "{{\n  \"schema\": \"pdgrass-bench-v1\",\n  \"pr\": {pr},\n  \
+                     \"bench_ms\": {{\n    \"spmv\": {ms:.4}\n  }},\n  \
+                     \"model_units\": {{\n    \"makespan\": {units}\n  }}\n}}\n"
+                ),
+            )
+            .unwrap();
+            path.to_str().unwrap().to_string()
+        };
+        let old = write("old.json", 9, 10.0, 100);
+        // Within the band, models equal: passes.
+        let ok = write("ok.json", 10, 12.0, 100);
+        run(&s(&["benchdiff", &old, &ok])).unwrap();
+        // Wall clock out of band: fails, unless --models-only.
+        let slow = write("slow.json", 10, 100.0, 100);
+        let err = run(&s(&["benchdiff", &old, &slow])).unwrap_err().to_string();
+        assert!(err.contains("regression"), "{err}");
+        run(&s(&["benchdiff", &old, &slow, "--models-only"])).unwrap();
+        // A wider band also admits it.
+        run(&s(&["benchdiff", &old, &slow, "--tolerance", "10"])).unwrap();
+        // Model drift always fails, even under --models-only.
+        let drift = write("drift.json", 10, 10.0, 101);
+        let err = run(&s(&["benchdiff", &old, &drift, "--models-only"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("regression"), "{err}");
+        // Arity and option validation.
+        assert!(run(&s(&["benchdiff", &old])).unwrap_err().to_string().contains("usage"));
+        assert!(run(&s(&["benchdiff", &old, &ok, "--frob"]))
+            .unwrap_err()
+            .to_string()
+            .contains("unknown option"));
+        let err = run(&s(&["benchdiff", &old, "/tmp/pdgrass-no-such-bench.json"]))
+            .unwrap_err()
+            .to_string();
+        assert!(!err.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -11,6 +11,7 @@
 use std::collections::HashMap;
 
 use crate::error::{Error, Result};
+use crate::graph::Relabel;
 use crate::recovery::{Pipeline, Strategy};
 use crate::session::RecoverOpts;
 
@@ -227,6 +228,9 @@ pub struct RunConfig {
     /// Stage-handoff discipline (`"barrier"` or `"streamed"`) applied to
     /// both preparation and recovery.
     pub pipeline: Pipeline,
+    /// Vertex-locality relabeling (`"none"`, `"bfs"`, or `"degree"`)
+    /// applied at prepare time; outputs stay in original ids.
+    pub relabel: Relabel,
 }
 
 impl Default for RunConfig {
@@ -245,6 +249,7 @@ impl Default for RunConfig {
             beta_cap: 8,
             shard_min: 4096,
             pipeline: Pipeline::Barrier,
+            relabel: Relabel::None,
         }
     }
 }
@@ -257,7 +262,7 @@ impl RunConfig {
         let known = [
             "run.alphas", "run.graphs", "run.scale", "run.seed", "run.tol", "run.maxit",
             "run.trials", "run.quality", "run.threads", "run.strategy", "run.beta_cap",
-            "run.shard_min", "run.pipeline",
+            "run.shard_min", "run.pipeline", "run.relabel",
         ];
         for key in doc.keys() {
             // `audit.*` belongs to `analysis::AuditOptions` and `serve.*`
@@ -386,6 +391,13 @@ impl RunConfig {
             })?;
             cfg.pipeline = s.parse()?;
         }
+        if let Some(v) = doc.get("run.relabel") {
+            let s = v.as_str().ok_or_else(|| Error::BadParam {
+                name: "run.relabel",
+                why: "not a string".into(),
+            })?;
+            cfg.relabel = s.parse()?;
+        }
         Ok(cfg)
     }
 
@@ -401,6 +413,7 @@ impl RunConfig {
             trials: self.trials,
             evaluate_quality: self.quality,
             pipeline: self.pipeline,
+            relabel: self.relabel,
             ..Default::default()
         }
     }
@@ -652,6 +665,30 @@ mod tests {
         let doc = Doc::parse("[run]\npipeline = 3\n").unwrap();
         match RunConfig::from_doc(&doc) {
             Err(Error::BadParam { name, .. }) => assert_eq!(name, "run.pipeline"),
+            other => panic!("expected BadParam, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn relabel_key_round_trips_and_rejects_garbage() {
+        let doc = Doc::parse("[run]\nrelabel = \"bfs\"\n").unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.relabel, Relabel::Bfs);
+        assert_eq!(cfg.pipeline().relabel, Relabel::Bfs);
+        // default is none
+        let cfg = RunConfig::from_doc(&Doc::parse("[run]\n").unwrap()).unwrap();
+        assert_eq!(cfg.relabel, Relabel::None);
+        assert_eq!(cfg.pipeline().relabel, Relabel::None);
+        // unknown spellings are typed errors naming the field
+        let doc = Doc::parse("[run]\nrelabel = \"hilbert\"\n").unwrap();
+        match RunConfig::from_doc(&doc) {
+            Err(Error::BadParam { name, .. }) => assert_eq!(name, "relabel"),
+            other => panic!("expected BadParam, got {other:?}"),
+        }
+        // non-string values are rejected
+        let doc = Doc::parse("[run]\nrelabel = 1\n").unwrap();
+        match RunConfig::from_doc(&doc) {
+            Err(Error::BadParam { name, .. }) => assert_eq!(name, "run.relabel"),
             other => panic!("expected BadParam, got {other:?}"),
         }
     }

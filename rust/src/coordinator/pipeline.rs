@@ -10,6 +10,7 @@
 use super::schedsim::{simulate, SimParams};
 use crate::error::Error;
 use crate::gen;
+use crate::graph::Relabel;
 use crate::recovery::{self, Pipeline, Strategy};
 use crate::session::{Prepared, RecoverOpts, Sparsify};
 
@@ -36,6 +37,10 @@ pub struct PipelineConfig {
     pub sim_threads: [usize; 2],
     /// Stage-handoff discipline for preparation and recovery.
     pub pipeline: Pipeline,
+    /// Vertex-locality relabeling applied at prepare time
+    /// ([`crate::graph::relabel`]); sparsifiers and PCG evaluation stay
+    /// in the original id space regardless.
+    pub relabel: Relabel,
 }
 
 impl Default for PipelineConfig {
@@ -51,6 +56,7 @@ impl Default for PipelineConfig {
             evaluate_quality: true,
             sim_threads: [8, 32],
             pipeline: Pipeline::Barrier,
+            relabel: Relabel::None,
         }
     }
 }
@@ -113,7 +119,11 @@ pub fn recover_opts(cfg: &PipelineConfig, threads: usize, strategy: Strategy) ->
 /// timed for its serial calibration run (the other prepare stages have no
 /// per-call thread knob and behave as before).
 pub fn prepare_graph(name: &str, cfg: &PipelineConfig) -> Result<Prepared, Error> {
-    Sparsify::suite(name, cfg.scale, cfg.seed)?.threads(1).pipeline(cfg.pipeline).prepare()
+    Sparsify::suite(name, cfg.scale, cfg.seed)?
+        .threads(1)
+        .pipeline(cfg.pipeline)
+        .relabel(cfg.relabel)
+        .prepare()
 }
 
 /// Run both algorithms + evaluation on one suite graph.
@@ -256,6 +266,25 @@ mod tests {
         assert_eq!(format!("{:?}", streamed.stats), format!("{:?}", barrier.stats));
         // Streamed stage attribution: no separate sort stage.
         assert_eq!(streamed.step_ms[1], 0.0);
+    }
+
+    #[test]
+    fn relabeled_config_reports_same_quality_as_identity() {
+        // Locality relabeling is a layout change, not an algorithmic one:
+        // the recovered sparsifier is mapped back to original ids, so the
+        // PCG evaluation (which runs in original id space) must see
+        // bitwise-identical systems and converge in the same iterations.
+        let base = run_graph("15-M6", &quick_cfg()).unwrap();
+        for mode in [Relabel::Bfs, Relabel::Degree] {
+            let mut cfg = quick_cfg();
+            cfg.relabel = mode;
+            let r = run_graph("15-M6", &cfg).unwrap();
+            assert_eq!(r.v, base.v);
+            assert_eq!(r.e, base.e);
+            assert_eq!(r.iter_pd, base.iter_pd, "{mode:?}");
+            assert_eq!(r.iter_fe, base.iter_fe, "{mode:?}");
+            assert_eq!(r.pd_passes, base.pd_passes, "{mode:?}");
+        }
     }
 
     #[test]

@@ -76,6 +76,21 @@ pub enum Error {
         /// What failed validation.
         why: String,
     },
+    /// A graph is too large for the compact u32 CSR index mode: the
+    /// vertex count or the CSR slot count (`2|E| + 1`) exceeds
+    /// `u32::MAX`. The u64-offset fallback representation is future work
+    /// (see ROADMAP); today such inputs are rejected up front rather
+    /// than built with silently truncated offsets.
+    IndexOverflow {
+        /// Which quantity overflowed (e.g. `"vertex count"`, `"CSR slots"`).
+        what: &'static str,
+        /// The value that did not fit.
+        needed: u64,
+    },
+    /// A bench artifact (`BENCH_*.json`) failed to parse, carried the
+    /// wrong schema, or the `pdgrass benchdiff` comparison found a
+    /// regression against the committed baseline.
+    Bench(String),
     /// Config file is malformed (parse error or unknown key).
     Config(String),
     /// Underlying I/O failure.
@@ -105,7 +120,15 @@ impl fmt::Display for Error {
             Error::DeadlineExceeded { elapsed_ms, deadline_ms } => {
                 write!(f, "deadline exceeded: {elapsed_ms} ms elapsed (deadline {deadline_ms} ms)")
             }
+            Error::IndexOverflow { what, needed } => {
+                write!(
+                    f,
+                    "graph exceeds u32 index space: {what} needs {needed} (max {})",
+                    u32::MAX
+                )
+            }
             Error::Snapshot { why } => write!(f, "snapshot rejected: {why}"),
+            Error::Bench(msg) => write!(f, "bench: {msg}"),
             Error::Config(msg) => write!(f, "config: {msg}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -155,6 +178,13 @@ mod tests {
         let e = Error::Snapshot { why: "section 3 digest mismatch".into() };
         assert!(e.to_string().contains("snapshot rejected"), "{e}");
         assert!(e.to_string().contains("section 3 digest mismatch"), "{e}");
+        let e = Error::IndexOverflow { what: "CSR slots", needed: 5_000_000_000 };
+        assert!(e.to_string().contains("u32 index space"), "{e}");
+        assert!(e.to_string().contains("CSR slots"), "{e}");
+        assert!(e.to_string().contains("5000000000"), "{e}");
+        let e = Error::Bench("model mismatch".into());
+        assert!(e.to_string().contains("bench"), "{e}");
+        assert!(e.to_string().contains("model mismatch"), "{e}");
     }
 
     #[test]

@@ -3,6 +3,22 @@
 //! This is the substrate every stage of the pipeline consumes: spanning
 //! tree generation (BFS over CSR), off-tree edge recovery (edge list), and
 //! Laplacian assembly (CSR).
+//!
+//! Row offsets are compact `u32` (`xadj`): any graph with
+//! `2|E| + 1 < u32::MAX` CSR slots fits, which halves index traffic in the
+//! BFS/SpMV hot loops relative to `usize` offsets. Construction is checked —
+//! [`Graph::try_from_edges`] returns the typed
+//! [`Error::IndexOverflow`](crate::error::Error::IndexOverflow) beyond the
+//! u32 range instead of silently truncating.
+
+use crate::error::{Error, Result};
+
+/// Edge-count cutoff above which [`Graph::from_edges`] dispatches the
+/// canonical `(u, v)` sort to the pool. Duplicate `(u, v)` keys are merged
+/// by summing immediately after the sort, so even for equal keys the
+/// output is independent of which stable order the sort produced — the
+/// parallel path is bitwise equal to the serial one.
+const PAR_SORT_CUTOFF: usize = 1 << 15;
 
 /// An undirected weighted edge with canonical orientation `u < v`.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -20,8 +36,9 @@ pub struct Edge {
 pub struct Graph {
     /// Vertex count.
     n: usize,
-    /// CSR row offsets, length `n + 1`.
-    xadj: Vec<usize>,
+    /// CSR row offsets, length `n + 1`, compact `u32` (construction
+    /// rejects graphs with `2|E| + 1 ≥ u32::MAX` slots).
+    xadj: Vec<u32>,
     /// CSR neighbor ids, length `2|E|`.
     adj: Vec<u32>,
     /// CSR edge weights, parallel to `adj`.
@@ -37,9 +54,22 @@ impl Graph {
     ///
     /// Self loops are dropped; parallel edges are merged by *summing*
     /// weights (conductances in parallel add). Weights must be positive
-    /// and finite.
+    /// and finite. Panics if the CSR slot count overflows the compact
+    /// u32 index space — use [`Graph::try_from_edges`] for a typed error.
     pub fn from_edges(n: usize, raw: &[(u32, u32, f64)]) -> Graph {
-        assert!(n <= u32::MAX as usize, "vertex count exceeds u32 index space");
+        Self::try_from_edges(n, raw).expect("graph exceeds u32 index space")
+    }
+
+    /// As [`Graph::from_edges`], but returns the typed
+    /// [`Error::IndexOverflow`] when the vertex count or the CSR slot
+    /// count (`2|E| + 1`) does not fit the compact u32 row offsets,
+    /// instead of panicking. Malformed *edges* (out-of-range endpoints,
+    /// non-positive weights) still panic: those are caller bugs, not
+    /// input-scale limits.
+    pub fn try_from_edges(n: usize, raw: &[(u32, u32, f64)]) -> Result<Graph> {
+        if n > u32::MAX as usize {
+            return Err(Error::IndexOverflow { what: "vertex count", needed: n as u64 });
+        }
         let mut canon: Vec<Edge> = Vec::with_capacity(raw.len());
         for &(a, b, w) in raw {
             assert!((a as usize) < n && (b as usize) < n, "edge endpoint out of range");
@@ -50,8 +80,16 @@ impl Graph {
             let (u, v) = if a < b { (a, b) } else { (b, a) };
             canon.push(Edge { u, v, w });
         }
-        // Merge duplicates: sort by (u, v), sum weights.
-        canon.sort_by(|x, y| (x.u, x.v).cmp(&(y.u, y.v)));
+        // Merge duplicates: sort by (u, v), sum weights. The sort is
+        // stable either way, so duplicate runs keep input order and the
+        // weight sums are bitwise identical serial vs. pooled.
+        if canon.len() >= PAR_SORT_CUTOFF {
+            crate::par::sort::par_sort_by(&mut canon, crate::par::num_threads(), &|x, y| {
+                (x.u, x.v).cmp(&(y.u, y.v))
+            });
+        } else {
+            canon.sort_by(|x, y| (x.u, x.v).cmp(&(y.u, y.v)));
+        }
         let mut edges: Vec<Edge> = Vec::with_capacity(canon.len());
         for e in canon {
             match edges.last_mut() {
@@ -59,18 +97,24 @@ impl Graph {
                 _ => edges.push(e),
             }
         }
-        Self::from_unique_edges(n, edges)
+        let slots = 2 * edges.len() as u64 + 1;
+        if slots >= u32::MAX as u64 {
+            return Err(Error::IndexOverflow { what: "CSR slots", needed: slots });
+        }
+        Ok(Self::from_unique_edges(n, edges))
     }
 
     /// Build from edges already unique + canonical (`u < v`, no loops).
     pub fn from_unique_edges(n: usize, edges: Vec<Edge>) -> Graph {
         let m = edges.len();
-        let mut deg = vec![0usize; n];
+        assert!(n <= u32::MAX as usize, "vertex count exceeds u32 index space");
+        assert!(2 * m as u64 + 1 < u32::MAX as u64, "CSR slots exceed u32 index space");
+        let mut deg = vec![0u32; n];
         for e in &edges {
             deg[e.u as usize] += 1;
             deg[e.v as usize] += 1;
         }
-        let mut xadj = vec![0usize; n + 1];
+        let mut xadj = vec![0u32; n + 1];
         for i in 0..n {
             xadj[i + 1] = xadj[i] + deg[i];
         }
@@ -79,12 +123,12 @@ impl Graph {
         let mut eid = vec![0u32; 2 * m];
         let mut cursor = xadj.clone();
         for (k, e) in edges.iter().enumerate() {
-            let cu = cursor[e.u as usize];
+            let cu = cursor[e.u as usize] as usize;
             adj[cu] = e.v;
             wgt[cu] = e.w;
             eid[cu] = k as u32;
             cursor[e.u as usize] += 1;
-            let cv = cursor[e.v as usize];
+            let cv = cursor[e.v as usize] as usize;
             adj[cv] = e.u;
             wgt[cv] = e.w;
             eid[cv] = k as u32;
@@ -105,12 +149,12 @@ impl Graph {
 
     /// Degree of vertex `u` (number of incident unique edges).
     pub fn degree(&self, u: u32) -> usize {
-        self.xadj[u as usize + 1] - self.xadj[u as usize]
+        (self.xadj[u as usize + 1] - self.xadj[u as usize]) as usize
     }
 
     /// Weighted degree (sum of incident weights) — the Laplacian diagonal.
     pub fn weighted_degree(&self, u: u32) -> f64 {
-        let (s, e) = (self.xadj[u as usize], self.xadj[u as usize + 1]);
+        let (s, e) = (self.xadj[u as usize] as usize, self.xadj[u as usize + 1] as usize);
         self.wgt[s..e].iter().sum()
     }
 
@@ -124,13 +168,13 @@ impl Graph {
 
     /// Neighbors of `u` with weights: iterator of `(v, w, edge_id)`.
     pub fn neighbors(&self, u: u32) -> impl Iterator<Item = (u32, f64, u32)> + '_ {
-        let (s, e) = (self.xadj[u as usize], self.xadj[u as usize + 1]);
+        let (s, e) = (self.xadj[u as usize] as usize, self.xadj[u as usize + 1] as usize);
         (s..e).map(move |i| (self.adj[i], self.wgt[i], self.eid[i]))
     }
 
     /// Neighbor ids only (fast path for BFS).
     pub fn neighbor_ids(&self, u: u32) -> &[u32] {
-        &self.adj[self.xadj[u as usize]..self.xadj[u as usize + 1]]
+        &self.adj[self.xadj[u as usize] as usize..self.xadj[u as usize + 1] as usize]
     }
 
     /// All unique undirected edges.
@@ -220,5 +264,73 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn rejects_nonpositive_weight() {
         Graph::from_edges(2, &[(0, 1, 0.0)]);
+    }
+
+    #[test]
+    fn try_from_edges_rejects_oversized_vertex_count() {
+        // The check fires before any O(n) allocation, so an absurd n is a
+        // cheap test.
+        let err = Graph::try_from_edges(u32::MAX as usize + 1, &[]).unwrap_err();
+        match err {
+            crate::error::Error::IndexOverflow { what, needed } => {
+                assert_eq!(what, "vertex count");
+                assert_eq!(needed, u32::MAX as u64 + 1);
+            }
+            other => panic!("expected IndexOverflow, got {other}"),
+        }
+    }
+
+    #[test]
+    fn try_from_edges_matches_from_edges() {
+        let raw = [(0u32, 1u32, 1.0), (1, 0, 2.5), (2, 2, 9.0), (1, 2, 1.0)];
+        let a = Graph::from_edges(3, &raw);
+        let b = Graph::try_from_edges(3, &raw).unwrap();
+        assert_eq!(a.num_edges(), b.num_edges());
+        for (x, y) in a.edges().iter().zip(b.edges()) {
+            assert_eq!((x.u, x.v), (y.u, y.v));
+            assert_eq!(x.w.to_bits(), y.w.to_bits());
+        }
+    }
+
+    #[test]
+    fn parallel_canonical_sort_is_bitwise_equal() {
+        // Build an edge list well above PAR_SORT_CUTOFF with duplicates so
+        // the merge-by-summing path is exercised, and compare against a
+        // serially-sorted reference construction.
+        let n = 2_000usize;
+        let mut rng = crate::util::Rng::new(42);
+        let mut raw: Vec<(u32, u32, f64)> = Vec::new();
+        for i in 0..n as u32 - 1 {
+            raw.push((i, i + 1, 1.0)); // keep it connected
+        }
+        while raw.len() < super::PAR_SORT_CUTOFF + 10_000 {
+            let u = (rng.next_u64() % n as u64) as u32;
+            let v = (rng.next_u64() % n as u64) as u32;
+            if u != v {
+                raw.push((u, v, 0.5 + (rng.next_u64() % 1000) as f64 / 1000.0));
+            }
+        }
+        let par = Graph::from_edges(n, &raw);
+        // Serial reference: canonicalize + stable serial sort + merge.
+        let mut canon: Vec<Edge> = raw
+            .iter()
+            .map(|&(a, b, w)| {
+                let (u, v) = if a < b { (a, b) } else { (b, a) };
+                Edge { u, v, w }
+            })
+            .collect();
+        canon.sort_by(|x, y| (x.u, x.v).cmp(&(y.u, y.v)));
+        let mut merged: Vec<Edge> = Vec::new();
+        for e in canon {
+            match merged.last_mut() {
+                Some(last) if last.u == e.u && last.v == e.v => last.w += e.w,
+                _ => merged.push(e),
+            }
+        }
+        assert_eq!(par.num_edges(), merged.len());
+        for (x, y) in par.edges().iter().zip(&merged) {
+            assert_eq!((x.u, x.v), (y.u, y.v));
+            assert_eq!(x.w.to_bits(), y.w.to_bits(), "weight sums must be bitwise equal");
+        }
     }
 }

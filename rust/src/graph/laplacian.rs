@@ -9,12 +9,16 @@
 use super::csr::Graph;
 
 /// Symmetric sparse matrix in CSR format (full storage, both triangles).
+///
+/// Row offsets are compact `u32`, matching [`Graph`]'s `xadj`: halving
+/// offset width halves the index bytes the SpMV and triangular-solve hot
+/// loops stream. Construction asserts the nnz count fits.
 #[derive(Clone, Debug)]
 pub struct CsrMatrix {
     /// Dimension.
     pub n: usize,
-    /// Row offsets, length `n + 1`.
-    pub rowptr: Vec<usize>,
+    /// Row offsets, length `n + 1`, compact `u32`.
+    pub rowptr: Vec<u32>,
     /// Column indices per entry.
     pub colidx: Vec<u32>,
     /// Values per entry.
@@ -27,6 +31,11 @@ impl CsrMatrix {
         self.vals.len()
     }
 
+    /// Number of nonzeros in row `i`.
+    pub fn row_nnz(&self, i: usize) -> usize {
+        (self.rowptr[i + 1] - self.rowptr[i]) as usize
+    }
+
     /// Build from unsorted triplets, summing duplicates.
     pub fn from_triplets(n: usize, mut t: Vec<(u32, u32, f64)>) -> CsrMatrix {
         t.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
@@ -37,7 +46,11 @@ impl CsrMatrix {
                 _ => merged.push((r, c, v)),
             }
         }
-        let mut rowptr = vec![0usize; n + 1];
+        assert!(
+            merged.len() as u64 + 1 < u32::MAX as u64,
+            "CSR nnz exceeds u32 index space"
+        );
+        let mut rowptr = vec![0u32; n + 1];
         for &(r, _, _) in &merged {
             rowptr[r as usize + 1] += 1;
         }
@@ -51,7 +64,7 @@ impl CsrMatrix {
 
     /// Row `i` as (cols, vals) slices.
     pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
-        let (s, e) = (self.rowptr[i], self.rowptr[i + 1]);
+        let (s, e) = (self.rowptr[i] as usize, self.rowptr[i + 1] as usize);
         (&self.colidx[s..e], &self.vals[s..e])
     }
 

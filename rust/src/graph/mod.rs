@@ -5,9 +5,11 @@ pub mod csr;
 pub mod fingerprint;
 pub mod laplacian;
 pub mod mmio;
+pub mod relabel;
 
 pub use connect::{components, is_connected, largest_component};
 pub use csr::{Edge, Graph};
 pub use fingerprint::{fingerprint, fingerprint_hex, parse_fingerprint, Fnv1a};
 pub use laplacian::{grounded_laplacian, laplacian, CsrMatrix};
 pub use mmio::{read_mtx, write_mtx};
+pub use relabel::{apply_perm, invert_perm, relabel_perm, unapply_perm, validate_perm, Relabel};

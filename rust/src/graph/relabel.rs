@@ -1,0 +1,331 @@
+//! Opt-in locality relabeling: permute vertex ids at session ingest so
+//! the whole Algorithm-1 pipeline — CSR walks, tree BFS, SpMV — touches
+//! memory in a cache-friendlier order on giant graphs.
+//!
+//! A permutation is represented as `perm[new] = old` (the convention of
+//! [`crate::solver::order::rcm`]). The session applies it **once** at
+//! [`crate::session::Sparsify::prepare`]: the pipeline then runs entirely
+//! in the permuted id space, and the session maps the final sparsifier's
+//! endpoints back through `perm` so callers only ever see original ids
+//! (PCG evaluation in particular runs in the original space — floating
+//! point is not permutation-invariant, so evaluating in permuted space
+//! would change residual histories).
+//!
+//! # Equivariance
+//!
+//! Both modes assign new id 0 to the graph's canonical root
+//! ([`Graph::max_degree_vertex`] — smallest id among the maximum-degree
+//! vertices), so the relabeled pipeline roots its spanning tree at the
+//! *same original vertex*. Effective weights (Def. 1) are a closed-form
+//! per-edge formula over integer BFS hop counts and degrees — bitwise
+//! permutation-invariant — and resistance scores follow the tree, so on
+//! inputs whose effective weights and criticality scores are tie-free
+//! (ties break by edge id, which relabeling reorders) the recovered edge
+//! set and the PCG iteration count match the unrelabeled run exactly.
+
+use super::csr::Graph;
+use crate::error::{Error, Result};
+
+/// Vertex relabeling mode applied at session ingest (default: none).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Relabel {
+    /// Keep the input ids (the historical behavior; bit-for-bit inert).
+    #[default]
+    None,
+    /// BFS order from the max-degree vertex: neighbors in CSR order,
+    /// unreached components appended in ascending first-vertex order.
+    /// Tree-heavy walks see mostly-sequential ids.
+    Bfs,
+    /// Degree order, descending (stable: equal-degree vertices keep
+    /// ascending id order). Hub rows cluster at the front, which is what
+    /// the cache-blocked SpMV's heavy-row tiling likes.
+    Degree,
+}
+
+impl Relabel {
+    /// True for [`Relabel::None`] — no permutation is materialized.
+    pub fn is_none(self) -> bool {
+        self == Relabel::None
+    }
+}
+
+impl std::str::FromStr for Relabel {
+    type Err = Error;
+
+    /// Parse a mode name (case-insensitive): `none`, `bfs`, or `degree`
+    /// — the config-file / CLI spelling.
+    fn from_str(s: &str) -> Result<Relabel> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Ok(Relabel::None),
+            "bfs" => Ok(Relabel::Bfs),
+            "degree" => Ok(Relabel::Degree),
+            _ => Err(Error::BadParam {
+                name: "relabel",
+                why: format!("unknown relabel mode {s:?} (expected none|bfs|degree)"),
+            }),
+        }
+    }
+}
+
+impl std::fmt::Display for Relabel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Relabel::None => "none",
+            Relabel::Bfs => "bfs",
+            Relabel::Degree => "degree",
+        })
+    }
+}
+
+/// The `mode` permutation for `g`, as `perm[new] = old`; `None` for
+/// [`Relabel::None`] (no permutation is materialized, so the inert mode
+/// costs nothing). Deterministic: depends only on the graph.
+pub fn relabel_perm(g: &Graph, mode: Relabel) -> Option<Vec<u32>> {
+    match mode {
+        Relabel::None => None,
+        Relabel::Bfs => Some(bfs_perm(g)),
+        Relabel::Degree => Some(degree_perm(g)),
+    }
+}
+
+/// BFS order from [`Graph::max_degree_vertex`]; any vertices BFS cannot
+/// reach (disconnected inputs) are appended by restarting from the
+/// smallest unvisited id, so the result is always a full permutation.
+fn bfs_perm(g: &Graph) -> Vec<u32> {
+    let n = g.num_vertices();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    let mut seen = vec![false; n];
+    let mut bfs_from = |start: u32, order: &mut Vec<u32>, seen: &mut Vec<bool>| {
+        seen[start as usize] = true;
+        let mut head = order.len();
+        order.push(start);
+        while head < order.len() {
+            let u = order[head];
+            head += 1;
+            for &v in g.neighbor_ids(u) {
+                if !seen[v as usize] {
+                    seen[v as usize] = true;
+                    order.push(v);
+                }
+            }
+        }
+    };
+    bfs_from(g.max_degree_vertex(), &mut order, &mut seen);
+    for v in 0..n as u32 {
+        if !seen[v as usize] {
+            bfs_from(v, &mut order, &mut seen);
+        }
+    }
+    order
+}
+
+/// Degree-descending order; the sort is stable so equal-degree vertices
+/// keep ascending id order (and new id 0 is exactly
+/// [`Graph::max_degree_vertex`]).
+fn degree_perm(g: &Graph) -> Vec<u32> {
+    let mut ids: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    ids.sort_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+    ids
+}
+
+/// Inverse of `perm[new] = old`: `inv[old] = new`. Caller guarantees
+/// `perm` is a bijection (see [`validate_perm`]).
+pub fn invert_perm(perm: &[u32]) -> Vec<u32> {
+    let mut inv = vec![0u32; perm.len()];
+    for (new, &old) in perm.iter().enumerate() {
+        inv[old as usize] = new as u32;
+    }
+    inv
+}
+
+/// Check that `perm` is a bijection on `0..n` — the snapshot decoder's
+/// gate before trusting a deserialized permutation.
+pub fn validate_perm(perm: &[u32], n: usize) -> Result<()> {
+    if perm.len() != n {
+        return Err(Error::BadParam {
+            name: "perm",
+            why: format!("length {} does not match vertex count {n}", perm.len()),
+        });
+    }
+    let mut seen = vec![false; n];
+    for &old in perm {
+        if old as usize >= n || seen[old as usize] {
+            return Err(Error::BadParam {
+                name: "perm",
+                why: format!("not a bijection on 0..{n}: entry {old} out of range or repeated"),
+            });
+        }
+        seen[old as usize] = true;
+    }
+    Ok(())
+}
+
+/// `g` rewritten into the permuted id space: original vertex `perm[i]`
+/// becomes vertex `i`. Weights pass through untouched and the CSR is
+/// rebuilt canonically, so the result is exactly the graph a caller
+/// would have built had they numbered their vertices this way.
+pub fn apply_perm(g: &Graph, perm: &[u32]) -> Graph {
+    let inv = invert_perm(perm);
+    let edges: Vec<(u32, u32, f64)> =
+        g.edges().iter().map(|e| (inv[e.u as usize], inv[e.v as usize], e.w)).collect();
+    Graph::from_edges(g.num_vertices(), &edges)
+}
+
+/// Inverse of [`apply_perm`]: a graph living in the permuted id space
+/// mapped back to original ids. `unapply_perm(&apply_perm(g, p), p)` is
+/// bitwise identical to `g` (weights untouched, CSR canonical).
+pub fn unapply_perm(g: &Graph, perm: &[u32]) -> Graph {
+    let edges: Vec<(u32, u32, f64)> =
+        g.edges().iter().map(|e| (perm[e.u as usize], perm[e.v as usize], e.w)).collect();
+    Graph::from_edges(g.num_vertices(), &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_graph(seed: u64) -> Graph {
+        crate::gen::community(
+            crate::gen::CommunityParams {
+                n: 400,
+                mean_size: 9.0,
+                tail: 1.7,
+                intra_p: 0.5,
+                bridges: 2,
+                max_size: 60,
+            },
+            &mut Rng::new(seed),
+        )
+    }
+
+    #[test]
+    fn parses_all_spellings() {
+        for (s, want) in [
+            ("none", Relabel::None),
+            ("NONE", Relabel::None),
+            ("bfs", Relabel::Bfs),
+            ("Bfs", Relabel::Bfs),
+            ("degree", Relabel::Degree),
+            ("DEGREE", Relabel::Degree),
+        ] {
+            assert_eq!(s.parse::<Relabel>().unwrap(), want, "{s}");
+            assert_eq!(want.to_string().parse::<Relabel>().unwrap(), want);
+        }
+        assert!("rcm".parse::<Relabel>().is_err());
+        assert_eq!(Relabel::default(), Relabel::None);
+        assert!(Relabel::None.is_none() && !Relabel::Bfs.is_none());
+    }
+
+    #[test]
+    fn perms_are_bijections() {
+        crate::util::proptest::check_default("relabel_bijection", |rng: &mut Rng| {
+            let g = crate::gen::community(
+                crate::gen::CommunityParams {
+                    n: 50 + rng.below(300),
+                    mean_size: 8.0,
+                    tail: 1.6,
+                    intra_p: 0.4,
+                    bridges: 1,
+                    max_size: 40,
+                },
+                rng,
+            );
+            for mode in [Relabel::Bfs, Relabel::Degree] {
+                let perm = relabel_perm(&g, mode).unwrap();
+                validate_perm(&perm, g.num_vertices())
+                    .map_err(|e| format!("{mode}: {e}"))?;
+                let inv = invert_perm(&perm);
+                for (new, &old) in perm.iter().enumerate() {
+                    if inv[old as usize] as usize != new {
+                        return Err(format!("{mode}: invert mismatch at new={new}"));
+                    }
+                }
+            }
+            assert!(relabel_perm(&g, Relabel::None).is_none());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn both_modes_put_the_canonical_root_first() {
+        let g = random_graph(11);
+        for mode in [Relabel::Bfs, Relabel::Degree] {
+            let perm = relabel_perm(&g, mode).unwrap();
+            assert_eq!(perm[0], g.max_degree_vertex(), "{mode}");
+        }
+    }
+
+    #[test]
+    fn degree_perm_descends_with_stable_ties() {
+        let g = random_graph(3);
+        let perm = relabel_perm(&g, Relabel::Degree).unwrap();
+        for w in perm.windows(2) {
+            let (da, db) = (g.degree(w[0]), g.degree(w[1]));
+            assert!(da > db || (da == db && w[0] < w[1]), "order violated at {w:?}");
+        }
+    }
+
+    #[test]
+    fn bfs_perm_covers_disconnected_graphs() {
+        // Two components: a triangle and a path. BFS starts in the
+        // triangle (max degree) and must restart to cover the path.
+        let g = Graph::from_edges(
+            6,
+            &[(0, 1, 1.0), (1, 2, 1.0), (0, 2, 1.0), (3, 4, 1.0), (4, 5, 1.0)],
+        );
+        let perm = relabel_perm(&g, Relabel::Bfs).unwrap();
+        validate_perm(&perm, 6).unwrap();
+        // The triangle occupies the first three slots, the path the rest.
+        let first: std::collections::BTreeSet<u32> = perm[..3].iter().copied().collect();
+        assert_eq!(first, [0u32, 1, 2].into_iter().collect());
+    }
+
+    #[test]
+    fn validate_perm_rejects_non_bijections() {
+        assert!(validate_perm(&[0, 1, 2], 3).is_ok());
+        assert!(validate_perm(&[0, 1], 3).is_err(), "wrong length");
+        assert!(validate_perm(&[0, 1, 1], 3).is_err(), "repeated entry");
+        assert!(validate_perm(&[0, 1, 3], 3).is_err(), "out of range");
+    }
+
+    #[test]
+    fn apply_unapply_round_trips_bitwise() {
+        let g = random_graph(7);
+        for mode in [Relabel::Bfs, Relabel::Degree] {
+            let perm = relabel_perm(&g, mode).unwrap();
+            let permuted = apply_perm(&g, &perm);
+            assert_eq!(permuted.num_vertices(), g.num_vertices());
+            assert_eq!(permuted.num_edges(), g.num_edges());
+            let back = unapply_perm(&permuted, &perm);
+            assert_eq!(
+                crate::graph::fingerprint(&back),
+                crate::graph::fingerprint(&g),
+                "{mode}: round trip changed the graph"
+            );
+            // Bitwise: identical edge lists, not just equal fingerprints.
+            for (a, b) in back.edges().iter().zip(g.edges()) {
+                assert_eq!((a.u, a.v), (b.u, b.v));
+                assert_eq!(a.w.to_bits(), b.w.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn relabeling_changes_the_fingerprint_but_preserves_structure() {
+        let g = random_graph(9);
+        let perm = relabel_perm(&g, Relabel::Bfs).unwrap();
+        let permuted = apply_perm(&g, &perm);
+        // Degrees are preserved as a multiset.
+        let mut dg: Vec<usize> = (0..g.num_vertices() as u32).map(|v| g.degree(v)).collect();
+        let mut dp: Vec<usize> =
+            (0..permuted.num_vertices() as u32).map(|v| permuted.degree(v)).collect();
+        dg.sort_unstable();
+        dp.sort_unstable();
+        assert_eq!(dg, dp);
+        assert_eq!(permuted.max_degree_vertex(), 0, "root must map to new id 0");
+    }
+}

@@ -96,8 +96,39 @@
 //!   snapshot load ([`snapshot`]) and successful prepares are written
 //!   back — so a restarted daemon answers its first request from a warm
 //!   load instead of re-running steps 1–3.
+//! * [`benchdiff`] — the bench no-regression gate: parses the
+//!   `BENCH_*.json` artifacts `benches/micro.rs` emits and compares two
+//!   of them (`pdgrass benchdiff old.json new.json`): structural
+//!   `model_units` must match exactly (they are machine-independent cost
+//!   models), wall-clock `bench_ms` within a tolerance band.
 //! * [`gen`], [`runtime`], [`util`] — the synthetic evaluation suite, the
 //!   XLA/Pallas kernel runtime, and shared utilities.
+//!
+//! ## Memory layout & scaling
+//!
+//! Giant inputs are a first-class concern; the layers above share a few
+//! layout decisions made for them:
+//!
+//! * **Compact u32 indexing** — every CSR offset array (graph adjacency,
+//!   Laplacian rowptr, LDLᵀ factor columns, rooted-tree children) is
+//!   `u32`, halving index memory and cache traffic. Construction checks
+//!   the bound once up front and rejects oversized inputs with the typed
+//!   [`Error::IndexOverflow`] instead of silently truncating (u64
+//!   fallback: see ROADMAP).
+//! * **Locality relabeling** — [`Sparsify::relabel`] (config
+//!   `relabel = "bfs" | "degree"`, CLI `--relabel`) permutes vertex ids
+//!   at ingest so BFS/tree walks touch near-contiguous memory; the whole
+//!   pipeline runs in permuted space, while sparsifiers and the PCG
+//!   evaluation are expressed in original ids — on tie-free inputs the
+//!   recovered edge set and PCG iteration counts are unchanged
+//!   ([`graph::relabel`] documents the equivariance argument).
+//! * **Cache-blocked SpMV** — `solver::spmv_par` partitions rows by
+//!   prefix-summed nnz (not row count) and sweeps heavy rows through
+//!   column blocks in row tiles; `solver::spmv_traffic_model` is the
+//!   deterministic cost model the benches pin.
+//! * **Arena-backed recovery scratch** — sharded subtask exploration
+//!   draws its visit buffers from a per-pass arena, bounding allocation
+//!   by pool width instead of subtask count.
 //!
 //! ## Quick start: prepare once, recover many
 //!
@@ -147,6 +178,7 @@
 //!   schedules. A failure report names the seed to replay.
 
 pub mod analysis;
+pub mod benchdiff;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -45,7 +45,7 @@
 //! diverges). The recovered set is therefore bitwise identical to
 //! [`process_serial`] at every thread count, by construction.
 
-use super::subctx::{ScratchPool, SubtaskCtx};
+use super::subctx::{ScratchArena, SubtaskCtx};
 use super::subtask::shard_ranges;
 use super::{Params, Stats};
 use crate::par;
@@ -209,6 +209,20 @@ pub fn process_sharded(
     idxs: &[u32],
     params: &Params,
 ) -> SubtaskOutcome {
+    process_sharded_with(off, sp, idxs, params, &ScratchArena::new())
+}
+
+/// As [`process_sharded`], speculating against scratch buffers from a
+/// caller-owned [`ScratchArena`] — the pass loop in `recovery::pdgrass`
+/// creates one arena per pass so consecutive giant subtasks reuse each
+/// other's grown buffers instead of re-allocating from cold.
+pub fn process_sharded_with(
+    off: &[OffTreeEdge],
+    sp: &Spanning,
+    idxs: &[u32],
+    params: &Params,
+    scratch: &ScratchArena,
+) -> SubtaskOutcome {
     let m = idxs.len();
     let ranges = shard_ranges(m, params.shard_min);
     if ranges.len() <= 1 {
@@ -216,7 +230,6 @@ pub fn process_sharded(
         return process_serial(off, sp, idxs, params);
     }
     let ctx = SubtaskCtx::new(off, idxs);
-    let scratch = ScratchPool::new();
 
     // ---- speculative phase: shards fan out across the pool ----
     // Each shard runs the strict pass as if it started the subtask:
@@ -494,6 +507,51 @@ mod tests {
                 "threads={threads}"
             );
         }
+    }
+
+    #[test]
+    fn shared_arena_matches_private_and_bounds_allocations() {
+        // Processing several subtasks against ONE pass arena must (a)
+        // change nothing about the outcomes and (b) create at most one
+        // buffer per worker per concurrent shard wave — not one per
+        // subtask — which is the allocator-churn fix the arena exists for.
+        let g = gen::community(
+            gen::CommunityParams {
+                n: 600,
+                mean_size: 12.0,
+                tail: 1.7,
+                intra_p: 0.5,
+                bridges: 2,
+                max_size: 80,
+            },
+            &mut Rng::new(3),
+        );
+        let sp = build_spanning(&g);
+        let mut off = off_tree_edges(&g, &sp);
+        sort_by_score(&mut off, 1);
+        let subtasks = crate::recovery::subtask::make_subtasks(&off);
+        let mut p = params(8, true);
+        p.shard_min = 8;
+        let sharded: Vec<_> =
+            subtasks.iter().filter(|st| shard_ranges(st.len(), p.shard_min).len() > 1).collect();
+        assert!(sharded.len() >= 2, "need several sharded subtasks, got {}", sharded.len());
+        let arena = ScratchArena::new();
+        for st in &sharded {
+            let private = process_sharded(&off, &sp, &st.idxs, &p);
+            let pooled = process_sharded_with(&off, &sp, &st.idxs, &p, &arena);
+            assert_eq!(private.recovered, pooled.recovered, "lca={}", st.lca);
+            assert_eq!(private.leftover, pooled.leftover, "lca={}", st.lca);
+        }
+        // Workers claim one scratch at a time, so the arena can never
+        // need more live buffers than pool workers + the caller — far
+        // fewer than the total shard count across all subtasks.
+        let cap = crate::par::ThreadPool::global().workers() + 1;
+        assert!(
+            arena.buffers_created() <= cap,
+            "created {} buffers for {} subtasks (cap {cap})",
+            arena.buffers_created(),
+            sharded.len()
+        );
     }
 
     #[test]

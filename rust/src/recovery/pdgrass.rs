@@ -26,8 +26,9 @@
 //! pass** on every suite graph; a fallback pass loop keeps the target
 //! guarantee airtight anyway.
 
-use super::inner::{process_inner, process_serial, process_sharded, SubtaskOutcome};
+use super::inner::{process_inner, process_serial, process_sharded_with, SubtaskOutcome};
 use super::score::{scored_sorted_streamed, sort_by_score};
+use super::subctx::ScratchArena;
 use super::subtask::{make_subtasks, split_large, Subtask, SubtaskBuilder};
 use super::{CostTrace, Params, Pipeline, Recovery, Stats, Strategy};
 use crate::graph::Graph;
@@ -267,12 +268,15 @@ fn run_split_pass(
     sharded: bool,
 ) -> Vec<SubtaskOutcome> {
     let (large, small) = split_large(active, total_off, params.cutoff_edges, params.cutoff_frac);
+    // One scratch arena for the whole pass: consecutive giant subtasks
+    // reuse each other's grown shard buffers instead of re-allocating.
+    let arena = ScratchArena::new();
     let mut slots: Vec<Option<SubtaskOutcome>> = vec![None; active.len()];
     for &li in &large {
         let oc = if sharded {
             // counts itself in `stats.sharded_subtasks` only when it
             // actually speculates (a single-shard subtask runs serially)
-            process_sharded(off, sp, &active[li].idxs, params)
+            process_sharded_with(off, sp, &active[li].idxs, params, &arena)
         } else {
             stats.inner_subtasks += 1;
             process_inner(off, sp, &active[li].idxs, params)
@@ -350,6 +354,9 @@ fn run_pass_streamed<S>(
                 split_large(active, total_off, params.cutoff_edges, params.cutoff_frac);
             let n_large = large.len();
             let order: Vec<usize> = large.into_iter().chain(small).collect();
+            // Pass-lifetime scratch arena shared across the streamed
+            // subtasks (the Mutex inside makes `&arena` Sync).
+            let arena = ScratchArena::new();
             par::produce_stream(
                 order.len(),
                 params.threads,
@@ -358,7 +365,7 @@ fn run_pass_streamed<S>(
                     if k >= n_large {
                         process_serial(off, sp, &st.idxs, params)
                     } else if sharded {
-                        process_sharded(off, sp, &st.idxs, params)
+                        process_sharded_with(off, sp, &st.idxs, params, &arena)
                     } else {
                         process_inner(off, sp, &st.idxs, params)
                     }

@@ -90,9 +90,10 @@ impl<'a> SubtaskCtx<'a> {
 /// (`marked[pos - shard_start]`) used by
 /// [`super::inner::process_sharded`]'s speculative phase.
 ///
-/// Shards far outnumber workers, so scratches are pooled
-/// ([`ScratchPool`]) and reused across shards instead of being allocated
-/// per shard: a worker takes one, speculates a shard, and returns it.
+/// Shards far outnumber workers, so scratches live in a
+/// [`ScratchArena`] and are reused across shards — and across *subtasks*
+/// — instead of being allocated per shard: a worker takes one,
+/// speculates a shard, and returns it.
 #[derive(Default)]
 pub struct ShardScratch {
     /// Shard-local speculative mark bits.
@@ -100,38 +101,80 @@ pub struct ShardScratch {
 }
 
 impl ShardScratch {
-    /// Clear and resize for a shard of `len` edges.
+    /// Clear and resize for a shard of `len` edges. `Vec::resize` after
+    /// `clear` keeps the existing capacity, so a scratch grows
+    /// monotonically to the pass's largest shard (bump-style high
+    /// watermark) and then stops touching the allocator.
     fn reset(&mut self, len: usize) {
         self.marked.clear();
         self.marked.resize(len, false);
     }
 }
 
-/// A pool of [`ShardScratch`] buffers shared by the workers speculating
-/// one subtask's shards. `take`/`put` use a mutex, but each lock guards a
-/// single `Vec` pop/push — negligible next to a shard's BFS work — and
-/// reuse keeps the steady state at one allocation per *worker*, not one
-/// per shard.
-pub struct ScratchPool {
-    free: std::sync::Mutex<Vec<ShardScratch>>,
+/// Pass-lifetime arena of [`ShardScratch`] buffers.
+///
+/// Pre-PR-10 each sharded subtask created its own scratch pool, so a
+/// pass over a skewed graph (many giant subtasks) re-allocated every
+/// subtask's mark buffers from cold — allocator churn proportional to
+/// the subtask count. The arena is created **once per recovery pass**
+/// (see `recovery::pdgrass`) and shared by every subtask in it: buffers
+/// grow to the pass's high watermark and steady-state at one allocation
+/// per concurrent worker for the whole pass.
+///
+/// `take`/`put` use a mutex, but each lock guards a single `Vec`
+/// pop/push — negligible next to a shard's BFS work. Determinism is
+/// untouched: a scratch is always reset before use, so *which* buffer a
+/// worker gets can never influence results.
+pub struct ScratchArena {
+    state: std::sync::Mutex<ArenaState>,
 }
 
-impl ScratchPool {
-    /// An empty pool; scratches are created on first [`ScratchPool::take`].
-    pub fn new() -> ScratchPool {
-        ScratchPool { free: std::sync::Mutex::new(Vec::new()) }
+#[derive(Default)]
+struct ArenaState {
+    /// Buffers not currently checked out.
+    free: Vec<ShardScratch>,
+    /// Total buffers ever created (diagnostics: allocator churn metric).
+    created: usize,
+}
+
+impl ScratchArena {
+    /// An empty arena; scratches are created on first [`ScratchArena::take`].
+    pub fn new() -> ScratchArena {
+        ScratchArena { state: std::sync::Mutex::new(ArenaState::default()) }
     }
 
     /// Take a scratch sized (and cleared) for a shard of `len` edges.
     pub fn take(&self, len: usize) -> ShardScratch {
-        let mut s = self.free.lock().unwrap().pop().unwrap_or_default();
+        let mut s = {
+            let mut st = self.state.lock().unwrap();
+            match st.free.pop() {
+                Some(s) => s,
+                None => {
+                    st.created += 1;
+                    ShardScratch::default()
+                }
+            }
+        };
         s.reset(len);
         s
     }
 
-    /// Return a scratch for reuse by the next shard.
+    /// Return a scratch for reuse by the next shard (of any subtask).
     pub fn put(&self, s: ShardScratch) {
-        self.free.lock().unwrap().push(s);
+        self.state.lock().unwrap().free.push(s);
+    }
+
+    /// Total buffers ever created by this arena — with cross-subtask
+    /// reuse this is bounded by the peak number of concurrent workers,
+    /// not the shard or subtask count.
+    pub fn buffers_created(&self) -> usize {
+        self.state.lock().unwrap().created
+    }
+}
+
+impl Default for ScratchArena {
+    fn default() -> ScratchArena {
+        ScratchArena::new()
     }
 }
 
@@ -190,17 +233,23 @@ mod tests {
     }
 
     #[test]
-    fn scratch_pool_reuses_and_resets() {
-        let pool = ScratchPool::new();
-        let mut s = pool.take(4);
+    fn scratch_arena_reuses_and_resets() {
+        let arena = ScratchArena::new();
+        let mut s = arena.take(4);
         assert_eq!(s.marked, vec![false; 4]);
         s.marked[2] = true;
-        pool.put(s);
+        arena.put(s);
         // Reused scratch comes back cleared and resized.
-        let s2 = pool.take(2);
+        let s2 = arena.take(2);
         assert_eq!(s2.marked, vec![false; 2]);
-        let s3 = pool.take(6);
+        assert_eq!(arena.buffers_created(), 1, "serial take/put must reuse one buffer");
+        let s3 = arena.take(6);
         assert_eq!(s3.marked, vec![false; 6]);
+        assert_eq!(arena.buffers_created(), 2, "concurrent checkout needs a second buffer");
+        arena.put(s2);
+        arena.put(s3);
+        let _s4 = arena.take(100);
+        assert_eq!(arena.buffers_created(), 2, "returned buffers are reused across sizes");
     }
 
     #[test]

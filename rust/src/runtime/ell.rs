@@ -77,7 +77,7 @@ pub fn pick_n_bucket(n: usize) -> Option<usize> {
 /// Pick the ELL width for a matrix: smallest shipped `k` covering ≥ the
 /// `coverage` fraction of rows fully (the rest spill to the COO tail).
 pub fn pick_k(a: &CsrMatrix, ks: &[usize], coverage: f64) -> usize {
-    let mut row_nnz: Vec<usize> = (0..a.n).map(|i| a.rowptr[i + 1] - a.rowptr[i]).collect();
+    let mut row_nnz: Vec<usize> = (0..a.n).map(|i| a.row_nnz(i)).collect();
     row_nnz.sort_unstable();
     let idx = ((coverage * (a.n.saturating_sub(1)) as f64).floor() as usize)
         .min(a.n.saturating_sub(1));

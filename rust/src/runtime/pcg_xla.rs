@@ -86,7 +86,7 @@ pub fn jacobi_pcg_xla(
     a: &CsrMatrix,
     b: &[f64],
 ) -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
-    let max_nnz = (0..a.n).map(|i| a.rowptr[i + 1] - a.rowptr[i]).max().unwrap_or(0);
+    let max_nnz = (0..a.n).map(|i| a.row_nnz(i)).max().unwrap_or(0);
     let row = rt
         .manifest()
         .iter()

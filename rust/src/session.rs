@@ -46,7 +46,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::{Error, Result};
-use crate::graph::{self, Graph};
+use crate::graph::{self, Graph, Relabel};
 use crate::recovery::score::{scored_sorted_streamed, sort_by_score};
 use crate::recovery::subtask::{make_subtasks, Subtask, SubtaskBuilder};
 use crate::recovery::{self, CostTrace, Params, Pipeline, Stats, Strategy};
@@ -79,6 +79,7 @@ pub struct Sparsify {
     name: Option<String>,
     threads: usize,
     pipeline: Pipeline,
+    relabel: Relabel,
 }
 
 impl Sparsify {
@@ -90,6 +91,7 @@ impl Sparsify {
             name: None,
             threads: crate::par::num_threads(),
             pipeline: Pipeline::Barrier,
+            relabel: Relabel::None,
         }
     }
 
@@ -141,6 +143,21 @@ impl Sparsify {
         self
     }
 
+    /// Opt-in locality relabeling ([`Relabel`], default
+    /// [`Relabel::None`]): permute vertex ids once at ingest so the
+    /// pipeline's CSR walks touch memory in a cache-friendlier order on
+    /// giant graphs. The pipeline then runs in permuted space;
+    /// [`Recovered::sparsifier`] maps the result back to the original
+    /// ids and [`Sparsifier::pcg`] evaluates in the original space, so
+    /// callers never see permuted ids. On tie-free inputs (distinct
+    /// effective weights and scores — ties break by edge id, which
+    /// relabeling reorders) the recovered edge set and the PCG iteration
+    /// count match the unrelabeled run exactly.
+    pub fn relabel(mut self, relabel: Relabel) -> Sparsify {
+        self.relabel = relabel;
+        self
+    }
+
     /// Convenience for [`Sparsify::pipeline`]`(Pipeline::Streamed)` +
     /// [`Sparsify::prepare`]: run steps 1–3 as the streamed overlap
     /// pipeline.
@@ -152,7 +169,10 @@ impl Sparsify {
     /// ([`graph::fingerprint`]), available *before* [`Sparsify::prepare`]
     /// — so a caller can probe a snapshot cache (and skip steps 1–3
     /// entirely via [`Prepared::load`]) before committing to a full
-    /// prepare. Equal to [`Prepared::fingerprint`] of the prepared state.
+    /// prepare. Equal to [`Prepared::original_fingerprint`] of the
+    /// prepared state — and to [`Prepared::fingerprint`] unless the
+    /// session relabels, in which case the prepared state is keyed by
+    /// the permuted working graph.
     pub fn fingerprint(&self) -> u64 {
         graph::fingerprint(&self.graph)
     }
@@ -165,7 +185,7 @@ impl Sparsify {
     /// barrier-syncing (see [`Sparsify::pipeline`]); `prep_ms` then
     /// reports the fused annotate+sort stage in its first entry and zero
     /// for the sort entry, since no separate sort stage exists.
-    pub fn prepare(self) -> Result<Prepared> {
+    pub fn prepare(mut self) -> Result<Prepared> {
         if self.graph.num_vertices() == 0 || self.graph.num_edges() == 0 {
             return Err(Error::BadParam {
                 name: "graph",
@@ -179,8 +199,19 @@ impl Sparsify {
         // Warm the persistent pool outside the timed stages.
         crate::par::ThreadPool::global();
 
+        // Opt-in locality relabeling: swap the working graph for its
+        // permuted twin once, here; everything downstream runs in the
+        // permuted id space (see `graph::relabel` for the contract).
+        let original = match graph::relabel_perm(&self.graph, self.relabel) {
+            Some(perm) => {
+                let working = graph::apply_perm(&self.graph, &perm);
+                Some((std::mem::replace(&mut self.graph, working), perm))
+            }
+            None => None,
+        };
+
         if self.pipeline == Pipeline::Streamed {
-            return Ok(self.prepare_streamed_impl());
+            return Ok(self.prepare_streamed_impl(original));
         }
         let t = Timer::start();
         let spanning = build_spanning(&self.graph);
@@ -210,6 +241,8 @@ impl Sparsify {
             subtasks,
             pipeline: Pipeline::Barrier,
             threads: self.threads,
+            relabel: self.relabel,
+            original,
             spanning_ms,
             prep_ms: [resistance_ms, sort_ms, subtask_ms],
         })
@@ -229,7 +262,7 @@ impl Sparsify {
     /// so the pool never idles at a stage boundary. Every sort key is a
     /// strict total order and every per-edge computation is pure, hence
     /// the returned state is bitwise identical to the barrier path.
-    fn prepare_streamed_impl(self) -> Prepared {
+    fn prepare_streamed_impl(self, original: Option<(Graph, Vec<u32>)>) -> Prepared {
         let t = Timer::start();
         let spanning = build_spanning_streamed(&self.graph, self.threads);
         let spanning_ms = t.ms();
@@ -256,6 +289,8 @@ impl Sparsify {
             subtasks,
             pipeline: Pipeline::Streamed,
             threads: self.threads,
+            relabel: self.relabel,
+            original,
             spanning_ms,
             prep_ms: [fused_ms, 0.0, subtask_ms],
         }
@@ -401,6 +436,12 @@ pub struct Prepared {
     /// [`Sparsifier::pcg`], which dispatches the evaluation across this
     /// many pool workers (bitwise identical results at any count).
     threads: usize,
+    /// Relabel mode the session ran under ([`Sparsify::relabel`]).
+    relabel: Relabel,
+    /// Original-space state when relabeled: the ingest graph and the
+    /// permutation (`perm[new] = old`). `None` under [`Relabel::None`],
+    /// where `graph` *is* the original.
+    original: Option<(Graph, Vec<u32>)>,
     spanning_ms: f64,
     /// Wall-clock of [resistance annotation, sort, subtask grouping], ms.
     /// Under the streamed pipeline the first entry is the fused
@@ -428,9 +469,42 @@ impl Prepared {
         self.fingerprint
     }
 
-    /// The owned input graph.
+    /// The session's working graph — the ingest graph under
+    /// [`Relabel::None`], its id-permuted twin otherwise (see
+    /// [`Prepared::original_graph`] for the ingest-space view).
     pub fn graph(&self) -> &Graph {
         &self.graph
+    }
+
+    /// The relabel mode the session ran under.
+    pub fn relabel(&self) -> Relabel {
+        self.relabel
+    }
+
+    /// The relabel permutation (`perm[new] = old`), when one is active.
+    pub fn perm(&self) -> Option<&[u32]> {
+        self.original.as_ref().map(|(_, p)| p.as_slice())
+    }
+
+    /// The graph in its original (ingest) vertex ids — identical to
+    /// [`Prepared::graph`] unless the session relabels. PCG evaluation
+    /// and exported sparsifiers live in this space.
+    pub fn original_graph(&self) -> &Graph {
+        match &self.original {
+            Some((g, _)) => g,
+            None => &self.graph,
+        }
+    }
+
+    /// [`graph::fingerprint`] of [`Prepared::original_graph`] — equal to
+    /// [`Prepared::fingerprint`] unless the session relabels. Relabeled
+    /// sessions thus report both hashes: the working (permuted) one keys
+    /// prepared-state caches, this one identifies the ingest graph.
+    pub fn original_fingerprint(&self) -> u64 {
+        match &self.original {
+            Some((g, _)) => graph::fingerprint(g),
+            None => self.fingerprint,
+        }
     }
 
     /// The spanning tree (shared by every recovery from this session).
@@ -519,8 +593,14 @@ impl Prepared {
         off: Vec<OffTreeEdge>,
         subtasks: Vec<Subtask>,
         pipeline: Pipeline,
+        relabel: Relabel,
+        perm: Option<Vec<u32>>,
     ) -> Prepared {
         let fingerprint = graph::fingerprint(&graph);
+        // The original graph is not serialized: it is exactly the working
+        // graph with its endpoints mapped back through the permutation
+        // (weights untouched, CSR canonical), so rebuild it here.
+        let original = perm.map(|p| (graph::unapply_perm(&graph, &p), p));
         Prepared {
             id: NEXT_PREPARED_ID.fetch_add(1, Ordering::Relaxed),
             name,
@@ -531,6 +611,8 @@ impl Prepared {
             subtasks,
             pipeline,
             threads: crate::par::num_threads(),
+            relabel,
+            original,
             spanning_ms: 0.0,
             prep_ms: [0.0; 3],
         }
@@ -633,9 +715,17 @@ impl<'p> Recovered<'p> {
     }
 
     /// Assemble the sparsifier handle: spanning tree + recovered edges,
-    /// `|V| − 1 + ⌈α|V|⌉` edges as in §II.B.
+    /// `|V| − 1 + ⌈α|V|⌉` edges as in §II.B. Always expressed in the
+    /// original (ingest) vertex ids: under an active relabel the
+    /// permuted-space sparsifier's endpoints are mapped back through the
+    /// permutation (weights untouched), so exports and PCG evaluation
+    /// never see permuted ids.
     pub fn sparsifier(&self) -> Sparsifier<'p> {
         let p = recovery::sparsifier(&self.prepared.graph, &self.prepared.spanning, &self.rec.edges);
+        let p = match &self.prepared.original {
+            Some((_, perm)) => graph::unapply_perm(&p, perm),
+            None => p,
+        };
         Sparsifier { prepared: self.prepared, sparsifier: p }
     }
 }
@@ -678,8 +768,12 @@ impl Sparsifier<'_> {
         if maxit == 0 {
             return Err(Error::BadParam { name: "maxit", why: "must be at least 1".into() });
         }
+        // Always evaluate in the original id space: floating point is
+        // not permutation-invariant, so relabeled sessions must ground
+        // and seed PCG exactly like unrelabeled ones to keep residual
+        // histories comparable (the sparsifier is already mapped back).
         let res = crate::solver::pcg_eval_par(
-            &self.prepared.graph,
+            self.prepared.original_graph(),
             &self.sparsifier,
             rhs_seed,
             tol,
@@ -834,6 +928,47 @@ mod tests {
         let other = crate::gen::grid(10, 10, 0.5, &mut Rng::new(2));
         let c = Sparsify::graph(other).prepare().unwrap();
         assert_ne!(c.fingerprint(), a.fingerprint());
+    }
+
+    #[test]
+    fn relabel_none_is_bitwise_inert() {
+        let g = crate::gen::grid(10, 10, 0.5, &mut Rng::new(6));
+        let plain = Sparsify::graph(g.clone()).prepare().unwrap();
+        let none = Sparsify::graph(g).relabel(Relabel::None).prepare().unwrap();
+        assert_eq!(none.relabel(), Relabel::None);
+        assert!(none.perm().is_none());
+        assert_eq!(none.fingerprint(), plain.fingerprint());
+        assert_eq!(none.original_fingerprint(), none.fingerprint());
+        assert_eq!(
+            crate::graph::fingerprint(none.original_graph()),
+            crate::graph::fingerprint(none.graph())
+        );
+    }
+
+    #[test]
+    fn relabeled_session_reports_both_fingerprints() {
+        let g = crate::gen::community(
+            crate::gen::CommunityParams {
+                n: 300,
+                mean_size: 9.0,
+                tail: 1.7,
+                intra_p: 0.5,
+                bridges: 2,
+                max_size: 50,
+            },
+            &mut Rng::new(6),
+        );
+        let input_fp = crate::graph::fingerprint(&g);
+        for mode in [Relabel::Bfs, Relabel::Degree] {
+            let p = Sparsify::graph(g.clone()).relabel(mode).prepare().unwrap();
+            assert_eq!(p.relabel(), mode);
+            // The ingest graph is identified by its original fingerprint…
+            assert_eq!(p.original_fingerprint(), input_fp);
+            // …while the working (permuted) graph keys the prepared state.
+            assert_eq!(p.fingerprint(), crate::graph::fingerprint(p.graph()));
+            let perm = p.perm().expect("relabeled session must expose its perm");
+            crate::graph::validate_perm(perm, p.graph().num_vertices()).unwrap();
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! snapshot load on every cache miss when `[serve] snapshot_dir` is
 //! configured (see `serve::server`).
 //!
-//! # Container format (version 1)
+//! # Container format (version 2)
 //!
 //! Flat little-endian arrays behind a 40-byte header and a section
 //! table. All offsets are 8-aligned and sections sit at canonical
@@ -20,17 +20,26 @@
 //! header   (40 B)  magic "PDGRSNAP" · version u32 · section count u32
 //!                  · graph fingerprint u64 · payload length u64
 //!                  · CRC-32 of the section table u32 · reserved u32 (0)
-//! table    (17×24) per section: id u32 · CRC-32 u32 · offset u64 · len u64
+//! table    (18×24) per section: id u32 · CRC-32 u32 · offset u64 · len u64
 //! payload          section bodies in id order, zero-padded to 8 bytes
 //! ```
 //!
-//! The 17 sections carry the CSR edge list (`u`/`v`/`w`), the rooted
+//! The 18 sections carry the CSR edge list (`u`/`v`/`w`), the rooted
 //! tree's per-vertex arrays, the tree-edge flags, the score-sorted
-//! off-tree list, and the subtask grouping (CSR of indices), plus a META
-//! section with dimensions, root, pipeline tag, and the optional session
-//! name. Wall-clock timings are *not* serialized — a loaded `Prepared`
-//! reports zero prep timings — and neither is the thread count, which is
-//! an execution parameter, not prepared state.
+//! off-tree list, the subtask grouping (CSR of indices), and the optional
+//! relabel permutation, plus a META section with dimensions, root,
+//! pipeline tag, relabel tag, and the optional session name. Wall-clock
+//! timings are *not* serialized — a loaded `Prepared` reports zero prep
+//! timings — and neither is the thread count, which is an execution
+//! parameter, not prepared state.
+//!
+//! Version 2 (the giant-graph scaling pass) narrowed the subtask CSR
+//! offsets from `u64` to `u32` — the prepared state itself is u32-indexed
+//! throughout, so the wider offsets bought nothing — and added the PERM
+//! section: relabeled sessions persist `perm[new] = old` so a warm load
+//! can rebuild the original-space graph (the working graph with its
+//! endpoints mapped back) without re-running the relabeling. Version-1
+//! files are rejected with a typed version error.
 //!
 //! # Validation: corruption is typed, wrong content is rejected
 //!
@@ -58,22 +67,19 @@ pub mod bytes;
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
-use crate::graph::{self, Edge, Graph};
+use crate::graph::{self, Edge, Graph, Relabel};
 use crate::recovery::score::score_cmp;
 use crate::recovery::subtask::Subtask;
 use crate::recovery::Pipeline;
 use crate::session::Prepared;
 use crate::tree::{annotate_off_tree_edge, OffTreeEdge, RootedTree, SkipTable, Spanning};
 
-use bytes::{
-    crc32, get_f64s, get_u32s, get_u64s, put_f64s, put_u32, put_u32s, put_u64, put_u64s, snap_err,
-    Cursor,
-};
+use bytes::{crc32, get_f64s, get_u32s, put_f64s, put_u32, put_u32s, put_u64, snap_err, Cursor};
 
 /// File magic: first 8 bytes of every snapshot.
 pub const MAGIC: [u8; 8] = *b"PDGRSNAP";
 /// Current container format version.
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
 /// Fixed header length in bytes.
 const HEADER_LEN: usize = 40;
 /// Section-table entry length in bytes (id, crc, offset, len).
@@ -109,15 +115,19 @@ const SEC_OFF_RESISTANCE: u32 = 13;
 const SEC_OFF_SCORE: u32 = 14;
 /// Subtask LCAs (`s × u32`).
 const SEC_SUB_LCA: u32 = 15;
-/// Subtask index-CSR offsets (`(s+1) × u64`).
+/// Subtask index-CSR offsets (`(s+1) × u32` — compact since version 2;
+/// the off-tree count is bounded by the u32-indexed edge count).
 const SEC_SUB_PTR: u32 = 16;
 /// Subtask index-CSR ids (`k × u32`).
 const SEC_SUB_IDXS: u32 = 17;
+/// Relabel permutation `perm[new] = old` (`n × u32` when the session
+/// relabeled, empty under `Relabel::None`).
+const SEC_PERM: u32 = 18;
 
-/// Canonical section layout: every version-1 snapshot contains exactly
+/// Canonical section layout: every version-2 snapshot contains exactly
 /// these sections, in exactly this order. The decoder enforces the list
 /// entry-for-entry, so section ids double as indices (`id - 1`).
-const SECTIONS: [(u32, &str); 17] = [
+const SECTIONS: [(u32, &str); 18] = [
     (SEC_META, "META"),
     (SEC_EDGE_U, "EDGE_U"),
     (SEC_EDGE_V, "EDGE_V"),
@@ -135,6 +145,7 @@ const SECTIONS: [(u32, &str); 17] = [
     (SEC_SUB_LCA, "SUB_LCA"),
     (SEC_SUB_PTR, "SUB_PTR"),
     (SEC_SUB_IDXS, "SUB_IDXS"),
+    (SEC_PERM, "PERM"),
 ];
 
 /// Assembles sections into the final container byte string.
@@ -180,7 +191,7 @@ impl Writer {
     }
 }
 
-/// Serialize `p` into a version-1 snapshot container.
+/// Serialize `p` into a version-2 snapshot container.
 pub fn to_bytes(p: &Prepared) -> Vec<u8> {
     let g = p.graph();
     let sp = p.spanning();
@@ -197,6 +208,11 @@ pub fn to_bytes(p: &Prepared) -> Vec<u8> {
     put_u32(&mut meta, match p.pipeline() {
         Pipeline::Barrier => 0,
         Pipeline::Streamed => 1,
+    });
+    put_u32(&mut meta, match p.relabel() {
+        Relabel::None => 0,
+        Relabel::Bfs => 1,
+        Relabel::Degree => 2,
     });
     match p.name() {
         None => put_u32(&mut meta, 0),
@@ -265,23 +281,29 @@ pub fn to_bytes(p: &Prepared) -> Vec<u8> {
     w.push(SEC_OFF_SCORE, body);
 
     let mut sub_lca = Vec::with_capacity(subs.len());
-    let mut sub_ptr = Vec::with_capacity(subs.len() + 1);
+    let mut sub_ptr: Vec<u32> = Vec::with_capacity(subs.len() + 1);
     let mut sub_idxs = Vec::with_capacity(off.len());
-    sub_ptr.push(0u64);
+    sub_ptr.push(0u32);
     for s in subs {
         sub_lca.push(s.lca);
         sub_idxs.extend_from_slice(&s.idxs);
-        sub_ptr.push(sub_idxs.len() as u64);
+        // Compact offsets: the off-tree count is bounded by the graph's
+        // u32-indexed edge count, so u32 always suffices.
+        sub_ptr.push(sub_idxs.len() as u32);
     }
     let mut body = Vec::new();
     put_u32s(&mut body, &sub_lca);
     w.push(SEC_SUB_LCA, body);
     let mut body = Vec::new();
-    put_u64s(&mut body, &sub_ptr);
+    put_u32s(&mut body, &sub_ptr);
     w.push(SEC_SUB_PTR, body);
     let mut body = Vec::new();
     put_u32s(&mut body, &sub_idxs);
     w.push(SEC_SUB_IDXS, body);
+
+    let mut body = Vec::new();
+    put_u32s(&mut body, p.perm().unwrap_or(&[]));
+    w.push(SEC_PERM, body);
 
     w.finish(p.fingerprint())
 }
@@ -420,6 +442,7 @@ pub fn from_bytes(data: &[u8]) -> Result<Prepared> {
     let s = usize_of(meta.u64()?, "subtask count")?;
     let root = meta.u32()?;
     let pipe_tag = meta.u32()?;
+    let relabel_tag = meta.u32()?;
     let name = match meta.u32()? {
         0 => None,
         1 => {
@@ -437,6 +460,12 @@ pub fn from_bytes(data: &[u8]) -> Result<Prepared> {
         0 => Pipeline::Barrier,
         1 => Pipeline::Streamed,
         other => return Err(snap_err(format!("META: bad pipeline tag {other}"))),
+    };
+    let relabel = match relabel_tag {
+        0 => Relabel::None,
+        1 => Relabel::Bfs,
+        2 => Relabel::Degree,
+        other => return Err(snap_err(format!("META: bad relabel tag {other}"))),
     };
     if n < 2 || m < 1 {
         return Err(snap_err(format!("META: degenerate dimensions n={n} m={m}")));
@@ -609,20 +638,20 @@ pub fn from_bytes(data: &[u8]) -> Result<Prepared> {
     // Subtasks: the unique partition of 0..k grouped by LCA, ordered
     // size-desc with lca-asc tie-break (exactly `make_subtasks`' order).
     let sub_lca = get_u32s(c.sec(SEC_SUB_LCA), "SUB_LCA")?;
-    let sub_ptr = get_u64s(c.sec(SEC_SUB_PTR), "SUB_PTR")?;
+    let sub_ptr = get_u32s(c.sec(SEC_SUB_PTR), "SUB_PTR")?;
     let sub_idxs = get_u32s(c.sec(SEC_SUB_IDXS), "SUB_IDXS")?;
     expect_len(&sub_lca, s, "SUB_LCA")?;
     expect_len(&sub_ptr, s + 1, "SUB_PTR")?;
     expect_len(&sub_idxs, k, "SUB_IDXS")?;
-    if sub_ptr[0] != 0 || sub_ptr[s] != k as u64 {
+    if sub_ptr[0] != 0 || sub_ptr[s] != k as u32 {
         return Err(snap_err("subtasks: CSR offsets do not span the off-tree list"));
     }
     let mut used = vec![false; k];
     let mut lca_seen = vec![false; n];
     let mut subtasks: Vec<Subtask> = Vec::with_capacity(s);
     for j in 0..s {
-        let lo = usize_of(sub_ptr[j], "subtask offset")?;
-        let hi = usize_of(sub_ptr[j + 1], "subtask offset")?;
+        let lo = sub_ptr[j] as usize;
+        let hi = sub_ptr[j + 1] as usize;
         if hi <= lo || hi > k {
             return Err(snap_err(format!("subtask {j}: empty or non-monotone CSR range")));
         }
@@ -661,7 +690,25 @@ pub fn from_bytes(data: &[u8]) -> Result<Prepared> {
     // sub_ptr spans 0..k with no repeats, so every off-tree index is
     // covered; no separate `used` sweep needed.
 
-    Ok(Prepared::from_snapshot_parts(name, g, spanning, off, subtasks, pipeline))
+    // PERM: empty under Relabel::None, a validated bijection otherwise.
+    // The permutation is genuine state (it was derived from the original
+    // graph, which is not serialized), so the decoder can only check it
+    // is a bijection — the original graph is rebuilt through it.
+    let perm_raw = get_u32s(c.sec(SEC_PERM), "PERM")?;
+    let perm = if relabel.is_none() {
+        if !perm_raw.is_empty() {
+            return Err(snap_err(format!(
+                "PERM: {} entries but META says relabel=none",
+                perm_raw.len()
+            )));
+        }
+        None
+    } else {
+        graph::validate_perm(&perm_raw, n).map_err(|e| snap_err(format!("PERM: {e}")))?;
+        Some(perm_raw)
+    };
+
+    Ok(Prepared::from_snapshot_parts(name, g, spanning, off, subtasks, pipeline, relabel, perm))
 }
 
 /// Canonical snapshot filename for a graph fingerprint inside `dir`:
@@ -732,6 +779,35 @@ mod tests {
         assert_eq!(q.prep_ms(), [0.0; 3]);
         // Re-encoding the loaded state reproduces the file byte-for-byte.
         assert_eq!(to_bytes(&q), data);
+    }
+
+    #[test]
+    fn relabeled_state_round_trips_with_perm() {
+        let g = crate::gen::grid(9, 9, 0.5, &mut Rng::new(8));
+        for mode in [Relabel::Bfs, Relabel::Degree] {
+            let p = Sparsify::graph(g.clone()).relabel(mode).prepare().unwrap();
+            let data = to_bytes(&p);
+            let q = from_bytes(&data).unwrap();
+            assert_equivalent(&p, &q);
+            assert_eq!(q.relabel(), mode);
+            assert_eq!(q.perm(), p.perm());
+            // The original graph is rebuilt through the perm, bitwise.
+            assert_eq!(q.original_fingerprint(), p.original_fingerprint());
+            assert_eq!(to_bytes(&q), data);
+        }
+        // Any corruption of the PERM section (the file's tail) trips the
+        // section CRC or the padding check — typed rejection either way.
+        let p = Sparsify::graph(g).relabel(Relabel::Bfs).prepare().unwrap();
+        let data = to_bytes(&p);
+        for back in [1, 5, 9, 64] {
+            let mut bad = data.clone();
+            let at = data.len() - back;
+            bad[at] ^= 0x01;
+            assert!(
+                matches!(from_bytes(&bad), Err(Error::Snapshot { .. })),
+                "flip at {at} not rejected"
+            );
+        }
     }
 
     #[test]

@@ -60,13 +60,13 @@ pub struct LevelSchedule {
 impl LevelSchedule {
     /// Derive both sweeps' level sets from the factor's sparsity pattern
     /// (CSC `lp`/`li` plus the row mirror `rp`/`ri`).
-    fn build(n: usize, lp: &[usize], li: &[u32], rp: &[usize], ri: &[u32]) -> LevelSchedule {
+    fn build(n: usize, lp: &[u32], li: &[u32], rp: &[u32], ri: &[u32]) -> LevelSchedule {
         // Forward: row i waits on every column j < i with L[i,j] ≠ 0.
         // Ascending i visits dependencies before dependents.
         let mut lvl = vec![0u32; n];
         for i in 0..n {
             let mut l = 0u32;
-            for p in rp[i]..rp[i + 1] {
+            for p in rp[i] as usize..rp[i + 1] as usize {
                 l = l.max(lvl[ri[p] as usize] + 1);
             }
             lvl[i] = l;
@@ -77,7 +77,7 @@ impl LevelSchedule {
         // overwritten in place with the backward levels.
         for j in (0..n).rev() {
             let mut l = 0u32;
-            for p in lp[j]..lp[j + 1] {
+            for p in lp[j] as usize..lp[j + 1] as usize {
                 l = l.max(lvl[li[p] as usize] + 1);
             }
             lvl[j] = l;
@@ -133,13 +133,10 @@ fn bucket_levels(lvl: &[u32]) -> (Vec<usize>, Vec<u32>) {
 /// columns in ascending order fills each row's entries in ascending
 /// column order — exactly the order the serial forward scatter applies
 /// its updates to any fixed slot.
-fn lower_csr_mirror(
-    n: usize,
-    lp: &[usize],
-    li: &[u32],
-    lx: &[f64],
-) -> (Vec<usize>, Vec<u32>, Vec<f64>) {
-    let mut rp = vec![0usize; n + 1];
+type LowerCsr = (Vec<u32>, Vec<u32>, Vec<f64>);
+
+fn lower_csr_mirror(n: usize, lp: &[u32], li: &[u32], lx: &[f64]) -> LowerCsr {
+    let mut rp = vec![0u32; n + 1];
     for &i in li {
         rp[i as usize + 1] += 1;
     }
@@ -150,10 +147,10 @@ fn lower_csr_mirror(
     let mut rx = vec![0f64; lx.len()];
     let mut fill = rp.clone();
     for j in 0..n {
-        for p in lp[j]..lp[j + 1] {
+        for p in lp[j] as usize..lp[j + 1] as usize {
             let i = li[p] as usize;
-            ri[fill[i]] = j as u32;
-            rx[fill[i]] = lx[p];
+            ri[fill[i] as usize] = j as u32;
+            rx[fill[i] as usize] = lx[p];
             fill[i] += 1;
         }
     }
@@ -161,12 +158,12 @@ fn lower_csr_mirror(
 }
 
 /// Total and max per-row cost (1 + gathered nnz) of one schedule level.
-fn level_cost(rows: &[u32], ptr: &[usize]) -> (u64, u64) {
+fn level_cost(rows: &[u32], ptr: &[u32]) -> (u64, u64) {
     let mut work = 0u64;
     let mut max_row = 0u64;
     for &i in rows {
         let i = i as usize;
-        let c = 1 + (ptr[i + 1] - ptr[i]) as u64;
+        let c = 1 + u64::from(ptr[i + 1] - ptr[i]);
         work += c;
         max_row = max_row.max(c);
     }
@@ -179,14 +176,15 @@ fn level_cost(rows: &[u32], ptr: &[usize]) -> (u64, u64) {
 #[derive(Clone, Debug)]
 pub struct LdlFactor {
     n: usize,
-    /// Column pointers of strict-lower L (CSC), length n+1.
-    lp: Vec<usize>,
+    /// Column pointers of strict-lower L (CSC), length n+1, compact u32
+    /// (factorization asserts the fill-in fits the u32 index space).
+    lp: Vec<u32>,
     /// Row indices of L entries.
     li: Vec<u32>,
     /// Values of L entries.
     lx: Vec<f64>,
     /// Row pointers of the CSR mirror of strict-lower L, length n+1.
-    rp: Vec<usize>,
+    rp: Vec<u32>,
     /// Column indices of mirror entries (ascending within each row).
     ri: Vec<u32>,
     /// Values of mirror entries.
@@ -242,11 +240,13 @@ impl LdlFactor {
                 }
             }
         }
-        let mut lp = vec![0usize; n + 1];
+        let nnz_total: u64 = lnz.iter().map(|&c| c as u64).sum();
+        assert!(nnz_total + 1 < u32::MAX as u64, "LDL fill-in exceeds u32 index space");
+        let mut lp = vec![0u32; n + 1];
         for i in 0..n {
-            lp[i + 1] = lp[i] + lnz[i];
+            lp[i + 1] = lp[i] + lnz[i] as u32;
         }
-        let nnz_l = lp[n];
+        let nnz_l = lp[n] as usize;
         let mut li = vec![0u32; nnz_l];
         let mut lx = vec![0f64; nnz_l];
         let mut d = vec![0f64; n];
@@ -288,14 +288,14 @@ impl LdlFactor {
                 let i = pattern[s];
                 let yi = y[i];
                 y[i] = 0.0;
-                for p in lp[i]..lfill[i] {
+                for p in lp[i] as usize..lfill[i] as usize {
                     y[li[p] as usize] -= lx[p] * yi;
                 }
                 let dii = d[i];
                 let lki = yi / dii;
                 d[k] -= lki * yi;
-                li[lfill[i]] = k as u32;
-                lx[lfill[i]] = lki;
+                li[lfill[i] as usize] = k as u32;
+                lx[lfill[i] as usize] = lki;
                 lfill[i] += 1;
             }
             if d[k] <= 0.0 || !d[k].is_finite() {
@@ -334,7 +334,7 @@ impl LdlFactor {
         for j in 0..self.n {
             let xj = x[j];
             if xj != 0.0 {
-                for p in self.lp[j]..self.lp[j + 1] {
+                for p in self.lp[j] as usize..self.lp[j + 1] as usize {
                     x[self.li[p] as usize] -= self.lx[p] * xj;
                 }
             }
@@ -346,7 +346,7 @@ impl LdlFactor {
         // backward: Lᵀ x = y
         for j in (0..self.n).rev() {
             let mut acc = x[j];
-            for p in self.lp[j]..self.lp[j + 1] {
+            for p in self.lp[j] as usize..self.lp[j + 1] as usize {
                 acc -= self.lx[p] * x[self.li[p] as usize];
             }
             x[j] = acc;
@@ -438,7 +438,7 @@ impl LdlFactor {
     /// thread may access slot `i` concurrently.
     unsafe fn forward_row(&self, x: &crate::par::SendPtr<f64>, i: usize) {
         let mut acc = *x.at(i);
-        for p in self.rp[i]..self.rp[i + 1] {
+        for p in self.rp[i] as usize..self.rp[i + 1] as usize {
             let xj = *x.at(self.ri[p] as usize);
             if xj != 0.0 {
                 acc -= self.rx[p] * xj;
@@ -456,7 +456,7 @@ impl LdlFactor {
     /// other thread may access slot `j` concurrently.
     unsafe fn backward_row(&self, x: &crate::par::SendPtr<f64>, j: usize) {
         let mut acc = *x.at(j);
-        for p in self.lp[j]..self.lp[j + 1] {
+        for p in self.lp[j] as usize..self.lp[j + 1] as usize {
             acc -= self.lx[p] * *x.at(self.li[p] as usize);
         }
         x.write(j, acc);

@@ -16,5 +16,6 @@ pub use pcg::{
     Preconditioner, SparsifierPrecond,
 };
 pub use spmv::{
-    axpy, axpy_par, dot, dot_par, norm2, norm2_par, spmv, spmv_par, xpay, xpay_par,
+    axpy, axpy_par, dot, dot_par, nnz_balanced_ranges, norm2, norm2_par, spmv, spmv_par,
+    spmv_traffic_model, xpay, xpay_par,
 };

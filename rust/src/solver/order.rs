@@ -11,7 +11,7 @@ use crate::graph::CsrMatrix;
 /// Compute the RCM permutation: `perm[new] = old`.
 pub fn rcm(a: &CsrMatrix) -> Vec<u32> {
     let n = a.n;
-    let deg = |v: usize| a.rowptr[v + 1] - a.rowptr[v];
+    let deg = |v: usize| a.row_nnz(v);
     let mut visited = vec![false; n];
     let mut order: Vec<u32> = Vec::with_capacity(n);
     // Process every component: start from a pseudo-peripheral low-degree
@@ -27,7 +27,7 @@ pub fn rcm(a: &CsrMatrix) -> Vec<u32> {
         queue.push_back(start as u32);
         while let Some(u) = queue.pop_front() {
             order.push(u);
-            let (s, e) = (a.rowptr[u as usize], a.rowptr[u as usize + 1]);
+            let (s, e) = (a.rowptr[u as usize] as usize, a.rowptr[u as usize + 1] as usize);
             let mut nbrs: Vec<u32> = a.colidx[s..e]
                 .iter()
                 .copied()
@@ -83,7 +83,7 @@ fn bfs_far(a: &CsrMatrix, start: usize, visited: &[bool]) -> (usize, usize) {
     q.push_back(start);
     let mut ecc = 0usize;
     while let Some(u) = q.pop_front() {
-        let (s, e) = (a.rowptr[u], a.rowptr[u + 1]);
+        let (s, e) = (a.rowptr[u] as usize, a.rowptr[u + 1] as usize);
         for &v in &a.colidx[s..e] {
             let v = v as usize;
             if v != u && !visited[v] && dist[v] == u32::MAX {
@@ -101,7 +101,7 @@ fn bfs_far(a: &CsrMatrix, start: usize, visited: &[bool]) -> (usize, usize) {
     let mut best_deg = usize::MAX;
     for v in 0..n {
         if dist[v] != u32::MAX && dist[v] as usize == ecc {
-            let deg = a.rowptr[v + 1] - a.rowptr[v];
+            let deg = a.row_nnz(v);
             if deg < best_deg {
                 best = v;
                 best_deg = deg;

@@ -28,8 +28,8 @@ pub struct RootedTree {
     pub rdepth: Vec<f64>,
     /// BFS order from the root (root first).
     pub order: Vec<u32>,
-    /// Children CSR offsets.
-    cxadj: Vec<usize>,
+    /// Children CSR offsets (compact u32 — a tree has `n − 1` slots).
+    cxadj: Vec<u32>,
     /// Children CSR ids.
     cadj: Vec<u32>,
 }
@@ -63,13 +63,13 @@ impl RootedTree {
         }
         assert_eq!(order.len(), n, "tree does not span the graph");
         // children CSR
-        let mut cnt = vec![0usize; n];
+        let mut cnt = vec![0u32; n];
         for v in 0..n as u32 {
             if v != root {
                 cnt[parent[v as usize] as usize] += 1;
             }
         }
-        let mut cxadj = vec![0usize; n + 1];
+        let mut cxadj = vec![0u32; n + 1];
         for i in 0..n {
             cxadj[i + 1] = cxadj[i] + cnt[i];
         }
@@ -78,7 +78,7 @@ impl RootedTree {
         for &v in &order {
             if v != root {
                 let p = parent[v as usize] as usize;
-                cadj[cur[p]] = v;
+                cadj[cur[p] as usize] = v;
                 cur[p] += 1;
             }
         }
@@ -103,13 +103,13 @@ impl RootedTree {
         order: Vec<u32>,
     ) -> RootedTree {
         let n = parent.len();
-        let mut cnt = vec![0usize; n];
+        let mut cnt = vec![0u32; n];
         for v in 0..n as u32 {
             if v != root {
                 cnt[parent[v as usize] as usize] += 1;
             }
         }
-        let mut cxadj = vec![0usize; n + 1];
+        let mut cxadj = vec![0u32; n + 1];
         for i in 0..n {
             cxadj[i + 1] = cxadj[i] + cnt[i];
         }
@@ -118,7 +118,7 @@ impl RootedTree {
         for &v in &order {
             if v != root {
                 let p = parent[v as usize] as usize;
-                cadj[cur[p]] = v;
+                cadj[cur[p] as usize] = v;
                 cur[p] += 1;
             }
         }
@@ -137,7 +137,7 @@ impl RootedTree {
 
     /// Children of `v`.
     pub fn children(&self, v: u32) -> &[u32] {
-        &self.cadj[self.cxadj[v as usize]..self.cxadj[v as usize + 1]]
+        &self.cadj[self.cxadj[v as usize] as usize..self.cxadj[v as usize + 1] as usize]
     }
 
     /// Tree-adjacent vertices of `v` (parent, then children).

@@ -1,0 +1,130 @@
+//! Relabel equivalence suite: locality relabeling ([`Sparsify::relabel`])
+//! is a memory-layout optimization and must be invisible in every
+//! result. The pipeline runs in permuted vertex ids, but the recovered
+//! sparsifier is mapped back to original ids and PCG evaluates in
+//! original space — so on tie-free inputs the sparsifier graph is
+//! bitwise identical to the unrelabeled run and PCG converges in exactly
+//! the same iterations, for both relabel modes, across strategies,
+//! pipelines, and thread counts.
+//!
+//! The tie-free precondition (no two edges share an effective weight or
+//! score — the only place edge-id tie-breaks could interact with the
+//! permutation) holds with probability 1 here: every generator draws
+//! continuous random weights. `rust/src/graph/relabel.rs` documents the
+//! full equivariance argument.
+
+use pdgrass::graph::{self, Relabel};
+use pdgrass::session::{RecoverOpts, Sparsify};
+use pdgrass::util::proptest::{check, Config};
+use pdgrass::{Pipeline, Strategy};
+
+const MODES: [Relabel; 2] = [Relabel::Bfs, Relabel::Degree];
+
+/// Small cutoff/shard knobs so test-scale graphs exercise the
+/// large-subtask and sharded paths (as in `recovery_props.rs`).
+fn opts(alpha: f64, strategy: Strategy, pipeline: Pipeline) -> RecoverOpts {
+    RecoverOpts {
+        strategy,
+        pipeline,
+        cutoff_edges: 40,
+        shard_min: 16,
+        ..RecoverOpts::with_threads(alpha, 4)
+    }
+}
+
+fn community(rng: &mut pdgrass::util::Rng) -> graph::Graph {
+    pdgrass::gen::community(
+        pdgrass::gen::CommunityParams {
+            n: 300 + rng.below(300),
+            mean_size: 10.0,
+            tail: 1.7,
+            intra_p: 0.5,
+            bridges: 2,
+            max_size: 80,
+        },
+        rng,
+    )
+}
+
+#[test]
+fn relabeled_sparsifiers_are_bitwise_identical_in_original_ids() {
+    check(Config { cases: 4, base_seed: 0xA11 }, "relabel_equivalence", |rng| {
+        let g = community(rng);
+        let input_fp = graph::fingerprint(&g);
+        let base = Sparsify::graph(g.clone()).prepare().map_err(|e| e.to_string())?;
+        for mode in MODES {
+            for pipeline in [Pipeline::Barrier, Pipeline::Streamed] {
+                let p = Sparsify::graph(g.clone())
+                    .relabel(mode)
+                    .pipeline(pipeline)
+                    .prepare()
+                    .map_err(|e| e.to_string())?;
+                if p.original_fingerprint() != input_fp {
+                    return Err(format!("{mode:?}/{pipeline:?}: original fingerprint drifted"));
+                }
+                for strategy in [Strategy::Serial, Strategy::Mixed, Strategy::Sharded] {
+                    let o = opts(0.1, strategy, pipeline);
+                    let want = base.recover(&o).map_err(|e| e.to_string())?;
+                    let got = p.recover(&o).map_err(|e| e.to_string())?;
+                    if got.edges().len() != want.edges().len() {
+                        return Err(format!(
+                            "{mode:?}/{pipeline:?}/{strategy:?}: recovered {} edges, want {}",
+                            got.edges().len(),
+                            want.edges().len()
+                        ));
+                    }
+                    let want_fp = graph::fingerprint(want.sparsifier().graph());
+                    let got_fp = graph::fingerprint(got.sparsifier().graph());
+                    if got_fp != want_fp {
+                        return Err(format!(
+                            "{mode:?}/{pipeline:?}/{strategy:?}: sparsifier diverged \
+                             ({got_fp:#x} vs {want_fp:#x})"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn relabeled_pcg_converges_in_identical_iterations() {
+    // PCG is the expensive half, so one graph per mode: the sparsifier
+    // equality above already covers the breadth; this pins the actual
+    // paper metric end to end (grounding, RHS seeding, and the solve all
+    // happen in original ids).
+    let mut rng = pdgrass::util::Rng::new(0xA12);
+    let g = community(&mut rng);
+    let o = opts(0.05, Strategy::Mixed, Pipeline::Barrier);
+    let base = Sparsify::graph(g.clone()).prepare().unwrap();
+    let want = base.recover(&o).unwrap().sparsifier().pcg(42, 1e-3, 10_000).unwrap();
+    assert!(want.converged);
+    for mode in MODES {
+        let p = Sparsify::graph(g.clone()).relabel(mode).prepare().unwrap();
+        let got = p.recover(&o).unwrap().sparsifier().pcg(42, 1e-3, 10_000).unwrap();
+        assert_eq!(got.iterations, want.iterations, "{mode:?}");
+        assert_eq!(got.relres.to_bits(), want.relres.to_bits(), "{mode:?}");
+    }
+}
+
+#[test]
+fn relabel_survives_the_fegrass_baseline_too() {
+    // The baseline shares the permuted-space prepared state and the same
+    // map-back; its sparsifier must be equally unaffected.
+    let mut rng = pdgrass::util::Rng::new(0xA13);
+    let g = community(&mut rng);
+    let o = opts(0.05, Strategy::Serial, Pipeline::Barrier);
+    let base = Sparsify::graph(g.clone()).prepare().unwrap();
+    let want = base.fegrass(&o).unwrap();
+    for mode in MODES {
+        let p = Sparsify::graph(g.clone()).relabel(mode).prepare().unwrap();
+        let got = p.fegrass(&o).unwrap();
+        assert_eq!(got.passes(), want.passes(), "{mode:?}");
+        assert_eq!(
+            graph::fingerprint(got.sparsifier().graph()),
+            graph::fingerprint(want.sparsifier().graph()),
+            "{mode:?}"
+        );
+    }
+}
